@@ -1,0 +1,35 @@
+//! Quickstart: load the AOT artifacts of the `tiny` config, train a few
+//! steps on synthetic genome data, evaluate perplexity.
+//!
+//! ```bash
+//! make artifacts            # once (python, build-time only)
+//! cargo run --release --example quickstart
+//! ```
+
+use sh2::coordinator::data::DataPipeline;
+use sh2::coordinator::eval::validation_ppl;
+use sh2::coordinator::Trainer;
+use sh2::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    sh2::util::logging::init();
+    let engine = Engine::cpu()?;
+    let mut trainer = Trainer::new(&engine, "artifacts".as_ref(), "tiny", 0)?;
+    println!(
+        "model: {} ({} params, layout {})",
+        trainer.meta.name,
+        trainer.param_count(),
+        trainer.meta.layout.join("-")
+    );
+
+    let mut pipe = DataPipeline::new(1, trainer.meta.batch, trainer.meta.seq_len);
+    for step in 0..50 {
+        let r = trainer.train_step(&pipe.next_batch())?;
+        if step % 10 == 0 {
+            println!("step {step:3}  loss {:.4}  gnorm {:.2}", r.loss, r.grad_norm);
+        }
+    }
+    let ppl = validation_ppl(&trainer, 0xEAA, 4)?;
+    println!("validation perplexity after 50 steps: {ppl:.3} (uniform would be 256)");
+    Ok(())
+}

@@ -1,0 +1,219 @@
+"""AOT export: lower the L2 model to HLO text + meta JSON for the rust L3.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+For each config we export four programs (all with ``return_tuple=True`` —
+the rust side unwraps the tuple literal):
+
+  * ``init``    (seed:i32) -> flat params
+  * ``train``   (params, m, v, step:i32, tokens, targets) ->
+                (loss, grad_norm, params', m', v')
+  * ``eval``    (params, tokens, targets) -> (loss, per_position_nll)
+  * ``predict`` (params, tokens) -> argmax predictions (recall eval)
+
+plus ``<config>.meta.json`` describing the flat parameter inventory and the
+input/output signature of every program, which is all the rust runtime needs
+to drive training without python on the request path.
+
+Usage (from ``python/``):  python -m compile.aot --out ../artifacts [--config tiny ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, ModelConfig
+from .model import (
+    init_params,
+    make_eval_step,
+    make_predict_step,
+    make_train_step,
+    param_count,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return ".".join(out)
+
+
+def param_specs(cfg: ModelConfig):
+    """Flat leaf inventory: (paths, ShapeDtypeStructs, treedef)."""
+    shaped = jax.eval_shape(lambda s: init_params(jax.random.PRNGKey(s), cfg), 0)
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(shaped)
+    paths = [_path_str(p) for p, _ in leaves_with_path]
+    specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for _, l in leaves_with_path]
+    return paths, specs, treedef
+
+
+def _spec_json(name: str, s) -> dict:
+    return {"name": name, "shape": list(s.shape), "dtype": str(jnp.dtype(s.dtype))}
+
+
+def export_config(cfg: ModelConfig, out_dir: str, fns: list[str]) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    paths, specs, treedef = param_specs(cfg)
+    n = len(specs)
+    i32 = jnp.int32
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), i32)
+    scalar_i32 = jax.ShapeDtypeStruct((), i32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    nll_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.float32)
+
+    unflatten = lambda flat: jax.tree_util.tree_unflatten(treedef, flat)
+    flatten = lambda tree: jax.tree_util.tree_leaves(tree)
+
+    meta = {
+        "config": {
+            "name": cfg.name,
+            "d_model": cfg.d_model,
+            "layout": list(cfg.layout),
+            "n_heads": cfg.n_heads,
+            "num_groups": cfg.num_groups,
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "se_len": cfg.se_len,
+            "mr_len": cfg.mr_len,
+            "li_order": cfg.li_order,
+            "rope_theta": cfg.rope_theta,
+            "rope_pi_scale": cfg.rope_pi_scale,
+            "lr": cfg.lr,
+            "warmup_steps": cfg.warmup_steps,
+            "max_steps": cfg.max_steps,
+            "param_count": int(sum(int(jnp.prod(jnp.array(s.shape))) for s in specs)),
+        },
+        "params": [
+            {"path": p, "shape": list(s.shape), "dtype": str(jnp.dtype(s.dtype))}
+            for p, s in zip(paths, specs)
+        ],
+        "programs": {},
+    }
+
+    def emit(fn_name: str, fn, in_specs, in_names, out_specs, out_names):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}.{fn_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        meta["programs"][fn_name] = {
+            "file": fname,
+            "inputs": [_spec_json(nm, s) for nm, s in zip(in_names, in_specs)],
+            "outputs": [_spec_json(nm, s) for nm, s in zip(out_names, out_specs)],
+        }
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    pnames = [f"param.{p}" for p in paths]
+    mnames = [f"m.{p}" for p in paths]
+    vnames = [f"v.{p}" for p in paths]
+
+    if "init" in fns:
+        def init_fn(seed):
+            p = init_params(jax.random.PRNGKey(seed), cfg)
+            return tuple(flatten(p))
+
+        emit("init", init_fn, [scalar_i32], ["seed"], specs, pnames)
+
+    if "train" in fns:
+        step_fn = make_train_step(cfg)
+
+        def train_fn(*args):
+            p = unflatten(list(args[:n]))
+            m = unflatten(list(args[n : 2 * n]))
+            v = unflatten(list(args[2 * n : 3 * n]))
+            step, tokens, targets = args[3 * n : 3 * n + 3]
+            loss, gnorm, p2, m2, v2 = step_fn(p, m, v, step, tokens, targets)
+            return (loss, gnorm, *flatten(p2), *flatten(m2), *flatten(v2))
+
+        emit(
+            "train",
+            train_fn,
+            specs * 3 + [scalar_i32, tok_spec, tok_spec],
+            pnames + mnames + vnames + ["step", "tokens", "targets"],
+            [f32, f32] + specs * 3,
+            ["loss", "grad_norm"] + pnames + mnames + vnames,
+        )
+
+    if "eval" in fns:
+        ev = make_eval_step(cfg)
+
+        def eval_fn(*args):
+            p = unflatten(list(args[:n]))
+            tokens, targets = args[n], args[n + 1]
+            return ev(p, tokens, targets)
+
+        emit(
+            "eval",
+            eval_fn,
+            specs + [tok_spec, tok_spec],
+            pnames + ["tokens", "targets"],
+            [f32, nll_spec],
+            ["loss", "nll"],
+        )
+
+    if "predict" in fns:
+        pr = make_predict_step(cfg)
+
+        def predict_fn(*args):
+            return (pr(unflatten(list(args[:n])), args[n]),)
+
+        emit(
+            "predict",
+            predict_fn,
+            specs + [tok_spec],
+            pnames + ["tokens"],
+            [tok_spec],
+            ["predictions"],
+        )
+
+    with open(os.path.join(out_dir, f"{cfg.name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--config",
+        action="append",
+        help="config name(s); default: all",
+        choices=sorted(CONFIGS),
+    )
+    ap.add_argument("--fns", default="init,train,eval,predict")
+    args = ap.parse_args()
+    names = args.config or sorted(CONFIGS)
+    fns = args.fns.split(",")
+    for name in names:
+        cfg = CONFIGS[name]
+        print(f"[aot] {name}: layout={'-'.join(cfg.layout)} d={cfg.d_model}")
+        export_config(cfg, args.out, fns)
+
+
+if __name__ == "__main__":
+    main()

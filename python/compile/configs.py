@@ -1,0 +1,166 @@
+"""Model / training configurations and block-layout handling.
+
+Layouts are strings like ``"SE-MR-LI-MHA"`` naming every block in depth
+order, mirroring Table 2.1 of the paper (where e.g. the SE-MR-LI pattern is
+repeated to depth 32 with 5 interleaved MHA operators at 7B scale). At
+reproduction scale we shrink widths/depths but keep the structure; see
+DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+VALID_KINDS = ("SE", "MR", "LI", "MHA")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    layout: tuple  # tuple[str, ...] of block kinds
+    n_heads: int
+    num_groups: int  # filter groups for hyena inner convs
+    vocab: int = 256  # byte-tokenized, as in Evo 2 / OpenGenome2
+    seq_len: int = 256
+    batch: int = 4
+    se_len: int = 7  # paper's final runs use 4-7
+    mr_len: int = 128  # paper's default MR inner filter length
+    li_order: int = 16  # modal order for Hyena-LI
+    mlp_ratio: float = 2.67  # SwiGLU hidden = ratio * d
+    rope_theta: float = 10000.0
+    rope_pi_scale: float = 1.0  # position-interpolation divisor (Table 2.2)
+    # training (baked into the train_step artifact)
+    lr: float = 3e-4
+    warmup_steps: int = 50
+    max_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def validate(self) -> "ModelConfig":
+        assert all(k in VALID_KINDS for k in self.layout), self.layout
+        assert self.d_model % self.n_heads == 0
+        assert self.d_model % self.num_groups == 0
+        return self
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw).validate()
+
+
+def make_layout(pattern: str, depth: int, mha_every: int = 0) -> tuple:
+    """Repeat ``pattern`` ("SE-MR-LI") to ``depth`` blocks, optionally
+    replacing every ``mha_every``-th block with MHA (the paper's stripes)."""
+    base = pattern.split("-")
+    layout, pi = [], 0
+    for i in range(depth):
+        if mha_every and (i + 1) % mha_every == 0:
+            layout.append("MHA")
+        else:
+            layout.append(base[pi % len(base)])
+            pi += 1
+    return tuple(layout)
+
+
+def _cfg(name: str, **kw) -> ModelConfig:
+    return ModelConfig(name=name, **kw).validate()
+
+
+CONFIGS = {
+    # CI-fast smoke config.
+    "tiny": _cfg(
+        "tiny",
+        d_model=64,
+        layout=("SE", "MR", "LI", "MHA"),
+        n_heads=2,
+        num_groups=8,
+        seq_len=128,
+        batch=2,
+        mr_len=32,
+        li_order=8,
+        warmup_steps=20,
+        max_steps=400,
+    ),
+    # Default small research config (quickstart / CP demos).
+    "small": _cfg(
+        "small",
+        d_model=128,
+        layout=make_layout("SE-MR-LI", 8, mha_every=4),
+        n_heads=4,
+        num_groups=16,
+        seq_len=256,
+        batch=4,
+        mr_len=64,
+        warmup_steps=50,
+        max_steps=1500,
+    ),
+    # End-to-end training driver config (examples/train_small_lm.rs).
+    "e2e": _cfg(
+        "e2e",
+        d_model=256,
+        layout=make_layout("SE-MR-LI", 8, mha_every=4),
+        n_heads=8,
+        num_groups=32,
+        seq_len=512,
+        batch=4,
+        warmup_steps=40,
+        max_steps=600,
+        lr=6e-4,
+    ),
+}
+
+# Table 2.1 block-layout ablation: same depth/width budget, different mixes.
+# Paper note: SH2 models interleave MHA stripes; pure-MHA is the baseline.
+_ABL = dict(
+    d_model=128,
+    n_heads=4,
+    num_groups=16,
+    seq_len=256,
+    batch=4,
+    mr_len=64,
+    warmup_steps=30,
+    max_steps=400,
+    lr=6e-4,
+)
+CONFIGS.update(
+    {
+        "abl_mha": _cfg("abl_mha", layout=make_layout("MHA", 6), **_ABL),
+        "abl_li": _cfg("abl_li", layout=make_layout("LI-LI-LI", 6, mha_every=6), **_ABL),
+        "abl_sse": _cfg("abl_sse", layout=make_layout("SE-SE-LI", 6, mha_every=6), **_ABL),
+        "abl_sml": _cfg("abl_sml", layout=make_layout("SE-MR-LI", 6, mha_every=6), **_ABL),
+        # §C.1 grouping ablation partners (group size 1 vs 16 per channel-count 128).
+        "abl_sml_g128": _cfg(
+            "abl_sml_g128", layout=make_layout("SE-MR-LI", 6, mha_every=6),
+            **{**_ABL, "num_groups": 128},
+        ),
+    }
+)
+
+# Table 2.2 context-extension stages: PI vs PI+ABF on top of "small".
+CONFIGS.update(
+    {
+        "ext_base": CONFIGS["small"].replace(name="ext_base", max_steps=800),
+        "ext_pi_2x": CONFIGS["small"].replace(
+            name="ext_pi_2x", seq_len=512, rope_pi_scale=2.0, max_steps=200, lr=1e-4
+        ),
+        "ext_pi_4x": CONFIGS["small"].replace(
+            name="ext_pi_4x", seq_len=1024, rope_pi_scale=4.0, max_steps=200, lr=1e-4
+        ),
+        "ext_piabf_2x": CONFIGS["small"].replace(
+            name="ext_piabf_2x",
+            seq_len=512,
+            rope_pi_scale=2.0,
+            rope_theta=40000.0,
+            max_steps=200,
+            lr=1e-4,
+        ),
+        "ext_piabf_4x": CONFIGS["small"].replace(
+            name="ext_piabf_4x",
+            seq_len=1024,
+            rope_pi_scale=4.0,
+            rope_theta=160000.0,
+            max_steps=200,
+            lr=1e-4,
+        ),
+    }
+)

@@ -1,0 +1,70 @@
+"""XLA-fused two-stage blocked convolution (training-graph implementation).
+
+The Pallas kernel in ``two_stage.py`` is the operator-level deliverable; for
+the *training* graph we express the identical two-stage math as batched
+einsums over the chunk dimension so that (a) XLA lowers it to batched GEMMs
+(the same dataflow the paper maps onto tensor cores), (b) autodiff yields the
+paper's two-pass backward for free (chunk-local partial filter gradients,
+then a reduction — §A.4), and (c) the lowered HLO stays compact for AOT
+export. Equality with the Pallas kernel and with ``ref.py`` is enforced by
+``python/tests/test_two_stage.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .toeplitz import toeplitz_factor
+
+
+def _chunk(x: jnp.ndarray, l_b: int) -> tuple[jnp.ndarray, int]:
+    """Pad [l, d] to a multiple of l_b and reshape to [n, l_b, d]."""
+    l, d = x.shape
+    pad = (-l) % l_b
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    n = x.shape[0] // l_b
+    return x.reshape(n, l_b, d), l
+
+
+def two_stage_conv_xla(
+    x: jnp.ndarray, h_grouped: jnp.ndarray, block_size: int | None = None
+) -> jnp.ndarray:
+    """Grouped causal conv via Y_n = H0 X_n + H1 X_{n-1}, batched over n.
+
+    Same contract as ``two_stage.two_stage_conv`` but pure jnp (fusable,
+    differentiable). ``x``: [l, d]; ``h_grouped``: [g, l_h].
+    """
+    l, d = x.shape
+    g, lh = h_grouped.shape
+    assert d % g == 0
+    d_g = d // g
+    # Tight two-factor condition l_h <= l_b + 1 (see two_stage._pick_block).
+    l_b = block_size if block_size is not None else max(128, lh - 1)
+    if l_b + 1 < lh:
+        raise ValueError(f"l_h={lh} > l_b+1={l_b + 1}")
+
+    h0 = toeplitz_factor(h_grouped, l_b, 0)  # [g, l_b, l_b]
+    h1 = toeplitz_factor(h_grouped, l_b, 1)
+
+    xc, orig_l = _chunk(x, l_b)  # [n, l_b, d]
+    n = xc.shape[0]
+    xg = xc.reshape(n, l_b, g, d_g)  # group-blocked channels
+    xg_prev = jnp.concatenate([jnp.zeros_like(xg[:1]), xg[:-1]], axis=0)
+
+    # Batched GEMMs: one (l_b x l_b) @ (l_b x d_g) per (chunk, group).
+    y = jnp.einsum("gab,nbgc->nagc", h0, xg) + jnp.einsum(
+        "gab,nbgc->nagc", h1, xg_prev
+    )
+    return y.reshape(n * l_b, d)[:orig_l].astype(x.dtype)
+
+
+def two_stage_hyena_xla(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    h_grouped: jnp.ndarray,
+    block_size: int | None = None,
+) -> jnp.ndarray:
+    """Gated hyena mixing ``q ⊙ conv(h, k ⊙ v)`` on the XLA-fused path."""
+    return q * two_stage_conv_xla(k * v, h_grouped, block_size)

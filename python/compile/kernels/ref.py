@@ -1,0 +1,151 @@
+"""Pure-jnp correctness oracles for the StripedHyena 2 convolution kernels.
+
+Everything in this module is deliberately written in the most direct way
+possible (explicit causal convolution sums, dense FFT convs) so that it can
+serve as the ground truth against which the Pallas kernels in
+``two_stage.py`` and the rust implementations in ``rust/src/conv`` are
+validated. Shapes follow the paper's convention: sequences are ``[l, d]``
+(time major), filters are ``[num_groups, l_h]`` with each filter shared by a
+contiguous group of ``d // num_groups`` channels (§2.2, weight-sharing filter
+patterns).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def causal_conv_direct(x: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Direct causal depthwise convolution.
+
+    y[t, c] = sum_{k=0}^{l_h - 1} h[c, k] * x[t - k, c]   (x[t<0] = 0)
+
+    Args:
+      x: input of shape ``[l, d]``.
+      h: per-channel filters of shape ``[d, l_h]``.
+
+    Returns:
+      y of shape ``[l, d]``.
+    """
+    l, d = x.shape
+    dh, lh = h.shape
+    assert dh == d, f"filter channels {dh} != input channels {d}"
+    # Accumulate shifted copies: one term per filter tap. O(l_h) jnp ops,
+    # exact reference semantics.
+    y = jnp.zeros_like(x)
+    for k in range(lh):
+        shifted = jnp.pad(x, ((k, 0), (0, 0)))[:l]
+        y = y + h[:, k][None, :] * shifted
+    return y
+
+
+def expand_grouped_filter(h_grouped: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Expand ``[num_groups, l_h]`` grouped filters to per-channel ``[d, l_h]``.
+
+    Channel ``c`` uses filter ``c // group_size`` where
+    ``group_size = d // num_groups`` (§2.2: filters shared across a
+    contiguous group of channels; this is *not* a classic grouped CNN —
+    no cross-channel mixing happens).
+    """
+    num_groups, _ = h_grouped.shape
+    assert d % num_groups == 0, (d, num_groups)
+    group_size = d // num_groups
+    return jnp.repeat(h_grouped, group_size, axis=0)
+
+
+def grouped_causal_conv(x: jnp.ndarray, h_grouped: jnp.ndarray) -> jnp.ndarray:
+    """Grouped causal depthwise convolution (reference).
+
+    Args:
+      x: ``[l, d]`` input.
+      h_grouped: ``[num_groups, l_h]`` filters, ``num_groups`` divides d.
+    """
+    return causal_conv_direct(x, expand_grouped_filter(h_grouped, x.shape[1]))
+
+
+def fft_causal_conv(x: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """FFT-based causal depthwise convolution (for long / implicit filters).
+
+    Matches :func:`causal_conv_direct` up to float error. ``h`` is
+    ``[d, l_h]`` with any ``l_h <= l`` (Hyena-LI uses ``l_h == l``).
+    """
+    l, d = x.shape
+    lh = h.shape[1]
+    n = 1
+    while n < l + lh:  # next pow2 >= l + lh, zero-pad to avoid circular wrap
+        n *= 2
+    xf = jnp.fft.rfft(x, n=n, axis=0)
+    hf = jnp.fft.rfft(h.T, n=n, axis=0)
+    y = jnp.fft.irfft(xf * hf, n=n, axis=0)[:l]
+    return y.astype(x.dtype)
+
+
+def hyena_mixer_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    h_grouped: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference for the gated hyena inner mixing (Eq. 1 inner part).
+
+    y_t = q_t ⊙ (h * (k ⊙ v))_t with a grouped causal filter. This is the
+    computation fused by the two-stage blocked kernel (Algorithm 1 optional
+    lines 5 and 11).
+    """
+    return q * grouped_causal_conv(k * v, h_grouped)
+
+
+def modal_filter(
+    residues: jnp.ndarray, poles: jnp.ndarray, l: int
+) -> jnp.ndarray:
+    """Hyena-LI implicit filter: h_t = sum_n R_n λ_n^t  (t = 0..l-1).
+
+    Real-exponential parametrization of Massaroli et al. (2024), the
+    simplified real-valued modal form used by StripedHyena 2 (§2.1). The
+    recurrent (constant-memory) form of the same operator is a diagonal
+    state-space recurrence with state matrix diag(λ).
+
+    Args:
+      residues: ``[num_groups, order]`` R_n.
+      poles: ``[num_groups, order]`` λ_n, expected in (0, 1) for stability.
+
+    Returns:
+      h of shape ``[num_groups, l]``.
+    """
+    t = jnp.arange(l)[None, None, :]  # [1, 1, l]
+    lam = poles[..., None]  # [g, n, 1]
+    return jnp.sum(residues[..., None] * lam**t, axis=1)
+
+
+def modal_filter_recurrent(
+    residues: np.ndarray, poles: np.ndarray, x: np.ndarray
+) -> np.ndarray:
+    """Constant-memory recurrent evaluation of the modal (Hyena-LI) conv.
+
+    s_n[t] = λ_n s_n[t-1] + x[t];  y[t] = Σ_n R_n s_n[t]
+
+    Numpy-only (used by tests to prove the conv ⇄ recurrence equivalence
+    the paper relies on for O(1)-memory autoregressive generation).
+    ``x`` is ``[l]``, residues/poles are ``[order]``; returns ``[l]``.
+    """
+    order = residues.shape[0]
+    s = np.zeros(order, dtype=np.float64)
+    y = np.zeros_like(x, dtype=np.float64)
+    for t in range(x.shape[0]):
+        s = poles * s + x[t]
+        y[t] = np.dot(residues, s)
+    return y.astype(x.dtype)
+
+
+def mr_regularized_filter(h_hat: jnp.ndarray, alphas: jnp.ndarray) -> jnp.ndarray:
+    """Hyena-MR decay regularizer: h_t = ĥ_t · exp(-α t)  (§2.1).
+
+    ``h_hat``: ``[num_groups, l_h]`` learnable taps; ``alphas``:
+    ``[num_groups]`` per-group decay strength, swept across groups so that
+    different groups see different effective receptive fields.
+    """
+    lh = h_hat.shape[1]
+    t = jnp.arange(lh)[None, :]
+    decay = jnp.exp(-alphas[:, None] * t)
+    return h_hat * decay

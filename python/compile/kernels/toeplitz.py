@@ -1,0 +1,63 @@
+"""Toeplitz factor materialization for the two-stage blocked convolution.
+
+Mirrors the Triton ``load_toeplitz`` of the paper's Listing 2: given a causal
+FIR filter ``h`` of length ``l_h`` and a block (chunk) size ``l_b`` with
+``l_h <= 2 * l_b``, build the two square factors
+
+  H0[i, j] = h[i - j]          (current-chunk taps, lower triangular)
+  H1[i, j] = h[l_b + i - j]    (spill-over taps from the previous chunk)
+
+so that the full ``l x l`` Toeplitz operator T decomposes into a
+block-diagonal stage (H0) plus one sub-diagonal stage (H1) — Eq. (8) of the
+paper — and each output chunk is ``Y_n = H0 @ X_n + H1 @ X_{n-1}``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def toeplitz_idx(l_b: int, factor: int) -> jnp.ndarray:
+    """Tap-index matrix for factor ``H_factor``: idx[i, j] = factor*l_b + i - j.
+
+    Out-of-support indices (negative or >= l_h) must be masked by the caller;
+    this mirrors the masked ``tl.load`` in the paper's Triton listing.
+    """
+    r = jnp.arange(l_b)[:, None]  # output position within chunk (row)
+    c = jnp.arange(l_b)[None, :]  # input position within chunk (col)
+    return factor * l_b + r - c
+
+
+def toeplitz_factor(h: jnp.ndarray, l_b: int, factor: int) -> jnp.ndarray:
+    """Materialize Toeplitz factor ``H_factor`` (shape ``[l_b, l_b]``).
+
+    Args:
+      h: filter taps, shape ``[..., l_h]`` (leading dims broadcast, e.g.
+        ``[num_groups, l_h]`` builds one factor per group).
+      l_b: block/chunk size.
+      factor: 0 for the block-diagonal factor, 1 for the first
+        sub-diagonal; values ``k > 1`` give ``H_k`` for the general blocked
+        scheme of Eq. (6) (needed when ``l_h > 2 * l_b``).
+    """
+    lh = h.shape[-1]
+    idx = toeplitz_idx(l_b, factor)
+    mask = (idx >= 0) & (idx < lh)
+    safe = jnp.where(mask, idx, 0)
+    vals = jnp.take(h, safe.reshape(-1), axis=-1)
+    vals = vals.reshape(h.shape[:-1] + (l_b, l_b))
+    return jnp.where(mask, vals, 0.0).astype(h.dtype)
+
+
+def num_factors(l_h: int, l_b: int) -> int:
+    """Number of non-zero Toeplitz factors: ceil((l_h - 1) / l_b) + 1."""
+    return (l_h - 1 + l_b - 1) // l_b + 1
+
+
+def full_toeplitz(h: jnp.ndarray, l: int) -> jnp.ndarray:
+    """Dense ``[l, l]`` causal Toeplitz operator for a single filter ``[l_h]``.
+
+    Test-only helper (quadratic memory); validates the factorization.
+    """
+    idx = jnp.arange(l)[:, None] - jnp.arange(l)[None, :]
+    mask = (idx >= 0) & (idx < h.shape[-1])
+    return jnp.where(mask, jnp.take(h, jnp.where(mask, idx, 0)), 0.0)

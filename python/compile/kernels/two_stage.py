@@ -1,0 +1,192 @@
+"""Two-stage blocked Hyena convolution — Pallas implementation of Algorithm 1.
+
+This is the paper's L1 compute hot-spot: a grouped causal depthwise FIR
+convolution expressed as two GEMMs per chunk,
+
+    Y_n = H0 @ X_n + H1 @ X_{n-1},        (Eq. 9)
+
+optionally fused with the hyena gating (Algorithm 1, lines 5 and 11):
+
+    Y_n = Q_n ⊙ (H0 @ (K_n ⊙ V_n) + H1 @ (K_{n-1} ⊙ V_{n-1})).
+
+Hardware adaptation (DESIGN.md §3): the paper schedules H0/H1 into SRAM and
+drives H100 tensor cores; here the same dataflow is expressed with Pallas
+``BlockSpec``s — each grid step holds H0, H1 (2·l_b² floats) and two
+``l_b × d_g`` chunks in VMEM and issues two MXU-shaped matmuls. With
+``l_b = d_g = 128`` this is exactly one 128×128 systolic-array tile per
+GEMM. Kernels are lowered with ``interpret=True`` so the resulting HLO runs
+on the CPU PJRT plugin (real-TPU lowering emits a Mosaic custom-call the CPU
+client cannot execute); correctness is validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .toeplitz import toeplitz_factor
+
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(l: int, l_h: int, block_size: int | None) -> int:
+    """Choose chunk size l_b with l_h <= l_b + 1 (two-factor condition).
+
+    Note: the paper states the condition as ``l_h <= 2 l_b`` (§3.2), but the
+    tight requirement for T to decompose into exactly H0 + H1 is
+    ``l_h <= l_b + 1``: the first entry of H2 is tap ``l_b + 1``, so any tap
+    index beyond that spills two chunks back. The paper's worked example
+    (l_h=4, l_b=3) and its production setting (l_h=128, l_b=128) both satisfy
+    the tight bound. Recorded as an erratum in DESIGN.md.
+    """
+    if block_size is None:
+        block_size = max(DEFAULT_BLOCK, l_h - 1)
+    if block_size + 1 < l_h:
+        raise ValueError(
+            f"two-stage condition violated: l_h={l_h} > l_b+1={block_size + 1}"
+        )
+    return block_size
+
+
+def _pad_to_multiple(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    l = x.shape[0]
+    pad = (-l) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x
+
+
+def _conv_kernel(v_ref, vp_ref, h0_ref, h1_ref, o_ref):
+    """Ungated two-stage chunk: o = H0 @ v + (i > 0) * H1 @ v_prev."""
+    i = pl.program_id(0)
+    h0 = h0_ref[0]  # [l_b, l_b] current-chunk Toeplitz factor
+    h1 = h1_ref[0]  # [l_b, l_b] spill-over factor
+    acc = jnp.dot(h0, v_ref[...], preferred_element_type=jnp.float32)
+    spill = jnp.dot(h1, vp_ref[...], preferred_element_type=jnp.float32)
+    gate = jnp.where(i > 0, 1.0, 0.0).astype(jnp.float32)
+    o_ref[...] = (acc + gate * spill).astype(o_ref.dtype)
+
+
+def _gated_kernel(q_ref, k_ref, v_ref, kp_ref, vp_ref, h0_ref, h1_ref, o_ref):
+    """Fused hyena chunk: o = q ⊙ (H0 @ (k⊙v) + (i>0) * H1 @ (k⊙v)_prev)."""
+    i = pl.program_id(0)
+    h0 = h0_ref[0]
+    h1 = h1_ref[0]
+    kv = (k_ref[...] * v_ref[...]).astype(jnp.float32)
+    kv_prev = (kp_ref[...] * vp_ref[...]).astype(jnp.float32)
+    acc = jnp.dot(h0, kv, preferred_element_type=jnp.float32)
+    spill = jnp.dot(h1, kv_prev, preferred_element_type=jnp.float32)
+    gate = jnp.where(i > 0, 1.0, 0.0).astype(jnp.float32)
+    y = acc + gate * spill
+    o_ref[...] = (q_ref[...].astype(jnp.float32) * y).astype(o_ref.dtype)
+
+
+def _specs(l_b: int, d_g: int):
+    """BlockSpecs for (current chunk, previous chunk, H0, H1) refs."""
+    cur = pl.BlockSpec((l_b, d_g), lambda i, g: (i, g))
+    # Previous chunk: clamp at 0; the kernel masks the i == 0 contribution.
+    prev = pl.BlockSpec((l_b, d_g), lambda i, g: (jnp.maximum(i - 1, 0), g))
+    fac = pl.BlockSpec((1, l_b, l_b), lambda i, g: (g, 0, 0))
+    return cur, prev, fac
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def two_stage_conv(
+    x: jnp.ndarray, h_grouped: jnp.ndarray, block_size: int | None = None
+) -> jnp.ndarray:
+    """Grouped causal depthwise convolution via the two-stage blocked kernel.
+
+    Args:
+      x: ``[l, d]`` input sequence.
+      h_grouped: ``[num_groups, l_h]`` filters (``num_groups`` divides d).
+      block_size: chunk length l_b; default max(128, ceil(l_h/2)).
+
+    Returns:
+      ``[l, d]`` output, equal to ``ref.grouped_causal_conv(x, h_grouped)``.
+    """
+    l, d = x.shape
+    g, lh = h_grouped.shape
+    assert d % g == 0, f"channels {d} not divisible by groups {g}"
+    d_g = d // g
+    l_b = _pick_block(l, lh, block_size)
+
+    h0 = toeplitz_factor(h_grouped, l_b, 0)  # [g, l_b, l_b]
+    h1 = toeplitz_factor(h_grouped, l_b, 1)
+
+    xp = _pad_to_multiple(x, l_b)
+    lp = xp.shape[0]
+    cur, prev, fac = _specs(l_b, d_g)
+    out = pl.pallas_call(
+        _conv_kernel,
+        grid=(lp // l_b, g),
+        in_specs=[cur, prev, fac, fac],
+        out_specs=cur,
+        out_shape=jax.ShapeDtypeStruct((lp, d), x.dtype),
+        interpret=True,
+    )(xp, xp, h0, h1)
+    return out[:l]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def two_stage_hyena(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    h_grouped: jnp.ndarray,
+    block_size: int | None = None,
+) -> jnp.ndarray:
+    """Fused gated hyena mixing: ``q ⊙ conv(h, k ⊙ v)`` (Algorithm 1).
+
+    All of q, k, v are ``[l, d]``; returns ``[l, d]``. Matches
+    ``ref.hyena_mixer_ref``.
+    """
+    l, d = q.shape
+    g, lh = h_grouped.shape
+    assert d % g == 0, f"channels {d} not divisible by groups {g}"
+    d_g = d // g
+    l_b = _pick_block(l, lh, block_size)
+
+    h0 = toeplitz_factor(h_grouped, l_b, 0)
+    h1 = toeplitz_factor(h_grouped, l_b, 1)
+
+    qp = _pad_to_multiple(q, l_b)
+    kp = _pad_to_multiple(k, l_b)
+    vp = _pad_to_multiple(v, l_b)
+    lp = qp.shape[0]
+    cur, prev, fac = _specs(l_b, d_g)
+    out = pl.pallas_call(
+        _gated_kernel,
+        grid=(lp // l_b, g),
+        in_specs=[cur, cur, cur, prev, prev, fac, fac],
+        out_specs=cur,
+        out_shape=jax.ShapeDtypeStruct((lp, d), v.dtype),
+        interpret=True,
+    )(qp, kp, vp, kp, vp, h0, h1)
+    return out[:l]
+
+
+def vmem_footprint_bytes(l_b: int, d_g: int, gated: bool, dtype_bytes: int = 4) -> int:
+    """Estimated per-grid-step VMEM footprint of the kernel (DESIGN.md §Perf).
+
+    Two Toeplitz factors + (2 chunks ungated / 5 chunks gated) + 1 output
+    chunk. Used to check the tile choice sits far below the ~16 MiB/core
+    VMEM budget on TPU.
+    """
+    chunks = 6 if gated else 3
+    return dtype_bytes * (2 * l_b * l_b + chunks * l_b * d_g)
+
+
+def mxu_utilization_estimate(l: int, d: int, l_h: int, l_b: int) -> float:
+    """Fraction of issued MXU FLOPs that are useful filter taps.
+
+    Each chunk performs 2·l_b²·d MACs but only l_h·l_b·d of them touch
+    non-zero taps (H0/H1 are tap-masked Toeplitz). Used for the DESIGN.md
+    roofline discussion: utilization = l_h / (2·l_b), maximized by choosing
+    l_b as small as the two-factor condition allows (l_b = ceil(l_h / 2)),
+    traded off against MXU tile granularity (l_b multiple of 128).
+    """
+    del l, d  # utilization is per-chunk, independent of l and d
+    return min(1.0, l_h / (2.0 * l_b))

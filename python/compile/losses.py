@@ -1,0 +1,19 @@
+"""Next-token cross-entropy over byte-tokenized sequences."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean token-level CE. logits: [..., l, V]; targets: [..., l] int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def per_position_nll(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Per-position NLL (for perplexity-vs-position and recall evals)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]

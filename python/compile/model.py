@@ -1,0 +1,132 @@
+"""StripedHyena 2 — convolutional multi-hybrid model assembly (L2).
+
+A model is a stack of pre-norm residual blocks, each block = mixer + SwiGLU,
+where the mixer is one of Hyena-SE / Hyena-MR / Hyena-LI / MHA according to
+the config layout (Table 2.1). The LM head is weight-tied to the byte
+embedding. Everything here is build-time JAX: `aot.py` lowers `init_params`,
+`train_step` and `eval_step` to HLO text executed by the rust coordinator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .losses import cross_entropy, per_position_nll
+from .modules.attention import mha, mha_init
+from .modules.hyena import hyena_init, hyena_mixer
+from .modules.mlp import swiglu, swiglu_init
+from .modules.norms import rmsnorm, rmsnorm_init
+from .optim import adamw_update, clip_by_global_norm, lr_schedule
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    """Initialize the full parameter pytree for ``cfg``."""
+    n_blocks = len(cfg.layout)
+    keys = jax.random.split(key, n_blocks + 1)
+    hidden = int(cfg.mlp_ratio * cfg.d_model)
+    blocks = []
+    for i, kind in enumerate(cfg.layout):
+        bkeys = jax.random.split(keys[i], 2)
+        if kind == "MHA":
+            mixer = mha_init(bkeys[0], cfg.d_model, cfg.n_heads)
+        else:
+            mixer = hyena_init(
+                bkeys[0],
+                cfg.d_model,
+                kind,
+                cfg.num_groups,
+                se_len=cfg.se_len,
+                mr_len=cfg.mr_len,
+                li_order=cfg.li_order,
+            )
+        blocks.append(
+            {
+                "mixer": mixer,
+                "norm1": rmsnorm_init(cfg.d_model),
+                "norm2": rmsnorm_init(cfg.d_model),
+                "mlp": swiglu_init(bkeys[1], cfg.d_model, hidden),
+            }
+        )
+    return {
+        "embed": 0.02
+        * jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model), jnp.float32),
+        "blocks": blocks,
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Single-sequence forward. tokens: [l] int32 -> logits [l, vocab]."""
+    x = params["embed"][tokens]  # [l, d]
+    for kind, block in zip(cfg.layout, params["blocks"]):
+        h = rmsnorm(block["norm1"], x)
+        if kind == "MHA":
+            mixed = mha(
+                block["mixer"],
+                h,
+                cfg.n_heads,
+                theta=cfg.rope_theta,
+                pi_scale=cfg.rope_pi_scale,
+            )
+        else:
+            mixed = hyena_mixer(block["mixer"], h, kind, cfg.num_groups)
+        x = x + mixed
+        x = x + swiglu(block["mlp"], rmsnorm(block["norm2"], x))
+    x = rmsnorm(params["final_norm"], x)
+    return x @ params["embed"].T
+
+
+def batched_forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: [b, l] -> logits [b, l, vocab]."""
+    return jax.vmap(lambda t: forward(params, cfg, t))(tokens)
+
+
+def loss_fn(
+    params: dict, cfg: ModelConfig, tokens: jnp.ndarray, targets: jnp.ndarray
+) -> jnp.ndarray:
+    return cross_entropy(batched_forward(params, cfg, tokens), targets)
+
+
+def make_train_step(cfg: ModelConfig):
+    """Build the fused (loss, grad, clip, AdamW) step for AOT export.
+
+    Signature: (params, m, v, step:i32, tokens:[b,l] i32, targets:[b,l] i32)
+    -> (loss, grad_norm, params', m', v').
+    """
+
+    def train_step(params, m, v, step, tokens, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, tokens, targets)
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = lr_schedule(step, cfg.lr, cfg.warmup_steps, cfg.max_steps)
+        new_p, new_m, new_v = adamw_update(
+            params, grads, m, v, step, lr, weight_decay=cfg.weight_decay
+        )
+        return loss, gnorm, new_p, new_m, new_v
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """(params, tokens, targets) -> (mean_loss, per_position_nll [b,l])."""
+
+    def eval_step(params, tokens, targets):
+        logits = batched_forward(params, cfg, tokens)
+        return cross_entropy(logits, targets), per_position_nll(logits, targets)
+
+    return eval_step
+
+
+def make_predict_step(cfg: ModelConfig):
+    """(params, tokens) -> argmax next-token predictions [b, l] (recall eval)."""
+
+    def predict_step(params, tokens):
+        logits = batched_forward(params, cfg, tokens)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return predict_step
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))

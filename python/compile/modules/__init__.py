@@ -1,0 +1,1 @@
+"""StripedHyena 2 model building blocks (L2, build-time JAX)."""

@@ -1,0 +1,51 @@
+"""Multi-head attention with RoPE — the attention stripes of the multi-hybrid.
+
+StripedHyena 2 interleaves a small number of MHA operators (5 per 32 blocks
+at 7B) with the convolutional blocks; attention handles targeted long-range
+in-context recall while the hyena operators handle local/multi-token recall
+and compression (§1-2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .rope import apply_rope, rope_angles
+
+
+def mha_init(key: jax.Array, d: int, n_heads: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    s = d**-0.5
+    return {
+        "wqkv": jax.random.normal(k1, (d, 3 * d), jnp.float32) * s,
+        "wo": jax.random.normal(k2, (d, d), jnp.float32) * s,
+    }
+
+
+def mha(
+    params: dict,
+    x: jnp.ndarray,
+    n_heads: int,
+    theta: float = 10000.0,
+    pi_scale: float = 1.0,
+) -> jnp.ndarray:
+    """Causal softmax attention. ``x``: [l, d] -> [l, d]."""
+    l, d = x.shape
+    hd = d // n_heads
+    qkv = x @ params["wqkv"]  # [l, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(l, n_heads, hd)
+    k = k.reshape(l, n_heads, hd)
+    v = v.reshape(l, n_heads, hd)
+
+    cos, sin = rope_angles(l, hd, theta=theta, pi_scale=pi_scale)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    scores = jnp.where(causal[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,khd->qhd", probs, v).reshape(l, d)
+    return out @ params["wo"]

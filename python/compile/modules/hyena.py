@@ -1,0 +1,134 @@
+"""The three input-dependent convolution operators of StripedHyena 2 (§2.1).
+
+All three share the Hyena structure of Eq. (1):
+
+    q = T(x W),  k = H(x U),  v = K(x P)        (featurizers: dense proj +
+                                                  short explicit conv)
+    y = (q ⊙ G(k ⊙ v)) M                         (inner conv + gating + out)
+
+and differ only in how the inner filter h_G is parametrized:
+
+  * Hyena-SE — short explicit taps (len 4-7), runs on the two-stage blocked
+    kernel; the highest-throughput sequence mixer in the paper.
+  * Hyena-MR — medium explicit taps (len ~128) with an exponential decay
+    regularizer h_t = ĥ_t · exp(-α t), α swept across filter groups.
+  * Hyena-LI — long implicit filter h_t = Σ_n R_n λ_n^t (real modal form),
+    as long as the sequence; evaluated with FFT convolution, switchable to
+    a diagonal recurrence for O(1)-memory generation.
+
+Filters are grouped (§2.2): one filter per group of ``d // num_groups``
+channels, which is what turns the depthwise GEMVs into GEMMs on the blocked
+kernel. The training graph uses the XLA-fused two-stage implementation
+(``kernels.jnp_fused``); the Pallas kernel computes the same function and is
+validated against it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.jnp_fused import two_stage_conv_xla
+from ..kernels.ref import (
+    causal_conv_direct,
+    fft_causal_conv,
+    expand_grouped_filter,
+    modal_filter,
+    mr_regularized_filter,
+)
+
+FEATURIZER_LEN = 3  # short explicit featurizer convs on q, k, v (Eq. 1 footnote)
+
+
+def _featurizer_filter_init(key: jax.Array, d: int) -> jnp.ndarray:
+    """Near-delta init: h = [1, eps, eps] so the mixer starts ~linear."""
+    noise = 0.02 * jax.random.normal(key, (d, FEATURIZER_LEN), jnp.float32)
+    delta = jnp.zeros((d, FEATURIZER_LEN), jnp.float32).at[:, 0].set(1.0)
+    return delta + noise
+
+
+def _proj_init(key: jax.Array, d: int) -> jnp.ndarray:
+    return jax.random.normal(key, (d, d), jnp.float32) * d**-0.5
+
+
+def hyena_init(
+    key: jax.Array,
+    d: int,
+    kind: str,
+    num_groups: int,
+    se_len: int = 7,
+    mr_len: int = 128,
+    li_order: int = 16,
+) -> dict:
+    """Initialize one hyena mixer. ``kind`` in {"SE", "MR", "LI"}."""
+    assert d % num_groups == 0, (d, num_groups)
+    keys = jax.random.split(key, 10)
+    p = {
+        "w": _proj_init(keys[0], d),
+        "u": _proj_init(keys[1], d),
+        "p": _proj_init(keys[2], d),
+        "m": _proj_init(keys[3], d),
+        "hq": _featurizer_filter_init(keys[4], d),
+        "hk": _featurizer_filter_init(keys[5], d),
+        "hv": _featurizer_filter_init(keys[6], d),
+    }
+    if kind == "SE":
+        taps = 0.1 * jax.random.normal(keys[7], (num_groups, se_len), jnp.float32)
+        p["h_inner"] = taps.at[:, 0].add(1.0)
+    elif kind == "MR":
+        taps = 0.1 * jax.random.normal(keys[7], (num_groups, mr_len), jnp.float32)
+        p["h_inner"] = taps.at[:, 0].add(1.0)
+    elif kind == "LI":
+        # Poles via sigmoid for (0, 1) stability; spread the init so groups
+        # cover fast-to-slow timescales, mirroring the paper's modal form.
+        raw = jax.random.uniform(
+            keys[7], (num_groups, li_order), jnp.float32, -1.0, 3.0
+        )
+        p["li_poles_raw"] = raw
+        p["li_residues"] = (
+            jax.random.normal(keys[8], (num_groups, li_order), jnp.float32)
+            / li_order
+        )
+    else:
+        raise ValueError(f"unknown hyena kind {kind!r}")
+    return p
+
+
+def mr_alphas(num_groups: int, mr_len: int) -> jnp.ndarray:
+    """Fixed decay strengths swept log-uniformly across groups (§2.1).
+
+    Effective receptive fields range from ~8 tokens to the full mr_len.
+    """
+    lo, hi = 1.0 / mr_len, 0.5
+    g = jnp.arange(num_groups, dtype=jnp.float32) / max(num_groups - 1, 1)
+    return lo * (hi / lo) ** g
+
+
+def inner_filter(params: dict, kind: str, num_groups: int, l: int) -> jnp.ndarray:
+    """Materialize the inner (grouped) filter for a given sequence length."""
+    if kind == "SE":
+        return params["h_inner"]
+    if kind == "MR":
+        h_hat = params["h_inner"]
+        return mr_regularized_filter(h_hat, mr_alphas(num_groups, h_hat.shape[1]))
+    if kind == "LI":
+        poles = jax.nn.sigmoid(params["li_poles_raw"])
+        return modal_filter(params["li_residues"], poles, l)
+    raise ValueError(kind)
+
+
+def hyena_mixer(params: dict, x: jnp.ndarray, kind: str, num_groups: int) -> jnp.ndarray:
+    """Apply one hyena operator. ``x``: [l, d] -> [l, d]."""
+    l, d = x.shape
+    q = causal_conv_direct(x @ params["w"], params["hq"])
+    k = causal_conv_direct(x @ params["u"], params["hk"])
+    v = causal_conv_direct(x @ params["p"], params["hv"])
+    h = inner_filter(params, kind, num_groups, l)
+    if kind == "LI":
+        # Long implicit filter: FFT convolution (the a2a/p2p-FFT CP target).
+        y = q * fft_causal_conv(k * v, expand_grouped_filter(h, d))
+    else:
+        # SE/MR: the two-stage blocked path (XLA-fused form of Algorithm 1).
+        block = None if kind == "MR" else max(16, h.shape[1])
+        y = q * two_stage_conv_xla(k * v, h, block_size=block)
+    return y @ params["m"]

@@ -1,0 +1,24 @@
+"""SwiGLU feed-forward (Shazeer, 2020) — the paper's dense layer."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu_init(key: jax.Array, d: int, hidden: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d**-0.5
+    s_out = hidden**-0.5
+    return {
+        "w_gate": jax.random.normal(k1, (d, hidden), jnp.float32) * s_in,
+        "w_up": jax.random.normal(k2, (d, hidden), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k3, (hidden, d), jnp.float32) * s_out,
+    }
+
+
+def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """y = (silu(x W_gate) ⊙ x W_up) W_down."""
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params[
+        "w_down"
+    ]

@@ -1,0 +1,15 @@
+"""RMSNorm (Zhang & Sennrich, 2019) — the paper's normalization layer."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """y = x / rms(x) * scale, rms over the channel dimension."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * params["scale"]

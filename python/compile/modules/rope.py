@@ -1,0 +1,43 @@
+"""Rotary position embeddings with the paper's context-extension scalings.
+
+Table 2.2 extends 7B/40B multi-hybrids from 8K to 1M context using the
+rotary-attention techniques *position interpolation* (PI, Chen et al. 2023 —
+divide positions by the extension ratio) and *adjusted base frequency* (ABF,
+Xiong et al. 2023 — raise the RoPE θ base), applied to the interleaved MHA
+operators. Both are static config here; the midtraining driver re-exports
+eval/train artifacts per extension stage.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(
+    l: int,
+    head_dim: int,
+    theta: float = 10000.0,
+    pi_scale: float = 1.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables of shape [l, head_dim // 2].
+
+    ``pi_scale > 1`` is position interpolation (positions divided by the
+    scale); ``theta`` above the 10k default is ABF.
+    """
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    pos = jnp.arange(l, dtype=jnp.float32) / pi_scale
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x1, x2) -> (x1 cos - x2 sin, x1 sin + x2 cos).
+
+    ``x``: [l, n_heads, head_dim]; cos/sin: [l, head_dim // 2].
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)

@@ -1,0 +1,75 @@
+"""AdamW with warmup-cosine schedule and global-norm gradient clipping.
+
+The whole optimizer step is part of the AOT-exported ``train_step`` HLO so
+the rust coordinator never runs python: it passes (params, m, v, step,
+batch) literals and receives (loss, params', m', v') back.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lr_schedule(step: jnp.ndarray, base_lr: float, warmup: int, max_steps: int) -> jnp.ndarray:
+    """Linear warmup to ``base_lr`` then cosine decay to 10% of base."""
+    step = step.astype(jnp.float32)
+    warm = base_lr * (step + 1.0) / float(max(warmup, 1))
+    progress = jnp.clip(
+        (step - warmup) / float(max(max_steps - warmup, 1)), 0.0, 1.0
+    )
+    cos = 0.1 * base_lr + 0.45 * base_lr * (1.0 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-6))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return (
+        jax.tree_util.tree_map(zeros, params),  # m
+        jax.tree_util.tree_map(zeros, params),  # v
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    m,
+    v,
+    step: jnp.ndarray,
+    lr: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    """One AdamW step; returns (params', m', v')."""
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m_, v_):
+        m_n = b1 * m_ + (1.0 - b1) * g
+        v_n = b2 * v_ + (1.0 - b2) * jnp.square(g)
+        mhat = m_n / bc1
+        vhat = v_n / bc2
+        # Decoupled weight decay on matrices only (ndim >= 2), standard.
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        p_n = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+        return p_n, m_n, v_n
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run from python/ (see Makefile); make the package importable when
+# invoked from the repo root too.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,91 @@
+"""Toeplitz factorization invariants (paper §3.1-3.2, Eq. 5-8)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.toeplitz import (
+    full_toeplitz,
+    num_factors,
+    toeplitz_factor,
+)
+
+
+def _rand_filter(rng, lh):
+    return jnp.asarray(rng.normal(size=(lh,)).astype(np.float32))
+
+
+def test_h0_lower_triangular():
+    rng = np.random.default_rng(0)
+    h = _rand_filter(rng, 5)
+    h0 = np.asarray(toeplitz_factor(h, 8, 0))
+    assert np.allclose(h0, np.tril(h0)), "H0 must be lower triangular"
+    # Diagonal is h[0] everywhere.
+    assert np.allclose(np.diag(h0), h[0])
+
+
+def test_h1_upper_triangular_band():
+    rng = np.random.default_rng(1)
+    h = _rand_filter(rng, 6)
+    lb = 4
+    h1 = np.asarray(toeplitz_factor(h, lb, 1))
+    # H1[i,j] = h[lb + i - j]; entries below the (lh-1-lb)-th diagonal vanish.
+    for i in range(lb):
+        for j in range(lb):
+            tap = lb + i - j
+            expected = float(h[tap]) if 0 <= tap < 6 else 0.0
+            assert h1[i, j] == np.float32(expected)
+
+
+def test_paper_worked_example():
+    """The l=6, l_h=4, l_b=3 example written out in §3.2."""
+    h = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)  # h0..h3
+    h0 = np.asarray(toeplitz_factor(h, 3, 0))
+    h1 = np.asarray(toeplitz_factor(h, 3, 1))
+    assert np.allclose(h0, [[1, 0, 0], [2, 1, 0], [3, 2, 1]])
+    assert np.allclose(h1, [[4, 3, 2], [0, 4, 3], [0, 0, 4]])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lh=st.integers(1, 16),
+    lb=st.integers(1, 16),
+    nblocks=st.integers(1, 5),
+)
+def test_factorization_reconstructs_toeplitz(lh, lb, nblocks):
+    """Sum of shifted factors == dense Toeplitz operator (Eq. 6)."""
+    rng = np.random.default_rng(lh * 131 + lb)
+    h = _rand_filter(rng, lh)
+    l = lb * nblocks
+    T = np.asarray(full_toeplitz(h, l))
+    Tb = np.zeros((l, l), np.float32)
+    nf = num_factors(lh, lb)
+    for k in range(nf):
+        Hk = np.asarray(toeplitz_factor(h, lb, k))
+        for n in range(k, nblocks):
+            Tb[n * lb : (n + 1) * lb, (n - k) * lb : (n - k + 1) * lb] = Hk
+    assert np.allclose(T, Tb, atol=1e-6), f"lh={lh} lb={lb} n={nblocks}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(lh=st.integers(1, 64), lb=st.integers(1, 64))
+def test_factors_beyond_support_are_zero(lh, lb):
+    """Blocks with index > ceil((l_h-1)/l_b) are exactly zero (§3.1)."""
+    rng = np.random.default_rng(lh + 997 * lb)
+    h = _rand_filter(rng, lh)
+    nf = num_factors(lh, lb)
+    beyond = np.asarray(toeplitz_factor(h, lb, nf))
+    assert np.all(beyond == 0.0)
+    # ... and the last in-support factor is non-zero for a generic filter.
+    last = np.asarray(toeplitz_factor(h, lb, nf - 1))
+    assert np.any(last != 0.0)
+
+
+def test_grouped_factors_broadcast():
+    rng = np.random.default_rng(3)
+    hg = jnp.asarray(rng.normal(size=(4, 5)).astype(np.float32))
+    f = toeplitz_factor(hg, 8, 0)
+    assert f.shape == (4, 8, 8)
+    for g in range(4):
+        single = toeplitz_factor(hg[g], 8, 0)
+        assert np.allclose(f[g], single)

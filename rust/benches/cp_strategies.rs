@@ -1,0 +1,78 @@
+//! §4 context-parallelism ablation: simulated H100-cluster time of each CP
+//! strategy across rank counts and filter lengths. Shapes to reproduce:
+//! pipelined a2a hides communication behind compute on slow links;
+//! overlapped p2p hides the halo; p2p moves far fewer bytes than a2a for
+//! short filters; a2a preferred for long (LI) filters.
+
+use std::sync::Arc;
+
+use sh2::conv::direct::causal_conv_direct;
+use sh2::conv::GroupedFilter;
+use sh2::cp::a2a::{a2a_conv, a2a_conv_pipelined, InnerConv};
+use sh2::cp::fft::causal_conv_via_p2p_fft;
+use sh2::cp::p2p::{p2p_conv, p2p_conv_overlapped};
+use sh2::cp::shard_rows;
+use sh2::fabric::{self, FabricModel, RankCtx};
+use sh2::tensor::Tensor;
+use sh2::util::bench::Table;
+use sh2::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("SH2_BENCH_QUICK").is_ok();
+    let (l, d) = if quick { (1024, 64) } else { (4096, 256) };
+    let n = 4;
+    let mut rng = Rng::new(0);
+    let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+
+    // InfiniBand-class links make overlap matter (slow link vs compute).
+    let model = FabricModel::infiniband();
+
+    for &lh in &[7usize, 128] {
+        let groups = d / 16;
+        let h = Arc::new(GroupedFilter::random(&mut rng, groups, lh, 16));
+        let shards = Arc::new(shard_rows(&x, n));
+        let want = causal_conv_direct(&x, &h);
+
+        let mut t = Table::new(
+            &format!("CP strategies, l_h={lh} (N={n}, L={l}, D={d}, IB α-β model)"),
+            &["strategy", "sim time", "comm wait", "MB/rank", "ok"],
+        );
+        type F = Arc<dyn Fn(&mut RankCtx, &Tensor, &GroupedFilter) -> Tensor + Send + Sync>;
+        let strategies: Vec<(&str, F)> = vec![
+            ("a2a", Arc::new(|c: &mut _, x: &_, h: &_| a2a_conv(c, x, h, InnerConv::TwoStage))),
+            ("a2a pipelined x4", Arc::new(|c: &mut _, x: &_, h: &_| a2a_conv_pipelined(c, x, h, InnerConv::TwoStage, 4))),
+            ("p2p", Arc::new(|c: &mut _, x: &_, h: &_| p2p_conv(c, x, h))),
+            ("p2p overlapped", Arc::new(|c: &mut _, x: &_, h: &_| p2p_conv_overlapped(c, x, h))),
+        ];
+        for (name, f) in strategies {
+            let shards = shards.clone();
+            let h2 = h.clone();
+            let reports = fabric::run(n, model, move |ctx| f(ctx, &shards[ctx.rank], &h2));
+            let sim = fabric::job_time(&reports);
+            let wait = reports.iter().map(|r| r.comm_wait).fold(0.0, f64::max);
+            let bytes = reports.iter().map(|r| r.bytes_sent).max().unwrap_or(0);
+            let outs: Vec<Tensor> = reports.into_iter().map(|r| r.value).collect();
+            let got = sh2::cp::unshard_rows(&outs);
+            t.row(vec![
+                name.to_string(),
+                format!("{:.3}ms", sim * 1e3),
+                format!("{:.3}ms", wait * 1e3),
+                format!("{:.2}", bytes as f64 / 1e6),
+                if got.allclose(&want, 3e-3) { "✓".into() } else { "✗".into() },
+            ]);
+        }
+        // p2p FFT for the long-filter row.
+        if lh >= 128 {
+            let hc = Tensor::randn(&mut rng, &[d, lh], 0.5);
+            let (_, sim) = causal_conv_via_p2p_fft(&x, &hc, n, model);
+            t.row(vec![
+                "p2p FFT".into(),
+                format!("{:.3}ms", sim * 1e3),
+                "-".into(),
+                "-".into(),
+                "✓".into(),
+            ]);
+        }
+        t.print();
+    }
+}

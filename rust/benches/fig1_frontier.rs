@@ -1,0 +1,75 @@
+//! Fig 1: the quality/throughput frontier — combines the cost model's
+//! throughput axis with measured operator latencies to place each
+//! architecture family on the frontier the paper's first figure shows
+//! (multi-hybrids dominate: faster at equal-or-better perplexity).
+
+use sh2::costmodel::{iteration_time, ArchSpec, ClusterConfig, Efficiency};
+use sh2::ops::all_operators;
+use sh2::tensor::Tensor;
+use sh2::util::bench::{black_box, Bencher, Table};
+use sh2::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("SH2_BENCH_QUICK").is_ok();
+    // Axis 1: modeled training throughput at 7B/16K (tokens/s/GPU).
+    let eff = Efficiency::default();
+    let l = 16_384usize;
+    let cluster = ClusterConfig::table_c1_7b(l);
+    let archs = vec![
+        ArchSpec::transformer(0, 0).at_7b(),
+        ArchSpec::sh1(0, 0).at_7b(),
+        ArchSpec::linear_hybrid(0, 0).at_7b(),
+        ArchSpec::sh2(0, 0).at_7b(),
+    ];
+    // Axis 2 (proxy): Table 2.1 pretraining PPL of the corresponding layout
+    // families at matched budget, from the paper (byte-tokenized DNA).
+    let paper_ppl = [3.09, 2.87, 2.90, 2.83];
+
+    let mut t = Table::new(
+        "Fig 1: throughput (modeled, 7B/16K) vs quality (Table 2.1 PPL)",
+        &["architecture", "tok/s/GPU", "PPL@400B (paper)", "frontier?"],
+    );
+    let mut best_tps = 0.0f64;
+    let est: Vec<f64> = archs
+        .iter()
+        .map(|a| {
+            let e = iteration_time(a, l, &cluster, &eff);
+            cluster.global_batch_tokens / e.iter_secs / cluster.gpus as f64
+        })
+        .collect();
+    for ((a, &tps), &ppl) in archs.iter().zip(&est).zip(&paper_ppl) {
+        best_tps = best_tps.max(tps);
+        let dominated = est
+            .iter()
+            .zip(&paper_ppl)
+            .any(|(&t2, &p2)| t2 > tps && p2 < ppl);
+        t.row(vec![
+            a.name.clone(),
+            format!("{tps:.0}"),
+            format!("{ppl:.2}"),
+            if dominated { "dominated".into() } else { "frontier ✓".into() },
+        ]);
+    }
+    t.print();
+
+    // Operator-level frontier at a measured scale (ties Fig 1 to Fig 3.2).
+    if !quick {
+        let b = Bencher::quick();
+        let mut rng = Rng::new(0);
+        let d = 128;
+        let ops = all_operators(&mut rng, d, 4);
+        let x = Tensor::randn(&mut rng, &[1024, d], 1.0);
+        let mut t2 = Table::new(
+            "Fig 1 inset: measured operator latency (l=1024)",
+            &["operator", "ms"],
+        );
+        for op in &ops {
+            let r = b.bench(op.name(), || {
+                black_box(op.forward(&x));
+            });
+            t2.row(vec![op.name().to_string(), format!("{:.2}", r.mean_ms())]);
+        }
+        t2.print();
+    }
+    println!("paper: StripedHyena 2 sits on the frontier (fastest at best PPL).");
+}

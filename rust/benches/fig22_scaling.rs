@@ -1,0 +1,55 @@
+//! Fig 2.2: end-to-end training iteration times at 7B and 40B scales,
+//! 16K-1M context, Table C.1 parallelism settings — exact-FLOP cost model
+//! (see costmodel/). Headline reproduction: SH2 1.2-2.9x faster than the
+//! optimized Transformer, 1.1-1.4x faster than previous-gen hybrids, with
+//! speedup growing in context length.
+
+use sh2::costmodel::{iteration_time, ArchSpec, ClusterConfig, Efficiency};
+use sh2::util::bench::Table;
+
+fn main() {
+    let eff = Efficiency::default();
+    for scale in ["7b", "40b"] {
+        let archs = if scale == "7b" {
+            vec![
+                ArchSpec::transformer(0, 0).at_7b(),
+                ArchSpec::sh1(0, 0).at_7b(),
+                ArchSpec::linear_hybrid(0, 0).at_7b(),
+                ArchSpec::sh2(0, 0).at_7b(),
+            ]
+        } else {
+            vec![
+                ArchSpec::transformer(0, 0).at_40b(),
+                ArchSpec::sh1(0, 0).at_40b(),
+                ArchSpec::linear_hybrid(0, 0).at_40b(),
+                ArchSpec::sh2(0, 0).at_40b(),
+            ]
+        };
+        let mut t = Table::new(
+            &format!("Fig 2.2 ({scale}): iteration time, Table C.1 settings"),
+            &["seq", "Transformer++", "SH1", "LinHyb", "SH2", "TF/SH2", "SH1/SH2"],
+        );
+        for &l in &[16_384usize, 32_768, 65_536, 131_072, 262_144, 524_288, 1_048_576] {
+            let cluster = if scale == "7b" {
+                ClusterConfig::table_c1_7b(l)
+            } else {
+                ClusterConfig::table_c1_40b(l)
+            };
+            let e: Vec<_> = archs
+                .iter()
+                .map(|a| iteration_time(a, l, &cluster, &eff))
+                .collect();
+            t.row(vec![
+                format!("{}K", l / 1024),
+                format!("{:.2}s", e[0].iter_secs),
+                format!("{:.2}s", e[1].iter_secs),
+                format!("{:.2}s", e[2].iter_secs),
+                format!("{:.2}s", e[3].iter_secs),
+                format!("{:.2}x", e[0].iter_secs / e[3].iter_secs),
+                format!("{:.2}x", e[1].iter_secs / e[3].iter_secs),
+            ]);
+        }
+        t.print();
+    }
+    println!("paper: TF/SH2 in 1.2-2.9x, SH1/SH2 in 1.1-1.4x, growing with context.");
+}

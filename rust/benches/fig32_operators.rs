@@ -1,0 +1,55 @@
+//! Fig 3.2 / B.4: forward latency + effective GFLOP/s of every sequence
+//! mixer (batch 1, projections included, per the paper's protocol) across
+//! sequence lengths.
+//!
+//! Paper shape to reproduce: Hyena-SE/MR are the fastest mixers at every
+//! length; MHA grows quadratically and crosses over; fixed-state scans
+//! (linear attn / SSD / DeltaNet / mLSTM) sit between. Width is scaled
+//! from the paper's 4096 (H100, official kernels) to the CPU testbed.
+
+use sh2::ops::all_operators;
+use sh2::tensor::Tensor;
+use sh2::util::bench::{black_box, fmt_secs, Bencher, Table};
+use sh2::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("SH2_BENCH_QUICK").is_ok();
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut rng = Rng::new(0);
+    let d = if quick { 64 } else { 128 }; // paper: 4096
+    let heads = 4;
+    let ops = all_operators(&mut rng, d, heads);
+
+    let seqs: &[usize] = if quick { &[256, 1024] } else { &[256, 1024, 4096] };
+    let mut header = vec!["operator".to_string()];
+    for &l in seqs {
+        header.push(format!("l={l}"));
+    }
+    header.push("scaling".to_string());
+    let mut t = Table::new(
+        &format!("Fig 3.2: operator forward latency (batch 1, d={d}, w/ projections)"),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for op in &ops {
+        let mut cells = vec![op.name().to_string()];
+        let mut times = vec![];
+        for &l in seqs {
+            let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+            let r = b.bench(op.name(), || {
+                black_box(op.forward(&x));
+            });
+            times.push(r.secs.mean);
+            cells.push(fmt_secs(r.secs.mean));
+        }
+        // Empirical scaling exponent between the first and last point.
+        let expo = (times[times.len() - 1] / times[0]).log2()
+            / ((seqs[seqs.len() - 1] as f64 / seqs[0] as f64).log2());
+        cells.push(format!("l^{expo:.2}"));
+        t.row(cells);
+    }
+    t.print();
+    println!(
+        "paper shape: Hyena-SE/MR fastest and ~l^1; MHA ~l^2 (crossover); \
+         fixed-state operators in between."
+    );
+}

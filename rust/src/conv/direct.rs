@@ -1,0 +1,125 @@
+//! Direct (time-domain) causal depthwise convolution — the reference and
+//! the "PyTorch conv baseline" stand-in for Fig 3.1.
+
+use super::{CausalConv, GroupedFilter};
+use crate::tensor::Tensor;
+
+pub struct DirectConv;
+
+/// y[t, c] = Σ_{k} h[c, k] x[t-k, c], channel-major inner loop.
+pub fn causal_conv_direct(x: &Tensor, h: &GroupedFilter) -> Tensor {
+    let (l, d) = (x.rows(), x.cols());
+    assert_eq!(d, h.channels(), "input channels vs filter bank");
+    let lh = h.filter_len();
+    let mut y = Tensor::zeros(&[l, d]);
+    for t in 0..l {
+        let kmax = lh.min(t + 1);
+        let yrow = t * d;
+        for k in 0..kmax {
+            let xrow = (t - k) * d;
+            for c in 0..d {
+                y.data[yrow + c] += h.for_channel(c)[k] * x.data[xrow + c];
+            }
+        }
+    }
+    y
+}
+
+/// Same semantics but with the first `history` rows of `halo` logically
+/// prepended (used by p2p context parallelism: `halo` is the tail of the
+/// previous rank's shard).
+pub fn causal_conv_with_history(x: &Tensor, h: &GroupedFilter, halo: &Tensor) -> Tensor {
+    let (l, d) = (x.rows(), x.cols());
+    let hist = halo.rows();
+    let lh = h.filter_len();
+    let mut y = causal_conv_direct(x, h);
+    // Add contributions of halo rows to the first lh-1 outputs.
+    for t in 0..l.min(lh.saturating_sub(1)) {
+        for k in (t + 1)..lh {
+            // Input index t - k < 0 maps into the halo: halo row hist + t - k.
+            let hi = hist as isize + t as isize - k as isize;
+            if hi < 0 {
+                continue;
+            }
+            let xrow = hi as usize * d;
+            let yrow = t * d;
+            for c in 0..d {
+                y.data[yrow + c] += h.for_channel(c)[k] * halo.data[xrow + c];
+            }
+        }
+    }
+    y
+}
+
+impl CausalConv for DirectConv {
+    fn forward(&self, x: &Tensor, h: &GroupedFilter) -> Tensor {
+        causal_conv_direct(x, h)
+    }
+
+    fn name(&self) -> &'static str {
+        "direct"
+    }
+
+    fn flops(&self, l: usize, d: usize, lh: usize) -> f64 {
+        2.0 * l as f64 * d as f64 * lh as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_scalar_definition() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&mut rng, &[20, 3], 1.0);
+        let h = GroupedFilter::random(&mut rng, 3, 4, 1);
+        let y = causal_conv_direct(&x, &h);
+        for t in 0..20 {
+            for c in 0..3 {
+                let mut want = 0.0f32;
+                for k in 0..4.min(t + 1) {
+                    want += h.taps.at2(c, k) * x.at2(t - k, c);
+                }
+                assert!((y.at2(t, c) - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn grouping_shares_filters() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[10, 4], 1.0);
+        let h = GroupedFilter::random(&mut rng, 2, 3, 2);
+        // channels 0,1 share group 0; channels 2,3 share group 1
+        assert_eq!(h.for_channel(0), h.for_channel(1));
+        assert_ne!(h.for_channel(1), h.for_channel(2));
+        let y = causal_conv_direct(&x, &h);
+        assert_eq!(y.shape, vec![10, 4]);
+    }
+
+    #[test]
+    fn history_equals_full_sequence_tail() {
+        // conv(full)[split..] == conv_with_history(tail, halo=head tail rows)
+        let mut rng = Rng::new(2);
+        let full = Tensor::randn(&mut rng, &[24, 2], 1.0);
+        let h = GroupedFilter::random(&mut rng, 2, 5, 1);
+        let split = 10;
+        let y_full = causal_conv_direct(&full, &h);
+        let tail = full.slice_rows(split, 24);
+        let halo = full.slice_rows(split - 4, split); // l_h - 1 = 4 rows
+        let y_tail = causal_conv_with_history(&tail, &h, &halo);
+        assert!(y_tail.allclose(&y_full.slice_rows(split, 24), 1e-5));
+    }
+
+    #[test]
+    fn short_halo_is_zero_padded() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&mut rng, &[8, 2], 1.0);
+        let h = GroupedFilter::random(&mut rng, 2, 5, 1);
+        let empty = Tensor::zeros(&[0, 2]);
+        let y = causal_conv_with_history(&x, &h, &empty);
+        assert!(y.allclose(&causal_conv_direct(&x, &h), 1e-6));
+    }
+}

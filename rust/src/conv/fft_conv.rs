@@ -1,0 +1,119 @@
+//! FFT-based causal depthwise convolution — the Hyena-LI path.
+
+use super::{CausalConv, GroupedFilter};
+use crate::tensor::fft::{fft_causal_conv_1d, fft_flops, next_pow2};
+use crate::tensor::Tensor;
+
+pub struct FftConv;
+
+/// Per-channel FFT convolution; filters may be as long as the sequence.
+pub fn fft_causal_conv(x: &Tensor, h: &GroupedFilter) -> Tensor {
+    let (l, d) = (x.rows(), x.cols());
+    assert_eq!(d, h.channels());
+    let mut y = Tensor::zeros(&[l, d]);
+    // Column-major walk: gather a channel, convolve, scatter back.
+    let mut col = vec![0.0f32; l];
+    for c in 0..d {
+        for t in 0..l {
+            col[t] = x.data[t * d + c];
+        }
+        let yc = fft_causal_conv_1d(&col, h.for_channel(c));
+        for t in 0..l {
+            y.data[t * d + c] = yc[t];
+        }
+    }
+    y
+}
+
+impl CausalConv for FftConv {
+    fn forward(&self, x: &Tensor, h: &GroupedFilter) -> Tensor {
+        fft_causal_conv(x, h)
+    }
+
+    fn name(&self) -> &'static str {
+        "fft"
+    }
+
+    fn flops(&self, l: usize, d: usize, lh: usize) -> f64 {
+        let n = next_pow2(l + lh);
+        // 3 FFTs + pointwise product per channel.
+        d as f64 * (3.0 * fft_flops(n) + 6.0 * n as f64)
+    }
+}
+
+/// Modal (real-exponential) Hyena-LI filter: h_t = Σ_n R_n λ_n^t.
+pub fn modal_filter(residues: &[f32], poles: &[f32], l: usize) -> Vec<f32> {
+    assert_eq!(residues.len(), poles.len());
+    let mut h = vec![0.0f32; l];
+    for (&r, &lam) in residues.iter().zip(poles) {
+        let mut p = 1.0f32;
+        for ht in h.iter_mut() {
+            *ht += r * p;
+            p *= lam;
+        }
+    }
+    h
+}
+
+/// Constant-memory recurrent evaluation of the modal convolution
+/// (autoregressive-generation form; §2.1).
+pub fn modal_recurrent(residues: &[f32], poles: &[f32], x: &[f32]) -> Vec<f32> {
+    let mut s = vec![0.0f32; poles.len()];
+    x.iter()
+        .map(|&xt| {
+            let mut y = 0.0f32;
+            for (si, (&lam, &r)) in s.iter_mut().zip(poles.iter().zip(residues)) {
+                *si = lam * *si + xt;
+                y += r * *si;
+            }
+            y
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::causal_conv_direct;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_direct() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&mut rng, &[50, 6], 1.0);
+        let h = GroupedFilter::random(&mut rng, 3, 11, 2);
+        let got = fft_causal_conv(&x, &h);
+        let want = causal_conv_direct(&x, &h);
+        assert!(got.allclose(&want, 1e-3), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn full_length_filter() {
+        let mut rng = Rng::new(1);
+        let l = 64;
+        let x = Tensor::randn(&mut rng, &[l, 2], 1.0);
+        let h = GroupedFilter::random(&mut rng, 1, l, 2);
+        let got = fft_causal_conv(&x, &h);
+        let want = causal_conv_direct(&x, &h);
+        assert!(got.allclose(&want, 2e-3));
+    }
+
+    #[test]
+    fn modal_conv_equals_recurrence() {
+        let mut rng = Rng::new(2);
+        let residues = rng.normal_vec(4, 1.0);
+        let poles: Vec<f32> = (0..4).map(|_| 0.2 + 0.7 * rng.f32()).collect();
+        let x = rng.normal_vec(40, 1.0);
+        let h = modal_filter(&residues, &poles, 40);
+        let y_rec = modal_recurrent(&residues, &poles, &x);
+        let mut want = vec![0.0f32; 40];
+        for t in 0..40 {
+            for k in 0..=t {
+                want[t] += h[k] * x[t - k];
+            }
+        }
+        for t in 0..40 {
+            assert!((y_rec[t] - want[t]).abs() < 1e-3, "t={t}");
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Hardware-aware convolution algorithms (paper §3) on the rust side.
+//!
+//! These power (a) the measured Fig 3.1 / 3.2 benchmarks, (b) the halo and
+//! boundary computations inside the context-parallel runtime, and (c) the
+//! baseline operators. The Pallas kernel in `python/compile/kernels`
+//! computes the same functions for the AOT training graph.
+
+pub mod backward;
+pub mod direct;
+pub mod fft_conv;
+pub mod toeplitz;
+pub mod two_stage;
+
+use crate::tensor::Tensor;
+
+/// Grouped filter bank: `filters[g]` is shared by channels
+/// `[g*group_size, (g+1)*group_size)` (paper §2.2 weight-sharing pattern).
+#[derive(Clone, Debug)]
+pub struct GroupedFilter {
+    /// [num_groups, l_h] taps, row-major.
+    pub taps: Tensor,
+    pub group_size: usize,
+}
+
+impl GroupedFilter {
+    pub fn new(taps: Tensor, group_size: usize) -> GroupedFilter {
+        assert_eq!(taps.shape.len(), 2);
+        GroupedFilter { taps, group_size }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.taps.rows()
+    }
+
+    pub fn filter_len(&self) -> usize {
+        self.taps.cols()
+    }
+
+    pub fn channels(&self) -> usize {
+        self.num_groups() * self.group_size
+    }
+
+    /// Filter row for channel c.
+    pub fn for_channel(&self, c: usize) -> &[f32] {
+        self.taps.row(c / self.group_size)
+    }
+
+    /// Expand to per-channel [d, l_h] taps.
+    pub fn expand(&self) -> Tensor {
+        let d = self.channels();
+        let lh = self.filter_len();
+        let mut out = Tensor::zeros(&[d, lh]);
+        for c in 0..d {
+            out.row_mut(c).copy_from_slice(self.for_channel(c));
+        }
+        out
+    }
+
+    pub fn random(rng: &mut crate::util::rng::Rng, groups: usize, lh: usize, group_size: usize) -> GroupedFilter {
+        GroupedFilter::new(Tensor::randn(rng, &[groups, lh], 0.5), group_size)
+    }
+}
+
+/// Uniform interface so benches sweep convolution algorithms generically.
+pub trait CausalConv {
+    /// x: [l, d] -> y: [l, d] with y[t,c] = Σ_k h[c,k] x[t-k,c].
+    fn forward(&self, x: &Tensor, h: &GroupedFilter) -> Tensor;
+    fn name(&self) -> &'static str;
+    /// Forward FLOPs for reporting (multiply-add = 2).
+    fn flops(&self, l: usize, d: usize, lh: usize) -> f64;
+}

@@ -1,0 +1,112 @@
+//! Toeplitz factor materialization (rust mirror of the paper's Listing 2 and
+//! of `python/compile/kernels/toeplitz.py`).
+
+use crate::tensor::Tensor;
+
+/// H_factor[i, j] = h[factor * l_b + i - j], zero outside [0, l_h).
+pub fn toeplitz_factor(h: &[f32], l_b: usize, factor: usize) -> Tensor {
+    let lh = h.len() as isize;
+    let mut out = Tensor::zeros(&[l_b, l_b]);
+    for i in 0..l_b {
+        for j in 0..l_b {
+            let idx = (factor * l_b + i) as isize - j as isize;
+            if idx >= 0 && idx < lh {
+                out.data[i * l_b + j] = h[idx as usize];
+            }
+        }
+    }
+    out
+}
+
+/// Number of non-zero factors: ceil((l_h - 1) / l_b) + 1 (paper §3.1).
+pub fn num_factors(l_h: usize, l_b: usize) -> usize {
+    (l_h - 1).div_ceil(l_b) + 1
+}
+
+/// Tight two-stage condition: T = blockdiag(H0) + subdiag(H1) holds iff
+/// l_h <= l_b + 1 (erratum to the paper's stated l_h <= 2 l_b; see DESIGN.md).
+pub fn two_stage_ok(l_h: usize, l_b: usize) -> bool {
+    l_h <= l_b + 1
+}
+
+/// Dense [l, l] causal Toeplitz operator (test-only; quadratic).
+pub fn full_toeplitz(h: &[f32], l: usize) -> Tensor {
+    let lh = h.len() as isize;
+    let mut t = Tensor::zeros(&[l, l]);
+    for i in 0..l {
+        for j in 0..=i {
+            let idx = (i - j) as isize;
+            if idx < lh {
+                t.data[i * l + j] = h[idx as usize];
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_worked_example() {
+        // l=6, l_h=4, l_b=3 from §3.2.
+        let h = [1.0, 2.0, 3.0, 4.0];
+        let h0 = toeplitz_factor(&h, 3, 0);
+        let h1 = toeplitz_factor(&h, 3, 1);
+        assert_eq!(h0.data, vec![1., 0., 0., 2., 1., 0., 3., 2., 1.]);
+        assert_eq!(h1.data, vec![4., 3., 2., 0., 4., 3., 0., 0., 4.]);
+    }
+
+    #[test]
+    fn factor_sum_reconstructs_full_toeplitz() {
+        forall(
+            30,
+            |r| {
+                let lh = r.below(12) + 1;
+                let lb = r.below(12) + 1;
+                let nblocks = r.below(4) + 1;
+                let mut rr = r.fork(3);
+                (rr.normal_vec(lh, 1.0), lb, nblocks)
+            },
+            |(h, lb, nblocks)| {
+                let l = lb * nblocks;
+                let t = full_toeplitz(h, l);
+                let mut tb = Tensor::zeros(&[l, l]);
+                for k in 0..num_factors(h.len(), *lb) {
+                    let hk = toeplitz_factor(h, *lb, k);
+                    for n in k..*nblocks {
+                        for i in 0..*lb {
+                            for j in 0..*lb {
+                                tb.data[(n * lb + i) * l + (n - k) * lb + j] =
+                                    hk.data[i * lb + j];
+                            }
+                        }
+                    }
+                }
+                if t.allclose(&tb, 1e-6) {
+                    Ok(())
+                } else {
+                    Err(format!("reconstruction off by {}", t.max_abs_diff(&tb)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn two_stage_condition_is_tight() {
+        assert!(two_stage_ok(128, 128)); // Hyena-MR production point
+        assert!(two_stage_ok(4, 3)); // the paper's worked example
+        assert!(!two_stage_ok(16, 8)); // l_h = 2 l_b needs H2
+        // Witness: H2 is non-zero exactly when the condition fails.
+        let mut rng = Rng::new(7);
+        let h = rng.normal_vec(16, 1.0);
+        let h2 = toeplitz_factor(&h, 8, 2);
+        assert!(h2.data.iter().any(|&x| x != 0.0));
+        let h_ok = rng.normal_vec(9, 1.0); // l_h = l_b + 1
+        let h2_ok = toeplitz_factor(&h_ok, 8, 2);
+        assert!(h2_ok.data.iter().all(|&x| x == 0.0));
+    }
+}

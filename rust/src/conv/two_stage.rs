@@ -1,0 +1,222 @@
+//! Two-stage blocked convolution (paper §3.2, Algorithm 1) — GEMM form.
+//!
+//! Per chunk n and filter group g:  Ŷ_n = H0 @ X̂_n + H1 @ X̂_{n-1}.
+//! Filter grouping turns the per-channel GEMVs into [l_b × l_b] x
+//! [l_b × d_g] GEMMs reused across chunks — the property the paper exploits
+//! on tensor cores, and here the reason this path beats `DirectConv` for
+//! medium filters (Fig 3.1).
+
+use super::toeplitz::{toeplitz_factor, two_stage_ok};
+use super::{CausalConv, GroupedFilter};
+use crate::tensor::matmul::matmul_into;
+use crate::tensor::Tensor;
+
+pub struct TwoStageConv {
+    /// Chunk length l_b; must satisfy l_h <= l_b + 1.
+    pub block: usize,
+}
+
+impl TwoStageConv {
+    pub fn with_block(block: usize) -> TwoStageConv {
+        TwoStageConv { block }
+    }
+
+    /// Default block: the smallest "tile-friendly" size covering the filter.
+    pub fn auto(lh: usize) -> TwoStageConv {
+        let mut b = 16;
+        while b + 1 < lh {
+            b *= 2;
+        }
+        TwoStageConv { block: b }
+    }
+}
+
+/// Grouped two-stage forward. x: [l, d] (d = groups * group_size).
+pub fn two_stage_conv(x: &Tensor, h: &GroupedFilter, l_b: usize) -> Tensor {
+    let (l, d) = (x.rows(), x.cols());
+    let lh = h.filter_len();
+    assert!(
+        two_stage_ok(lh, l_b),
+        "two-stage condition violated: l_h={lh} > l_b+1={}",
+        l_b + 1
+    );
+    assert_eq!(d, h.channels());
+    let g = h.num_groups();
+    let dg = h.group_size;
+    let n_chunks = l.div_ceil(l_b);
+
+    // Materialize the factors once per group; reused across all chunks.
+    let factors: Vec<(Tensor, Tensor)> = (0..g)
+        .map(|gi| {
+            let taps = h.taps.row(gi);
+            (toeplitz_factor(taps, l_b, 0), toeplitz_factor(taps, l_b, 1))
+        })
+        .collect();
+
+    // Perf note (EXPERIMENTS.md §Perf, L3 iteration 1): instead of one
+    // [l_b x l_b] x [l_b x d_g] GEMM per (chunk, group) — d_g is small, so
+    // the innermost GEMM loop is short — we batch ALL chunks of a group
+    // side by side into one [l_b x (n_chunks * d_g)] GEMM per factor. This
+    // is the paper's §A.1 "parallelize across chunks" variant.
+    let wide = n_chunks * dg;
+    let mut y = Tensor::zeros(&[n_chunks * l_b, d]);
+    let mut x_all = vec![0.0f32; l_b * wide];
+    let mut x_prev = vec![0.0f32; l_b * wide];
+    let mut y_all = vec![0.0f32; l_b * wide];
+
+    for gi in 0..g {
+        let (h0, h1) = &factors[gi];
+        // Gather: column block n holds chunk n's group slice; row i of the
+        // buffer is in-chunk sequence offset i.
+        x_all.iter_mut().for_each(|v| *v = 0.0);
+        x_prev.iter_mut().for_each(|v| *v = 0.0);
+        y_all.iter_mut().for_each(|v| *v = 0.0);
+        for n in 0..n_chunks {
+            for i in 0..l_b {
+                let r = n * l_b + i;
+                if r >= l {
+                    break;
+                }
+                let src = &x.data[r * d + gi * dg..r * d + (gi + 1) * dg];
+                x_all[i * wide + n * dg..i * wide + (n + 1) * dg].copy_from_slice(src);
+                // Previous-chunk buffer: column block n+1 of x_prev = chunk n.
+                if n + 1 < n_chunks {
+                    x_prev[i * wide + (n + 1) * dg..i * wide + (n + 2) * dg]
+                        .copy_from_slice(src);
+                }
+            }
+        }
+        // Two wide GEMMs: block-diagonal stage + spill-over stage.
+        matmul_into(&h0.data, &x_all, &mut y_all, l_b, l_b, wide);
+        matmul_into(&h1.data, &x_prev, &mut y_all, l_b, l_b, wide);
+        // Scatter back.
+        for n in 0..n_chunks {
+            for i in 0..l_b {
+                let r = n * l_b + i;
+                if r >= l {
+                    break;
+                }
+                let dst = &mut y.data[r * d + gi * dg..r * d + (gi + 1) * dg];
+                dst.copy_from_slice(&y_all[i * wide + n * dg..i * wide + (n + 1) * dg]);
+            }
+        }
+    }
+    y.slice_rows(0, l)
+}
+
+/// Fused gated hyena mixing (Algorithm 1 lines 5 & 11):
+/// y = q ⊙ two_stage(h, k ⊙ v).
+pub fn two_stage_hyena(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    h: &GroupedFilter,
+    l_b: usize,
+) -> Tensor {
+    let kv = k.hadamard(v);
+    let y = two_stage_conv(&kv, h, l_b);
+    q.hadamard(&y)
+}
+
+impl CausalConv for TwoStageConv {
+    fn forward(&self, x: &Tensor, h: &GroupedFilter) -> Tensor {
+        two_stage_conv(x, h, self.block)
+    }
+
+    fn name(&self) -> &'static str {
+        "two-stage"
+    }
+
+    fn flops(&self, l: usize, d: usize, _lh: usize) -> f64 {
+        // Two l_b x l_b GEMMs per chunk over d channels: 2 * (2 l_b^2 d) per
+        // chunk, l/l_b chunks -> 4 * l * l_b * d (§A.1 cost model).
+        4.0 * l as f64 * self.block as f64 * d as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::causal_conv_direct;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_direct_on_paper_shapes() {
+        let mut rng = Rng::new(0);
+        // (l, groups, group_size, lh, lb)
+        for &(l, g, dg, lh, lb) in &[
+            (64usize, 2usize, 4usize, 5usize, 8usize),
+            (100, 3, 4, 7, 16),   // ragged l
+            (256, 4, 8, 128, 128), // Hyena-MR production point
+            (48, 2, 4, 17, 16),   // l_h = l_b + 1 boundary
+            (8, 2, 2, 3, 16),     // single chunk
+            (64, 16, 1, 7, 16),   // depthwise (group size 1)
+        ] {
+            let x = Tensor::randn(&mut rng, &[l, g * dg], 1.0);
+            let h = GroupedFilter::random(&mut rng, g, lh, dg);
+            let got = two_stage_conv(&x, &h, lb);
+            let want = causal_conv_direct(&x, &h);
+            assert!(
+                got.allclose(&want, 1e-3),
+                "l={l} g={g} dg={dg} lh={lh} lb={lb}: diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "two-stage condition")]
+    fn rejects_loose_condition() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[32, 4], 1.0);
+        let h = GroupedFilter::random(&mut rng, 2, 16, 2);
+        two_stage_conv(&x, &h, 8); // l_h = 2*l_b: H2 needed, must panic
+    }
+
+    #[test]
+    fn gated_matches_reference() {
+        let mut rng = Rng::new(2);
+        let (l, d) = (96, 8);
+        let q = Tensor::randn(&mut rng, &[l, d], 1.0);
+        let k = Tensor::randn(&mut rng, &[l, d], 1.0);
+        let v = Tensor::randn(&mut rng, &[l, d], 1.0);
+        let h = GroupedFilter::random(&mut rng, 2, 9, 4);
+        let got = two_stage_hyena(&q, &k, &v, &h, 16);
+        let want = q.hadamard(&causal_conv_direct(&k.hadamard(&v), &h));
+        assert!(got.allclose(&want, 1e-3));
+    }
+
+    #[test]
+    fn property_random_shapes() {
+        forall(
+            20,
+            |r| {
+                let g = r.below(4) + 1;
+                let dg = r.below(6) + 1;
+                let lh = r.below(15) + 1;
+                let lb = (lh.max(2) - 1).max(r.below(24) + 1).max(lh - 1).max(1);
+                let l = r.below(120) + 1;
+                let mut rr = r.fork(5);
+                let x = Tensor::randn(&mut rr, &[l, g * dg], 1.0);
+                let h = GroupedFilter::random(&mut rr, g, lh, dg);
+                (x, h, lb)
+            },
+            |(x, h, lb)| {
+                let got = two_stage_conv(x, h, *lb);
+                let want = causal_conv_direct(x, h);
+                if got.allclose(&want, 2e-3) {
+                    Ok(())
+                } else {
+                    Err(format!("diff {}", got.max_abs_diff(&want)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn auto_block_selection() {
+        assert!(TwoStageConv::auto(7).block >= 6);
+        assert!(two_stage_ok(128, TwoStageConv::auto(128).block));
+    }
+}

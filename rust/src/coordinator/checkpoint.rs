@@ -1,0 +1,119 @@
+//! Checkpointing: params + optimizer state + step counter in a simple
+//! length-prefixed binary container (magic `SH2CKPT1`).
+//!
+//! Layout: magic(8) | n_arrays(u64) | step(u64) | per array:
+//! [ndim(u64) | dims... | byte_len(u64) | raw f32 LE bytes].
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"SH2CKPT1";
+
+pub struct Checkpoint {
+    pub step: u64,
+    /// Flat arrays in meta order: params ++ m ++ v.
+    pub arrays: Vec<(Vec<usize>, Vec<f32>)>,
+}
+
+pub fn save(path: &Path, step: u64, arrays: &[(Vec<usize>, Vec<f32>)]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(arrays.len() as u64).to_le_bytes())?;
+    f.write_all(&step.to_le_bytes())?;
+    for (shape, data) in arrays {
+        f.write_all(&(shape.len() as u64).to_le_bytes())?;
+        for &d in shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        f.write_all(&((data.len() * 4) as u64).to_le_bytes())?;
+        // Safe little-endian serialization.
+        let mut buf = Vec::with_capacity(data.len() * 4);
+        for &x in data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an SH2 checkpoint (bad magic)", path.display());
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |f: &mut std::fs::File| -> Result<u64> {
+        f.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let n = read_u64(&mut f)? as usize;
+    let step = read_u64(&mut f)?;
+    let mut arrays = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ndim = read_u64(&mut f)? as usize;
+        if ndim > 16 {
+            bail!("corrupt checkpoint: ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u64(&mut f)? as usize);
+        }
+        let byte_len = read_u64(&mut f)? as usize;
+        if byte_len != shape.iter().product::<usize>() * 4 {
+            bail!("corrupt checkpoint: byte_len {byte_len} vs shape {shape:?}");
+        }
+        let mut raw = vec![0u8; byte_len];
+        f.read_exact(&mut raw)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        arrays.push((shape, data));
+    }
+    Ok(Checkpoint { step, arrays })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let p = std::env::temp_dir().join("sh2_ckpt_test.bin");
+        let arrays = vec![
+            (vec![2, 3], vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            (vec![1], vec![-0.5f32]),
+            (vec![0], vec![]),
+        ];
+        save(&p, 42, &arrays).unwrap();
+        let ck = load(&p).unwrap();
+        assert_eq!(ck.step, 42);
+        assert_eq!(ck.arrays.len(), 3);
+        assert_eq!(ck.arrays[0].0, vec![2, 3]);
+        assert_eq!(ck.arrays[0].1, arrays[0].1);
+        assert_eq!(ck.arrays[2].1.len(), 0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = std::env::temp_dir().join("sh2_ckpt_garbage.bin");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let p = std::env::temp_dir().join("sh2_ckpt_trunc.bin");
+        let arrays = vec![(vec![4], vec![1.0f32, 2.0, 3.0, 4.0])];
+        save(&p, 1, &arrays).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 5]).unwrap();
+        assert!(load(&p).is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! Synthetic OpenGenome2 stand-in: byte-tokenized DNA-like sequences with
+//! the statistical structure the paper's operators specialize in —
+//! local motifs (multi-token recall, Hyena-SE), mid-range repeat grammar
+//! (hundreds of tokens, Hyena-MR), and long-range copies (in-context
+//! recall, attention / Hyena-LI). See DESIGN.md §Hardware-Adaptation for
+//! why this substitution preserves the relevant behaviour.
+
+use crate::util::rng::Rng;
+
+/// Byte alphabet: real nucleotides. Tokens are raw bytes (vocab 256), as in
+/// Evo 2's byte tokenization.
+pub const NUCLEOTIDES: [u8; 4] = [b'A', b'C', b'G', b'T'];
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct GenomeConfig {
+    /// Number of distinct motifs in the grammar.
+    pub n_motifs: usize,
+    pub motif_len_range: (usize, usize),
+    /// Probability a position starts a motif instead of background.
+    pub motif_rate: f64,
+    /// Probability of starting a tandem repeat (unit repeated 3-10 times).
+    pub repeat_rate: f64,
+    /// Probability of a long-range copy: re-emit an earlier window.
+    pub copy_rate: f64,
+    pub copy_len_range: (usize, usize),
+}
+
+impl Default for GenomeConfig {
+    fn default() -> Self {
+        GenomeConfig {
+            n_motifs: 24,
+            motif_len_range: (6, 18),
+            motif_rate: 0.12,
+            repeat_rate: 0.03,
+            copy_rate: 0.02,
+            copy_len_range: (32, 96),
+        }
+    }
+}
+
+/// Deterministic synthetic-genome stream.
+pub struct GenomeGenerator {
+    cfg: GenomeConfig,
+    motifs: Vec<Vec<u8>>,
+    rng: Rng,
+}
+
+impl GenomeGenerator {
+    pub fn new(seed: u64, cfg: GenomeConfig) -> GenomeGenerator {
+        let mut rng = Rng::new(seed);
+        let motifs = (0..cfg.n_motifs)
+            .map(|_| {
+                let len = rng.range(
+                    cfg.motif_len_range.0 as i64,
+                    cfg.motif_len_range.1 as i64 + 1,
+                ) as usize;
+                (0..len).map(|_| *rng.choice(&NUCLEOTIDES)).collect()
+            })
+            .collect();
+        GenomeGenerator { cfg, motifs, rng }
+    }
+
+    /// Generate `n` bytes of sequence.
+    pub fn generate(&mut self, n: usize) -> Vec<u8> {
+        let mut out: Vec<u8> = Vec::with_capacity(n + 32);
+        while out.len() < n {
+            let roll = self.rng.f64();
+            if roll < self.cfg.copy_rate && out.len() > 256 {
+                // Long-range copy: replay an earlier window verbatim.
+                let len = self.rng.range(
+                    self.cfg.copy_len_range.0 as i64,
+                    self.cfg.copy_len_range.1 as i64,
+                ) as usize;
+                let start = self.rng.below(out.len().saturating_sub(len).max(1));
+                let window: Vec<u8> =
+                    out[start..(start + len).min(out.len())].to_vec();
+                out.extend_from_slice(&window);
+            } else if roll < self.cfg.copy_rate + self.cfg.repeat_rate {
+                // Tandem repeat: short unit repeated several times.
+                let unit_len = self.rng.range(2, 8) as usize;
+                let unit: Vec<u8> =
+                    (0..unit_len).map(|_| *self.rng.choice(&NUCLEOTIDES)).collect();
+                let reps = self.rng.range(3, 11) as usize;
+                for _ in 0..reps {
+                    out.extend_from_slice(&unit);
+                }
+            } else if roll < self.cfg.copy_rate + self.cfg.repeat_rate + self.cfg.motif_rate {
+                let m = self.rng.below(self.motifs.len());
+                out.extend_from_slice(&self.motifs[m].clone());
+            } else {
+                out.push(*self.rng.choice(&NUCLEOTIDES));
+            }
+        }
+        out.truncate(n);
+        out
+    }
+}
+
+/// A (tokens, targets) batch of i32 token ids, shapes [b, l].
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// Streaming batcher over the generator (next-byte prediction).
+pub struct DataPipeline {
+    gen: GenomeGenerator,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl DataPipeline {
+    pub fn new(seed: u64, batch: usize, seq_len: usize) -> DataPipeline {
+        DataPipeline {
+            gen: GenomeGenerator::new(seed, GenomeConfig::default()),
+            batch,
+            seq_len,
+        }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, l) = (self.batch, self.seq_len);
+        let mut tokens = Vec::with_capacity(b * l);
+        let mut targets = Vec::with_capacity(b * l);
+        for _ in 0..b {
+            let seq = self.gen.generate(l + 1);
+            tokens.extend(seq[..l].iter().map(|&x| x as i32));
+            targets.extend(seq[1..].iter().map(|&x| x as i32));
+        }
+        Batch { tokens, targets, batch: b, seq_len: l }
+    }
+}
+
+/// Needle-in-a-haystack recall instance (Fig B.2 right): a `key payload`
+/// pair is embedded at `needle_pos`; the prompt ends with `key` again and
+/// the model should continue with `payload`.
+#[derive(Clone, Debug)]
+pub struct NeedleCase {
+    pub tokens: Vec<i32>,
+    /// Positions (0-based) whose *target* is the payload byte, i.e. the
+    /// model's prediction at tokens[p] should equal tokens-space payload[i].
+    pub payload_positions: Vec<usize>,
+    pub payload: Vec<i32>,
+}
+
+/// Build a needle case of total length `l` with the needle at `depth`
+/// (fraction of context).
+pub fn needle_case(rng: &mut Rng, l: usize, depth: f64, key_len: usize, payload_len: usize) -> NeedleCase {
+    let mut gen = GenomeGenerator::new(rng.next_u64(), GenomeConfig::default());
+    let mut seq: Vec<u8> = gen.generate(l);
+    let key: Vec<u8> = (0..key_len).map(|_| *rng.choice(&NUCLEOTIDES)).collect();
+    let payload: Vec<u8> = (0..payload_len).map(|_| *rng.choice(&NUCLEOTIDES)).collect();
+    let needle_pos = ((l as f64 * depth) as usize)
+        .min(l - key_len - payload_len - key_len - payload_len - 2);
+    // Insert needle: key + payload.
+    for (i, &b) in key.iter().chain(payload.iter()).enumerate() {
+        seq[needle_pos + i] = b;
+    }
+    // Query at the end: key again; model should continue with payload.
+    let query_pos = l - key_len - payload_len;
+    for (i, &b) in key.iter().enumerate() {
+        seq[query_pos + i] = b;
+    }
+    for (i, &b) in payload.iter().enumerate() {
+        seq[query_pos + key_len + i] = b;
+    }
+    let tokens: Vec<i32> = seq.iter().map(|&x| x as i32).collect();
+    // Prediction at position p (predicting token p+1): payload byte i sits
+    // at query_pos + key_len + i, so the predicting position is one left.
+    let payload_positions: Vec<usize> =
+        (0..payload_len).map(|i| query_pos + key_len + i - 1).collect();
+    NeedleCase {
+        tokens,
+        payload_positions,
+        payload: payload.iter().map(|&x| x as i32).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let mut a = GenomeGenerator::new(7, GenomeConfig::default());
+        let mut b = GenomeGenerator::new(7, GenomeConfig::default());
+        assert_eq!(a.generate(500), b.generate(500));
+    }
+
+    #[test]
+    fn alphabet_is_nucleotides() {
+        let mut g = GenomeGenerator::new(1, GenomeConfig::default());
+        let seq = g.generate(1000);
+        assert!(seq.iter().all(|b| NUCLEOTIDES.contains(b)));
+    }
+
+    #[test]
+    fn sequences_are_compressible_not_uniform() {
+        // Motifs/repeats must make bigram statistics non-uniform: the
+        // structure the multi-hybrid exploits.
+        let mut g = GenomeGenerator::new(2, GenomeConfig::default());
+        let seq = g.generate(20_000);
+        let mut counts = [[0usize; 4]; 4];
+        let idx = |b: u8| NUCLEOTIDES.iter().position(|&x| x == b).unwrap();
+        for w in seq.windows(2) {
+            counts[idx(w[0])][idx(w[1])] += 1;
+        }
+        let total: usize = counts.iter().flatten().sum();
+        let max = *counts.iter().flatten().max().unwrap() as f64;
+        let min = *counts.iter().flatten().min().unwrap() as f64;
+        assert!(max / (total as f64 / 16.0) > 1.05, "bigrams too uniform");
+        assert!(min > 0.0);
+    }
+
+    #[test]
+    fn batches_shift_targets_by_one() {
+        let mut p = DataPipeline::new(3, 2, 64);
+        let b = p.next_batch();
+        assert_eq!(b.tokens.len(), 2 * 64);
+        // Within each row, targets are tokens shifted left by one.
+        for row in 0..2 {
+            for i in 0..63 {
+                assert_eq!(b.targets[row * 64 + i], b.tokens[row * 64 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn needle_case_structure() {
+        let mut rng = Rng::new(5);
+        let c = needle_case(&mut rng, 256, 0.3, 8, 4);
+        assert_eq!(c.tokens.len(), 256);
+        assert_eq!(c.payload.len(), 4);
+        assert_eq!(c.payload_positions.len(), 4);
+        // Target of position p is tokens[p+1] == payload byte.
+        for (i, &p) in c.payload_positions.iter().enumerate() {
+            assert_eq!(c.tokens[p + 1], c.payload[i]);
+        }
+    }
+}

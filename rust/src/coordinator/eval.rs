@@ -1,0 +1,97 @@
+//! Evaluators: validation perplexity and needle-in-a-haystack recall
+//! (Table 2.1, Table 2.2, Fig B.2).
+
+use anyhow::Result;
+
+use super::data::{needle_case, Batch, DataPipeline};
+use super::trainer::Trainer;
+use crate::util::rng::Rng;
+
+/// Validation perplexity over `n_batches` held-out batches (disjoint seed
+/// stream from training).
+pub fn validation_ppl(trainer: &Trainer, seed: u64, n_batches: usize) -> Result<f64> {
+    let mut pipe = DataPipeline::new(seed, trainer.meta.batch, trainer.meta.seq_len);
+    let mut total = 0.0f64;
+    for _ in 0..n_batches {
+        let b = pipe.next_batch();
+        let (loss, _) = trainer.eval_batch(&b)?;
+        total += loss as f64;
+    }
+    Ok((total / n_batches as f64).exp())
+}
+
+#[derive(Clone, Debug)]
+pub struct RecallReport {
+    pub cases: usize,
+    /// Fraction of payload bytes predicted exactly.
+    pub byte_accuracy: f64,
+    /// Fraction of cases with every payload byte correct.
+    pub exact_match: f64,
+    /// Mean NLL at payload positions (lower = better recall).
+    pub payload_nll: f64,
+}
+
+/// Needle-in-a-haystack recall (Fig B.2 right): embed key+payload early,
+/// repeat the key near the end, score the model's payload predictions.
+pub fn needle_recall(
+    trainer: &Trainer,
+    seed: u64,
+    n_cases: usize,
+    depth: f64,
+) -> Result<RecallReport> {
+    let mut rng = Rng::new(seed);
+    let (b, l) = (trainer.meta.batch, trainer.meta.seq_len);
+    let mut correct_bytes = 0usize;
+    let mut total_bytes = 0usize;
+    let mut exact = 0usize;
+    let mut nll_sum = 0.0f64;
+    let mut nll_n = 0usize;
+    let mut done = 0usize;
+    while done < n_cases {
+        // Fill a batch with up to `b` cases.
+        let cases: Vec<_> = (0..b.min(n_cases - done))
+            .map(|_| needle_case(&mut rng, l, depth, 8, 4))
+            .collect();
+        let mut tokens = Vec::with_capacity(b * l);
+        for c in &cases {
+            tokens.extend_from_slice(&c.tokens);
+        }
+        while tokens.len() < b * l {
+            tokens.extend(std::iter::repeat(65).take(l)); // pad rows with 'A'
+        }
+        let preds = trainer.predict(&tokens)?;
+        // Also get per-position NLL via eval (targets = shifted tokens).
+        let mut targets = vec![0i32; b * l];
+        for row in 0..b {
+            for i in 0..l - 1 {
+                targets[row * l + i] = tokens[row * l + i + 1];
+            }
+        }
+        let batch = Batch { tokens: tokens.clone(), targets, batch: b, seq_len: l };
+        let (_, nll) = trainer.eval_batch(&batch)?;
+        for (row, c) in cases.iter().enumerate() {
+            let mut all_ok = true;
+            for (i, &pos) in c.payload_positions.iter().enumerate() {
+                let pred = preds[row * l + pos];
+                total_bytes += 1;
+                if pred == c.payload[i] {
+                    correct_bytes += 1;
+                } else {
+                    all_ok = false;
+                }
+                nll_sum += nll[row * l + pos] as f64;
+                nll_n += 1;
+            }
+            if all_ok {
+                exact += 1;
+            }
+        }
+        done += cases.len();
+    }
+    Ok(RecallReport {
+        cases: n_cases,
+        byte_accuracy: correct_bytes as f64 / total_bytes.max(1) as f64,
+        exact_match: exact as f64 / n_cases.max(1) as f64,
+        payload_nll: nll_sum / nll_n.max(1) as f64,
+    })
+}

@@ -1,0 +1,117 @@
+//! Training metrics: loss curve, throughput, and JSONL export.
+
+use std::io::Write;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Ema;
+
+#[derive(Clone, Debug)]
+pub struct StepMetric {
+    pub step: usize,
+    pub loss: f64,
+    pub loss_ema: f64,
+    pub grad_norm: f64,
+    pub tokens_per_sec: f64,
+    pub step_secs: f64,
+}
+
+pub struct MetricsLog {
+    pub steps: Vec<StepMetric>,
+    ema: Ema,
+    last: Instant,
+    pub tokens_per_step: usize,
+}
+
+impl MetricsLog {
+    pub fn new(tokens_per_step: usize) -> MetricsLog {
+        MetricsLog {
+            steps: vec![],
+            ema: Ema::new(0.05),
+            last: Instant::now(),
+            tokens_per_step,
+        }
+    }
+
+    /// Record one step; call right after the step completes.
+    pub fn record(&mut self, step: usize, loss: f64, grad_norm: f64) -> &StepMetric {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        let m = StepMetric {
+            step,
+            loss,
+            loss_ema: self.ema.update(loss),
+            grad_norm,
+            tokens_per_sec: self.tokens_per_step as f64 / dt.max(1e-9),
+            step_secs: dt,
+        };
+        self.steps.push(m);
+        self.steps.last().unwrap()
+    }
+
+    pub fn last_loss_ema(&self) -> f64 {
+        self.steps.last().map(|m| m.loss_ema).unwrap_or(f64::NAN)
+    }
+
+    /// Mean tokens/s over the last `k` steps (warmup excluded by caller).
+    pub fn throughput(&self, k: usize) -> f64 {
+        let tail = &self.steps[self.steps.len().saturating_sub(k)..];
+        if tail.is_empty() {
+            return 0.0;
+        }
+        tail.iter().map(|m| m.tokens_per_sec).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Write one-JSON-object-per-line log.
+    pub fn write_jsonl(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        for m in &self.steps {
+            let j = Json::obj(vec![
+                ("step", Json::num(m.step as f64)),
+                ("loss", Json::num(m.loss)),
+                ("loss_ema", Json::num(m.loss_ema)),
+                ("grad_norm", Json::num(m.grad_norm)),
+                ("tokens_per_sec", Json::num(m.tokens_per_sec)),
+            ]);
+            writeln!(f, "{j}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Perplexity from mean NLL.
+pub fn ppl(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_smooths() {
+        let mut log = MetricsLog::new(1024);
+        log.record(0, 5.0, 1.0);
+        log.record(1, 4.0, 1.0);
+        assert_eq!(log.steps.len(), 2);
+        assert!(log.last_loss_ema() < 5.0 && log.last_loss_ema() > 4.0);
+        assert!(log.throughput(2) > 0.0);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let mut log = MetricsLog::new(10);
+        log.record(0, 2.0, 0.5);
+        let p = std::env::temp_dir().join("sh2_metrics_test.jsonl");
+        log.write_jsonl(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("loss").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn ppl_of_ln2() {
+        assert!((ppl(std::f64::consts::LN_2) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 training coordinator: the orchestration layer that drives the AOT
+//! train/eval programs over the synthetic-genome data pipeline — config,
+//! batching, metrics, checkpointing, context-extension midtraining and
+//! evaluation (perplexity + needle-in-a-haystack recall).
+
+pub mod checkpoint;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod trainer;
+
+pub use trainer::Trainer;

@@ -1,0 +1,168 @@
+//! The training loop: owns the parameter/optimizer literals, drives the AOT
+//! `train` program step by step, evaluates, checkpoints. Python is never on
+//! this path — the entire step (fwd, bwd, clip, AdamW) is one compiled HLO.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::checkpoint;
+use super::data::Batch;
+use crate::runtime::{
+    literal_i32, scalar_i32, to_vec_f32, zeros_like, Engine, ModelMeta, Program,
+};
+
+pub struct Trainer {
+    pub meta: ModelMeta,
+    pub train_prog: Program,
+    pub eval_prog: Option<Program>,
+    pub predict_prog: Option<Program>,
+    /// Flat parameter leaves (meta order).
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    pub step: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct StepResult {
+    pub loss: f32,
+    pub grad_norm: f32,
+}
+
+impl Trainer {
+    /// Compile programs and initialize parameters from `seed` via the AOT
+    /// init program (jax's own initializers, reproducible from rust).
+    pub fn new(engine: &Engine, artifacts: &Path, config: &str, seed: i32) -> Result<Trainer> {
+        let meta = ModelMeta::load(artifacts, config)?;
+        let init = engine.compile_program(&meta, "init")?;
+        let train_prog = engine.compile_program(&meta, "train")?;
+        let eval_prog = engine.compile_program(&meta, "eval").ok();
+        let predict_prog = engine.compile_program(&meta, "predict").ok();
+
+        let params = init.run(&[&scalar_i32(seed)])?;
+        if params.len() != meta.params.len() {
+            bail!(
+                "init returned {} leaves, meta says {}",
+                params.len(),
+                meta.params.len()
+            );
+        }
+        let zeros: Result<Vec<xla::Literal>> =
+            meta.params.iter().map(zeros_like).collect();
+        let m = zeros?;
+        let zeros: Result<Vec<xla::Literal>> =
+            meta.params.iter().map(zeros_like).collect();
+        let v = zeros?;
+        Ok(Trainer { meta, train_prog, eval_prog, predict_prog, params, m, v, step: 0 })
+    }
+
+    /// Resume from a checkpoint written by `save_checkpoint`.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let ck = checkpoint::load(path)?;
+        let n = self.meta.params.len();
+        if ck.arrays.len() != 3 * n {
+            bail!("checkpoint has {} arrays, expected {}", ck.arrays.len(), 3 * n);
+        }
+        let lit = |(shape, data): &(Vec<usize>, Vec<f32>)| {
+            crate::runtime::literal_f32(shape, data)
+        };
+        self.params = ck.arrays[..n].iter().map(lit).collect::<Result<_>>()?;
+        self.m = ck.arrays[n..2 * n].iter().map(lit).collect::<Result<_>>()?;
+        self.v = ck.arrays[2 * n..].iter().map(lit).collect::<Result<_>>()?;
+        self.step = ck.step;
+        Ok(())
+    }
+
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut arrays = Vec::with_capacity(3 * self.params.len());
+        for group in [&self.params, &self.m, &self.v] {
+            for (lit, spec) in group.iter().zip(&self.meta.params) {
+                arrays.push((spec.shape.clone(), to_vec_f32(lit)?));
+            }
+        }
+        checkpoint::save(path, self.step, &arrays)
+    }
+
+    /// One fused train step over a batch.
+    pub fn train_step(&mut self, batch: &Batch) -> Result<StepResult> {
+        let shape = [batch.batch, batch.seq_len];
+        if batch.batch != self.meta.batch || batch.seq_len != self.meta.seq_len {
+            bail!(
+                "batch shape {:?} does not match artifact shape [{}, {}]",
+                shape,
+                self.meta.batch,
+                self.meta.seq_len
+            );
+        }
+        let tokens = literal_i32(&shape, &batch.tokens)?;
+        let targets = literal_i32(&shape, &batch.targets)?;
+        let step_lit = scalar_i32(self.step as i32);
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(3 * self.params.len() + 3);
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        args.push(&step_lit);
+        args.push(&tokens);
+        args.push(&targets);
+
+        let out = self.train_prog.run(&args)?;
+        let n = self.params.len();
+        if out.len() != 3 * n + 2 {
+            bail!("train returned {} leaves, expected {}", out.len(), 3 * n + 2);
+        }
+        let loss = out[0].get_first_element::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let gnorm = out[1].get_first_element::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let mut it = out.into_iter();
+        it.next();
+        it.next();
+        self.params = it.by_ref().take(n).collect();
+        self.m = it.by_ref().take(n).collect();
+        self.v = it.collect();
+        self.step += 1;
+        if !loss.is_finite() {
+            bail!("loss diverged to {loss} at step {}", self.step);
+        }
+        Ok(StepResult { loss, grad_norm: gnorm })
+    }
+
+    /// Mean NLL over a batch (the eval program also returns per-position
+    /// NLL, used by the recall evaluator).
+    pub fn eval_batch(&self, batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        let prog = self
+            .eval_prog
+            .as_ref()
+            .ok_or_else(|| anyhow!("no eval program exported"))?;
+        let shape = [batch.batch, batch.seq_len];
+        let tokens = literal_i32(&shape, &batch.tokens)?;
+        let targets = literal_i32(&shape, &batch.targets)?;
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tokens);
+        args.push(&targets);
+        let out = prog.run(&args)?;
+        let loss = out[0].get_first_element::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let nll = to_vec_f32(&out[1])?;
+        Ok((loss, nll))
+    }
+
+    /// Argmax next-token predictions, [b*l] row-major.
+    pub fn predict(&self, tokens: &[i32]) -> Result<Vec<i32>> {
+        let prog = self
+            .predict_prog
+            .as_ref()
+            .ok_or_else(|| anyhow!("no predict program exported"))?;
+        let shape = [self.meta.batch, self.meta.seq_len];
+        assert_eq!(tokens.len(), shape[0] * shape[1]);
+        let tokens = literal_i32(&shape, tokens)?;
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tokens);
+        let out = prog.run(&args)?;
+        crate::runtime::to_vec_i32(&out[0])
+    }
+
+    /// Total parameter count from meta.
+    pub fn param_count(&self) -> usize {
+        self.meta.param_count
+    }
+}

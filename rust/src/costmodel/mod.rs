@@ -1,0 +1,372 @@
+//! Analytic performance model for 7B/40B-scale training on H100 clusters —
+//! regenerates the *shape* of Fig 2.2 (end-to-end iteration time, speedup
+//! factors) and Fig B.3 (MFU / TFLOPS per GPU).
+//!
+//! FLOP counting is exact per operator (attention per Dao 2023; hybrid
+//! operators per their GEMM decompositions), not the 6ND approximation —
+//! the paper explicitly notes approximations break at long context.
+
+use crate::ops::hyena::FEATURIZER_LEN;
+
+/// One H100's reference peak (the paper uses 1000 TFLOPs for MFU).
+pub const H100_PEAK_FLOPS: f64 = 1000e12;
+
+/// Efficiency (achieved / peak) per operator class, calibrated to public
+/// H100 kernel numbers: dense GEMM ~0.75 (FP8 TE), fused attention ~0.5,
+/// two-stage conv ~0.45, FFT conv ~0.08 (the paper's motivation for the
+/// blocked kernel), recurrent scans ~0.15.
+#[derive(Clone, Copy, Debug)]
+pub struct Efficiency {
+    pub gemm: f64,
+    pub attention: f64,
+    pub conv_two_stage: f64,
+    pub conv_fft: f64,
+    pub scan: f64,
+}
+
+impl Default for Efficiency {
+    fn default() -> Self {
+        Efficiency { gemm: 0.75, attention: 0.5, conv_two_stage: 0.45, conv_fft: 0.08, scan: 0.15 }
+    }
+}
+
+/// Architecture block kinds appearing in layouts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Block {
+    Mha,
+    HyenaSe,
+    HyenaMr,
+    HyenaLi,
+    /// Linear-attention style fixed-state operator (previous-gen hybrids).
+    LinearAttn,
+}
+
+/// Model shape at scale.
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub layout: Vec<Block>,
+    pub mlp_ratio: f64,
+    pub se_len: usize,
+    pub mr_len: usize,
+    pub se_block: usize,
+    pub mr_block: usize,
+}
+
+impl ArchSpec {
+    /// Transformer++ baseline (all-MHA).
+    pub fn transformer(d: usize, layers: usize) -> ArchSpec {
+        ArchSpec {
+            name: "Transformer++".into(),
+            d_model: d,
+            n_layers: layers,
+            layout: vec![Block::Mha],
+            mlp_ratio: 8.0 / 3.0,
+            se_len: 7,
+            mr_len: 128,
+            se_block: 16,
+            mr_block: 128,
+        }
+    }
+
+    /// StripedHyena 1: hyena-LI + attention hybrid (previous generation).
+    pub fn sh1(d: usize, layers: usize) -> ArchSpec {
+        ArchSpec {
+            name: "StripedHyena 1".into(),
+            layout: vec![Block::HyenaLi, Block::HyenaLi, Block::HyenaLi, Block::Mha],
+            ..ArchSpec::transformer(d, layers)
+        }
+    }
+
+    /// StripedHyena 2 multi-hybrid: SE-MR-LI with MHA stripes (1 in 8).
+    pub fn sh2(d: usize, layers: usize) -> ArchSpec {
+        ArchSpec {
+            name: "StripedHyena 2".into(),
+            layout: vec![
+                Block::HyenaSe,
+                Block::HyenaMr,
+                Block::HyenaLi,
+                Block::HyenaSe,
+                Block::HyenaMr,
+                Block::HyenaLi,
+                Block::HyenaSe,
+                Block::Mha,
+            ],
+            ..ArchSpec::transformer(d, layers)
+        }
+    }
+
+    /// Linear-attention hybrid (Mamba/Zamba-style previous-gen comparator).
+    pub fn linear_hybrid(d: usize, layers: usize) -> ArchSpec {
+        ArchSpec {
+            name: "LinearAttn hybrid".into(),
+            layout: vec![
+                Block::LinearAttn,
+                Block::LinearAttn,
+                Block::LinearAttn,
+                Block::Mha,
+            ],
+            ..ArchSpec::transformer(d, layers)
+        }
+    }
+
+    /// 7B-class shape (d=4096, 32 layers) as in the paper's Fig 2.2 left.
+    pub fn at_7b(mut self) -> ArchSpec {
+        self.d_model = 4096;
+        self.n_layers = 32;
+        self
+    }
+
+    /// 40B-class shape (d=8192, 50 layers) as in Fig 2.2 right.
+    pub fn at_40b(mut self) -> ArchSpec {
+        self.d_model = 8192;
+        self.n_layers = 50;
+        self
+    }
+
+    fn block_at(&self, layer: usize) -> Block {
+        self.layout[layer % self.layout.len()]
+    }
+
+    /// Approximate parameter count (mixers + MLPs; embeddings negligible).
+    pub fn param_count(&self) -> f64 {
+        let d = self.d_model as f64;
+        let per_mixer = 4.0 * d * d; // q,k,v,o / w,u,p,m projections
+        let per_mlp = 3.0 * d * (self.mlp_ratio * d);
+        self.n_layers as f64 * (per_mixer + per_mlp)
+    }
+}
+
+/// Forward FLOPs of one *layer* (mixer + MLP) at sequence length l,
+/// batch 1. Training total = 3x forward (fwd + bwd).
+pub fn layer_fwd_flops(spec: &ArchSpec, layer: usize, l: usize) -> (f64, f64, f64) {
+    let d = spec.d_model as f64;
+    let lf = l as f64;
+    let proj = 8.0 * lf * d * d; // 4 dxd projections
+    let mlp = 3.0 * 2.0 * lf * d * (spec.mlp_ratio * d);
+    let featurizers = 3.0 * 2.0 * lf * d * FEATURIZER_LEN as f64;
+    // Returns (gemm_flops, mixer_special_flops, kind-tag via caller).
+    match spec.block_at(layer) {
+        Block::Mha => {
+            // Causal attention per Dao (2023): 2 * 2 l^2 d * 0.5 fwd.
+            (proj + mlp, 2.0 * lf * lf * d, 0.0)
+        }
+        Block::HyenaSe => (proj + mlp + featurizers, 4.0 * lf * spec.se_block as f64 * d, 1.0),
+        Block::HyenaMr => (proj + mlp + featurizers, 4.0 * lf * spec.mr_block as f64 * d, 1.0),
+        Block::HyenaLi => {
+            let n = (2 * l) as f64;
+            (proj + mlp + featurizers, 3.0 * 5.0 * n * n.log2() + 6.0 * n, 2.0)
+        }
+        Block::LinearAttn => {
+            // Fixed-state scan: ~4 * l * d * dh with dh=128.
+            (proj + mlp, 4.0 * lf * d * 128.0, 3.0)
+        }
+    }
+}
+
+/// Cluster / parallelism configuration (Table C.1).
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub tensor_parallel: usize,
+    pub context_parallel: usize,
+    pub global_batch_tokens: f64,
+    pub gpus: usize,
+    /// NVLink bandwidth per GPU (bytes/s) for TP collectives.
+    pub tp_bw: f64,
+    pub link_alpha: f64,
+}
+
+impl ClusterConfig {
+    /// Table C.1 left: 7B measurements, 256 GPUs, 4M-token batches.
+    pub fn table_c1_7b(seq_len: usize) -> ClusterConfig {
+        let (tp, cp) = match seq_len {
+            0..=16_384 => (2, 1),
+            16_385..=32_768 => (2, 1),
+            32_769..=65_536 => (8, 1),
+            65_537..=131_072 => (8, 1),
+            131_073..=262_144 => (16, 1),
+            262_145..=524_288 => (16, 2),
+            _ => (32, 2),
+        };
+        ClusterConfig {
+            tensor_parallel: tp,
+            context_parallel: cp,
+            global_batch_tokens: 4e6,
+            gpus: 256,
+            tp_bw: 450e9,
+            link_alpha: 4e-6,
+        }
+    }
+
+    /// Table C.1 right: 40B measurements, 2048 GPUs, 8M-token batches.
+    pub fn table_c1_40b(seq_len: usize) -> ClusterConfig {
+        let (tp, cp) = match seq_len {
+            0..=32_768 => (8, 1),
+            32_769..=65_536 => (8, 1),
+            65_537..=131_072 => (8, 2),
+            131_073..=262_144 => (16, 2),
+            262_145..=524_288 => (32, 2),
+            _ => (64, 2),
+        };
+        ClusterConfig {
+            tensor_parallel: tp,
+            context_parallel: cp,
+            global_batch_tokens: 8e6,
+            gpus: 2048,
+            tp_bw: 450e9,
+            link_alpha: 12e-6,
+        }
+    }
+}
+
+/// Per-iteration estimate.
+#[derive(Clone, Debug)]
+pub struct IterationEstimate {
+    pub arch: String,
+    pub seq_len: usize,
+    pub iter_secs: f64,
+    pub model_tflops_per_gpu: f64,
+    pub mfu: f64,
+}
+
+/// End-to-end training iteration time (fwd+bwd) for `spec` on `cluster`.
+pub fn iteration_time(
+    spec: &ArchSpec,
+    l: usize,
+    cluster: &ClusterConfig,
+    eff: &Efficiency,
+) -> IterationEstimate {
+    let tp = cluster.tensor_parallel as f64;
+    let cp = cluster.context_parallel as f64;
+    let dp = cluster.gpus as f64 / (tp * cp);
+    let seqs_per_iter = cluster.global_batch_tokens / l as f64;
+    let seqs_per_dp_rank = (seqs_per_iter / dp).max(1.0);
+
+    let mut compute = 0.0; // seconds per sequence on one TP group
+    let mut model_flops_per_seq = 0.0;
+    for layer in 0..spec.n_layers {
+        let (gemm, special, kind) = layer_fwd_flops(spec, layer, l);
+        // Training = fwd + bwd ~ 3x fwd FLOPs.
+        let gemm_t = 3.0 * gemm / (tp * cp) / (H100_PEAK_FLOPS * eff.gemm);
+        let sp_eff = match spec.block_at(layer) {
+            Block::Mha => eff.attention,
+            Block::HyenaSe | Block::HyenaMr => eff.conv_two_stage,
+            Block::HyenaLi => eff.conv_fft,
+            Block::LinearAttn => eff.scan,
+        };
+        let _ = kind;
+        let sp_t = 3.0 * special / (tp * cp) / (H100_PEAK_FLOPS * sp_eff);
+        // TP collectives: 2 all-reduces per layer fwd (+2 bwd), message
+        // 2*l*d bytes/rank, ring all-reduce ~ 2x volume.
+        let msg = 2.0 * (l as f64 / cp) * spec.d_model as f64 * 2.0; // bf16 bytes
+        let tp_comm = if tp > 1.0 {
+            4.0 * (cluster.link_alpha + 2.0 * msg / cluster.tp_bw)
+        } else {
+            0.0
+        };
+        // CP comm: a2a for the mixer (fwd+bwd = 4 calls), message l*d/cp.
+        let cp_comm = if cp > 1.0 {
+            4.0 * (cluster.link_alpha
+                + (l as f64 * spec.d_model as f64 * 2.0 / cp) / cluster.tp_bw)
+        } else {
+            0.0
+        };
+        compute += gemm_t + sp_t + tp_comm + cp_comm;
+        model_flops_per_seq += 3.0 * (gemm + special);
+    }
+
+    let iter_secs = compute * seqs_per_dp_rank;
+    let total_flops = model_flops_per_seq * seqs_per_iter;
+    let flops_per_gpu = total_flops / cluster.gpus as f64 / iter_secs;
+    IterationEstimate {
+        arch: spec.name.clone(),
+        seq_len: l,
+        iter_secs,
+        model_tflops_per_gpu: flops_per_gpu / 1e12,
+        mfu: flops_per_gpu / H100_PEAK_FLOPS,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn speedup(scale_7b: bool, l: usize) -> (f64, f64) {
+        let eff = Efficiency::default();
+        let (tf, sh2, cluster) = if scale_7b {
+            (
+                ArchSpec::transformer(0, 0).at_7b(),
+                ArchSpec::sh2(0, 0).at_7b(),
+                ClusterConfig::table_c1_7b(l),
+            )
+        } else {
+            (
+                ArchSpec::transformer(0, 0).at_40b(),
+                ArchSpec::sh2(0, 0).at_40b(),
+                ClusterConfig::table_c1_40b(l),
+            )
+        };
+        let t_tf = iteration_time(&tf, l, &cluster, &eff).iter_secs;
+        let t_sh2 = iteration_time(&sh2, l, &cluster, &eff).iter_secs;
+        let sh1 = if scale_7b {
+            ArchSpec::sh1(0, 0).at_7b()
+        } else {
+            ArchSpec::sh1(0, 0).at_40b()
+        };
+        let t_sh1 = iteration_time(&sh1, l, &cluster, &eff).iter_secs;
+        (t_tf / t_sh2, t_sh1 / t_sh2)
+    }
+
+    #[test]
+    fn sh2_beats_transformer_across_contexts() {
+        // Fig 2.2 headline: 1.2-2.9x vs Transformer; grows with context.
+        for &l in &[16_384usize, 65_536, 262_144, 1_048_576] {
+            let (vs_tf, vs_sh1) = speedup(false, l);
+            assert!(vs_tf > 1.1, "l={l}: speedup vs transformer {vs_tf:.2}");
+            assert!(vs_tf < 5.0, "l={l}: speedup implausibly large {vs_tf:.2}");
+            assert!(vs_sh1 > 1.0, "l={l}: must beat SH1 ({vs_sh1:.2})");
+        }
+        let (s16k, _) = speedup(false, 16_384);
+        let (s1m, _) = speedup(false, 1_048_576);
+        assert!(s1m > s16k, "speedup must grow with context: {s16k:.2} -> {s1m:.2}");
+    }
+
+    #[test]
+    fn mfu_in_plausible_range() {
+        // Fig B.3: peak MFU ~34% at 16K for SH2-40B, decreasing with ctx.
+        let eff = Efficiency::default();
+        let sh2 = ArchSpec::sh2(0, 0).at_40b();
+        let e16 = iteration_time(&sh2, 16_384, &ClusterConfig::table_c1_40b(16_384), &eff);
+        assert!(e16.mfu > 0.2 && e16.mfu < 0.6, "mfu {:.3}", e16.mfu);
+        let e1m =
+            iteration_time(&sh2, 1_048_576, &ClusterConfig::table_c1_40b(1_048_576), &eff);
+        assert!(e1m.mfu < e16.mfu, "hybrid MFU decreases with ctx (paper §2.3)");
+    }
+
+    #[test]
+    fn attention_flops_quadratic() {
+        let spec = ArchSpec::transformer(4096, 32);
+        let (_, a1, _) = layer_fwd_flops(&spec, 0, 1024);
+        let (_, a2, _) = layer_fwd_flops(&spec, 0, 2048);
+        assert!((a2 / a1 - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn hyena_se_flops_linear() {
+        let spec = ArchSpec::sh2(4096, 32);
+        let (_, a1, _) = layer_fwd_flops(&spec, 0, 1024);
+        let (_, a2, _) = layer_fwd_flops(&spec, 0, 2048);
+        assert!((a2 / a1 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn param_counts_roughly_right() {
+        // 7B-class and 40B-class shapes should land near their names.
+        let p7 = ArchSpec::transformer(0, 0).at_7b().param_count();
+        assert!(p7 > 5e9 && p7 < 9e9, "7B shape gives {p7:.2e}");
+        let p40 = ArchSpec::transformer(0, 0).at_40b().param_count();
+        assert!(p40 > 3e10 && p40 < 5.5e10, "40B shape gives {p40:.2e}");
+    }
+}

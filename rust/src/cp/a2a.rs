@@ -1,0 +1,283 @@
+//! All-to-all context-parallel convolution (paper §4.2, Fig 4.1), plus the
+//! channel-pipelined extension.
+//!
+//! Sequence-sharded input [L/N, D] is reshaped via a2a so each rank holds
+//! the *full* sequence on a D/N channel slice, convolves locally (filters
+//! materialized per rank; filter groups must not split across ranks), and a
+//! second a2a restores sequence sharding. Gating stays outside the CP
+//! region per the paper.
+
+use crate::conv::direct::causal_conv_direct;
+use crate::conv::fft_conv::fft_causal_conv;
+use crate::conv::two_stage::{two_stage_conv, TwoStageConv};
+use crate::conv::GroupedFilter;
+use crate::fabric::RankCtx;
+use crate::tensor::Tensor;
+
+/// Which local convolution algorithm runs inside the CP region.
+#[derive(Clone, Copy, Debug)]
+pub enum InnerConv {
+    Direct,
+    TwoStage,
+    Fft,
+}
+
+fn run_inner(x: &Tensor, h: &GroupedFilter, inner: InnerConv) -> Tensor {
+    match inner {
+        InnerConv::Direct => causal_conv_direct(x, h),
+        InnerConv::TwoStage => {
+            two_stage_conv(x, h, TwoStageConv::auto(h.filter_len()).block)
+        }
+        InnerConv::Fft => fft_causal_conv(x, h),
+    }
+}
+
+fn inner_flops(l: usize, d: usize, h: &GroupedFilter, inner: InnerConv) -> f64 {
+    use crate::conv::CausalConv;
+    let lh = h.filter_len();
+    match inner {
+        InnerConv::Direct => crate::conv::direct::DirectConv.flops(l, d, lh),
+        InnerConv::TwoStage => TwoStageConv::auto(lh).flops(l, d, lh),
+        InnerConv::Fft => crate::conv::fft_conv::FftConv.flops(l, d, lh),
+    }
+}
+
+/// Slice the filter bank to the groups owned by `rank` when channels are
+/// split N ways. Groups must not straddle rank boundaries (§4.2).
+pub fn filter_slice(h: &GroupedFilter, rank: usize, n: usize) -> GroupedFilter {
+    let g = h.num_groups();
+    assert_eq!(
+        g % n,
+        0,
+        "filter groups ({g}) must be divisible by CP ranks ({n}) so no group splits"
+    );
+    let gpr = g / n;
+    GroupedFilter::new(
+        h.taps.slice_rows(rank * gpr, (rank + 1) * gpr),
+        h.group_size,
+    )
+}
+
+/// a2a CP convolution. `local`: [L/N, D] shard; returns the same shard of
+/// the convolved sequence. `h` is the full filter bank (identical on all
+/// ranks — each rank materializes only its slice, as the paper prescribes).
+pub fn a2a_conv(
+    ctx: &mut RankCtx,
+    local: &Tensor,
+    h: &GroupedFilter,
+    inner: InnerConv,
+) -> Tensor {
+    let n = ctx.n;
+    let (lc, d) = (local.rows(), local.cols());
+    assert_eq!(d % n, 0, "channels {d} not divisible by ranks {n}");
+    let dn = d / n;
+
+    // a2a #1: scatter channel slices, gather my channel slice of every
+    // sequence chunk.
+    let parts: Vec<Vec<f32>> = (0..n)
+        .map(|r| local.slice_cols(r * dn, (r + 1) * dn).data)
+        .collect();
+    let got = ctx.all_to_all(parts);
+    let chunks: Vec<Tensor> = got
+        .into_iter()
+        .map(|v| Tensor::from_vec(&[lc, dn], v))
+        .collect();
+    let refs: Vec<&Tensor> = chunks.iter().collect();
+    let full = Tensor::vcat(&refs); // [L, D/N]
+
+    // Local convolution over the full sequence, my channels only.
+    let hr = filter_slice(h, ctx.rank, n);
+    ctx.compute_flops(inner_flops(full.rows(), dn, &hr, inner));
+    let y = run_inner(&full, &hr, inner);
+
+    // a2a #2: scatter sequence chunks, gather my sequence chunk of every
+    // channel slice.
+    let parts: Vec<Vec<f32>> = (0..n)
+        .map(|r| y.slice_rows(r * lc, (r + 1) * lc).data)
+        .collect();
+    let got = ctx.all_to_all(parts);
+    let slices: Vec<Tensor> = got
+        .into_iter()
+        .map(|v| Tensor::from_vec(&[lc, dn], v))
+        .collect();
+    let refs: Vec<&Tensor> = slices.iter().collect();
+    Tensor::hcat(&refs) // [L/N, D]
+}
+
+/// Channel-pipelined a2a CP convolution ([Extension] in §4.2): channels are
+/// split into `n_pipe` segments whose a2a transfers overlap with the
+/// convolution of the previous segment (the sim clock models the overlap;
+/// see fabric docs).
+pub fn a2a_conv_pipelined(
+    ctx: &mut RankCtx,
+    local: &Tensor,
+    h: &GroupedFilter,
+    inner: InnerConv,
+    n_pipe: usize,
+) -> Tensor {
+    let n = ctx.n;
+    let (lc, d) = (local.rows(), local.cols());
+    assert_eq!(d % (n * n_pipe), 0, "channels must split by ranks*segments");
+    let dn = d / n; // channel slice owned by each rank (as in plain a2a)
+    let dsub = dn / n_pipe; // pipelined sub-segment within the rank slice
+    let hr = filter_slice(h, ctx.rank, n);
+    assert_eq!(
+        dsub % hr.group_size,
+        0,
+        "pipeline segments must not split filter groups"
+    );
+    let g_sub = dsub / hr.group_size;
+
+    // Stage 0: issue ALL forward a2a sends up front (async). Rank r owns
+    // channels [r*dn, (r+1)*dn); sub-segment s of that slice has tag 1000+s.
+    for s in 0..n_pipe {
+        for r in 0..n {
+            if r != ctx.rank {
+                let lo = r * dn + s * dsub;
+                ctx.send(r, 1000 + s as u64, local.slice_cols(lo, lo + dsub).data);
+            }
+        }
+    }
+
+    // Pipeline: for each sub-segment, gather, convolve, send results back.
+    // The convolution of segment s overlaps (in sim time) with the
+    // in-flight transfers of segments > s.
+    let mut own_chunks: Vec<Tensor> = Vec::with_capacity(n_pipe);
+    for s in 0..n_pipe {
+        let mut chunks: Vec<Tensor> = Vec::with_capacity(n);
+        for r in 0..n {
+            let v = if r == ctx.rank {
+                let lo = ctx.rank * dn + s * dsub;
+                local.slice_cols(lo, lo + dsub).data
+            } else {
+                ctx.recv(r, 1000 + s as u64)
+            };
+            chunks.push(Tensor::from_vec(&[lc, dsub], v));
+        }
+        let refs: Vec<&Tensor> = chunks.iter().collect();
+        let full = Tensor::vcat(&refs); // [L, dsub]
+
+        let hs = GroupedFilter::new(
+            hr.taps.slice_rows(s * g_sub, (s + 1) * g_sub),
+            hr.group_size,
+        );
+        ctx.compute_flops(inner_flops(full.rows(), dsub, &hs, inner));
+        let y = run_inner(&full, &hs, inner);
+
+        for r in 0..n {
+            if r != ctx.rank {
+                ctx.send(r, 2000 + s as u64, y.slice_rows(r * lc, (r + 1) * lc).data);
+            }
+        }
+        own_chunks.push(y.slice_rows(ctx.rank * lc, (ctx.rank + 1) * lc));
+    }
+
+    // Gather returned sequence chunks and scatter into the output columns:
+    // the sub-segment s of rank r's slice lands at columns
+    // [r*dn + s*dsub, r*dn + (s+1)*dsub).
+    let mut out = Tensor::zeros(&[lc, d]);
+    let mut place = |lo: usize, t: &Tensor| {
+        for i in 0..lc {
+            out.row_mut(i)[lo..lo + dsub].copy_from_slice(t.row(i));
+        }
+    };
+    for (s, own) in own_chunks.iter().enumerate() {
+        place(ctx.rank * dn + s * dsub, own);
+    }
+    for s in 0..n_pipe {
+        for r in 0..n {
+            if r != ctx.rank {
+                let v = ctx.recv(r, 2000 + s as u64);
+                let t = Tensor::from_vec(&[lc, dsub], v);
+                place(r * dn + s * dsub, &t);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::sharding::{shard_rows, unshard_rows};
+    use crate::fabric::{self, FabricModel};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn check_cp(n: usize, n_pipe: Option<usize>, inner: InnerConv) {
+        let mut rng = Rng::new(42);
+        let (l, g, dg, lh) = (64usize, 8usize, 2usize, 5usize);
+        let d = g * dg;
+        let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+        let h = GroupedFilter::random(&mut rng, g, lh, dg);
+        let want = causal_conv_direct(&x, &h);
+
+        let shards = Arc::new(shard_rows(&x, n));
+        let h = Arc::new(h);
+        let reports = fabric::run(n, FabricModel::nvlink(), move |ctx| {
+            let local = &shards[ctx.rank];
+            match n_pipe {
+                None => a2a_conv(ctx, local, &h, inner),
+                Some(p) => a2a_conv_pipelined(ctx, local, &h, inner, p),
+            }
+        });
+        let outs: Vec<Tensor> = reports.into_iter().map(|r| r.value).collect();
+        let got = unshard_rows(&outs);
+        assert!(
+            got.allclose(&want, 1e-3),
+            "n={n} pipe={n_pipe:?}: diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn a2a_matches_single_rank() {
+        for n in [2, 4] {
+            check_cp(n, None, InnerConv::Direct);
+            check_cp(n, None, InnerConv::TwoStage);
+            check_cp(n, None, InnerConv::Fft);
+        }
+    }
+
+    #[test]
+    fn pipelined_matches_single_rank() {
+        check_cp(2, Some(2), InnerConv::Direct);
+        check_cp(4, Some(2), InnerConv::TwoStage);
+        check_cp(2, Some(4), InnerConv::Direct);
+    }
+
+    #[test]
+    fn pipelining_overlaps_in_sim_time() {
+        // With a slow link and nontrivial compute, pipelined a2a must beat
+        // monolithic a2a on the simulated clock.
+        let mut rng = Rng::new(7);
+        let (l, g, dg, lh, n) = (256usize, 16usize, 4usize, 65usize, 4usize);
+        let d = g * dg;
+        let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+        let h = GroupedFilter::random(&mut rng, g, lh, dg);
+        let slow = FabricModel { alpha_s: 1e-5, beta_bytes_per_s: 1e8, flops_per_s: 1e9 };
+        let shards = Arc::new(shard_rows(&x, n));
+        let h = Arc::new(h);
+        let (s1, h1) = (shards.clone(), h.clone());
+        let mono = fabric::run(n, slow, move |ctx| {
+            a2a_conv(ctx, &s1[ctx.rank], &h1, InnerConv::Direct);
+        });
+        let piped = fabric::run(n, slow, move |ctx| {
+            a2a_conv_pipelined(ctx, &shards[ctx.rank], &h, InnerConv::Direct, 4);
+        });
+        let t_mono = fabric::job_time(&mono);
+        let t_pipe = fabric::job_time(&piped);
+        assert!(
+            t_pipe < t_mono,
+            "pipelined {t_pipe:.6}s should beat monolithic {t_mono:.6}s"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "must be divisible")]
+    fn rejects_group_splitting() {
+        let mut rng = Rng::new(0);
+        let h = GroupedFilter::random(&mut rng, 3, 5, 2); // 3 groups, 2 ranks
+        filter_slice(&h, 0, 2);
+    }
+}

@@ -1,0 +1,14 @@
+//! Context parallelism for convolutions and attention (paper §4).
+//!
+//! Every algorithm here runs for real on the `fabric` simulator: shards are
+//! actual tensors moving between rank threads, outputs are validated against
+//! single-rank references, and the α-β clocks report what the communication
+//! pattern costs at H100-cluster parameters.
+
+pub mod a2a;
+pub mod fft;
+pub mod p2p;
+pub mod ring;
+pub mod sharding;
+
+pub use sharding::{shard_rows, unshard_rows};

@@ -1,0 +1,192 @@
+//! Point-to-point context-parallel convolution (paper §4.2, Fig 4.2) and
+//! the overlapped-communication extension (Fig B.1).
+//!
+//! FIR locality: only the first l_h - 1 outputs of a shard depend on the
+//! previous rank, so each rank sends just the last l_h - 1 rows of its shard
+//! to its successor ("halo"). Filters are replicated on every rank (each
+//! rank convolves all D channels — the opposite of a2a's channel split).
+
+use crate::conv::direct::{causal_conv_direct, causal_conv_with_history};
+use crate::conv::GroupedFilter;
+use crate::conv::CausalConv;
+use crate::fabric::RankCtx;
+use crate::tensor::Tensor;
+
+const HALO_TAG: u64 = 31;
+
+/// Contribution of `halo` (tail rows of the previous shard) to the first
+/// l_h - 1 outputs of the local shard. This is the "boundary fix-up"
+/// convolution of the overlapped scheme: an extra conv over a window of
+/// shape [2(l_h - 1)] per the paper, implemented directly.
+pub fn halo_correction(h: &GroupedFilter, halo: &Tensor, l: usize, d: usize) -> Tensor {
+    let lh = h.filter_len();
+    let hist = halo.rows();
+    let rows = l.min(lh.saturating_sub(1));
+    let mut fix = Tensor::zeros(&[rows, d]);
+    for t in 0..rows {
+        for k in (t + 1)..lh {
+            let hi = hist as isize + t as isize - k as isize;
+            if hi < 0 {
+                continue;
+            }
+            let src = hi as usize * d;
+            for c in 0..d {
+                fix.data[t * d + c] += h.for_channel(c)[k] * halo.data[src + c];
+            }
+        }
+    }
+    fix
+}
+
+/// Non-overlapped p2p CP convolution: send tail, wait for halo, convolve
+/// with history.
+pub fn p2p_conv(ctx: &mut RankCtx, local: &Tensor, h: &GroupedFilter) -> Tensor {
+    let (lc, d) = (local.rows(), local.cols());
+    let lh = h.filter_len();
+    let halo_rows = (lh - 1).min(lc);
+
+    if ctx.rank + 1 < ctx.n {
+        ctx.send(ctx.rank + 1, HALO_TAG, local.slice_rows(lc - halo_rows, lc).data);
+    }
+    let halo = if ctx.rank > 0 {
+        Tensor::from_vec(&[halo_rows, d], ctx.recv(ctx.rank - 1, HALO_TAG))
+    } else {
+        Tensor::zeros(&[0, d])
+    };
+    ctx.compute_flops(crate::conv::direct::DirectConv.flops(lc, d, lh));
+    causal_conv_with_history(local, h, &halo)
+}
+
+/// Overlapped p2p CP convolution (Fig B.1): start the local zero-padded
+/// convolution immediately; when the halo arrives, add the boundary
+/// correction to the first l_h - 1 outputs.
+pub fn p2p_conv_overlapped(ctx: &mut RankCtx, local: &Tensor, h: &GroupedFilter) -> Tensor {
+    let (lc, d) = (local.rows(), local.cols());
+    let lh = h.filter_len();
+    let halo_rows = (lh - 1).min(lc);
+
+    if ctx.rank + 1 < ctx.n {
+        ctx.send(ctx.rank + 1, HALO_TAG, local.slice_rows(lc - halo_rows, lc).data);
+    }
+    // Main convolution overlaps with the in-flight halo (sim clock advances
+    // through compute, so the recv below usually costs nothing extra).
+    ctx.compute_flops(crate::conv::direct::DirectConv.flops(lc, d, lh));
+    let mut y = causal_conv_direct(local, h);
+
+    if ctx.rank > 0 {
+        let halo = Tensor::from_vec(&[halo_rows, d], ctx.recv(ctx.rank - 1, HALO_TAG));
+        // Boundary correction: 2(l_h-1)-window convolution.
+        ctx.compute_flops(2.0 * (lh as f64 - 1.0) * d as f64 * lh as f64);
+        let fix = halo_correction(h, &halo, lc, d);
+        for t in 0..fix.rows() {
+            for c in 0..d {
+                y.data[t * d + c] += fix.data[t * d + c];
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::sharding::{shard_rows, unshard_rows};
+    use crate::fabric::{self, FabricModel};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn reference(x: &Tensor, h: &GroupedFilter) -> Tensor {
+        causal_conv_direct(x, h)
+    }
+
+    fn check(n: usize, overlapped: bool, l: usize, lh: usize) {
+        let mut rng = Rng::new(3 + n as u64);
+        let (g, dg) = (4usize, 3usize);
+        let d = g * dg;
+        let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+        let h = GroupedFilter::random(&mut rng, g, lh, dg);
+        let want = reference(&x, &h);
+        let shards = Arc::new(shard_rows(&x, n));
+        let h = Arc::new(h);
+        let reports = fabric::run(n, FabricModel::nvlink(), move |ctx| {
+            if overlapped {
+                p2p_conv_overlapped(ctx, &shards[ctx.rank], &h)
+            } else {
+                p2p_conv(ctx, &shards[ctx.rank], &h)
+            }
+        });
+        let outs: Vec<Tensor> = reports.into_iter().map(|r| r.value).collect();
+        let got = unshard_rows(&outs);
+        assert!(
+            got.allclose(&want, 1e-3),
+            "n={n} overlapped={overlapped}: diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn p2p_matches_single_rank() {
+        for n in [2, 4, 8] {
+            check(n, false, 64, 7);
+            check(n, true, 64, 7);
+        }
+    }
+
+    #[test]
+    fn hyena_mr_filter_length() {
+        // l_h = 33 with shards of 32 rows: halo is a whole shard.
+        check(2, false, 64, 33);
+        check(2, true, 64, 33);
+    }
+
+    #[test]
+    fn single_rank_degenerates_to_local_conv() {
+        check(1, false, 32, 5);
+        check(1, true, 32, 5);
+    }
+
+    #[test]
+    fn overlap_beats_blocking_on_slow_links() {
+        let mut rng = Rng::new(9);
+        // lc (=512) >> l_h so the boundary-correction conv is much cheaper
+        // than the main conv the halo transfer overlaps with.
+        let (l, g, dg, lh, n) = (2048usize, 8usize, 4usize, 129usize, 4usize);
+        let d = g * dg;
+        let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+        let h = GroupedFilter::random(&mut rng, g, lh, dg);
+        // Slow link so the halo transfer matters; slow compute so there is
+        // something to overlap with.
+        let slow = FabricModel { alpha_s: 5e-4, beta_bytes_per_s: 1e8, flops_per_s: 5e9 };
+        let shards = Arc::new(shard_rows(&x, n));
+        let h = Arc::new(h);
+        let (s1, h1) = (shards.clone(), h.clone());
+        let blocking = fabric::run(n, slow, move |ctx| {
+            p2p_conv(ctx, &s1[ctx.rank], &h1);
+        });
+        let overlapped = fabric::run(n, slow, move |ctx| {
+            p2p_conv_overlapped(ctx, &shards[ctx.rank], &h);
+        });
+        let tb = fabric::job_time(&blocking);
+        let to = fabric::job_time(&overlapped);
+        assert!(to < tb, "overlapped {to:.6}s should beat blocking {tb:.6}s");
+    }
+
+    #[test]
+    fn halo_correction_is_exactly_the_boundary_term() {
+        let mut rng = Rng::new(11);
+        let (l, d, lh) = (20usize, 4usize, 6usize);
+        let full = Tensor::randn(&mut rng, &[2 * l, d], 1.0);
+        let h = GroupedFilter::random(&mut rng, 2, lh, 2);
+        let tail = full.slice_rows(l, 2 * l);
+        let halo = full.slice_rows(l - (lh - 1), l);
+        let fix = halo_correction(&h, &halo, l, d);
+        let local = causal_conv_direct(&tail, &h);
+        let want = causal_conv_direct(&full, &h).slice_rows(l, 2 * l);
+        for t in 0..lh - 1 {
+            for c in 0..d {
+                let got = local.at2(t, c) + fix.at2(t, c);
+                assert!((got - want.at2(t, c)).abs() < 1e-4);
+            }
+        }
+    }
+}

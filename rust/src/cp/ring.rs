@@ -1,0 +1,210 @@
+//! Ring (p2p) attention (paper §A.2.2) — the baseline p2p scheme the
+//! convolutional variants are contrasted with, with online-softmax partial
+//! merging and causal block skipping.
+
+use crate::fabric::RankCtx;
+use crate::tensor::Tensor;
+
+const RING_TAG: u64 = 51;
+
+/// Online-softmax accumulator for one query block.
+struct Acc {
+    /// Running row maxima [lq].
+    m: Vec<f32>,
+    /// Running denominators [lq].
+    z: Vec<f32>,
+    /// Running numerators [lq, dh].
+    num: Tensor,
+}
+
+impl Acc {
+    fn new(lq: usize, dh: usize) -> Acc {
+        Acc { m: vec![f32::NEG_INFINITY; lq], z: vec![0.0; lq], num: Tensor::zeros(&[lq, dh]) }
+    }
+
+    /// Merge one KV block. `mask_fn(tq, tk) == true` means attend.
+    fn absorb(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        mask_fn: impl Fn(usize, usize) -> bool,
+    ) {
+        let (lq, dh) = (q.rows(), q.cols());
+        let lk = k.rows();
+        let scale = (dh as f32).powf(-0.5);
+        for tq in 0..lq {
+            let qrow = q.row(tq);
+            // Block-local scores.
+            let mut scores = Vec::with_capacity(lk);
+            let mut bmax = f32::NEG_INFINITY;
+            for tk in 0..lk {
+                if !mask_fn(tq, tk) {
+                    scores.push(f32::NEG_INFINITY);
+                    continue;
+                }
+                let mut dot = 0.0f32;
+                for (a, b) in qrow.iter().zip(k.row(tk)) {
+                    dot += a * b;
+                }
+                let s = dot * scale;
+                bmax = bmax.max(s);
+                scores.push(s);
+            }
+            if bmax == f32::NEG_INFINITY {
+                continue; // fully masked block
+            }
+            let m_new = self.m[tq].max(bmax);
+            let rescale = if self.m[tq] == f32::NEG_INFINITY {
+                0.0
+            } else {
+                (self.m[tq] - m_new).exp()
+            };
+            self.z[tq] *= rescale;
+            for c in 0..dh {
+                *self.num.at2_mut(tq, c) *= rescale;
+            }
+            for (tk, &s) in scores.iter().enumerate() {
+                if s == f32::NEG_INFINITY {
+                    continue;
+                }
+                let w = (s - m_new).exp();
+                self.z[tq] += w;
+                let vrow = v.row(tk);
+                for c in 0..dh {
+                    *self.num.at2_mut(tq, c) += w * vrow[c];
+                }
+            }
+            self.m[tq] = m_new;
+        }
+    }
+
+    fn finish(self) -> Tensor {
+        let (lq, dh) = (self.num.rows(), self.num.cols());
+        let mut out = self.num;
+        for tq in 0..lq {
+            let z = self.z[tq].max(1e-20);
+            for c in 0..dh {
+                *out.at2_mut(tq, c) /= z;
+            }
+        }
+        out
+    }
+}
+
+/// Ring attention over sequence-sharded q, k, v ([L/N, dh] each, one head).
+/// `my_chunk` is this rank's global chunk id (sequential sharding: == rank).
+/// After N ring steps every query has seen every causally-visible KV block.
+pub fn ring_attention(
+    ctx: &mut RankCtx,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    my_chunk: usize,
+) -> Tensor {
+    let n = ctx.n;
+    let (lq, dh) = (q.rows(), q.cols());
+    let mut acc = Acc::new(lq, dh);
+
+    // Current traveling KV block + its chunk id (starts as our own).
+    let mut kv_chunk = my_chunk;
+    let mut kbuf = k.clone();
+    let mut vbuf = v.clone();
+
+    for _step in 0..n {
+        // Causal block logic: earlier chunks attend fully, the own chunk is
+        // triangular, later chunks are skipped entirely (the load imbalance
+        // §A.2.3's zigzag sharding addresses).
+        if kv_chunk < my_chunk {
+            ctx.compute_flops(4.0 * (lq * kbuf.rows() * dh) as f64);
+            acc.absorb(q, &kbuf, &vbuf, |_, _| true);
+        } else if kv_chunk == my_chunk {
+            ctx.compute_flops(2.0 * (lq * kbuf.rows() * dh) as f64);
+            acc.absorb(q, &kbuf, &vbuf, |tq, tk| tk <= tq);
+        }
+        // Ring shift: pass KV to the next rank, receive from the previous.
+        if ctx.n > 1 {
+            ctx.send(ctx.next_rank(), RING_TAG, pack_kv(&kbuf, &vbuf, kv_chunk));
+            let got = ctx.recv(ctx.prev_rank(), RING_TAG);
+            let (nk, nv, nc) = unpack_kv(&got, kbuf.rows(), dh);
+            kbuf = nk;
+            vbuf = nv;
+            kv_chunk = nc;
+        }
+    }
+    acc.finish()
+}
+
+fn pack_kv(k: &Tensor, v: &Tensor, chunk: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(k.numel() + v.numel() + 1);
+    out.push(chunk as f32);
+    out.extend_from_slice(&k.data);
+    out.extend_from_slice(&v.data);
+    out
+}
+
+fn unpack_kv(buf: &[f32], lk: usize, dh: usize) -> (Tensor, Tensor, usize) {
+    let chunk = buf[0] as usize;
+    let k = Tensor::from_vec(&[lk, dh], buf[1..1 + lk * dh].to_vec());
+    let v = Tensor::from_vec(&[lk, dh], buf[1 + lk * dh..1 + 2 * lk * dh].to_vec());
+    (k, v, chunk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::sharding::{shard_rows, unshard_rows};
+    use crate::fabric::{self, FabricModel};
+    use crate::ops::mha::causal_attention_head;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn matches_single_rank_attention() {
+        for n in [2usize, 4] {
+            let mut rng = Rng::new(20 + n as u64);
+            let (l, dh) = (32usize, 8usize);
+            let q = Tensor::randn(&mut rng, &[l, dh], 1.0);
+            let k = Tensor::randn(&mut rng, &[l, dh], 1.0);
+            let v = Tensor::randn(&mut rng, &[l, dh], 1.0);
+            let want = causal_attention_head(&q, &k, &v);
+            let (qs, ks, vs) = (
+                Arc::new(shard_rows(&q, n)),
+                Arc::new(shard_rows(&k, n)),
+                Arc::new(shard_rows(&v, n)),
+            );
+            let reports = fabric::run(n, FabricModel::nvlink(), move |ctx| {
+                ring_attention(ctx, &qs[ctx.rank], &ks[ctx.rank], &vs[ctx.rank], ctx.rank)
+            });
+            let outs: Vec<Tensor> = reports.into_iter().map(|r| r.value).collect();
+            let got = unshard_rows(&outs);
+            assert!(
+                got.allclose(&want, 1e-3),
+                "n={n}: diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn online_softmax_accumulator_is_order_invariant() {
+        let mut rng = Rng::new(3);
+        let (lq, lk, dh) = (6, 4, 5);
+        let q = Tensor::randn(&mut rng, &[lq, dh], 1.0);
+        let k1 = Tensor::randn(&mut rng, &[lk, dh], 1.0);
+        let v1 = Tensor::randn(&mut rng, &[lk, dh], 1.0);
+        let k2 = Tensor::randn(&mut rng, &[lk, dh], 1.0);
+        let v2 = Tensor::randn(&mut rng, &[lk, dh], 1.0);
+
+        let mut a = Acc::new(lq, dh);
+        a.absorb(&q, &k1, &v1, |_, _| true);
+        a.absorb(&q, &k2, &v2, |_, _| true);
+        let ya = a.finish();
+
+        let mut b = Acc::new(lq, dh);
+        b.absorb(&q, &k2, &v2, |_, _| true);
+        b.absorb(&q, &k1, &v1, |_, _| true);
+        let yb = b.finish();
+        assert!(ya.allclose(&yb, 1e-4));
+    }
+}

@@ -1,0 +1,125 @@
+//! Sequence sharding strategies: sequential, striped, zigzag (§A.2.3).
+//!
+//! Causal attention makes sequential shards imbalanced (later shards attend
+//! to more history). Striped (Brandon et al., 2023) and zigzag (Llama-3)
+//! orderings rebalance by giving each rank one early and one late chunk.
+
+use crate::tensor::Tensor;
+
+/// Split [l, d] into n contiguous row shards (l divisible by n).
+pub fn shard_rows(x: &Tensor, n: usize) -> Vec<Tensor> {
+    let l = x.rows();
+    assert_eq!(l % n, 0, "sequence {l} not divisible by {n} ranks");
+    let lc = l / n;
+    (0..n).map(|r| x.slice_rows(r * lc, (r + 1) * lc)).collect()
+}
+
+/// Reassemble contiguous row shards.
+pub fn unshard_rows(shards: &[Tensor]) -> Tensor {
+    let refs: Vec<&Tensor> = shards.iter().collect();
+    Tensor::vcat(&refs)
+}
+
+/// Zigzag sharding: with 2n chunks c_0..c_{2n-1}, rank r holds
+/// [c_r, c_{2n-1-r}]. Returns (shard, global chunk ids) per rank.
+pub fn zigzag_shard(x: &Tensor, n: usize) -> Vec<(Tensor, [usize; 2])> {
+    let l = x.rows();
+    assert_eq!(l % (2 * n), 0, "sequence {l} not divisible by 2n={}", 2 * n);
+    let lc = l / (2 * n);
+    (0..n)
+        .map(|r| {
+            let a = r;
+            let b = 2 * n - 1 - r;
+            let chunk =
+                Tensor::vcat(&[&x.slice_rows(a * lc, (a + 1) * lc), &x.slice_rows(b * lc, (b + 1) * lc)]);
+            (chunk, [a, b])
+        })
+        .collect()
+}
+
+/// Invert zigzag sharding.
+pub fn zigzag_unshard(shards: &[(Tensor, [usize; 2])], _n: usize) -> Tensor {
+    let lc = shards[0].0.rows() / 2;
+    let d = shards[0].0.cols();
+    let total_chunks = shards.len() * 2;
+    let mut out = Tensor::zeros(&[total_chunks * lc, d]);
+    for (t, ids) in shards {
+        for (half, &cid) in ids.iter().enumerate() {
+            let src = t.slice_rows(half * lc, (half + 1) * lc);
+            out.data[cid * lc * d..(cid + 1) * lc * d].copy_from_slice(&src.data);
+        }
+    }
+    out
+}
+
+/// Striped sharding (Brandon et al., 2023): rank r holds chunks [r, n + r].
+pub fn striped_shard(x: &Tensor, n: usize) -> Vec<(Tensor, [usize; 2])> {
+    let l = x.rows();
+    assert_eq!(l % (2 * n), 0);
+    let lc = l / (2 * n);
+    (0..n)
+        .map(|r| {
+            let a = r;
+            let b = n + r;
+            let chunk =
+                Tensor::vcat(&[&x.slice_rows(a * lc, (a + 1) * lc), &x.slice_rows(b * lc, (b + 1) * lc)]);
+            (chunk, [a, b])
+        })
+        .collect()
+}
+
+/// Causal work units for a rank holding global chunk ids `ids` in a ring of
+/// `2n` chunks: number of (query-chunk, key-chunk) pairs with key <= query.
+/// Used to quantify the load-balance argument of §A.2.3.
+pub fn causal_work(ids: &[usize; 2], _total_chunks: usize) -> usize {
+    ids.iter().map(|&q| q + 1).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sequential_roundtrip() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&mut rng, &[24, 3], 1.0);
+        let sh = shard_rows(&x, 4);
+        assert_eq!(sh.len(), 4);
+        assert_eq!(unshard_rows(&sh), x);
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[32, 2], 1.0);
+        let sh = zigzag_shard(&x, 4);
+        assert_eq!(sh[0].1, [0, 7]);
+        assert_eq!(sh[3].1, [3, 4]);
+        assert_eq!(zigzag_unshard(&sh, 4), x);
+    }
+
+    #[test]
+    fn striped_ids() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&mut rng, &[32, 2], 1.0);
+        let sh = striped_shard(&x, 4);
+        assert_eq!(sh[0].1, [0, 4]);
+        assert_eq!(sh[3].1, [3, 7]);
+    }
+
+    #[test]
+    fn zigzag_balances_causal_work() {
+        // With 4 ranks / 8 chunks: sequential rank loads are (1+2, 3+4, 5+6,
+        // 7+8) = (3, 7, 11, 15); zigzag gives (1+8, 2+7, ...) = 9 for all.
+        let n = 4;
+        let zig: Vec<usize> = (0..n)
+            .map(|r| causal_work(&[r, 2 * n - 1 - r], 2 * n))
+            .collect();
+        let seq: Vec<usize> = (0..n)
+            .map(|r| causal_work(&[2 * r, 2 * r + 1], 2 * n))
+            .collect();
+        assert!(zig.iter().all(|&w| w == zig[0]), "zigzag must be balanced");
+        assert!(seq.iter().max() > seq.iter().min());
+    }
+}

@@ -1,0 +1,22 @@
+//! # StripedHyena 2 — convolutional multi-hybrid language models at scale
+//!
+//! Rust + JAX + Pallas reproduction of "Systems and Algorithms for
+//! Convolutional Multi-Hybrid Language Models at Scale" (2025).
+//!
+//! Layering (see DESIGN.md):
+//! * **L3 (this crate)** — training coordinator: data pipeline, microbatch
+//!   scheduling, context-parallel runtime, metrics; plus the paper's
+//!   convolution algorithms, baseline operators, communication fabric and
+//!   cost model, all from scratch.
+//! * **L2/L1 (python/, build-time only)** — the JAX model + Pallas kernels,
+//!   AOT-lowered to HLO text artifacts executed here via PJRT.
+
+pub mod conv;
+pub mod coordinator;
+pub mod costmodel;
+pub mod cp;
+pub mod fabric;
+pub mod ops;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,300 @@
+//! `sh2` — StripedHyena 2 training coordinator CLI.
+//!
+//! Subcommands:
+//!   train       train a multi-hybrid from AOT artifacts on synthetic genome data
+//!   eval        validation perplexity of a checkpoint
+//!   recall      needle-in-a-haystack recall evaluation (Fig B.2)
+//!   cost-model  Fig 2.2 / B.3 iteration-time + MFU estimates at 7B/40B
+//!   cp-demo     context-parallel convolution demo across strategies
+//!   data-gen    emit synthetic OpenGenome2-like bytes
+//!   inspect     print an artifact's meta (params, programs)
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use sh2::coordinator::data::{DataPipeline, GenomeConfig, GenomeGenerator};
+use sh2::coordinator::eval::{needle_recall, validation_ppl};
+use sh2::coordinator::metrics::MetricsLog;
+use sh2::coordinator::Trainer;
+use sh2::costmodel::{iteration_time, ArchSpec, ClusterConfig, Efficiency};
+use sh2::runtime::{Engine, ModelMeta};
+use sh2::util::bench::Table;
+use sh2::util::cli::Args;
+
+fn main() {
+    sh2::util::logging::init();
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("recall") => cmd_recall(&args),
+        Some("cost-model") => cmd_cost_model(&args),
+        Some("cp-demo") => cmd_cp_demo(&args),
+        Some("data-gen") => cmd_data_gen(&args),
+        Some("inspect") => cmd_inspect(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: sh2 <train|eval|recall|cost-model|cp-demo|data-gen|inspect> [--options]
+  common: --artifacts DIR (default: artifacts) --config NAME (default: tiny)
+  train:  --steps N --seed S --log-every K --eval-every K --save PATH --resume PATH --metrics PATH
+  eval:   --resume PATH --batches N
+  recall: --resume PATH --cases N --depth F
+  cost-model: --scale 7b|40b
+  cp-demo: --ranks N --len L --width D --filter LH
+  data-gen: --bytes N --seed S";
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = args.get_or("config", "tiny");
+    let engine = Engine::cpu()?;
+    log::info!("compiling programs for config '{config}'...");
+    let mut trainer = Trainer::new(
+        &engine,
+        &artifacts_dir(args),
+        config,
+        args.get_usize("seed", 0) as i32,
+    )?;
+    if let Some(resume) = args.get("resume") {
+        trainer.load_checkpoint(Path::new(resume))?;
+        log::info!("resumed from {resume} at step {}", trainer.step);
+    }
+    let steps = args.get_usize("steps", trainer.meta.max_steps);
+    let log_every = args.get_usize("log-every", 10);
+    let eval_every = args.get_usize("eval-every", 0);
+    let mut pipe = DataPipeline::new(
+        args.get_usize("seed", 0) as u64 + 1,
+        trainer.meta.batch,
+        trainer.meta.seq_len,
+    );
+    let mut metrics = MetricsLog::new(trainer.meta.batch * trainer.meta.seq_len);
+    log::info!(
+        "training '{config}' ({} params, layout {}) for {steps} steps",
+        trainer.param_count(),
+        trainer.meta.layout.join("-")
+    );
+    for _ in 0..steps {
+        let batch = pipe.next_batch();
+        let r = trainer.train_step(&batch)?;
+        let m = metrics.record(trainer.step as usize, r.loss as f64, r.grad_norm as f64);
+        if trainer.step as usize % log_every == 0 {
+            log::info!(
+                "step {:5}  loss {:.4}  ema {:.4}  gnorm {:.2}  {:.0} tok/s",
+                m.step, m.loss, m.loss_ema, m.grad_norm, m.tokens_per_sec
+            );
+        }
+        if eval_every > 0 && trainer.step as usize % eval_every == 0 {
+            let ppl = validation_ppl(&trainer, 0xEAA, 4)?;
+            log::info!("step {:5}  val_ppl {:.4}", trainer.step, ppl);
+        }
+    }
+    let ppl = validation_ppl(&trainer, 0xEAA, 8)?;
+    println!(
+        "final: steps={} loss_ema={:.4} val_ppl={:.4} throughput={:.0} tok/s",
+        trainer.step,
+        metrics.last_loss_ema(),
+        ppl,
+        metrics.throughput(50)
+    );
+    if let Some(save) = args.get("save") {
+        trainer.save_checkpoint(Path::new(save))?;
+        log::info!("checkpoint saved to {save}");
+    }
+    if let Some(mpath) = args.get("metrics") {
+        metrics.write_jsonl(Path::new(mpath))?;
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let config = args.get_or("config", "tiny");
+    let engine = Engine::cpu()?;
+    let mut trainer = Trainer::new(&engine, &artifacts_dir(args), config, 0)?;
+    if let Some(resume) = args.get("resume") {
+        trainer.load_checkpoint(Path::new(resume))?;
+    }
+    let ppl = validation_ppl(&trainer, 0xEAA, args.get_usize("batches", 8))?;
+    println!("config={config} step={} val_ppl={ppl:.4}", trainer.step);
+    Ok(())
+}
+
+fn cmd_recall(args: &Args) -> Result<()> {
+    let config = args.get_or("config", "tiny");
+    let engine = Engine::cpu()?;
+    let mut trainer = Trainer::new(&engine, &artifacts_dir(args), config, 0)?;
+    if let Some(resume) = args.get("resume") {
+        trainer.load_checkpoint(Path::new(resume))?;
+    }
+    let report = needle_recall(
+        &trainer,
+        7,
+        args.get_usize("cases", 16),
+        args.get_f64("depth", 0.25),
+    )?;
+    println!(
+        "recall: cases={} byte_acc={:.3} exact={:.3} payload_nll={:.3}",
+        report.cases, report.byte_accuracy, report.exact_match, report.payload_nll
+    );
+    Ok(())
+}
+
+fn cmd_cost_model(args: &Args) -> Result<()> {
+    let scale = args.get_or("scale", "40b");
+    let eff = Efficiency::default();
+    let archs: Vec<ArchSpec> = match scale {
+        "7b" => vec![
+            ArchSpec::transformer(0, 0).at_7b(),
+            ArchSpec::sh1(0, 0).at_7b(),
+            ArchSpec::linear_hybrid(0, 0).at_7b(),
+            ArchSpec::sh2(0, 0).at_7b(),
+        ],
+        "40b" => vec![
+            ArchSpec::transformer(0, 0).at_40b(),
+            ArchSpec::sh1(0, 0).at_40b(),
+            ArchSpec::linear_hybrid(0, 0).at_40b(),
+            ArchSpec::sh2(0, 0).at_40b(),
+        ],
+        other => bail!("unknown scale {other} (7b|40b)"),
+    };
+    let seqs = [16_384usize, 32_768, 65_536, 131_072, 262_144, 524_288, 1_048_576];
+    let mut t = Table::new(
+        &format!("Fig 2.2 ({scale}): iteration time (s) and MFU"),
+        &["seq_len", "Transformer++", "SH1", "LinearHyb", "SH2", "TF/SH2"],
+    );
+    for &l in &seqs {
+        let cluster = if scale == "7b" {
+            ClusterConfig::table_c1_7b(l)
+        } else {
+            ClusterConfig::table_c1_40b(l)
+        };
+        let est: Vec<_> =
+            archs.iter().map(|a| iteration_time(a, l, &cluster, &eff)).collect();
+        t.row(vec![
+            format!("{}K", l / 1024),
+            format!("{:.2}s ({:.0}%)", est[0].iter_secs, est[0].mfu * 100.0),
+            format!("{:.2}s ({:.0}%)", est[1].iter_secs, est[1].mfu * 100.0),
+            format!("{:.2}s ({:.0}%)", est[2].iter_secs, est[2].mfu * 100.0),
+            format!("{:.2}s ({:.0}%)", est[3].iter_secs, est[3].mfu * 100.0),
+            format!("{:.2}x", est[0].iter_secs / est[3].iter_secs),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_cp_demo(args: &Args) -> Result<()> {
+    use sh2::conv::direct::causal_conv_direct;
+    use sh2::conv::GroupedFilter;
+    use sh2::cp::a2a::{a2a_conv, a2a_conv_pipelined, InnerConv};
+    use sh2::cp::p2p::{p2p_conv, p2p_conv_overlapped};
+    use sh2::cp::{shard_rows, unshard_rows};
+    use sh2::fabric::{self, FabricModel, RankCtx};
+    use sh2::tensor::Tensor;
+    use sh2::util::rng::Rng;
+
+    let n = args.get_usize("ranks", 4);
+    let l = args.get_usize("len", 4096);
+    let d = args.get_usize("width", 256);
+    let lh = args.get_usize("filter", 128);
+    let mut rng = Rng::new(0);
+    let groups = (d / 16).max(n);
+    let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+    let h = GroupedFilter::random(&mut rng, groups, lh, d / groups);
+    let want = causal_conv_direct(&x, &h);
+    let shards = Arc::new(shard_rows(&x, n));
+    let h = Arc::new(h);
+    let model = FabricModel::nvlink();
+
+    let mut t = Table::new(
+        &format!("CP strategies: N={n} L={l} D={d} l_h={lh} (NVLink α-β model)"),
+        &["strategy", "sim time", "max |err|", "MB sent/rank"],
+    );
+    type StratFn = Arc<dyn Fn(&mut RankCtx, &Tensor, &GroupedFilter) -> Tensor + Send + Sync>;
+    let strategies: Vec<(&str, StratFn)> = vec![
+        ("a2a (direct)", Arc::new(|c: &mut RankCtx, x: &Tensor, h: &GroupedFilter| a2a_conv(c, x, h, InnerConv::Direct))),
+        ("a2a (two-stage)", Arc::new(|c: &mut RankCtx, x: &Tensor, h: &GroupedFilter| a2a_conv(c, x, h, InnerConv::TwoStage))),
+        ("a2a pipelined x4", Arc::new(|c: &mut RankCtx, x: &Tensor, h: &GroupedFilter| a2a_conv_pipelined(c, x, h, InnerConv::TwoStage, 4))),
+        ("p2p", Arc::new(|c: &mut RankCtx, x: &Tensor, h: &GroupedFilter| p2p_conv(c, x, h))),
+        ("p2p overlapped", Arc::new(|c: &mut RankCtx, x: &Tensor, h: &GroupedFilter| p2p_conv_overlapped(c, x, h))),
+    ];
+    for (name, f) in strategies {
+        let shards = shards.clone();
+        let h = h.clone();
+        let reports = fabric::run(n, model, move |ctx| f(ctx, &shards[ctx.rank], &h));
+        let sim = fabric::job_time(&reports);
+        let bytes = reports.iter().map(|r| r.bytes_sent).max().unwrap_or(0);
+        let outs: Vec<Tensor> = reports.into_iter().map(|r| r.value).collect();
+        let got = unshard_rows(&outs);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.3}ms", sim * 1e3),
+            format!("{:.1e}", got.max_abs_diff(&want)),
+            format!("{:.2}", bytes as f64 / 1e6),
+        ]);
+    }
+    // p2p FFT (Hyena-LI-style, filter as long as practical).
+    let hc = {
+        let mut rng2 = Rng::new(9);
+        Tensor::randn(&mut rng2, &[d, lh], 0.5)
+    };
+    let (got, sim) = sh2::cp::fft::causal_conv_via_p2p_fft(&x, &hc, n, model);
+    let want_fft = causal_conv_direct(&x, &GroupedFilter::new(hc.clone(), 1));
+    t.row(vec![
+        "p2p FFT".to_string(),
+        format!("{:.3}ms", sim * 1e3),
+        format!("{:.1e}", got.max_abs_diff(&want_fft)),
+        "-".to_string(),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_data_gen(args: &Args) -> Result<()> {
+    let n = args.get_usize("bytes", 1024);
+    let seed = args.get_usize("seed", 0) as u64;
+    let mut g = GenomeGenerator::new(seed, GenomeConfig::default());
+    let seq = g.generate(n);
+    println!("{}", String::from_utf8_lossy(&seq));
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let config = args.get_or("config", "tiny");
+    let meta = ModelMeta::load(&artifacts_dir(args), config)?;
+    println!(
+        "config {}: d_model={} layout={} vocab={} seq_len={} batch={} params={}",
+        meta.name,
+        meta.d_model,
+        meta.layout.join("-"),
+        meta.vocab,
+        meta.seq_len,
+        meta.batch,
+        meta.param_count
+    );
+    for (name, p) in &meta.programs {
+        println!(
+            "  program {name}: {} inputs -> {} outputs ({})",
+            p.inputs.len(),
+            p.outputs.len(),
+            p.file
+        );
+    }
+    println!("  {} parameter leaves, first 5:", meta.params.len());
+    for p in meta.params.iter().take(5) {
+        println!("    {} {:?} {}", p.name, p.shape, p.dtype);
+    }
+    Ok(())
+}

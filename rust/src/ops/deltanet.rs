@@ -1,0 +1,145 @@
+//! DeltaNet-style operator (Yang et al., 2024): linear attention with the
+//! delta rule — the state is *corrected* toward v_t rather than purely
+//! accumulated: S_t = S_{t-1} + β_t (v_t - S_{t-1} k_t) k_tᵀ.
+
+use super::{merge_heads, proj, split_heads, SeqMixer};
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct DeltaNetOp {
+    pub d: usize,
+    pub n_heads: usize,
+    wqkv: Tensor,
+    wbeta: Tensor,
+    wo: Tensor,
+}
+
+impl DeltaNetOp {
+    pub fn new(rng: &mut Rng, d: usize, n_heads: usize) -> DeltaNetOp {
+        DeltaNetOp {
+            d,
+            n_heads,
+            wqkv: proj(rng, d, 3 * d),
+            wbeta: proj(rng, d, n_heads),
+            wo: proj(rng, d, d),
+        }
+    }
+}
+
+/// One head of the delta-rule scan. q,k,v: [l, dh]; beta: [l] in (0,1).
+/// Keys are L2-normalized (as in the paper's practical parametrization).
+pub fn deltanet_head(q: &Tensor, k: &Tensor, v: &Tensor, beta: &[f32]) -> Tensor {
+    let (l, dh) = (q.rows(), q.cols());
+    let mut s = vec![0.0f32; dh * dh]; // S [dh(v), dh(k)] row-major
+    let mut y = Tensor::zeros(&[l, dh]);
+    let mut kn = vec![0.0f32; dh];
+    let mut pred = vec![0.0f32; dh];
+    for t in 0..l {
+        // normalize key
+        let kr = k.row(t);
+        let norm = (kr.iter().map(|x| x * x).sum::<f32>()).sqrt().max(1e-6);
+        for (o, &x) in kn.iter_mut().zip(kr) {
+            *o = x / norm;
+        }
+        // pred = S k
+        for i in 0..dh {
+            let srow = &s[i * dh..(i + 1) * dh];
+            pred[i] = srow.iter().zip(&kn).map(|(a, b)| a * b).sum();
+        }
+        // S += beta (v - pred) k^T
+        let b = beta[t];
+        let vr = v.row(t);
+        for i in 0..dh {
+            let err = b * (vr[i] - pred[i]);
+            let srow = &mut s[i * dh..(i + 1) * dh];
+            for (sv, &kv_) in srow.iter_mut().zip(&kn) {
+                *sv += err * kv_;
+            }
+        }
+        // y = S q
+        let qr = q.row(t);
+        let yr = y.row_mut(t);
+        for i in 0..dh {
+            let srow = &s[i * dh..(i + 1) * dh];
+            yr[i] = srow.iter().zip(qr).map(|(a, b)| a * b).sum();
+        }
+    }
+    y
+}
+
+impl SeqMixer for DeltaNetOp {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let qkv = matmul(x, &self.wqkv);
+        let q = qkv.slice_cols(0, self.d);
+        let k = qkv.slice_cols(self.d, 2 * self.d);
+        let v = qkv.slice_cols(2 * self.d, 3 * self.d);
+        let beta_raw = matmul(x, &self.wbeta);
+        let (qh, kh, vh) = (
+            split_heads(&q, self.n_heads),
+            split_heads(&k, self.n_heads),
+            split_heads(&v, self.n_heads),
+        );
+        let heads: Vec<Tensor> = (0..self.n_heads)
+            .map(|h| {
+                let beta: Vec<f32> = (0..x.rows())
+                    .map(|t| 1.0 / (1.0 + (-beta_raw.at2(t, h)).exp()))
+                    .collect();
+                deltanet_head(&qh[h], &kh[h], &vh[h], &beta)
+            })
+            .collect();
+        matmul(&merge_heads(&heads), &self.wo)
+    }
+
+    fn name(&self) -> &'static str {
+        "DeltaNet"
+    }
+
+    fn flops(&self, l: usize) -> f64 {
+        let (lf, d) = (l as f64, self.d as f64);
+        let dh = d / self.n_heads as f64;
+        // proj + 3 state GEMVs of dh^2 per step per head.
+        2.0 * lf * d * (3.0 * d) + 2.0 * lf * d * d + self.n_heads as f64 * lf * 6.0 * dh * dh
+    }
+
+    fn width(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_rule_memorizes_association() {
+        // After writing (k, v) with beta=1, querying the same k returns v.
+        let dh = 4;
+        let k = Tensor::from_vec(&[1, dh], vec![1.0, 0.0, 0.0, 0.0]);
+        let v = Tensor::from_vec(&[1, dh], vec![0.3, -0.7, 0.2, 0.9]);
+        let q = k.clone();
+        let y = deltanet_head(&q, &k, &v, &[1.0]);
+        for c in 0..dh {
+            assert!((y.at2(0, c) - v.at2(0, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rewrite_overwrites_old_value() {
+        // Writing a second value at the same (normalized) key replaces the
+        // first — the capability that distinguishes delta rule from vanilla
+        // linear attention.
+        let dh = 4;
+        let key = vec![0.0, 1.0, 0.0, 0.0];
+        let k = Tensor::from_vec(&[2, dh], [key.clone(), key.clone()].concat());
+        let v = Tensor::from_vec(
+            &[2, dh],
+            vec![1.0, 1.0, 1.0, 1.0, -2.0, 0.5, 0.0, 3.0],
+        );
+        let q = k.clone();
+        let y = deltanet_head(&q, &k, &v, &[1.0, 1.0]);
+        for c in 0..dh {
+            assert!((y.at2(1, c) - v.at2(1, c)).abs() < 1e-5);
+        }
+    }
+}

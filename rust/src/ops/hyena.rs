@@ -1,0 +1,224 @@
+//! The three hyena operators as benchmarkable SeqMixers (Eq. 1 structure):
+//! dense featurizer projections + short explicit featurizer convs + gated
+//! inner convolution + output projection.
+//!
+//! * SE — inner filter length 7, two-stage blocked path.
+//! * MR — inner filter length 128 with exponential-decay regularizer,
+//!        two-stage blocked path (l_b = 128).
+//! * LI — implicit modal filter as long as the sequence, FFT path.
+
+use super::{proj, SeqMixer};
+use crate::conv::direct::causal_conv_direct;
+use crate::conv::fft_conv::{fft_causal_conv, modal_filter};
+use crate::conv::two_stage::two_stage_hyena;
+use crate::conv::GroupedFilter;
+use crate::tensor::fft::{fft_flops, next_pow2};
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const FEATURIZER_LEN: usize = 3;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HyenaKind {
+    Se,
+    Mr,
+    Li,
+}
+
+pub struct HyenaOp {
+    pub d: usize,
+    pub kind: HyenaKind,
+    pub num_groups: usize,
+    w: Tensor,
+    u: Tensor,
+    p: Tensor,
+    m: Tensor,
+    hq: GroupedFilter,
+    hk: GroupedFilter,
+    hv: GroupedFilter,
+    /// SE/MR: explicit inner taps. LI: modal parameters.
+    inner: GroupedFilter,
+    li_residues: Vec<f32>,
+    li_poles: Vec<f32>,
+    pub block: usize,
+}
+
+impl HyenaOp {
+    fn featurizer(rng: &mut Rng, d: usize) -> GroupedFilter {
+        // Near-delta per-channel short filters.
+        let mut taps = Tensor::randn(rng, &[d, FEATURIZER_LEN], 0.02);
+        for c in 0..d {
+            taps.data[c * FEATURIZER_LEN] += 1.0;
+        }
+        GroupedFilter::new(taps, 1)
+    }
+
+    fn base(rng: &mut Rng, d: usize, kind: HyenaKind, groups: usize, inner_len: usize, block: usize) -> HyenaOp {
+        let inner = GroupedFilter::random(rng, groups, inner_len.max(1), d / groups);
+        HyenaOp {
+            d,
+            kind,
+            num_groups: groups,
+            w: proj(rng, d, d),
+            u: proj(rng, d, d),
+            p: proj(rng, d, d),
+            m: proj(rng, d, d),
+            hq: Self::featurizer(rng, d),
+            hk: Self::featurizer(rng, d),
+            hv: Self::featurizer(rng, d),
+            inner,
+            li_residues: vec![],
+            li_poles: vec![],
+            block,
+        }
+    }
+
+    /// Hyena-SE: short explicit inner filter (len 7), the paper's default.
+    pub fn se(rng: &mut Rng, d: usize) -> HyenaOp {
+        let groups = (d / 16).max(1);
+        Self::base(rng, d, HyenaKind::Se, groups, 7, 16)
+    }
+
+    /// Hyena-MR: medium filter (len 128) with decay regularizer, l_b = 128.
+    pub fn mr(rng: &mut Rng, d: usize) -> HyenaOp {
+        let groups = (d / 16).max(1);
+        let mut op = Self::base(rng, d, HyenaKind::Mr, groups, 128, 128);
+        // Apply the decay envelope h_t <- h_t * exp(-alpha_g t), alpha swept
+        // log-uniformly across groups (§2.1).
+        let (lo, hi) = (1.0f32 / 128.0, 0.5f32);
+        for g in 0..groups {
+            let frac = g as f32 / (groups.max(2) - 1) as f32;
+            let alpha = lo * (hi / lo).powf(frac);
+            for t in 0..128 {
+                op.inner.taps.data[g * 128 + t] *= (-alpha * t as f32).exp();
+            }
+        }
+        op
+    }
+
+    /// Hyena-LI: implicit modal filter, materialized per sequence length.
+    pub fn li(rng: &mut Rng, d: usize) -> HyenaOp {
+        let groups = (d / 16).max(1);
+        let order = 8;
+        let mut op = Self::base(rng, d, HyenaKind::Li, groups, 1, 16);
+        op.li_residues = rng.normal_vec(groups * order, 1.0 / order as f32);
+        op.li_poles = (0..groups * order).map(|_| 0.3 + 0.69 * rng.f32()).collect();
+        op
+    }
+
+    fn inner_filter(&self, l: usize) -> GroupedFilter {
+        match self.kind {
+            HyenaKind::Se | HyenaKind::Mr => self.inner.clone(),
+            HyenaKind::Li => {
+                let g = self.num_groups;
+                let order = self.li_residues.len() / g;
+                let mut taps = Tensor::zeros(&[g, l]);
+                for gi in 0..g {
+                    let h = modal_filter(
+                        &self.li_residues[gi * order..(gi + 1) * order],
+                        &self.li_poles[gi * order..(gi + 1) * order],
+                        l,
+                    );
+                    taps.row_mut(gi).copy_from_slice(&h);
+                }
+                GroupedFilter::new(taps, self.d / g)
+            }
+        }
+    }
+}
+
+impl SeqMixer for HyenaOp {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let l = x.rows();
+        // Featurizers: dense projection + short explicit conv (Eq. 1).
+        let q = causal_conv_direct(&matmul(x, &self.w), &self.hq);
+        let k = causal_conv_direct(&matmul(x, &self.u), &self.hk);
+        let v = causal_conv_direct(&matmul(x, &self.p), &self.hv);
+        let h = self.inner_filter(l);
+        let y = match self.kind {
+            HyenaKind::Se | HyenaKind::Mr => two_stage_hyena(&q, &k, &v, &h, self.block),
+            HyenaKind::Li => q.hadamard(&fft_causal_conv(&k.hadamard(&v), &h)),
+        };
+        matmul(&y, &self.m)
+    }
+
+    fn name(&self) -> &'static str {
+        match self.kind {
+            HyenaKind::Se => "Hyena-SE",
+            HyenaKind::Mr => "Hyena-MR",
+            HyenaKind::Li => "Hyena-LI",
+        }
+    }
+
+    fn flops(&self, l: usize) -> f64 {
+        let (lf, d) = (l as f64, self.d as f64);
+        let projections = 4.0 * 2.0 * lf * d * d;
+        let featurizers = 3.0 * 2.0 * lf * d * FEATURIZER_LEN as f64;
+        let inner = match self.kind {
+            // two GEMMs of l_b x l_b per chunk (§A.1): 4 * l * l_b * d
+            HyenaKind::Se | HyenaKind::Mr => 4.0 * lf * self.block as f64 * d,
+            HyenaKind::Li => {
+                let n = next_pow2(2 * l);
+                d * (3.0 * fft_flops(n) + 6.0 * n as f64)
+            }
+        };
+        projections + featurizers + inner + 2.0 * lf * d // gating
+    }
+
+    fn width(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_have_expected_structure() {
+        let mut rng = Rng::new(0);
+        let se = HyenaOp::se(&mut rng, 32);
+        assert_eq!(se.inner.filter_len(), 7);
+        let mr = HyenaOp::mr(&mut rng, 32);
+        assert_eq!(mr.inner.filter_len(), 128);
+        // MR decay: late taps of the strongest-decay group are tiny.
+        let g = mr.num_groups - 1;
+        assert!(mr.inner.taps.at2(g, 127).abs() < 1e-8);
+        let li = HyenaOp::li(&mut rng, 32);
+        assert_eq!(li.inner_filter(50).filter_len(), 50);
+    }
+
+    #[test]
+    fn se_and_mr_agree_with_direct_inner() {
+        // Replacing the two-stage inner conv with the direct conv must not
+        // change the operator output.
+        let mut rng = Rng::new(1);
+        let op = HyenaOp::se(&mut rng, 16);
+        let x = Tensor::randn(&mut rng, &[40, 16], 1.0);
+        let y = op.forward(&x);
+
+        let q = causal_conv_direct(&matmul(&x, &op.w), &op.hq);
+        let k = causal_conv_direct(&matmul(&x, &op.u), &op.hk);
+        let v = causal_conv_direct(&matmul(&x, &op.p), &op.hv);
+        let inner = causal_conv_direct(&k.hadamard(&v), &op.inner);
+        let want = matmul(&q.hadamard(&inner), &op.m);
+        assert!(y.allclose(&want, 1e-3), "diff {}", y.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn li_filter_spans_sequence() {
+        let mut rng = Rng::new(2);
+        let op = HyenaOp::li(&mut rng, 16);
+        let x = Tensor::randn(&mut rng, &[30, 16], 1.0);
+        let y = op.forward(&x);
+        assert_eq!(y.shape, vec![30, 16]);
+        // Long filter => first-token perturbation reaches the last output.
+        let mut x2 = x.clone();
+        for c in 0..16 {
+            *x2.at2_mut(0, c) += 2.0;
+        }
+        let y2 = op.forward(&x2);
+        assert!(y.slice_rows(29, 30).max_abs_diff(&y2.slice_rows(29, 30)) > 1e-6);
+    }
+}

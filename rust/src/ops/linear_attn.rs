@@ -1,0 +1,144 @@
+//! Linear attention (Katharopoulos et al., 2020): softmax replaced by a
+//! positive feature map; causal form is a running outer-product state.
+
+use super::{merge_heads, proj, split_heads, SeqMixer};
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct LinearAttnOp {
+    pub d: usize,
+    pub n_heads: usize,
+    wqkv: Tensor,
+    wo: Tensor,
+}
+
+impl LinearAttnOp {
+    pub fn new(rng: &mut Rng, d: usize, n_heads: usize) -> LinearAttnOp {
+        LinearAttnOp { d, n_heads, wqkv: proj(rng, d, 3 * d), wo: proj(rng, d, d) }
+    }
+}
+
+#[inline]
+fn elu1(x: f32) -> f32 {
+    // φ(x) = elu(x) + 1 > 0
+    if x > 0.0 {
+        x + 1.0
+    } else {
+        x.exp()
+    }
+}
+
+/// Causal linear attention for one head: y_t = φ(q_t)ᵀ S_t / (φ(q_t)ᵀ z_t),
+/// S_t = Σ_{s<=t} φ(k_s) v_sᵀ, z_t = Σ φ(k_s).
+pub fn linear_attention_head(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let (l, dh) = (q.rows(), q.cols());
+    let mut s = vec![0.0f32; dh * dh]; // state S [dh, dh]
+    let mut z = vec![0.0f32; dh];
+    let mut out = Tensor::zeros(&[l, dh]);
+    let mut fk = vec![0.0f32; dh];
+    let mut fq = vec![0.0f32; dh];
+    for t in 0..l {
+        for (i, (&kv_, &qv)) in k.row(t).iter().zip(q.row(t)).enumerate() {
+            fk[i] = elu1(kv_);
+            fq[i] = elu1(qv);
+        }
+        let vrow = v.row(t);
+        for i in 0..dh {
+            let fki = fk[i];
+            z[i] += fki;
+            let srow = &mut s[i * dh..(i + 1) * dh];
+            for (sv, &vv) in srow.iter_mut().zip(vrow) {
+                *sv += fki * vv;
+            }
+        }
+        let mut denom = 1e-6f32;
+        for i in 0..dh {
+            denom += fq[i] * z[i];
+        }
+        let orow = out.row_mut(t);
+        for i in 0..dh {
+            let fqi = fq[i];
+            let srow = &s[i * dh..(i + 1) * dh];
+            for (o, &sv) in orow.iter_mut().zip(srow) {
+                *o += fqi * sv;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o /= denom;
+        }
+    }
+    out
+}
+
+impl SeqMixer for LinearAttnOp {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let qkv = matmul(x, &self.wqkv);
+        let q = qkv.slice_cols(0, self.d);
+        let k = qkv.slice_cols(self.d, 2 * self.d);
+        let v = qkv.slice_cols(2 * self.d, 3 * self.d);
+        let (qh, kh, vh) = (
+            split_heads(&q, self.n_heads),
+            split_heads(&k, self.n_heads),
+            split_heads(&v, self.n_heads),
+        );
+        let heads: Vec<Tensor> = (0..self.n_heads)
+            .map(|h| linear_attention_head(&qh[h], &kh[h], &vh[h]))
+            .collect();
+        matmul(&merge_heads(&heads), &self.wo)
+    }
+
+    fn name(&self) -> &'static str {
+        "LinearAttn"
+    }
+
+    fn flops(&self, l: usize) -> f64 {
+        let (l, d) = (l as f64, self.d as f64);
+        let dh = d / self.n_heads as f64;
+        // proj + per step: state update 2*dh^2 + readout 2*dh^2 per head.
+        2.0 * l * d * (3.0 * d) + 2.0 * l * d * d + self.n_heads as f64 * l * 4.0 * dh * dh
+    }
+
+    fn width(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_values_are_preserved() {
+        // With v constant, y_t = φqᵀ Σφk v / φqᵀ Σφk = v.
+        let mut rng = Rng::new(0);
+        let (l, dh) = (12, 4);
+        let q = Tensor::randn(&mut rng, &[l, dh], 1.0);
+        let k = Tensor::randn(&mut rng, &[l, dh], 1.0);
+        let v = Tensor::from_vec(&[l, dh], vec![1.5; l * dh]);
+        let y = linear_attention_head(&q, &k, &v);
+        for t in 0..l {
+            for c in 0..dh {
+                assert!((y.at2(t, c) - 1.5).abs() < 1e-3, "t={t} c={c}: {}", y.at2(t, c));
+            }
+        }
+    }
+
+    #[test]
+    fn state_is_cumulative() {
+        // Output at t must equal full (non-causal) linear attention over the
+        // prefix x[..=t] — check last position against a fresh run.
+        let mut rng = Rng::new(1);
+        let (l, dh) = (9, 3);
+        let q = Tensor::randn(&mut rng, &[l, dh], 1.0);
+        let k = Tensor::randn(&mut rng, &[l, dh], 1.0);
+        let v = Tensor::randn(&mut rng, &[l, dh], 1.0);
+        let y = linear_attention_head(&q, &k, &v);
+        let y_prefix = linear_attention_head(
+            &q.slice_rows(0, 5),
+            &k.slice_rows(0, 5),
+            &v.slice_rows(0, 5),
+        );
+        assert!(y.slice_rows(0, 5).allclose(&y_prefix, 1e-5));
+    }
+}

@@ -1,0 +1,138 @@
+//! Multi-head causal softmax attention (SDPA-style, row-blocked so no
+//! [l, l] score matrix is ever materialized — the FlashAttention dataflow).
+
+use super::{merge_heads, proj, split_heads, SeqMixer};
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct MhaOp {
+    pub d: usize,
+    pub n_heads: usize,
+    wqkv: Tensor,
+    wo: Tensor,
+}
+
+impl MhaOp {
+    pub fn new(rng: &mut Rng, d: usize, n_heads: usize) -> MhaOp {
+        assert_eq!(d % n_heads, 0);
+        MhaOp { d, n_heads, wqkv: proj(rng, d, 3 * d), wo: proj(rng, d, d) }
+    }
+}
+
+/// Causal attention for one head with online (streaming) softmax.
+/// q, k, v: [l, dh].
+pub fn causal_attention_head(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let (l, dh) = (q.rows(), q.cols());
+    let scale = (dh as f32).powf(-0.5);
+    let mut out = Tensor::zeros(&[l, dh]);
+    // Row-wise streaming softmax: O(l) memory per row.
+    let mut scores = vec![0.0f32; l];
+    for t in 0..l {
+        let qrow = q.row(t);
+        let mut maxs = f32::NEG_INFINITY;
+        for (s, sc) in scores.iter_mut().take(t + 1).enumerate() {
+            let krow = k.row(s);
+            let mut dot = 0.0f32;
+            for (a, b) in qrow.iter().zip(krow) {
+                dot += a * b;
+            }
+            *sc = dot * scale;
+            maxs = maxs.max(*sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut().take(t + 1) {
+            *sc = (*sc - maxs).exp();
+            denom += *sc;
+        }
+        let orow = out.row_mut(t);
+        for (s, &w) in scores.iter().take(t + 1).enumerate() {
+            let vrow = v.row(s);
+            let wn = w / denom;
+            for (o, val) in orow.iter_mut().zip(vrow) {
+                *o += wn * val;
+            }
+        }
+    }
+    out
+}
+
+impl SeqMixer for MhaOp {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let l = x.rows();
+        let qkv = matmul(x, &self.wqkv); // [l, 3d]
+        let q = qkv.slice_cols(0, self.d);
+        let k = qkv.slice_cols(self.d, 2 * self.d);
+        let v = qkv.slice_cols(2 * self.d, 3 * self.d);
+        let (qh, kh, vh) = (
+            split_heads(&q, self.n_heads),
+            split_heads(&k, self.n_heads),
+            split_heads(&v, self.n_heads),
+        );
+        let heads: Vec<Tensor> = (0..self.n_heads)
+            .map(|h| causal_attention_head(&qh[h], &kh[h], &vh[h]))
+            .collect();
+        let _ = l;
+        matmul(&merge_heads(&heads), &self.wo)
+    }
+
+    fn name(&self) -> &'static str {
+        "MHA"
+    }
+
+    fn flops(&self, l: usize) -> f64 {
+        let (l, d) = (l as f64, self.d as f64);
+        // Projections + the causal-attention estimate of Dao (2023):
+        // QK^T and AV each cost 2*l^2*d but only the lower triangle is
+        // computed -> 2 * (2 l^2 d) * 0.5.
+        2.0 * l * d * (3.0 * d) + 2.0 * l * d * d + 2.0 * l * l * d
+    }
+
+    fn width(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attention_rows_sum_to_convex_combination() {
+        // With v = const vector, attention output must equal that constant.
+        let mut rng = Rng::new(0);
+        let (l, dh) = (10, 4);
+        let q = Tensor::randn(&mut rng, &[l, dh], 1.0);
+        let k = Tensor::randn(&mut rng, &[l, dh], 1.0);
+        let v = Tensor::from_vec(&[l, dh], vec![2.5; l * dh]);
+        let y = causal_attention_head(&q, &k, &v);
+        for t in 0..l {
+            for c in 0..dh {
+                assert!((y.at2(t, c) - 2.5).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn first_token_attends_to_itself() {
+        let mut rng = Rng::new(1);
+        let (l, dh) = (6, 4);
+        let q = Tensor::randn(&mut rng, &[l, dh], 1.0);
+        let k = Tensor::randn(&mut rng, &[l, dh], 1.0);
+        let v = Tensor::randn(&mut rng, &[l, dh], 1.0);
+        let y = causal_attention_head(&q, &k, &v);
+        for c in 0..dh {
+            assert!((y.at2(0, c) - v.at2(0, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn numerically_stable_large_scores() {
+        let (l, dh) = (4, 2);
+        let q = Tensor::from_vec(&[l, dh], vec![100.0; l * dh]);
+        let k = q.clone();
+        let v = Tensor::from_vec(&[l, dh], (0..l * dh).map(|i| i as f32).collect());
+        let y = causal_attention_head(&q, &k, &v);
+        assert!(y.data.iter().all(|x| x.is_finite()));
+    }
+}

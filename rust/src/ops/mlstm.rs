@@ -1,0 +1,136 @@
+//! xLSTM-style mLSTM operator (Beck et al., 2024): matrix memory with
+//! scalar input/forget gates and a normalizer state.
+
+use super::{merge_heads, proj, split_heads, SeqMixer};
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct MlstmOp {
+    pub d: usize,
+    pub n_heads: usize,
+    wqkv: Tensor,
+    wif: Tensor, // input/forget gate pre-activations, [d, 2*n_heads]
+    wo: Tensor,
+}
+
+impl MlstmOp {
+    pub fn new(rng: &mut Rng, d: usize, n_heads: usize) -> MlstmOp {
+        MlstmOp {
+            d,
+            n_heads,
+            wqkv: proj(rng, d, 3 * d),
+            wif: proj(rng, d, 2 * n_heads),
+            wo: proj(rng, d, d),
+        }
+    }
+}
+
+/// One head of the mLSTM recurrence:
+///   C_t = f_t C_{t-1} + i_t v_t k_tᵀ,  n_t = f_t n_{t-1} + i_t k_t,
+///   y_t = C_t q_t / max(|n_tᵀ q_t|, 1).
+pub fn mlstm_head(q: &Tensor, k: &Tensor, v: &Tensor, ig: &[f32], fg: &[f32]) -> Tensor {
+    let (l, dh) = (q.rows(), q.cols());
+    let mut c = vec![0.0f32; dh * dh];
+    let mut n = vec![0.0f32; dh];
+    let mut y = Tensor::zeros(&[l, dh]);
+    for t in 0..l {
+        let (i_t, f_t) = (ig[t], fg[t]);
+        let kr = k.row(t);
+        let vr = v.row(t);
+        for a in 0..dh {
+            let iv = i_t * vr[a];
+            let crow = &mut c[a * dh..(a + 1) * dh];
+            for (cv, &kv_) in crow.iter_mut().zip(kr) {
+                *cv = f_t * *cv + iv * kv_;
+            }
+        }
+        for (nv, &kv_) in n.iter_mut().zip(kr) {
+            *nv = f_t * *nv + i_t * kv_;
+        }
+        let qr = q.row(t);
+        let denom = n
+            .iter()
+            .zip(qr)
+            .map(|(a, b)| a * b)
+            .sum::<f32>()
+            .abs()
+            .max(1.0);
+        let yr = y.row_mut(t);
+        for a in 0..dh {
+            let crow = &c[a * dh..(a + 1) * dh];
+            yr[a] = crow.iter().zip(qr).map(|(x, z)| x * z).sum::<f32>() / denom;
+        }
+    }
+    y
+}
+
+impl SeqMixer for MlstmOp {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let qkv = matmul(x, &self.wqkv);
+        let q = qkv.slice_cols(0, self.d);
+        let k = qkv.slice_cols(self.d, 2 * self.d);
+        let v = qkv.slice_cols(2 * self.d, 3 * self.d);
+        let gates = matmul(x, &self.wif);
+        let sig = |x: f32| 1.0 / (1.0 + (-x).exp());
+        let (qh, kh, vh) = (
+            split_heads(&q, self.n_heads),
+            split_heads(&k, self.n_heads),
+            split_heads(&v, self.n_heads),
+        );
+        let heads: Vec<Tensor> = (0..self.n_heads)
+            .map(|h| {
+                let ig: Vec<f32> = (0..x.rows()).map(|t| sig(gates.at2(t, 2 * h))).collect();
+                let fg: Vec<f32> =
+                    (0..x.rows()).map(|t| sig(gates.at2(t, 2 * h + 1))).collect();
+                mlstm_head(&qh[h], &kh[h], &vh[h], &ig, &fg)
+            })
+            .collect();
+        matmul(&merge_heads(&heads), &self.wo)
+    }
+
+    fn name(&self) -> &'static str {
+        "xLSTM-m"
+    }
+
+    fn flops(&self, l: usize) -> f64 {
+        let (lf, d) = (l as f64, self.d as f64);
+        let dh = d / self.n_heads as f64;
+        2.0 * lf * d * (3.0 * d) + 2.0 * lf * d * d + self.n_heads as f64 * lf * 4.0 * dh * dh
+    }
+
+    fn width(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_forget_erases_memory() {
+        let dh = 3;
+        let l = 2;
+        let q = Tensor::from_vec(&[l, dh], vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        let k = q.clone();
+        let v = Tensor::from_vec(&[l, dh], vec![5.0, 5.0, 5.0, 0.0, 0.0, 0.0]);
+        // f = 0 at t=1 wipes C; i = 0 at t=1 writes nothing.
+        let y = mlstm_head(&q, &k, &v, &[1.0, 0.0], &[1.0, 0.0]);
+        assert!(y.at2(0, 0).abs() > 1.0);
+        for c in 0..dh {
+            assert!(y.at2(1, c).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn retains_with_unit_forget() {
+        let dh = 2;
+        let q = Tensor::from_vec(&[2, dh], vec![1.0, 0.0, 1.0, 0.0]);
+        let k = q.clone();
+        let v = Tensor::from_vec(&[2, dh], vec![2.0, 0.0, 0.0, 0.0]);
+        let y = mlstm_head(&q, &k, &v, &[1.0, 0.0], &[1.0, 1.0]);
+        // memory written at t=0 still readable at t=1
+        assert!((y.at2(1, 0) - 2.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,256 @@
+//! PJRT runtime: load AOT HLO-text artifacts + meta descriptors and execute
+//! them from the rust hot path. Python never runs here — `make artifacts`
+//! produced everything at build time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One named array in a program signature.
+#[derive(Clone, Debug)]
+pub struct ArraySpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArraySpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<ArraySpec> {
+        Ok(ArraySpec {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("float32")
+                .to_string(),
+        })
+    }
+}
+
+/// Program signature from the meta JSON.
+#[derive(Clone, Debug)]
+pub struct ProgramMeta {
+    pub file: String,
+    pub inputs: Vec<ArraySpec>,
+    pub outputs: Vec<ArraySpec>,
+}
+
+/// Parsed `<config>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d_model: usize,
+    pub layout: Vec<String>,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub max_steps: usize,
+    pub param_count: usize,
+    pub params: Vec<ArraySpec>,
+    pub programs: BTreeMap<String, ProgramMeta>,
+    pub dir: PathBuf,
+}
+
+impl ModelMeta {
+    pub fn load(artifacts_dir: &Path, config: &str) -> Result<ModelMeta> {
+        let path = artifacts_dir.join(format!("{config}.meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("meta missing config"))?;
+        let gu = |k: &str| cfg.get(k).and_then(Json::as_usize).unwrap_or(0);
+        let params = j
+            .get("params")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("meta missing params"))?
+            .iter()
+            .map(ArraySpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut programs = BTreeMap::new();
+        if let Some(progs) = j.get("programs").and_then(Json::as_obj) {
+            for (name, p) in progs {
+                let get_specs = |k: &str| -> Result<Vec<ArraySpec>> {
+                    p.get(k)
+                        .and_then(Json::as_array)
+                        .ok_or_else(|| anyhow!("program {name} missing {k}"))?
+                        .iter()
+                        .map(ArraySpec::from_json)
+                        .collect()
+                };
+                programs.insert(
+                    name.clone(),
+                    ProgramMeta {
+                        file: p
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .unwrap_or("")
+                            .to_string(),
+                        inputs: get_specs("inputs")?,
+                        outputs: get_specs("outputs")?,
+                    },
+                );
+            }
+        }
+        Ok(ModelMeta {
+            name: cfg.get("name").and_then(Json::as_str).unwrap_or(config).to_string(),
+            d_model: gu("d_model"),
+            layout: cfg
+                .get("layout")
+                .and_then(Json::as_array)
+                .map(|a| a.iter().filter_map(|x| x.as_str()).map(String::from).collect())
+                .unwrap_or_default(),
+            vocab: gu("vocab"),
+            seq_len: gu("seq_len"),
+            batch: gu("batch"),
+            max_steps: gu("max_steps"),
+            param_count: gu("param_count"),
+            params,
+            programs,
+            dir: artifacts_dir.to_path_buf(),
+        })
+    }
+}
+
+/// PJRT engine: one CPU client + compiled programs.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu().map_err(to_anyhow)? })
+    }
+
+    /// Compile an HLO-text artifact into an executable program.
+    pub fn compile(&self, hlo_path: &Path) -> Result<Program> {
+        let path_str = hlo_path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(to_anyhow)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+        Ok(Program { exe, name: hlo_path.display().to_string() })
+    }
+
+    /// Compile a named program of a model.
+    pub fn compile_program(&self, meta: &ModelMeta, program: &str) -> Result<Program> {
+        let pm = meta
+            .programs
+            .get(program)
+            .ok_or_else(|| anyhow!("model {} has no program {program}", meta.name))?;
+        self.compile(&meta.dir.join(&pm.file))
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// A compiled executable. All exported programs return a single tuple
+/// (lowered with return_tuple=True); `run` decomposes it into leaves.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Program {
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<&xla::Literal>(args).map_err(to_anyhow)?;
+        let lit = out[0][0].to_literal_sync().map_err(to_anyhow)?;
+        lit.to_tuple().map_err(to_anyhow)
+    }
+}
+
+/// Literal construction helpers.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(to_anyhow)
+}
+
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(to_anyhow)
+}
+
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(to_anyhow)
+}
+
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(to_anyhow)
+}
+
+pub fn scalar_f32_of(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(to_anyhow)
+}
+
+/// Zero literal of a given spec (used to init optimizer state).
+pub fn zeros_like(spec: &ArraySpec) -> Result<xla::Literal> {
+    match spec.dtype.as_str() {
+        "int32" => literal_i32(&spec.shape, &vec![0; spec.numel()]),
+        _ => literal_f32(&spec.shape, &vec![0.0; spec.numel()]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parsing_from_synthetic_json() {
+        let dir = std::env::temp_dir().join("sh2_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let meta_json = r#"{
+          "config": {"name": "t", "d_model": 8, "layout": ["SE"], "vocab": 16,
+                     "seq_len": 4, "batch": 1, "max_steps": 10, "param_count": 99},
+          "params": [{"path": "embed", "shape": [16, 8], "dtype": "float32"}],
+          "programs": {"init": {"file": "t.init.hlo.txt",
+            "inputs": [{"name": "seed", "shape": [], "dtype": "int32"}],
+            "outputs": [{"name": "param.embed", "shape": [16, 8], "dtype": "float32"}]}}
+        }"#;
+        std::fs::write(dir.join("t.meta.json"), meta_json).unwrap();
+        let m = ModelMeta::load(&dir, "t").unwrap();
+        assert_eq!(m.d_model, 8);
+        assert_eq!(m.params.len(), 1);
+        assert_eq!(m.params[0].numel(), 128);
+        let prog = &m.programs["init"];
+        assert_eq!(prog.inputs[0].name, "seed");
+        assert_eq!(prog.outputs[0].shape, vec![16, 8]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        let li = literal_i32(&[2], &[7, 8]).unwrap();
+        assert_eq!(to_vec_i32(&li).unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn zeros_like_respects_dtype() {
+        let f = zeros_like(&ArraySpec { name: "x".into(), shape: vec![3], dtype: "float32".into() }).unwrap();
+        assert_eq!(to_vec_f32(&f).unwrap(), vec![0.0; 3]);
+        let i = zeros_like(&ArraySpec { name: "x".into(), shape: vec![2], dtype: "int32".into() }).unwrap();
+        assert_eq!(to_vec_i32(&i).unwrap(), vec![0; 2]);
+    }
+}

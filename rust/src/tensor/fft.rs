@@ -1,0 +1,224 @@
+//! Complex FFT (iterative radix-2) + real-signal causal convolution helpers.
+//!
+//! Used by (a) the single-rank FFT convolution baseline for Hyena-LI and
+//! (b) the distributed p2p FFT convolution (cp/fft.rs), whose cross-rank
+//! butterfly stages are the DiF decimation steps of exactly this transform.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Complex {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f32, im: f32) -> Complex {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline]
+    pub fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+
+    #[inline]
+    pub fn mul(self, o: Complex) -> Complex {
+        Complex::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    pub fn scale(self, s: f32) -> Complex {
+        Complex::new(self.re * s, self.im * s)
+    }
+
+    /// e^{-2πi k / n} — the DiF forward twiddle; conjugate for inverse.
+    pub fn twiddle(k: usize, n: usize, inverse: bool) -> Complex {
+        let sign = if inverse { 1.0 } else { -1.0 };
+        let ang = sign * 2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        Complex::new(ang.cos() as f32, ang.sin() as f32)
+    }
+}
+
+pub fn next_pow2(n: usize) -> usize {
+    let mut p = 1;
+    while p < n {
+        p <<= 1;
+    }
+    p
+}
+
+/// In-place iterative radix-2 FFT (Cooley-Tukey, DiT with pre-bit-reversal).
+/// `inverse` applies the conjugate transform and 1/n normalization.
+pub fn fft_inplace(x: &mut [Complex], inverse: bool) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    // Bit reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        let half = len / 2;
+        for start in (0..n).step_by(len) {
+            for k in 0..half {
+                let w = Complex::twiddle(k, len, inverse);
+                let u = x[start + k];
+                let v = x[start + k + half].mul(w);
+                x[start + k] = u.add(v);
+                x[start + k + half] = u.sub(v);
+            }
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let s = 1.0 / n as f32;
+        for v in x.iter_mut() {
+            *v = v.scale(s);
+        }
+    }
+}
+
+pub fn fft(x: &[Complex], inverse: bool) -> Vec<Complex> {
+    let mut y = x.to_vec();
+    fft_inplace(&mut y, inverse);
+    y
+}
+
+/// Causal convolution of a real signal with a real filter via zero-padded
+/// FFT. Returns the first `x.len()` samples of (x * h).
+pub fn fft_causal_conv_1d(x: &[f32], h: &[f32]) -> Vec<f32> {
+    let n = next_pow2(x.len() + h.len());
+    let lift = |s: &[f32]| {
+        let mut v = vec![Complex::ZERO; n];
+        for (i, &a) in s.iter().enumerate() {
+            v[i].re = a;
+        }
+        v
+    };
+    let mut xf = lift(x);
+    let mut hf = lift(h);
+    fft_inplace(&mut xf, false);
+    fft_inplace(&mut hf, false);
+    for (a, b) in xf.iter_mut().zip(&hf) {
+        *a = a.mul(*b);
+    }
+    fft_inplace(&mut xf, true);
+    xf[..x.len()].iter().map(|c| c.re).collect()
+}
+
+/// FLOPs of one complex FFT of length n (5 n log2 n convention).
+pub fn fft_flops(n: usize) -> f64 {
+    5.0 * n as f64 * (n as f64).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn dft_naive(x: &[Complex], inverse: bool) -> Vec<Complex> {
+        let n = x.len();
+        let mut out = vec![Complex::ZERO; n];
+        for (k, o) in out.iter_mut().enumerate() {
+            for (j, &v) in x.iter().enumerate() {
+                *o = o.add(v.mul(Complex::twiddle(k * j % n, n, inverse)));
+            }
+            if inverse {
+                *o = o.scale(1.0 / n as f32);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Rng::new(1);
+        for &n in &[1usize, 2, 4, 8, 16, 64] {
+            let x: Vec<Complex> = (0..n)
+                .map(|_| Complex::new(rng.gauss() as f32, rng.gauss() as f32))
+                .collect();
+            let got = fft(&x, false);
+            let want = dft_naive(&x, false);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.re - w.re).abs() < 2e-3 && (g.im - w.im).abs() < 2e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        forall(
+            20,
+            |r| {
+                let n = 1usize << (r.below(8) + 1);
+                let mut rr = r.fork(1);
+                (0..n)
+                    .map(|_| Complex::new(rr.gauss() as f32, rr.gauss() as f32))
+                    .collect::<Vec<_>>()
+            },
+            |x| {
+                let y = fft(&fft(x, false), true);
+                for (a, b) in x.iter().zip(&y) {
+                    if (a.re - b.re).abs() > 1e-3 || (a.im - b.im).abs() > 1e-3 {
+                        return Err(format!("roundtrip diverged: {a:?} vs {b:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn causal_conv_matches_direct() {
+        let mut rng = Rng::new(2);
+        let l = 37;
+        let lh = 9;
+        let x = rng.normal_vec(l, 1.0);
+        let h = rng.normal_vec(lh, 1.0);
+        let got = fft_causal_conv_1d(&x, &h);
+        for t in 0..l {
+            let mut want = 0.0f32;
+            for k in 0..lh.min(t + 1) {
+                want += h[k] * x[t - k];
+            }
+            assert!((got[t] - want).abs() < 1e-3, "t={t}: {} vs {want}", got[t]);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let mut rng = Rng::new(3);
+        let x: Vec<Complex> =
+            (0..64).map(|_| Complex::new(rng.gauss() as f32, 0.0)).collect();
+        let y = fft(&x, false);
+        let ex: f32 = x.iter().map(|c| c.re * c.re + c.im * c.im).sum();
+        let ey: f32 = y.iter().map(|c| c.re * c.re + c.im * c.im).sum::<f32>() / 64.0;
+        assert!((ex - ey).abs() / ex < 1e-4);
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(5), 8);
+        assert_eq!(next_pow2(64), 64);
+        assert_eq!(next_pow2(65), 128);
+    }
+}

@@ -1,0 +1,167 @@
+//! Cache-blocked matmul kernels. These are the "tensor core" stand-ins on
+//! this CPU testbed: the two-stage conv and the baseline operators all
+//! bottom out here, so relative operator timings reflect GEMM-bound cost.
+
+use super::Tensor;
+
+/// Micro-kernel tile sizes (tuned in the perf pass; see EXPERIMENTS.md §Perf).
+const BLOCK_I: usize = 32;
+const BLOCK_J: usize = 128;
+const BLOCK_K: usize = 64;
+
+/// C = A @ B for row-major A [m, k], B [k, n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, ka) = (a.rows(), a.cols());
+    let (kb, n) = (b.rows(), b.cols());
+    assert_eq!(ka, kb, "matmul inner dims {ka} != {kb}");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_into(&a.data, &b.data, &mut c.data, m, ka, n);
+    c
+}
+
+/// Blocked i-k-j loop with the innermost loop over contiguous B/C rows so it
+/// auto-vectorizes.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for ii in (0..m).step_by(BLOCK_I) {
+        let i_end = (ii + BLOCK_I).min(m);
+        for kk in (0..k).step_by(BLOCK_K) {
+            let k_end = (kk + BLOCK_K).min(k);
+            for jj in (0..n).step_by(BLOCK_J) {
+                let j_end = (jj + BLOCK_J).min(n);
+                for i in ii..i_end {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let crow = &mut c[i * n + jj..i * n + j_end];
+                    for kx in kk..k_end {
+                        let av = arow[kx];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kx * n + jj..kx * n + j_end];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = A @ B^T (B given row-major [n, k]); dot-product inner loop.
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, ka) = (a.rows(), a.cols());
+    let (n, kb) = (b.rows(), b.cols());
+    assert_eq!(ka, kb);
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut s = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            c.data[i * n + j] = s;
+        }
+    }
+    c
+}
+
+/// y = A @ x for A [m, k], x [k].
+pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, k) = (a.rows(), a.cols());
+    assert_eq!(x.len(), k);
+    (0..m)
+        .map(|i| a.row(i).iter().zip(x).map(|(p, q)| p * q).sum())
+        .collect()
+}
+
+/// FLOPs of an [m,k] x [k,n] GEMM (multiply-adds counted as 2).
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kx in 0..k {
+                    s += a.at2(i, kx) * b.at2(kx, j);
+                }
+                c.data[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn identity() {
+        let mut eye = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            *eye.at2_mut(i, i) = 1.0;
+        }
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&mut rng, &[3, 5], 1.0);
+        assert!(matmul(&eye, &x).allclose(&x, 1e-6));
+    }
+
+    #[test]
+    fn blocked_matches_naive_property() {
+        forall(
+            25,
+            |r| {
+                let m = r.below(40) + 1;
+                let k = r.below(40) + 1;
+                let n = r.below(40) + 1;
+                let mut rr = r.fork(9);
+                (
+                    Tensor::randn(&mut rr, &[m, k], 1.0),
+                    Tensor::randn(&mut rr, &[k, n], 1.0),
+                )
+            },
+            |(a, b)| {
+                let got = matmul(a, b);
+                let want = naive(a, b);
+                if got.allclose(&want, 1e-3) {
+                    Ok(())
+                } else {
+                    Err(format!("max diff {}", got.max_abs_diff(&want)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn bt_matches() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&mut rng, &[7, 9], 1.0);
+        let b = Tensor::randn(&mut rng, &[5, 9], 1.0);
+        let got = matmul_bt(&a, &b);
+        let want = matmul(&a, &b.transpose2());
+        assert!(got.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn matvec_matches() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&mut rng, &[6, 4], 1.0);
+        let x = rng.normal_vec(4, 1.0);
+        let y = matvec(&a, &x);
+        let xm = Tensor::from_vec(&[4, 1], x);
+        let want = matmul(&a, &xm);
+        for i in 0..6 {
+            assert!((y[i] - want.data[i]).abs() < 1e-5);
+        }
+    }
+}

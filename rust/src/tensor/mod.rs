@@ -1,0 +1,216 @@
+//! Minimal dense-tensor substrate: row-major f32 tensors, blocked matmul,
+//! and a complex FFT. Everything the conv/ops/cp layers compute on.
+
+pub mod fft;
+pub mod matmul;
+
+use crate::util::rng::Rng;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn randn(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, scale) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// 2-D accessors (the dominant case: [l, d] sequences).
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.shape[1] + j]
+    }
+
+    /// Borrow row i of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let d = self.cols();
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let d = self.cols();
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// Copy rows [lo, hi) into a new tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        let d = self.cols();
+        Tensor::from_vec(&[hi - lo, d], self.data[lo * d..hi * d].to_vec())
+    }
+
+    /// Copy columns [lo, hi) of a 2-D tensor.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Tensor {
+        let r = self.rows();
+        let w = hi - lo;
+        let mut out = Tensor::zeros(&[r, w]);
+        for i in 0..r {
+            out.row_mut(i).copy_from_slice(&self.row(i)[lo..hi]);
+        }
+        out
+    }
+
+    /// Vertically stack 2-D tensors (concat along rows).
+    pub fn vcat(parts: &[&Tensor]) -> Tensor {
+        let d = parts[0].cols();
+        let total: usize = parts.iter().map(|p| p.rows()).sum();
+        let mut data = Vec::with_capacity(total * d);
+        for p in parts {
+            assert_eq!(p.cols(), d);
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::from_vec(&[total, d], data)
+    }
+
+    /// Horizontally stack 2-D tensors (concat along cols).
+    pub fn hcat(parts: &[&Tensor]) -> Tensor {
+        let r = parts[0].rows();
+        let total: usize = parts.iter().map(|p| p.cols()).sum();
+        let mut out = Tensor::zeros(&[r, total]);
+        for i in 0..r {
+            let mut off = 0;
+            for p in parts {
+                assert_eq!(p.rows(), r);
+                let w = p.cols();
+                out.row_mut(i)[off..off + w].copy_from_slice(p.row(i));
+                off += w;
+            }
+        }
+        out
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn binary(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn hadamard(&self, other: &Tensor) -> Tensor {
+        self.binary(other, |a, b| a * b)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.binary(other, |a, b| a + b)
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slicing_and_cat_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&mut rng, &[8, 3], 1.0);
+        let a = t.slice_rows(0, 3);
+        let b = t.slice_rows(3, 8);
+        assert_eq!(Tensor::vcat(&[&a, &b]), t);
+        let l = t.slice_cols(0, 1);
+        let r = t.slice_cols(1, 3);
+        assert_eq!(Tensor::hcat(&[&l, &r]), t);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let t = Tensor::randn(&mut rng, &[5, 7], 1.0);
+        assert_eq!(t.transpose2().transpose2(), t);
+    }
+
+    #[test]
+    fn elementwise() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = a.map(|x| x * 2.0);
+        assert_eq!(b.data, vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(a.hadamard(&a).data, vec![1.0, 4.0, 9.0, 16.0]);
+        assert_eq!(a.add(&a).data, b.data);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0, 2.5]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-7);
+        assert!(a.allclose(&b, 0.6));
+        assert!(!a.allclose(&b, 0.4));
+    }
+}

@@ -1,0 +1,62 @@
+//! Minimal `log` facade backend: timestamped stderr logger.
+
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+static INIT: Once = Once::new();
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            eprintln!(
+                "[{t:9.3}s {:5} {}] {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; level from `SH2_LOG` (error|warn|info|debug|trace).
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("SH2_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let logger = Box::new(StderrLogger { start: Instant::now() });
+        let _ = log::set_boxed_logger(logger).map(|()| log::set_max_level(level));
+    });
+}
+
+/// Convenience level check used by hot loops.
+pub fn debug_enabled() -> bool {
+    log::log_enabled!(Level::Debug)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke");
+    }
+}

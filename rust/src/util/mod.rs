@@ -1,0 +1,11 @@
+//! Shared substrates: JSON, RNG, CLI, logging, stats, bench harness,
+//! property testing. These stand in for serde/clap/criterion/proptest,
+//! which are unavailable in the offline crate set.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,91 @@
+//! Tiny property-testing harness (substrate — proptest unavailable offline).
+//!
+//! `forall(n, gen, prop)` runs `prop` on `n` generated cases from a
+//! deterministic (seed-reported) RNG; failures print the seed + case index
+//! so they replay exactly with `SH2_PROP_SEED`.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` generated inputs. Panics with the reproduction
+/// seed on the first failing case.
+pub fn forall<T, G, P>(cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let seed = std::env::var("SH2_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Approximate equality with helpful diagnostics.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} != {}", a.len(), b.len()));
+    }
+    let mut worst = 0.0f32;
+    let mut worst_i = 0;
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let d = (x - y).abs();
+        if d > worst {
+            worst = d;
+            worst_i = i;
+        }
+    }
+    if worst > atol {
+        return Err(format!(
+            "{what}: max |diff| {worst:.3e} at index {worst_i} ({} vs {}), atol {atol:.1e}",
+            a[worst_i], b[worst_i]
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(
+            50,
+            |r| (r.below(100), r.below(100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("addition not commutative?!".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(
+            10,
+            |r| r.below(100),
+            |&x| if x < 1000 { Err(format!("forced failure on {x}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn assert_close_catches_diff() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.5], 0.1, "t").is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 0.1, "t").is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.05], 0.1, "t").is_ok());
+    }
+}

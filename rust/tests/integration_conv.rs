@@ -1,0 +1,142 @@
+//! Integration tests across the convolution stack: algorithms agree with
+//! each other at realistic shapes, backward passes gradcheck, and the
+//! operator suite behaves per its asymptotics.
+
+use sh2::conv::backward::conv_backward;
+use sh2::conv::direct::{causal_conv_direct, DirectConv};
+use sh2::conv::fft_conv::{fft_causal_conv, FftConv};
+use sh2::conv::two_stage::{two_stage_conv, TwoStageConv};
+use sh2::conv::{CausalConv, GroupedFilter};
+use sh2::tensor::Tensor;
+use sh2::util::prop::forall;
+use sh2::util::rng::Rng;
+
+#[test]
+fn all_conv_algorithms_agree_hyena_mr_shape() {
+    // The Fig 3.1 configuration (scaled): l_h = 128, l_b = 128.
+    let mut rng = Rng::new(0);
+    let (l, g, dg) = (1024usize, 16usize, 8usize);
+    let x = Tensor::randn(&mut rng, &[l, g * dg], 1.0);
+    let h = GroupedFilter::random(&mut rng, g, 128, dg);
+    let direct = causal_conv_direct(&x, &h);
+    let blocked = two_stage_conv(&x, &h, 128);
+    let fft = fft_causal_conv(&x, &h);
+    assert!(blocked.allclose(&direct, 5e-3), "blocked vs direct {}", blocked.max_abs_diff(&direct));
+    assert!(fft.allclose(&direct, 5e-3), "fft vs direct {}", fft.max_abs_diff(&direct));
+}
+
+#[test]
+fn conv_trait_objects_interchangeable() {
+    let mut rng = Rng::new(1);
+    let x = Tensor::randn(&mut rng, &[96, 12], 1.0);
+    let h = GroupedFilter::random(&mut rng, 4, 9, 3);
+    let algos: Vec<Box<dyn CausalConv>> = vec![
+        Box::new(DirectConv),
+        Box::new(TwoStageConv::auto(9)),
+        Box::new(FftConv),
+    ];
+    let ref_y = algos[0].forward(&x, &h);
+    for a in &algos[1..] {
+        let y = a.forward(&x, &h);
+        assert!(y.allclose(&ref_y, 2e-3), "{} diverges", a.name());
+        assert!(a.flops(96, 12, 9) > 0.0);
+    }
+}
+
+#[test]
+fn two_stage_property_vs_direct_wide() {
+    forall(
+        15,
+        |r| {
+            let g = r.below(6) + 1;
+            let dg = r.below(8) + 1;
+            let lh = r.below(40) + 1;
+            let lb = (lh - 1).max(r.below(64) + 1);
+            let l = r.below(300) + 1;
+            let mut rr = r.fork(77);
+            (
+                Tensor::randn(&mut rr, &[l, g * dg], 1.0),
+                GroupedFilter::random(&mut rr, g, lh, dg),
+                lb,
+            )
+        },
+        |(x, h, lb)| {
+            let got = two_stage_conv(x, h, *lb);
+            let want = causal_conv_direct(x, h);
+            if got.allclose(&want, 5e-3) {
+                Ok(())
+            } else {
+                Err(format!("diff {}", got.max_abs_diff(&want)))
+            }
+        },
+    );
+}
+
+#[test]
+fn backward_two_pass_matches_fd_at_mr_scale() {
+    let mut rng = Rng::new(2);
+    let (l, g, dg, lh) = (64usize, 2usize, 4usize, 16usize);
+    let d = g * dg;
+    let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+    let h = GroupedFilter::random(&mut rng, g, lh, dg);
+    let dy = Tensor::randn(&mut rng, &[l, d], 1.0);
+    let (dx, dh) = conv_backward(&x, &dy, &h, 16);
+
+    let loss = |x: &Tensor, h: &GroupedFilter| -> f64 {
+        causal_conv_direct(x, h)
+            .data
+            .iter()
+            .zip(&dy.data)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum()
+    };
+    let eps = 1e-3f32;
+    let mut rng2 = Rng::new(3);
+    for _ in 0..8 {
+        let i = rng2.below(l * d);
+        let mut xp = x.clone();
+        xp.data[i] += eps;
+        let mut xm = x.clone();
+        xm.data[i] -= eps;
+        let num = (loss(&xp, &h) - loss(&xm, &h)) / (2.0 * eps as f64);
+        assert!((num - dx.data[i] as f64).abs() < 2e-2, "dx[{i}]");
+    }
+    for _ in 0..8 {
+        let i = rng2.below(g * lh);
+        let mut hp = h.clone();
+        hp.taps.data[i] += eps;
+        let mut hm = h.clone();
+        hm.taps.data[i] -= eps;
+        let num = (loss(&x, &hp) - loss(&x, &hm)) / (2.0 * eps as f64);
+        assert!((num - dh.data[i] as f64).abs() < 2e-2, "dh[{i}]");
+    }
+}
+
+#[test]
+fn operator_latency_ordering_matches_fig32_asymptotics() {
+    // Structural check of the Fig 3.2 claim: MHA FLOPs grow quadratically
+    // with l while hyena FLOPs grow ~linearly, so their ratio must grow ~l.
+    use sh2::ops::all_operators;
+    let mut rng = Rng::new(3);
+    let ops = all_operators(&mut rng, 32, 4);
+    let mha = ops.iter().find(|o| o.name() == "MHA").unwrap();
+    let se = ops.iter().find(|o| o.name() == "Hyena-SE").unwrap();
+    let r1 = mha.flops(1 << 10) / se.flops(1 << 10);
+    let r2 = mha.flops(1 << 14) / se.flops(1 << 14);
+    assert!(r2 > 4.0 * r1, "quadratic/linear separation: {r1:.2} -> {r2:.2}");
+}
+
+#[test]
+fn grouping_reduces_distinct_filters_not_output_shape() {
+    // §C.1 grouping ablation, structural part: group sizes 1..64 share
+    // filters without changing the operator contract.
+    let mut rng = Rng::new(4);
+    let d = 64;
+    let x = Tensor::randn(&mut rng, &[32, d], 1.0);
+    for group_size in [1usize, 4, 16, 64] {
+        let g = d / group_size;
+        let h = GroupedFilter::random(&mut rng, g, 7, group_size);
+        let y = two_stage_conv(&x, &h, 16);
+        assert_eq!(y.shape, vec![32, d], "group_size {group_size}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration tests of the context-parallel runtime (paper §4): every
+//! strategy, on real multi-threaded ranks, against single-rank references,
+//! including failure-injection on sharding contracts.
+
+use std::sync::Arc;
+
+use sh2::conv::direct::causal_conv_direct;
+use sh2::conv::GroupedFilter;
+use sh2::cp::a2a::{a2a_conv, a2a_conv_pipelined, InnerConv};
+use sh2::cp::fft::causal_conv_via_p2p_fft;
+use sh2::cp::p2p::{p2p_conv, p2p_conv_overlapped};
+use sh2::cp::ring::ring_attention;
+use sh2::cp::sharding::{shard_rows, unshard_rows, zigzag_shard, zigzag_unshard};
+use sh2::fabric::{self, FabricModel};
+use sh2::ops::mha::causal_attention_head;
+use sh2::tensor::Tensor;
+use sh2::util::rng::Rng;
+
+fn setup(l: usize, g: usize, dg: usize, lh: usize, seed: u64) -> (Tensor, GroupedFilter, Tensor) {
+    let mut rng = Rng::new(seed);
+    let x = Tensor::randn(&mut rng, &[l, g * dg], 1.0);
+    let h = GroupedFilter::random(&mut rng, g, lh, dg);
+    let want = causal_conv_direct(&x, &h);
+    (x, h, want)
+}
+
+#[test]
+fn every_strategy_every_rank_count() {
+    // The full §4 matrix: {a2a, a2a-pipelined, p2p, p2p-overlap} x N_cp.
+    // 16 groups x 4 channels so groups split evenly at N=8 with 2 pipeline
+    // segments (the contract `filter groups must not split across ranks`).
+    let (x, h, want) = setup(128, 16, 4, 9, 0);
+    for n in [2usize, 4, 8] {
+        let shards = Arc::new(shard_rows(&x, n));
+        let h = Arc::new(h.clone());
+        for strat in 0..4usize {
+            let shards = shards.clone();
+            let h2 = h.clone();
+            let reports = fabric::run(n, FabricModel::nvlink(), move |ctx| {
+                let local = &shards[ctx.rank];
+                match strat {
+                    0 => a2a_conv(ctx, local, &h2, InnerConv::TwoStage),
+                    1 => a2a_conv_pipelined(ctx, local, &h2, InnerConv::TwoStage, 2),
+                    2 => p2p_conv(ctx, local, &h2),
+                    _ => p2p_conv_overlapped(ctx, local, &h2),
+                }
+            });
+            let outs: Vec<Tensor> = reports.into_iter().map(|r| r.value).collect();
+            let got = unshard_rows(&outs);
+            assert!(
+                got.allclose(&want, 3e-3),
+                "strategy {strat} n={n}: diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+}
+
+#[test]
+fn p2p_fft_all_radices() {
+    // Distributed DiF FFT conv at N_cp = 2, 4, 8 (radix-2^k chains, §A.3).
+    let mut rng = Rng::new(1);
+    let (l, d, lh) = (96usize, 6usize, 24usize);
+    let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+    let h = Tensor::randn(&mut rng, &[d, lh], 0.5);
+    let want = causal_conv_direct(&x, &GroupedFilter::new(h.clone(), 1));
+    for n in [2usize, 4, 8] {
+        let (got, _) = causal_conv_via_p2p_fft(&x, &h, n, FabricModel::nvlink());
+        assert!(
+            got.allclose(&want, 2e-2),
+            "n={n}: diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn a2a_faster_than_p2p_for_long_filters_on_sim_clock() {
+    // §4.2: a2a is the scheme of choice for Hyena-LI (long filters); p2p
+    // halo for long filters transfers nearly the whole shard.
+    let (x, h, _) = setup(512, 8, 4, 129, 2);
+    let n = 4;
+    let model = FabricModel { alpha_s: 1e-5, beta_bytes_per_s: 1e9, flops_per_s: 1e12 };
+    let shards = Arc::new(shard_rows(&x, n));
+    let ha = Arc::new(h);
+    let (s1, h1) = (shards.clone(), ha.clone());
+    let p2p = fabric::run(n, model, move |ctx| {
+        p2p_conv(ctx, &s1[ctx.rank], &h1);
+    });
+    let a2a = fabric::run(n, model, move |ctx| {
+        a2a_conv(ctx, &shards[ctx.rank], &ha, InnerConv::TwoStage);
+    });
+    // Not asserting a winner here (depends on shapes); assert both report
+    // sane accounting and p2p sends less data (its true advantage).
+    let p2p_bytes: usize = p2p.iter().map(|r| r.bytes_sent).sum();
+    let a2a_bytes: usize = a2a.iter().map(|r| r.bytes_sent).sum();
+    assert!(p2p_bytes < a2a_bytes, "p2p {p2p_bytes} vs a2a {a2a_bytes}");
+    assert!(fabric::job_time(&p2p) > 0.0 && fabric::job_time(&a2a) > 0.0);
+}
+
+#[test]
+fn ring_attention_with_zigzag_sharding() {
+    // Zigzag shards (the production sharding of SH2's attention CP) must
+    // reconstruct exactly after an identity round trip, and ring attention
+    // on sequential shards must match single-device attention.
+    let mut rng = Rng::new(3);
+    let (l, dh) = (64usize, 8usize);
+    let q = Tensor::randn(&mut rng, &[l, dh], 1.0);
+    let k = Tensor::randn(&mut rng, &[l, dh], 1.0);
+    let v = Tensor::randn(&mut rng, &[l, dh], 1.0);
+    let want = causal_attention_head(&q, &k, &v);
+
+    for n in [2usize, 4, 8] {
+        let (qs, ks, vs) = (
+            Arc::new(shard_rows(&q, n)),
+            Arc::new(shard_rows(&k, n)),
+            Arc::new(shard_rows(&v, n)),
+        );
+        let reports = fabric::run(n, FabricModel::nvlink(), move |ctx| {
+            ring_attention(ctx, &qs[ctx.rank], &ks[ctx.rank], &vs[ctx.rank], ctx.rank)
+        });
+        let outs: Vec<Tensor> = reports.into_iter().map(|r| r.value).collect();
+        let got = unshard_rows(&outs);
+        assert!(got.allclose(&want, 2e-3), "n={n}: {}", got.max_abs_diff(&want));
+    }
+
+    let z = zigzag_shard(&q, 4);
+    assert_eq!(zigzag_unshard(&z, 4), q);
+}
+
+#[test]
+fn sim_clock_scales_with_message_volume() {
+    // Failure-injection-adjacent sanity: doubling the payload must increase
+    // simulated a2a time under a bandwidth-bound model.
+    let model = FabricModel { alpha_s: 0.0, beta_bytes_per_s: 1e9, flops_per_s: 1e30 };
+    let t_of = |width: usize| {
+        let (x, h, _) = setup(256, 8, width, 5, 4);
+        let n = 4;
+        let shards = Arc::new(shard_rows(&x, n));
+        let h = Arc::new(h);
+        let reports = fabric::run(n, model, move |ctx| {
+            a2a_conv(ctx, &shards[ctx.rank], &h, InnerConv::Direct);
+        });
+        fabric::job_time(&reports)
+    };
+    let t1 = t_of(4);
+    let t2 = t_of(8);
+    assert!(t2 > 1.7 * t1, "double channels should ~double a2a time: {t1} vs {t2}");
+}
+
+#[test]
+#[should_panic(expected = "not divisible")]
+fn rejects_ragged_sharding() {
+    let mut rng = Rng::new(5);
+    let x = Tensor::randn(&mut rng, &[10, 4], 1.0);
+    shard_rows(&x, 3); // 10 % 3 != 0 -> contract violation
+}
+
+#[test]
+#[should_panic(expected = "power of two")]
+fn fft_rejects_non_pow2_ranks() {
+    let mut rng = Rng::new(6);
+    let x = Tensor::randn(&mut rng, &[96, 2], 1.0);
+    let h = Tensor::randn(&mut rng, &[2, 8], 1.0);
+    // n = 3 is not a power of two; the distributed butterfly requires 2^k.
+    let _ = causal_conv_via_p2p_fft(&x, &h, 3, FabricModel::nvlink());
+}
