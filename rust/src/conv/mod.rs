@@ -61,6 +61,113 @@ impl GroupedFilter {
     }
 }
 
+/// Sliding window over the last `l_h - 1` rows of a channel stream — the
+/// decode-time carry of a FIR convolution (DESIGN.md §Streaming-Decode).
+///
+/// During prefill the blocked paths compute all outputs at once and then
+/// `absorb` their input tail into this buffer; during decode `step` consumes
+/// one row at a time, reading taps in the same ascending-lag order as
+/// `direct::causal_conv_direct` so streamed outputs match batch outputs.
+#[derive(Clone, Debug)]
+pub struct FirTail {
+    d: usize,
+    /// Rows retained: filter_len - 1 (lag-0 is the current input row).
+    cap: usize,
+    /// Flat ring of cap rows (allocated once; no per-token allocation on
+    /// the decode hot path).
+    buf: Vec<f32>,
+    /// Ring slot the next push writes to.
+    head: usize,
+    /// Rows filled so far (saturates at cap).
+    len: usize,
+}
+
+impl FirTail {
+    pub fn new(d: usize, filter_len: usize) -> FirTail {
+        let cap = filter_len.saturating_sub(1);
+        FirTail { d, cap, buf: vec![0.0; cap * d], head: 0, len: 0 }
+    }
+
+    /// Number of history rows currently held (≤ cap).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes of carried history (for serving-arena accounting).
+    pub fn bytes(&self) -> usize {
+        self.len * self.d * std::mem::size_of::<f32>()
+    }
+
+    /// Row `k` steps in the past (k ≥ 1), if retained.
+    pub fn lag(&self, k: usize) -> Option<&[f32]> {
+        if k == 0 || k > self.len {
+            None
+        } else {
+            let slot = (self.head + self.cap - k) % self.cap;
+            Some(&self.buf[slot * self.d..(slot + 1) * self.d])
+        }
+    }
+
+    /// Append one row, evicting the oldest once past capacity.
+    pub fn push(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d);
+        if self.cap == 0 {
+            return;
+        }
+        self.buf[self.head * self.d..(self.head + 1) * self.d].copy_from_slice(row);
+        self.head = (self.head + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    /// Absorb the tail of a prefilled block: after this call the window
+    /// holds the last rows of `x` (merged with any prior history when `x`
+    /// is shorter than the window).
+    pub fn absorb(&mut self, x: &Tensor) {
+        let l = x.rows();
+        for t in l.saturating_sub(self.cap)..l {
+            self.push(x.row(t));
+        }
+    }
+
+    /// Materialize the history as an oldest-first [len, d] tensor — the
+    /// halo format expected by `direct::causal_conv_with_history`.
+    pub fn as_tensor(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.len, self.d]);
+        for i in 0..self.len {
+            let row = self.lag(self.len - i).expect("row in window");
+            out.row_mut(i).copy_from_slice(row);
+        }
+        out
+    }
+
+    /// One decode step of the causal FIR: y_c = Σ_k h_c(k) x_(t-k,c), with
+    /// lag-0 taken from `x_t` and lags ≥ 1 from the window, summed in
+    /// ascending-lag order (bit-identical to the direct convolution). The
+    /// input row is pushed into the window afterwards.
+    pub fn step(&mut self, h: &GroupedFilter, x_t: &[f32]) -> Vec<f32> {
+        assert_eq!(x_t.len(), self.d);
+        assert_eq!(h.channels(), self.d);
+        let mut y = vec![0.0f32; self.d];
+        for (c, yv) in y.iter_mut().enumerate() {
+            let taps = h.for_channel(c);
+            let mut acc = taps[0] * x_t[c];
+            for (k, &tap) in taps.iter().enumerate().skip(1) {
+                match self.lag(k) {
+                    Some(row) => acc += tap * row[c],
+                    None => break,
+                }
+            }
+            *yv = acc;
+        }
+        self.push(x_t);
+        y
+    }
+}
+
 /// Uniform interface so benches sweep convolution algorithms generically.
 pub trait CausalConv {
     /// x: [l, d] -> y: [l, d] with y[t,c] = Σ_k h[c,k] x[t-k,c].
@@ -68,4 +175,78 @@ pub trait CausalConv {
     fn name(&self) -> &'static str;
     /// Forward FLOPs for reporting (multiply-add = 2).
     fn flops(&self, l: usize, d: usize, lh: usize) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::causal_conv_direct;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fir_tail_step_matches_direct_conv() {
+        let mut rng = Rng::new(0);
+        let (l, g, dg, lh) = (40, 2, 3, 5);
+        let d = g * dg;
+        let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+        let h = GroupedFilter::random(&mut rng, g, lh, dg);
+        let want = causal_conv_direct(&x, &h);
+        let mut tail = FirTail::new(d, lh);
+        for t in 0..l {
+            let y = tail.step(&h, x.row(t));
+            assert_eq!(y.as_slice(), want.row(t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn fir_tail_absorb_equals_pushing_rows() {
+        let mut rng = Rng::new(1);
+        let (d, lh) = (4, 6);
+        let x = Tensor::randn(&mut rng, &[3, d], 1.0);
+        let y = Tensor::randn(&mut rng, &[4, d], 1.0);
+        let mut a = FirTail::new(d, lh);
+        a.absorb(&x);
+        a.absorb(&y);
+        let mut b = FirTail::new(d, lh);
+        for t in 0..3 {
+            b.push(x.row(t));
+        }
+        for t in 0..4 {
+            b.push(y.row(t));
+        }
+        assert_eq!(a.as_tensor(), b.as_tensor());
+        assert_eq!(a.len(), 5);
+        assert_eq!(a.bytes(), 5 * d * 4);
+    }
+
+    #[test]
+    fn fir_tail_is_halo_compatible() {
+        // as_tensor() feeds causal_conv_with_history: the last window row is
+        // the immediately preceding input row.
+        let mut rng = Rng::new(2);
+        let (l, d, lh) = (20, 3, 4);
+        let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+        let h = GroupedFilter::random(&mut rng, d, lh, 1);
+        let full = causal_conv_direct(&x, &h);
+        let split = 12;
+        let mut tail = FirTail::new(d, lh);
+        tail.absorb(&x.slice_rows(0, split));
+        let got = crate::conv::direct::causal_conv_with_history(
+            &x.slice_rows(split, l),
+            &h,
+            &tail.as_tensor(),
+        );
+        assert!(got.allclose(&full.slice_rows(split, l), 1e-6));
+    }
+
+    #[test]
+    fn length_one_filter_needs_no_history() {
+        let mut rng = Rng::new(3);
+        let h = GroupedFilter::random(&mut rng, 2, 1, 1);
+        let mut tail = FirTail::new(2, 1);
+        let y = tail.step(&h, &[2.0, 3.0]);
+        assert_eq!(y.len(), 2);
+        assert!(tail.is_empty());
+        assert_eq!(tail.bytes(), 0);
+    }
 }

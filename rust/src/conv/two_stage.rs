@@ -7,7 +7,7 @@
 //! medium filters (Fig 3.1).
 
 use super::toeplitz::{toeplitz_factor, two_stage_ok};
-use super::{CausalConv, GroupedFilter};
+use super::{CausalConv, FirTail, GroupedFilter};
 use crate::tensor::matmul::matmul_into;
 use crate::tensor::Tensor;
 
@@ -102,6 +102,44 @@ pub fn two_stage_conv(x: &Tensor, h: &GroupedFilter, l_b: usize) -> Tensor {
         }
     }
     y.slice_rows(0, l)
+}
+
+/// Streaming prefill through the blocked two-stage path (DESIGN.md
+/// §Streaming-Decode): convolve a whole prompt chunk with the overlap-add
+/// GEMM kernel, correct the first `l_h - 1` outputs with the carried
+/// history in `tail`, and hand the chunk's own tail back to the decode
+/// state. With an empty `tail` this returns exactly `two_stage_conv(x)`,
+/// so prefill output is bit-identical to the full-sequence forward path.
+pub fn two_stage_prefill(
+    x: &Tensor,
+    h: &GroupedFilter,
+    l_b: usize,
+    tail: &mut FirTail,
+) -> Tensor {
+    let (l, d) = (x.rows(), x.cols());
+    let lh = h.filter_len();
+    let mut y = two_stage_conv(x, h, l_b);
+    // Cross-chunk halo correction (same index pattern as
+    // `direct::causal_conv_with_history`).
+    let halo = tail.as_tensor();
+    let hist = halo.rows();
+    if hist > 0 {
+        for t in 0..l.min(lh.saturating_sub(1)) {
+            for k in (t + 1)..lh {
+                let hi = hist as isize + t as isize - k as isize;
+                if hi < 0 {
+                    continue;
+                }
+                let xrow = hi as usize * d;
+                let yrow = t * d;
+                for c in 0..d {
+                    y.data[yrow + c] += h.for_channel(c)[k] * halo.data[xrow + c];
+                }
+            }
+        }
+    }
+    tail.absorb(x);
+    y
 }
 
 /// Fused gated hyena mixing (Algorithm 1 lines 5 & 11):
@@ -212,6 +250,38 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn prefill_chunks_match_full_sequence() {
+        // Feeding a sequence through two_stage_prefill in uneven chunks must
+        // agree with one full-sequence direct convolution: the FirTail carry
+        // is the only cross-chunk state.
+        let mut rng = Rng::new(3);
+        let (l, g, dg, lh, lb) = (90, 2, 4, 9, 16);
+        let d = g * dg;
+        let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+        let h = GroupedFilter::random(&mut rng, g, lh, dg);
+        let want = causal_conv_direct(&x, &h);
+        let mut tail = FirTail::new(d, lh);
+        let mut outs = vec![];
+        for (lo, hi) in [(0usize, 33usize), (33, 37), (37, 90)] {
+            outs.push(two_stage_prefill(&x.slice_rows(lo, hi), &h, lb, &mut tail));
+        }
+        let refs: Vec<&Tensor> = outs.iter().collect();
+        let got = Tensor::vcat(&refs);
+        assert!(got.allclose(&want, 1e-3), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn prefill_with_empty_tail_is_plain_two_stage() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&mut rng, &[40, 8], 1.0);
+        let h = GroupedFilter::random(&mut rng, 2, 7, 4);
+        let mut tail = FirTail::new(8, 7);
+        let got = two_stage_prefill(&x, &h, 16, &mut tail);
+        assert_eq!(got, two_stage_conv(&x, &h, 16));
+        assert_eq!(tail.len(), 6);
     }
 
     #[test]

@@ -142,7 +142,7 @@ impl DataPipeline {
 pub struct NeedleCase {
     pub tokens: Vec<i32>,
     /// Positions (0-based) whose *target* is the payload byte, i.e. the
-    /// model's prediction at tokens[p] should equal tokens-space payload[i].
+    /// model's prediction at `tokens[p]` should equal `payload[i]`.
     pub payload_positions: Vec<usize>,
     pub payload: Vec<i32>,
 }

@@ -5,8 +5,11 @@
 
 pub mod checkpoint;
 pub mod data;
+#[cfg(feature = "pjrt")]
 pub mod eval;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
+#[cfg(feature = "pjrt")]
 pub use trainer::Trainer;

@@ -104,7 +104,7 @@ pub fn a2a_conv(
     Tensor::hcat(&refs) // [L/N, D]
 }
 
-/// Channel-pipelined a2a CP convolution ([Extension] in §4.2): channels are
+/// Channel-pipelined a2a CP convolution ("Extension" in §4.2): channels are
 /// split into `n_pipe` segments whose a2a transfers overlap with the
 /// convolution of the previous segment (the sim clock models the overlap;
 /// see fabric docs).

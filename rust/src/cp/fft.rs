@@ -1,4 +1,4 @@
-//! Point-to-point FFT convolution (paper §4.2 [Extension], §A.2.4-A.3).
+//! Point-to-point FFT convolution (paper §4.2 "Extension", §A.2.4-A.3).
 //!
 //! Computes an FFT convolution over a sequence sharded across N = 2^k ranks
 //! **without ever hosting the whole sequence on one device**: the first k
@@ -32,7 +32,7 @@ fn unpack(v: &[f32]) -> Vec<Complex> {
 }
 
 /// One cross-rank DiF butterfly stage over `chans` independent channels,
-/// each of `lc` complex points (buf layout: channel-major, [chans][lc]).
+/// each of `lc` complex points (buf layout: channel-major, `[chans][lc]`).
 ///
 /// `seg_ranks` = ranks in the current segment; lower half holds x_j, upper
 /// half holds x_{j+L/2}:  lower' = x + y,  upper' = (x - y)·ω^j, with j the
@@ -112,7 +112,7 @@ fn inverse_stage(
 }
 
 /// Distributed forward transform of the local shard (channel-major complex
-/// buffer [chans][lc]): k cross-rank DiF stages + a local FFT per channel.
+/// buffer `[chans][lc]`): k cross-rank DiF stages + a local FFT per channel.
 pub fn distributed_fft(ctx: &mut RankCtx, buf: &mut [Complex], lc: usize, chans: usize) {
     assert!(ctx.n.is_power_of_two(), "N_cp must be a power of two");
     assert!(lc.is_power_of_two(), "shard length must be a power of two");

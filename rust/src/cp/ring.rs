@@ -9,9 +9,9 @@ const RING_TAG: u64 = 51;
 
 /// Online-softmax accumulator for one query block.
 struct Acc {
-    /// Running row maxima [lq].
+    /// Running row maxima, length lq.
     m: Vec<f32>,
-    /// Running denominators [lq].
+    /// Running denominators, length lq.
     z: Vec<f32>,
     /// Running numerators [lq, dh].
     num: Tensor,

@@ -3,13 +3,15 @@
 //! Rust + JAX + Pallas reproduction of "Systems and Algorithms for
 //! Convolutional Multi-Hybrid Language Models at Scale" (2025).
 //!
-//! Layering (see DESIGN.md):
+//! Layering (see DESIGN.md §Layering):
 //! * **L3 (this crate)** — training coordinator: data pipeline, microbatch
 //!   scheduling, context-parallel runtime, metrics; plus the paper's
 //!   convolution algorithms, baseline operators, communication fabric and
-//!   cost model, all from scratch.
+//!   cost model, all from scratch; and the streaming inference engine
+//!   (`serve`) with per-operator decode state.
 //! * **L2/L1 (python/, build-time only)** — the JAX model + Pallas kernels,
-//!   AOT-lowered to HLO text artifacts executed here via PJRT.
+//!   AOT-lowered to HLO text artifacts executed here via PJRT (behind the
+//!   `pjrt` feature; see DESIGN.md §PJRT-Runtime).
 
 pub mod conv;
 pub mod coordinator;
@@ -18,5 +20,6 @@ pub mod cp;
 pub mod fabric;
 pub mod ops;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -1,27 +1,43 @@
-//! `sh2` — StripedHyena 2 training coordinator CLI.
+//! `sh2` — StripedHyena 2 training + serving CLI.
 //!
 //! Subcommands:
 //!   train       train a multi-hybrid from AOT artifacts on synthetic genome data
 //!   eval        validation perplexity of a checkpoint
 //!   recall      needle-in-a-haystack recall evaluation (Fig B.2)
+//!   generate    stream tokens from a multi-hybrid via the decode-state API
+//!   serve       multi-stream batch-scheduled generation demo
 //!   cost-model  Fig 2.2 / B.3 iteration-time + MFU estimates at 7B/40B
 //!   cp-demo     context-parallel convolution demo across strategies
 //!   data-gen    emit synthetic OpenGenome2-like bytes
 //!   inspect     print an artifact's meta (params, programs)
+//!
+//! `train`/`eval`/`recall` execute AOT HLO artifacts and require the `pjrt`
+//! feature (see DESIGN.md §PJRT-Runtime); everything else is pure Rust.
 
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+use std::path::Path;
+use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use sh2::coordinator::data::{DataPipeline, GenomeConfig, GenomeGenerator};
+#[cfg(feature = "pjrt")]
+use sh2::coordinator::data::DataPipeline;
+use sh2::coordinator::data::{GenomeConfig, GenomeGenerator};
+#[cfg(feature = "pjrt")]
 use sh2::coordinator::eval::{needle_recall, validation_ppl};
+#[cfg(feature = "pjrt")]
 use sh2::coordinator::metrics::MetricsLog;
+#[cfg(feature = "pjrt")]
 use sh2::coordinator::Trainer;
 use sh2::costmodel::{iteration_time, ArchSpec, ClusterConfig, Efficiency};
-use sh2::runtime::{Engine, ModelMeta};
+#[cfg(feature = "pjrt")]
+use sh2::runtime::Engine;
+use sh2::runtime::ModelMeta;
+use sh2::serve::{BatchScheduler, HybridLm, Sampler};
 use sh2::util::bench::Table;
 use sh2::util::cli::Args;
+use sh2::util::rng::Rng;
 
 fn main() {
     sh2::util::logging::init();
@@ -30,6 +46,8 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("recall") => cmd_recall(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
         Some("cost-model") => cmd_cost_model(&args),
         Some("cp-demo") => cmd_cp_demo(&args),
         Some("data-gen") => cmd_data_gen(&args),
@@ -45,19 +63,153 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: sh2 <train|eval|recall|cost-model|cp-demo|data-gen|inspect> [--options]
+const USAGE: &str = "usage: sh2 <train|eval|recall|generate|serve|cost-model|cp-demo|data-gen|inspect> [--options]
   common: --artifacts DIR (default: artifacts) --config NAME (default: tiny)
   train:  --steps N --seed S --log-every K --eval-every K --save PATH --resume PATH --metrics PATH
   eval:   --resume PATH --batches N
   recall: --resume PATH --cases N --depth F
+  generate: --prompt STR --max-new N --width D --heads H --layout SE-MR-MHA-LI --top-k K --temp T --seed S
+  serve:  --streams N --prompt-len L --max-new N --max-active A --budget-kb KB
+          --width D --heads H --layout ... --top-k K --temp T --seed S
   cost-model: --scale 7b|40b
   cp-demo: --ranks N --len L --width D --filter LH
   data-gen: --bytes N --seed S";
+
+fn build_lm(args: &Args, rng: &mut Rng) -> Result<HybridLm> {
+    let d = args.get_usize("width", 64);
+    let heads = args.get_usize("heads", 4);
+    let layout_s = args.get_or("layout", "SE-MR-MHA-LI").to_string();
+    let layout: Vec<&str> = layout_s.split('-').collect();
+    HybridLm::new(rng, d, heads, &layout).map_err(|e| anyhow!(e))
+}
+
+fn sampler_from(args: &Args) -> Sampler {
+    Sampler::from_options(
+        args.get_usize("top-k", 0),
+        args.get_f64("temp", 1.0) as f32,
+    )
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
+    let model = build_lm(args, &mut rng)?;
+    let prompt = args.get_or("prompt", "ACGTACGTACGTACGT").as_bytes().to_vec();
+    let max_new = args.get_usize("max-new", 64);
+    let sampler = sampler_from(args);
+    let mut srng = rng.fork(1);
+
+    let mut state = model.state();
+    let t0 = std::time::Instant::now();
+    let mut logits = model.prefill(&mut state, &prompt);
+    let prefill_secs = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let mut out = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let tok = sampler.sample(&logits, &mut srng) as u8;
+        out.push(tok);
+        logits = model.step(&mut state, tok);
+    }
+    let decode_secs = t1.elapsed().as_secs_f64();
+
+    println!(
+        "model: d={} heads={} layout={}",
+        model.d,
+        model.n_heads,
+        model.layout_string()
+    );
+    println!("prompt ({} tokens): {}", prompt.len(), String::from_utf8_lossy(&prompt));
+    println!("output ({max_new} tokens): {}", String::from_utf8_lossy(&out));
+    println!(
+        "prefill: {:.1} tok/s | decode: {:.1} tok/s ({:.3} ms/tok) | state: {:.1} KB",
+        prompt.len() as f64 / prefill_secs.max(1e-9),
+        max_new as f64 / decode_secs.max(1e-9),
+        1e3 * decode_secs / max_new.max(1) as f64,
+        state.bytes() as f64 / 1024.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let seed = args.get_usize("seed", 0) as u64;
+    let mut rng = Rng::new(seed);
+    let model = build_lm(args, &mut rng)?;
+    let n_streams = args.get_usize("streams", 8);
+    let prompt_len = args.get_usize("prompt-len", 64);
+    let max_new = args.get_usize("max-new", 32);
+    let max_active = args.get_usize("max-active", 4);
+    let budget = args.get_usize("budget-kb", 4096) * 1024;
+    let sampler = sampler_from(args);
+
+    let mut sched = BatchScheduler::new(&model, sampler, max_active, budget, seed);
+    let mut gen = GenomeGenerator::new(seed ^ 0x5EED, GenomeConfig::default());
+    for _ in 0..n_streams {
+        sched.submit(gen.generate(prompt_len), max_new);
+    }
+    let t0 = std::time::Instant::now();
+    let done = sched.run();
+    let secs = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        &format!(
+            "serve: {} streams x ({prompt_len} prompt + {max_new} new), \
+             max_active={max_active}, budget={} KB, layout {}",
+            n_streams,
+            budget / 1024,
+            model.layout_string()
+        ),
+        &["stream", "prompt tail", "output"],
+    );
+    for f in &done {
+        let tail = &f.prompt[f.prompt.len().saturating_sub(16)..];
+        t.row(vec![
+            format!("#{}", f.id),
+            String::from_utf8_lossy(tail).into_owned(),
+            String::from_utf8_lossy(&f.output).into_owned(),
+        ]);
+    }
+    t.print();
+    let s = sched.stats;
+    println!(
+        "decoded {} tokens in {:.2}s ({:.1} tok/s) | prefilled {} tokens | \
+         peak concurrency {} | preemptions {}",
+        s.decode_steps,
+        secs,
+        s.decode_steps as f64 / secs.max(1e-9),
+        s.prefill_tokens,
+        s.max_concurrent,
+        s.preemptions
+    );
+    Ok(())
+}
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> Result<()> {
+    bail!(
+        "`{cmd}` executes AOT HLO artifacts and needs the PJRT runtime; \
+         rebuild with `--features pjrt` (see DESIGN.md §PJRT-Runtime)"
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    pjrt_unavailable("train")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval(_args: &Args) -> Result<()> {
+    pjrt_unavailable("eval")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_recall(_args: &Args) -> Result<()> {
+    pjrt_unavailable("recall")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny");
     let engine = Engine::cpu()?;
@@ -119,6 +271,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_eval(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny");
     let engine = Engine::cpu()?;
@@ -131,6 +284,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_recall(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny");
     let engine = Engine::cpu()?;

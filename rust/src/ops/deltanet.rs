@@ -2,10 +2,24 @@
 //! delta rule — the state is *corrected* toward v_t rather than purely
 //! accumulated: S_t = S_{t-1} + β_t (v_t - S_{t-1} k_t) k_tᵀ.
 
-use super::{merge_heads, proj, split_heads, SeqMixer};
-use crate::tensor::matmul::matmul;
+use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer};
+use crate::tensor::matmul::{matmul, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Fixed-size decode state: per head the delta-rule fast-weight matrix S
+/// (dh x dh, flattened head-major) — O(1) in sequence length.
+#[derive(Clone, Debug)]
+pub struct DeltaNetState {
+    pub pos: usize,
+    s: Vec<f32>,
+}
+
+impl DeltaNetState {
+    pub fn bytes(&self) -> usize {
+        self.s.len() * std::mem::size_of::<f32>()
+    }
+}
 
 pub struct DeltaNetOp {
     pub d: usize,
@@ -27,11 +41,26 @@ impl DeltaNetOp {
     }
 }
 
-/// One head of the delta-rule scan. q,k,v: [l, dh]; beta: [l] in (0,1).
+/// One head of the delta-rule scan. q,k,v: [l, dh]; beta in (0,1), length l.
 /// Keys are L2-normalized (as in the paper's practical parametrization).
 pub fn deltanet_head(q: &Tensor, k: &Tensor, v: &Tensor, beta: &[f32]) -> Tensor {
+    let dh = q.cols();
+    let mut s = vec![0.0f32; dh * dh];
+    deltanet_head_with_state(q, k, v, beta, &mut s)
+}
+
+/// Same scan, continuing from (and updating) an externally owned state —
+/// the prefill path of the streaming decode API. s: [dh(v), dh(k)]
+/// row-major.
+pub fn deltanet_head_with_state(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    beta: &[f32],
+    s: &mut [f32],
+) -> Tensor {
     let (l, dh) = (q.rows(), q.cols());
-    let mut s = vec![0.0f32; dh * dh]; // S [dh(v), dh(k)] row-major
+    assert_eq!(s.len(), dh * dh);
     let mut y = Tensor::zeros(&[l, dh]);
     let mut kn = vec![0.0f32; dh];
     let mut pred = vec![0.0f32; dh];
@@ -104,6 +133,92 @@ impl SeqMixer for DeltaNetOp {
 
     fn width(&self) -> usize {
         self.d
+    }
+
+    fn state(&self) -> DecodeState {
+        let dh = self.d / self.n_heads;
+        DecodeState::DeltaNet(DeltaNetState {
+            pos: 0,
+            s: vec![0.0; self.n_heads * dh * dh],
+        })
+    }
+
+    fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
+        let DecodeState::DeltaNet(st) = state else {
+            panic!("DeltaNet step: wrong decode state variant")
+        };
+        let d = self.d;
+        let dh = d / self.n_heads;
+        let qkv = vecmat(x_t, &self.wqkv);
+        let beta_raw = vecmat(x_t, &self.wbeta);
+        let mut y = vec![0.0f32; d];
+        let mut kn = vec![0.0f32; dh];
+        let mut pred = vec![0.0f32; dh];
+        for h in 0..self.n_heads {
+            let off = h * dh;
+            let b = 1.0 / (1.0 + (-beta_raw[h]).exp());
+            let kr = &qkv[d + off..d + off + dh];
+            let norm = (kr.iter().map(|x| x * x).sum::<f32>()).sqrt().max(1e-6);
+            for (o, &x) in kn.iter_mut().zip(kr) {
+                *o = x / norm;
+            }
+            let s = &mut st.s[h * dh * dh..(h + 1) * dh * dh];
+            for i in 0..dh {
+                let srow = &s[i * dh..(i + 1) * dh];
+                pred[i] = srow.iter().zip(&kn).map(|(a, b)| a * b).sum();
+            }
+            let vr = &qkv[2 * d + off..2 * d + off + dh];
+            for i in 0..dh {
+                let err = b * (vr[i] - pred[i]);
+                let srow = &mut s[i * dh..(i + 1) * dh];
+                for (sv, &kv_) in srow.iter_mut().zip(&kn) {
+                    *sv += err * kv_;
+                }
+            }
+            let qr = &qkv[off..off + dh];
+            let yr = &mut y[off..off + dh];
+            for i in 0..dh {
+                let srow = &s[i * dh..(i + 1) * dh];
+                yr[i] = srow.iter().zip(qr).map(|(a, b)| a * b).sum();
+            }
+        }
+        st.pos += 1;
+        vecmat(&y, &self.wo)
+    }
+
+    /// Blocked prefill: GEMM projections + per-head delta-rule scan
+    /// continuing from the externally held fast-weight state.
+    fn prefill(&self, state: &mut DecodeState, x: &Tensor) -> Tensor {
+        let DecodeState::DeltaNet(st) = state else {
+            panic!("DeltaNet prefill: wrong decode state variant")
+        };
+        let dh = self.d / self.n_heads;
+        let qkv = matmul(x, &self.wqkv);
+        let q = qkv.slice_cols(0, self.d);
+        let k = qkv.slice_cols(self.d, 2 * self.d);
+        let v = qkv.slice_cols(2 * self.d, 3 * self.d);
+        let beta_raw = matmul(x, &self.wbeta);
+        let (qh, kh, vh) = (
+            split_heads(&q, self.n_heads),
+            split_heads(&k, self.n_heads),
+            split_heads(&v, self.n_heads),
+        );
+        let heads: Vec<Tensor> = (0..self.n_heads)
+            .map(|h| {
+                let beta: Vec<f32> = (0..x.rows())
+                    .map(|t| 1.0 / (1.0 + (-beta_raw.at2(t, h)).exp()))
+                    .collect();
+                deltanet_head_with_state(
+                    &qh[h],
+                    &kh[h],
+                    &vh[h],
+                    &beta,
+                    &mut st.s[h * dh * dh..(h + 1) * dh * dh],
+                )
+            })
+            .collect();
+        st.pos += x.rows();
+        matmul(&merge_heads(&heads), &self.wo)
     }
 }
 

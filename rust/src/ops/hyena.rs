@@ -7,13 +7,13 @@
 //!        two-stage blocked path (l_b = 128).
 //! * LI — implicit modal filter as long as the sequence, FFT path.
 
-use super::{proj, SeqMixer};
-use crate::conv::direct::causal_conv_direct;
+use super::{proj, DecodeState, SeqMixer};
+use crate::conv::direct::{causal_conv_direct, causal_conv_with_history};
 use crate::conv::fft_conv::{fft_causal_conv, modal_filter};
-use crate::conv::two_stage::two_stage_hyena;
-use crate::conv::GroupedFilter;
+use crate::conv::two_stage::{two_stage_hyena, two_stage_prefill};
+use crate::conv::{FirTail, GroupedFilter};
 use crate::tensor::fft::{fft_flops, next_pow2};
-use crate::tensor::matmul::matmul;
+use crate::tensor::matmul::{matmul, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -44,7 +44,60 @@ pub struct HyenaOp {
     pub block: usize,
 }
 
+/// Hyena decode state: FIR tail windows for the three short featurizer
+/// convolutions (on the post-projection streams), plus the inner-filter
+/// carry — a FIR tail of the gated k⊙v stream for SE/MR, or the modal IIR
+/// state (d channels x order poles) for LI. All O(1) in sequence length.
+#[derive(Clone, Debug)]
+pub struct HyenaState {
+    pub pos: usize,
+    w_tail: FirTail,
+    u_tail: FirTail,
+    p_tail: FirTail,
+    inner_tail: FirTail,
+    /// LI only: per-channel modal states, [d * order], channel-major.
+    modal: Vec<f32>,
+}
+
+impl HyenaState {
+    pub fn bytes(&self) -> usize {
+        self.w_tail.bytes()
+            + self.u_tail.bytes()
+            + self.p_tail.bytes()
+            + self.inner_tail.bytes()
+            + self.modal.len() * std::mem::size_of::<f32>()
+    }
+}
+
 impl HyenaOp {
+    /// Modal order of the LI filter (0 for SE/MR).
+    fn li_order(&self) -> usize {
+        if self.num_groups == 0 {
+            0
+        } else {
+            self.li_residues.len() / self.num_groups
+        }
+    }
+
+    /// One decode step of the LI modal IIR: s <- λ s + kv, y = Σ R s, the
+    /// constant-memory form of the length-l FFT convolution.
+    fn modal_step(&self, modal: &mut [f32], kv: &[f32]) -> Vec<f32> {
+        let order = self.li_order();
+        let gsz = self.d / self.num_groups;
+        let mut y = vec![0.0f32; self.d];
+        for (c, yv) in y.iter_mut().enumerate() {
+            let gi = c / gsz;
+            let mut acc = 0.0f32;
+            for o in 0..order {
+                let s = &mut modal[c * order + o];
+                *s = self.li_poles[gi * order + o] * *s + kv[c];
+                acc += self.li_residues[gi * order + o] * *s;
+            }
+            *yv = acc;
+        }
+        y
+    }
+
     fn featurizer(rng: &mut Rng, d: usize) -> GroupedFilter {
         // Near-delta per-channel short filters.
         let mut taps = Tensor::randn(rng, &[d, FEATURIZER_LEN], 0.02);
@@ -168,6 +221,101 @@ impl SeqMixer for HyenaOp {
 
     fn width(&self) -> usize {
         self.d
+    }
+
+    fn state(&self) -> DecodeState {
+        let inner_len = match self.kind {
+            HyenaKind::Se | HyenaKind::Mr => self.inner.filter_len(),
+            HyenaKind::Li => 1, // IIR carry lives in `modal` instead
+        };
+        DecodeState::Hyena(HyenaState {
+            pos: 0,
+            w_tail: FirTail::new(self.d, FEATURIZER_LEN),
+            u_tail: FirTail::new(self.d, FEATURIZER_LEN),
+            p_tail: FirTail::new(self.d, FEATURIZER_LEN),
+            inner_tail: FirTail::new(self.d, inner_len),
+            modal: match self.kind {
+                HyenaKind::Li => vec![0.0; self.d * self.li_order()],
+                _ => Vec::new(),
+            },
+        })
+    }
+
+    fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
+        let DecodeState::Hyena(st) = state else {
+            panic!("Hyena step: wrong decode state variant")
+        };
+        let xw = vecmat(x_t, &self.w);
+        let xu = vecmat(x_t, &self.u);
+        let xp = vecmat(x_t, &self.p);
+        let q = st.w_tail.step(&self.hq, &xw);
+        let k = st.u_tail.step(&self.hk, &xu);
+        let v = st.p_tail.step(&self.hv, &xp);
+        let kv: Vec<f32> = k.iter().zip(&v).map(|(a, b)| a * b).collect();
+        let inner = match self.kind {
+            HyenaKind::Se | HyenaKind::Mr => st.inner_tail.step(&self.inner, &kv),
+            HyenaKind::Li => self.modal_step(&mut st.modal, &kv),
+        };
+        let gated: Vec<f32> = q.iter().zip(&inner).map(|(a, b)| a * b).collect();
+        st.pos += 1;
+        vecmat(&gated, &self.m)
+    }
+
+    /// Blocked prefill (DESIGN.md §Streaming-Decode): featurizers run as
+    /// halo-corrected direct convolutions, the SE/MR inner convolution runs
+    /// through the two-stage overlap-add kernel via `two_stage_prefill`
+    /// (which hands its input tail to the decode state), and LI runs the
+    /// FFT path while rebuilding the modal IIR state by recurrence.
+    fn prefill(&self, state: &mut DecodeState, x: &Tensor) -> Tensor {
+        // A mid-stream LI restart has no blocked path (the FFT kernel can't
+        // start from a nonzero IIR state); fall back to stepping.
+        if matches!(self.kind, HyenaKind::Li) && state.pos() > 0 {
+            let mut y = Tensor::zeros(&[x.rows(), x.cols()]);
+            for t in 0..x.rows() {
+                let row = self.step(state, x.row(t));
+                y.row_mut(t).copy_from_slice(&row);
+            }
+            return y;
+        }
+        let DecodeState::Hyena(st) = state else {
+            panic!("Hyena prefill: wrong decode state variant")
+        };
+        let l = x.rows();
+        let xw = matmul(x, &self.w);
+        let xu = matmul(x, &self.u);
+        let xp = matmul(x, &self.p);
+        let q = causal_conv_with_history(&xw, &self.hq, &st.w_tail.as_tensor());
+        let k = causal_conv_with_history(&xu, &self.hk, &st.u_tail.as_tensor());
+        let v = causal_conv_with_history(&xp, &self.hv, &st.p_tail.as_tensor());
+        st.w_tail.absorb(&xw);
+        st.u_tail.absorb(&xu);
+        st.p_tail.absorb(&xp);
+        let kv = k.hadamard(&v);
+        let inner = match self.kind {
+            HyenaKind::Se | HyenaKind::Mr => {
+                two_stage_prefill(&kv, &self.inner, self.block, &mut st.inner_tail)
+            }
+            HyenaKind::Li => {
+                let h = self.inner_filter(l);
+                let y = fft_causal_conv(&kv, &h);
+                // State-only modal recurrence over the chunk.
+                let order = self.li_order();
+                let gsz = self.d / self.num_groups;
+                for t in 0..l {
+                    let row = kv.row(t);
+                    for c in 0..self.d {
+                        let gi = c / gsz;
+                        for o in 0..order {
+                            let s = &mut st.modal[c * order + o];
+                            *s = self.li_poles[gi * order + o] * *s + row[c];
+                        }
+                    }
+                }
+                y
+            }
+        };
+        st.pos += l;
+        matmul(&q.hadamard(&inner), &self.m)
     }
 }
 

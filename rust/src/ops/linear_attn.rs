@@ -1,8 +1,8 @@
 //! Linear attention (Katharopoulos et al., 2020): softmax replaced by a
 //! positive feature map; causal form is a running outer-product state.
 
-use super::{merge_heads, proj, split_heads, SeqMixer};
-use crate::tensor::matmul::matmul;
+use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer};
+use crate::tensor::matmul::{matmul, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -11,6 +11,23 @@ pub struct LinearAttnOp {
     pub n_heads: usize,
     wqkv: Tensor,
     wo: Tensor,
+}
+
+/// Fixed-size decode state: per head the running outer-product accumulator
+/// S (dh x dh, flattened) and key-sum z (dh) — O(1) in sequence length.
+#[derive(Clone, Debug)]
+pub struct LinearAttnState {
+    pub pos: usize,
+    /// [n_heads * dh * dh], head-major.
+    s: Vec<f32>,
+    /// [n_heads * dh], head-major.
+    z: Vec<f32>,
+}
+
+impl LinearAttnState {
+    pub fn bytes(&self) -> usize {
+        (self.s.len() + self.z.len()) * std::mem::size_of::<f32>()
+    }
 }
 
 impl LinearAttnOp {
@@ -32,9 +49,24 @@ fn elu1(x: f32) -> f32 {
 /// Causal linear attention for one head: y_t = φ(q_t)ᵀ S_t / (φ(q_t)ᵀ z_t),
 /// S_t = Σ_{s<=t} φ(k_s) v_sᵀ, z_t = Σ φ(k_s).
 pub fn linear_attention_head(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
-    let (l, dh) = (q.rows(), q.cols());
-    let mut s = vec![0.0f32; dh * dh]; // state S [dh, dh]
+    let dh = q.cols();
+    let mut s = vec![0.0f32; dh * dh];
     let mut z = vec![0.0f32; dh];
+    linear_attention_head_with_state(q, k, v, &mut s, &mut z)
+}
+
+/// Same scan, continuing from (and updating) an externally owned state —
+/// the prefill path of the streaming decode API.
+pub fn linear_attention_head_with_state(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    s: &mut [f32],
+    z: &mut [f32],
+) -> Tensor {
+    let (l, dh) = (q.rows(), q.cols());
+    assert_eq!(s.len(), dh * dh);
+    assert_eq!(z.len(), dh);
     let mut out = Tensor::zeros(&[l, dh]);
     let mut fk = vec![0.0f32; dh];
     let mut fq = vec![0.0f32; dh];
@@ -101,6 +133,93 @@ impl SeqMixer for LinearAttnOp {
 
     fn width(&self) -> usize {
         self.d
+    }
+
+    fn state(&self) -> DecodeState {
+        let dh = self.d / self.n_heads;
+        DecodeState::LinearAttn(LinearAttnState {
+            pos: 0,
+            s: vec![0.0; self.n_heads * dh * dh],
+            z: vec![0.0; self.n_heads * dh],
+        })
+    }
+
+    fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
+        let DecodeState::LinearAttn(st) = state else {
+            panic!("LinearAttn step: wrong decode state variant")
+        };
+        let d = self.d;
+        let dh = d / self.n_heads;
+        let qkv = vecmat(x_t, &self.wqkv);
+        let mut y = vec![0.0f32; d];
+        let mut fk = vec![0.0f32; dh];
+        let mut fq = vec![0.0f32; dh];
+        for h in 0..self.n_heads {
+            let off = h * dh;
+            for i in 0..dh {
+                fq[i] = elu1(qkv[off + i]);
+                fk[i] = elu1(qkv[d + off + i]);
+            }
+            let vrow = &qkv[2 * d + off..2 * d + off + dh];
+            let s = &mut st.s[h * dh * dh..(h + 1) * dh * dh];
+            let z = &mut st.z[off..off + dh];
+            for i in 0..dh {
+                let fki = fk[i];
+                z[i] += fki;
+                let srow = &mut s[i * dh..(i + 1) * dh];
+                for (sv, &vv) in srow.iter_mut().zip(vrow) {
+                    *sv += fki * vv;
+                }
+            }
+            let mut denom = 1e-6f32;
+            for i in 0..dh {
+                denom += fq[i] * z[i];
+            }
+            let orow = &mut y[off..off + dh];
+            for i in 0..dh {
+                let fqi = fq[i];
+                let srow = &s[i * dh..(i + 1) * dh];
+                for (o, &sv) in orow.iter_mut().zip(srow) {
+                    *o += fqi * sv;
+                }
+            }
+            for o in orow.iter_mut() {
+                *o /= denom;
+            }
+        }
+        st.pos += 1;
+        vecmat(&y, &self.wo)
+    }
+
+    /// Blocked prefill: GEMM projections + per-head scan continuing from
+    /// the externally held (S, z) accumulators.
+    fn prefill(&self, state: &mut DecodeState, x: &Tensor) -> Tensor {
+        let DecodeState::LinearAttn(st) = state else {
+            panic!("LinearAttn prefill: wrong decode state variant")
+        };
+        let dh = self.d / self.n_heads;
+        let qkv = matmul(x, &self.wqkv);
+        let q = qkv.slice_cols(0, self.d);
+        let k = qkv.slice_cols(self.d, 2 * self.d);
+        let v = qkv.slice_cols(2 * self.d, 3 * self.d);
+        let (qh, kh, vh) = (
+            split_heads(&q, self.n_heads),
+            split_heads(&k, self.n_heads),
+            split_heads(&v, self.n_heads),
+        );
+        let heads: Vec<Tensor> = (0..self.n_heads)
+            .map(|h| {
+                linear_attention_head_with_state(
+                    &qh[h],
+                    &kh[h],
+                    &vh[h],
+                    &mut st.s[h * dh * dh..(h + 1) * dh * dh],
+                    &mut st.z[h * dh..(h + 1) * dh],
+                )
+            })
+            .collect();
+        st.pos += x.rows();
+        matmul(&merge_heads(&heads), &self.wo)
     }
 }
 

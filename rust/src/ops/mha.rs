@@ -1,8 +1,8 @@
 //! Multi-head causal softmax attention (SDPA-style, row-blocked so no
 //! [l, l] score matrix is ever materialized — the FlashAttention dataflow).
 
-use super::{merge_heads, proj, split_heads, SeqMixer};
-use crate::tensor::matmul::matmul;
+use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer};
+use crate::tensor::matmul::{matmul, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -13,10 +13,64 @@ pub struct MhaOp {
     wo: Tensor,
 }
 
+/// KV-cache decode state: post-projection key/value rows, [pos, d]
+/// row-major with heads side by side — the only per-operator state that
+/// grows with sequence length.
+#[derive(Clone, Debug)]
+pub struct MhaState {
+    pub pos: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl MhaState {
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
 impl MhaOp {
     pub fn new(rng: &mut Rng, d: usize, n_heads: usize) -> MhaOp {
         assert_eq!(d % n_heads, 0);
         MhaOp { d, n_heads, wqkv: proj(rng, d, 3 * d), wo: proj(rng, d, d) }
+    }
+
+    /// Causal attention of one fresh query row against the cache, with the
+    /// same max-shift/exp/normalize ordering as `causal_attention_head`.
+    fn attend_cached(&self, st: &MhaState, q: &[f32]) -> Vec<f32> {
+        let d = self.d;
+        let dh = d / self.n_heads;
+        let scale = (dh as f32).powf(-0.5);
+        let mut y = vec![0.0f32; d];
+        let mut scores = vec![0.0f32; st.pos];
+        for h in 0..self.n_heads {
+            let off = h * dh;
+            let qh = &q[off..off + dh];
+            let mut maxs = f32::NEG_INFINITY;
+            for (s, sc) in scores.iter_mut().enumerate() {
+                let krow = &st.k[s * d + off..s * d + off + dh];
+                let mut dot = 0.0f32;
+                for (a, b) in qh.iter().zip(krow) {
+                    dot += a * b;
+                }
+                *sc = dot * scale;
+                maxs = maxs.max(*sc);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - maxs).exp();
+                denom += *sc;
+            }
+            let orow = &mut y[off..off + dh];
+            for (s, &w) in scores.iter().enumerate() {
+                let vrow = &st.v[s * d + off..s * d + off + dh];
+                let wn = w / denom;
+                for (o, val) in orow.iter_mut().zip(vrow) {
+                    *o += wn * val;
+                }
+            }
+        }
+        y
     }
 }
 
@@ -90,6 +144,62 @@ impl SeqMixer for MhaOp {
 
     fn width(&self) -> usize {
         self.d
+    }
+
+    fn state(&self) -> DecodeState {
+        DecodeState::Mha(MhaState { pos: 0, k: Vec::new(), v: Vec::new() })
+    }
+
+    fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
+        let DecodeState::Mha(st) = state else {
+            panic!("MHA step: wrong decode state variant")
+        };
+        let d = self.d;
+        let qkv = vecmat(x_t, &self.wqkv);
+        st.k.extend_from_slice(&qkv[d..2 * d]);
+        st.v.extend_from_slice(&qkv[2 * d..3 * d]);
+        st.pos += 1;
+        let y = self.attend_cached(st, &qkv[..d]);
+        vecmat(&y, &self.wo)
+    }
+
+    /// Blocked prefill: from an empty state this runs the same GEMM +
+    /// streaming-softmax path as `forward` while recording the KV cache;
+    /// with prior context it falls back to stepping (the cache is the
+    /// history, so each new row must attend to it).
+    fn prefill(&self, state: &mut DecodeState, x: &Tensor) -> Tensor {
+        {
+            let DecodeState::Mha(st) = &mut *state else {
+                panic!("MHA prefill: wrong decode state variant")
+            };
+            if st.pos == 0 {
+                let l = x.rows();
+                let qkv = matmul(x, &self.wqkv);
+                let q = qkv.slice_cols(0, self.d);
+                let k = qkv.slice_cols(self.d, 2 * self.d);
+                let v = qkv.slice_cols(2 * self.d, 3 * self.d);
+                for t in 0..l {
+                    st.k.extend_from_slice(k.row(t));
+                    st.v.extend_from_slice(v.row(t));
+                }
+                st.pos = l;
+                let (qh, kh, vh) = (
+                    split_heads(&q, self.n_heads),
+                    split_heads(&k, self.n_heads),
+                    split_heads(&v, self.n_heads),
+                );
+                let heads: Vec<Tensor> = (0..self.n_heads)
+                    .map(|h| causal_attention_head(&qh[h], &kh[h], &vh[h]))
+                    .collect();
+                return matmul(&merge_heads(&heads), &self.wo);
+            }
+        }
+        let mut y = Tensor::zeros(&[x.rows(), x.cols()]);
+        for t in 0..x.rows() {
+            let row = self.step(state, x.row(t));
+            y.row_mut(t).copy_from_slice(&row);
+        }
+        y
     }
 }
 

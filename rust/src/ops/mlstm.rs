@@ -1,10 +1,25 @@
 //! xLSTM-style mLSTM operator (Beck et al., 2024): matrix memory with
 //! scalar input/forget gates and a normalizer state.
 
-use super::{merge_heads, proj, split_heads, SeqMixer};
-use crate::tensor::matmul::matmul;
+use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer};
+use crate::tensor::matmul::{matmul, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Fixed-size decode state: per head the matrix memory C (dh x dh) and the
+/// normalizer n (dh), flattened head-major — O(1) in sequence length.
+#[derive(Clone, Debug)]
+pub struct MlstmState {
+    pub pos: usize,
+    c: Vec<f32>,
+    n: Vec<f32>,
+}
+
+impl MlstmState {
+    pub fn bytes(&self) -> usize {
+        (self.c.len() + self.n.len()) * std::mem::size_of::<f32>()
+    }
+}
 
 pub struct MlstmOp {
     pub d: usize,
@@ -30,9 +45,26 @@ impl MlstmOp {
 ///   C_t = f_t C_{t-1} + i_t v_t k_tᵀ,  n_t = f_t n_{t-1} + i_t k_t,
 ///   y_t = C_t q_t / max(|n_tᵀ q_t|, 1).
 pub fn mlstm_head(q: &Tensor, k: &Tensor, v: &Tensor, ig: &[f32], fg: &[f32]) -> Tensor {
-    let (l, dh) = (q.rows(), q.cols());
+    let dh = q.cols();
     let mut c = vec![0.0f32; dh * dh];
     let mut n = vec![0.0f32; dh];
+    mlstm_head_with_state(q, k, v, ig, fg, &mut c, &mut n)
+}
+
+/// Same recurrence, continuing from (and updating) an externally owned
+/// state — the prefill path of the streaming decode API.
+pub fn mlstm_head_with_state(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    ig: &[f32],
+    fg: &[f32],
+    c: &mut [f32],
+    n: &mut [f32],
+) -> Tensor {
+    let (l, dh) = (q.rows(), q.cols());
+    assert_eq!(c.len(), dh * dh);
+    assert_eq!(n.len(), dh);
     let mut y = Tensor::zeros(&[l, dh]);
     for t in 0..l {
         let (i_t, f_t) = (ig[t], fg[t]);
@@ -101,6 +133,98 @@ impl SeqMixer for MlstmOp {
 
     fn width(&self) -> usize {
         self.d
+    }
+
+    fn state(&self) -> DecodeState {
+        let dh = self.d / self.n_heads;
+        DecodeState::Mlstm(MlstmState {
+            pos: 0,
+            c: vec![0.0; self.n_heads * dh * dh],
+            n: vec![0.0; self.n_heads * dh],
+        })
+    }
+
+    fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
+        let DecodeState::Mlstm(st) = state else {
+            panic!("mLSTM step: wrong decode state variant")
+        };
+        let d = self.d;
+        let dh = d / self.n_heads;
+        let qkv = vecmat(x_t, &self.wqkv);
+        let gates = vecmat(x_t, &self.wif);
+        let sig = |x: f32| 1.0 / (1.0 + (-x).exp());
+        let mut y = vec![0.0f32; d];
+        for h in 0..self.n_heads {
+            let off = h * dh;
+            let (i_t, f_t) = (sig(gates[2 * h]), sig(gates[2 * h + 1]));
+            let kr = &qkv[d + off..d + off + dh];
+            let vr = &qkv[2 * d + off..2 * d + off + dh];
+            let c = &mut st.c[h * dh * dh..(h + 1) * dh * dh];
+            let n = &mut st.n[off..off + dh];
+            for a in 0..dh {
+                let iv = i_t * vr[a];
+                let crow = &mut c[a * dh..(a + 1) * dh];
+                for (cv, &kv_) in crow.iter_mut().zip(kr) {
+                    *cv = f_t * *cv + iv * kv_;
+                }
+            }
+            for (nv, &kv_) in n.iter_mut().zip(kr) {
+                *nv = f_t * *nv + i_t * kv_;
+            }
+            let qr = &qkv[off..off + dh];
+            let denom = n
+                .iter()
+                .zip(qr)
+                .map(|(a, b)| a * b)
+                .sum::<f32>()
+                .abs()
+                .max(1.0);
+            let yr = &mut y[off..off + dh];
+            for a in 0..dh {
+                let crow = &c[a * dh..(a + 1) * dh];
+                yr[a] = crow.iter().zip(qr).map(|(x, z)| x * z).sum::<f32>() / denom;
+            }
+        }
+        st.pos += 1;
+        vecmat(&y, &self.wo)
+    }
+
+    /// Blocked prefill: GEMM projections + per-head recurrence continuing
+    /// from the externally held (C, n) state.
+    fn prefill(&self, state: &mut DecodeState, x: &Tensor) -> Tensor {
+        let DecodeState::Mlstm(st) = state else {
+            panic!("mLSTM prefill: wrong decode state variant")
+        };
+        let dh = self.d / self.n_heads;
+        let qkv = matmul(x, &self.wqkv);
+        let q = qkv.slice_cols(0, self.d);
+        let k = qkv.slice_cols(self.d, 2 * self.d);
+        let v = qkv.slice_cols(2 * self.d, 3 * self.d);
+        let gates = matmul(x, &self.wif);
+        let sig = |x: f32| 1.0 / (1.0 + (-x).exp());
+        let (qh, kh, vh) = (
+            split_heads(&q, self.n_heads),
+            split_heads(&k, self.n_heads),
+            split_heads(&v, self.n_heads),
+        );
+        let heads: Vec<Tensor> = (0..self.n_heads)
+            .map(|h| {
+                let ig: Vec<f32> = (0..x.rows()).map(|t| sig(gates.at2(t, 2 * h))).collect();
+                let fg: Vec<f32> =
+                    (0..x.rows()).map(|t| sig(gates.at2(t, 2 * h + 1))).collect();
+                mlstm_head_with_state(
+                    &qh[h],
+                    &kh[h],
+                    &vh[h],
+                    &ig,
+                    &fg,
+                    &mut st.c[h * dh * dh..(h + 1) * dh * dh],
+                    &mut st.n[h * dh..(h + 1) * dh],
+                )
+            })
+            .collect();
+        st.pos += x.rows();
+        matmul(&merge_heads(&heads), &self.wo)
     }
 }
 

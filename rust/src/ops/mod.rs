@@ -19,13 +19,120 @@ pub mod ssd;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-/// A sequence mixer: [l, d] -> [l, d] at batch 1.
+/// Per-stream decode state for one operator (DESIGN.md §Streaming-Decode).
+///
+/// Every mixer family carries a different recurrent summary of its prefix:
+/// a growing KV cache for softmax attention, fixed-size accumulators for the
+/// linear-attention family (linear attn / SSD / DeltaNet / mLSTM), and a FIR
+/// tail window plus modal IIR state for the hyena operators. The enum keeps
+/// `SeqMixer` object-safe while letting the serving arena account for state
+/// bytes uniformly.
+#[derive(Clone, Debug)]
+pub enum DecodeState {
+    Mha(mha::MhaState),
+    LinearAttn(linear_attn::LinearAttnState),
+    Ssd(ssd::SsdState),
+    DeltaNet(deltanet::DeltaNetState),
+    Mlstm(mlstm::MlstmState),
+    Hyena(hyena::HyenaState),
+}
+
+impl DecodeState {
+    /// Number of tokens already absorbed (prefilled + stepped).
+    pub fn pos(&self) -> usize {
+        match self {
+            DecodeState::Mha(s) => s.pos,
+            DecodeState::LinearAttn(s) => s.pos,
+            DecodeState::Ssd(s) => s.pos,
+            DecodeState::DeltaNet(s) => s.pos,
+            DecodeState::Mlstm(s) => s.pos,
+            DecodeState::Hyena(s) => s.pos,
+        }
+    }
+
+    /// Heap bytes held by this state — constant in sequence length for every
+    /// operator except `Mha`, whose KV cache grows linearly.
+    pub fn bytes(&self) -> usize {
+        match self {
+            DecodeState::Mha(s) => s.bytes(),
+            DecodeState::LinearAttn(s) => s.bytes(),
+            DecodeState::Ssd(s) => s.bytes(),
+            DecodeState::DeltaNet(s) => s.bytes(),
+            DecodeState::Mlstm(s) => s.bytes(),
+            DecodeState::Hyena(s) => s.bytes(),
+        }
+    }
+}
+
+/// A sequence mixer: [l, d] -> [l, d] at batch 1, plus the streaming decode
+/// API used by the `serve` engine.
 pub trait SeqMixer {
     fn forward(&self, x: &Tensor) -> Tensor;
     fn name(&self) -> &'static str;
     /// Forward FLOPs at sequence length l (for TFLOPS-style reporting).
     fn flops(&self, l: usize) -> f64;
     fn width(&self) -> usize;
+
+    /// Fresh decode state at position 0 (no tokens absorbed yet).
+    fn state(&self) -> DecodeState;
+
+    /// Absorb one input row `x_t` (length `width()`) and return the output
+    /// row for that position.
+    ///
+    /// # Prefill → decode state-handoff contract
+    ///
+    /// `state()`, [`SeqMixer::prefill`] and `step` compose: after
+    /// `prefill(&mut st, x)` the state is positioned exactly as if `step`
+    /// had been called once per row of `x`, so a serving engine can prefill
+    /// a prompt through the blocked batch kernels and then decode one token
+    /// at a time. For every operator the streamed outputs match the
+    /// full-sequence `forward` within 1e-4 (exactly, for the scan-family
+    /// operators; up to kernel summation-order rounding for the blocked
+    /// two-stage and FFT hyena paths). Per-token cost is O(1) in sequence
+    /// length for all operators except MHA, whose KV-cache attention costs
+    /// O(pos) per token — still far below the O(pos²) of re-running
+    /// `forward` per generated token.
+    ///
+    /// ```
+    /// use sh2::ops::{all_operators, SeqMixer};
+    /// use sh2::tensor::Tensor;
+    /// use sh2::util::rng::Rng;
+    ///
+    /// let mut rng = Rng::new(0);
+    /// let ops = all_operators(&mut rng, 16, 2);
+    /// let op = &ops[0]; // Hyena-SE
+    /// let x = Tensor::randn(&mut rng, &[8, 16], 1.0);
+    /// let full = op.forward(&x);
+    ///
+    /// let mut st = op.state();
+    /// let _prompt_out = op.prefill(&mut st, &x.slice_rows(0, 5)); // blocked
+    /// assert_eq!(st.pos(), 5);
+    /// let mut last = Vec::new();
+    /// for t in 5..8 {
+    ///     last = op.step(&mut st, x.row(t)); // O(1) decode
+    /// }
+    /// assert!(last
+    ///     .iter()
+    ///     .zip(full.row(7))
+    ///     .all(|(a, b)| (a - b).abs() < 1e-4));
+    /// ```
+    ///
+    /// Panics if `state` was produced by a different operator family.
+    fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32>;
+
+    /// Absorb a whole [t, d] block at once, returning all t output rows and
+    /// leaving `state` as if `step` had been called t times. Operators
+    /// override this to route through their blocked batch kernels (GEMM
+    /// attention, two-stage overlap-add, FFT); the default simply loops
+    /// `step`.
+    fn prefill(&self, state: &mut DecodeState, x: &Tensor) -> Tensor {
+        let mut y = Tensor::zeros(&[x.rows(), x.cols()]);
+        for t in 0..x.rows() {
+            let row = self.step(state, x.row(t));
+            y.row_mut(t).copy_from_slice(&row);
+        }
+        y
+    }
 }
 
 /// Construct every operator in the Fig 3.2 line-up at width d.
@@ -88,6 +195,35 @@ mod tests {
                 op.name()
             );
         }
+    }
+
+    #[test]
+    fn decode_state_tracks_position_and_bytes() {
+        let mut rng = Rng::new(3);
+        let d = 16;
+        let ops = all_operators(&mut rng, d, 2);
+        let x = Tensor::randn(&mut rng, &[5, d], 1.0);
+        for op in &ops {
+            let mut st = op.state();
+            assert_eq!(st.pos(), 0, "{}", op.name());
+            let y = op.prefill(&mut st, &x);
+            assert_eq!(y.shape, vec![5, d], "{}", op.name());
+            assert_eq!(st.pos(), 5, "{}", op.name());
+            let row = op.step(&mut st, x.row(4));
+            assert_eq!(row.len(), d, "{}", op.name());
+            assert_eq!(st.pos(), 6, "{}", op.name());
+            assert!(st.bytes() > 0, "{}", op.name());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "state")]
+    fn step_rejects_foreign_state() {
+        let mut rng = Rng::new(4);
+        let mha = mha::MhaOp::new(&mut rng, 8, 2);
+        let hyena = hyena::HyenaOp::se(&mut rng, 8);
+        let mut st = mha.state();
+        hyena.step(&mut st, &[0.0; 8]);
     }
 
     #[test]

@@ -2,12 +2,26 @@
 //! scan with scalar input-dependent decay, h_t = a_t h_{t-1} + b_t x_tᵀ,
 //! y_t = h_tᵀ c_t (Dao & Gu, 2024 — simplified scalar-A form).
 
-use super::{merge_heads, proj, split_heads, SeqMixer};
-use crate::tensor::matmul::matmul;
+use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer};
+use crate::tensor::matmul::{matmul, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 pub const STATE_DIM: usize = 16;
+
+/// Fixed-size decode state: per head the [n, dh] recurrent matrix h,
+/// flattened head-major — O(1) in sequence length.
+#[derive(Clone, Debug)]
+pub struct SsdState {
+    pub pos: usize,
+    h: Vec<f32>,
+}
+
+impl SsdState {
+    pub fn bytes(&self) -> usize {
+        self.h.len() * std::mem::size_of::<f32>()
+    }
+}
 
 pub struct SsdOp {
     pub d: usize,
@@ -34,12 +48,26 @@ impl SsdOp {
     }
 }
 
-/// One head's scan. x: [l, dh]; b, c: [l, n]; dt: [l] -> y [l, dh].
+/// One head's scan. x: [l, dh]; b, c: [l, n]; dt: length l -> y [l, dh].
 /// State h: [n, dh]; decay a_t = exp(-softplus(dt_t)).
 pub fn ssd_head_scan(x: &Tensor, b: &Tensor, c: &Tensor, dt: &[f32]) -> Tensor {
+    let (dh, n) = (x.cols(), b.cols());
+    let mut h = vec![0.0f32; n * dh];
+    ssd_head_scan_with_state(x, b, c, dt, &mut h)
+}
+
+/// Same scan, continuing from (and updating) an externally owned state —
+/// the prefill path of the streaming decode API.
+pub fn ssd_head_scan_with_state(
+    x: &Tensor,
+    b: &Tensor,
+    c: &Tensor,
+    dt: &[f32],
+    h: &mut [f32],
+) -> Tensor {
     let (l, dh) = (x.rows(), x.cols());
     let n = b.cols();
-    let mut h = vec![0.0f32; n * dh];
+    assert_eq!(h.len(), n * dh);
     let mut y = Tensor::zeros(&[l, dh]);
     for t in 0..l {
         let a = (-softplus(dt[t])).exp();
@@ -107,6 +135,83 @@ impl SeqMixer for SsdOp {
 
     fn width(&self) -> usize {
         self.d
+    }
+
+    fn state(&self) -> DecodeState {
+        let dh = self.d / self.n_heads;
+        DecodeState::Ssd(SsdState {
+            pos: 0,
+            h: vec![0.0; self.n_heads * STATE_DIM * dh],
+        })
+    }
+
+    fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
+        let DecodeState::Ssd(st) = state else {
+            panic!("SSD step: wrong decode state variant")
+        };
+        let d = self.d;
+        let dh = d / self.n_heads;
+        let n = STATE_DIM;
+        let xv = vecmat(x_t, &self.wx);
+        let b = vecmat(x_t, &self.wb);
+        let c = vecmat(x_t, &self.wc);
+        let dt = vecmat(x_t, &self.wdt);
+        let mut y = vec![0.0f32; d];
+        for hd in 0..self.n_heads {
+            let a = (-softplus(dt[hd])).exp();
+            let xr = &xv[hd * dh..(hd + 1) * dh];
+            let br = &b[hd * n..(hd + 1) * n];
+            let cr = &c[hd * n..(hd + 1) * n];
+            let hst = &mut st.h[hd * n * dh..(hd + 1) * n * dh];
+            for i in 0..n {
+                let bi = br[i];
+                let hrow = &mut hst[i * dh..(i + 1) * dh];
+                for (hv, &xvv) in hrow.iter_mut().zip(xr) {
+                    *hv = a * *hv + bi * xvv;
+                }
+            }
+            let yr = &mut y[hd * dh..(hd + 1) * dh];
+            for i in 0..n {
+                let ci = cr[i];
+                let hrow = &hst[i * dh..(i + 1) * dh];
+                for (yv, &hv) in yr.iter_mut().zip(hrow) {
+                    *yv += ci * hv;
+                }
+            }
+        }
+        st.pos += 1;
+        vecmat(&y, &self.wo)
+    }
+
+    /// Blocked prefill: GEMM projections + per-head selective scan
+    /// continuing from the externally held recurrent state.
+    fn prefill(&self, state: &mut DecodeState, x: &Tensor) -> Tensor {
+        let DecodeState::Ssd(st) = state else {
+            panic!("SSD prefill: wrong decode state variant")
+        };
+        let dh = self.d / self.n_heads;
+        let n = STATE_DIM;
+        let xv = matmul(x, &self.wx);
+        let b = matmul(x, &self.wb);
+        let c = matmul(x, &self.wc);
+        let dt = matmul(x, &self.wdt);
+        let xh = split_heads(&xv, self.n_heads);
+        let bh = split_heads(&b, self.n_heads);
+        let ch = split_heads(&c, self.n_heads);
+        let heads: Vec<Tensor> = (0..self.n_heads)
+            .map(|hd| {
+                let dts: Vec<f32> = (0..x.rows()).map(|t| dt.at2(t, hd)).collect();
+                ssd_head_scan_with_state(
+                    &xh[hd],
+                    &bh[hd],
+                    &ch[hd],
+                    &dts,
+                    &mut st.h[hd * n * dh..(hd + 1) * n * dh],
+                )
+            })
+            .collect();
+        st.pos += x.rows();
+        matmul(&merge_heads(&heads), &self.wo)
     }
 }
 

@@ -1,6 +1,12 @@
 //! PJRT runtime: load AOT HLO-text artifacts + meta descriptors and execute
 //! them from the rust hot path. Python never runs here — `make artifacts`
 //! produced everything at build time.
+//!
+//! The artifact *metadata* half (`ArraySpec`, `ProgramMeta`, `ModelMeta`)
+//! is pure Rust and always available. The *execution* half (`Engine`,
+//! `Program`, the literal helpers) binds the `xla` PJRT crate and is gated
+//! behind the `pjrt` cargo feature so the core crate builds without it —
+//! see DESIGN.md §PJRT-Runtime.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -126,10 +132,12 @@ impl ModelMeta {
 }
 
 /// PJRT engine: one CPU client + compiled programs.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     pub client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     pub fn cpu() -> Result<Engine> {
         Ok(Engine { client: xla::PjRtClient::cpu().map_err(to_anyhow)? })
@@ -156,17 +164,20 @@ impl Engine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn to_anyhow(e: xla::Error) -> anyhow::Error {
     anyhow!("xla: {e}")
 }
 
 /// A compiled executable. All exported programs return a single tuple
 /// (lowered with return_tuple=True); `run` decomposes it into leaves.
+#[cfg(feature = "pjrt")]
 pub struct Program {
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl Program {
     pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         let out = self.exe.execute::<&xla::Literal>(args).map_err(to_anyhow)?;
@@ -176,35 +187,42 @@ impl Program {
 }
 
 /// Literal construction helpers.
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     assert_eq!(shape.iter().product::<usize>(), data.len());
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     xla::Literal::vec1(data).reshape(&dims).map_err(to_anyhow)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
     assert_eq!(shape.iter().product::<usize>(), data.len());
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     xla::Literal::vec1(data).reshape(&dims).map_err(to_anyhow)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn scalar_i32(x: i32) -> xla::Literal {
     xla::Literal::scalar(x)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(to_anyhow)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
     lit.to_vec::<i32>().map_err(to_anyhow)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn scalar_f32_of(lit: &xla::Literal) -> Result<f32> {
     lit.get_first_element::<f32>().map_err(to_anyhow)
 }
 
 /// Zero literal of a given spec (used to init optimizer state).
+#[cfg(feature = "pjrt")]
 pub fn zeros_like(spec: &ArraySpec) -> Result<xla::Literal> {
     match spec.dtype.as_str() {
         "int32" => literal_i32(&spec.shape, &vec![0; spec.numel()]),
@@ -238,6 +256,7 @@ mod tests {
         assert_eq!(prog.outputs[0].shape, vec![16, 8]);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip() {
         let lit = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
@@ -246,6 +265,7 @@ mod tests {
         assert_eq!(to_vec_i32(&li).unwrap(), vec![7, 8]);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn zeros_like_respects_dtype() {
         let f = zeros_like(&ArraySpec { name: "x".into(), shape: vec![3], dtype: "float32".into() }).unwrap();

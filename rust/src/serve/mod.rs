@@ -1,0 +1,36 @@
+//! Streaming inference engine (DESIGN.md §Serving): multi-sequence batch
+//! scheduling over the per-operator decode states of `crate::ops`.
+//!
+//! Layering: `model` stacks `SeqMixer` layers into a byte-level multi-hybrid
+//! LM whose per-stream state is one `DecodeState` per layer; `sampler`
+//! provides deterministic greedy/top-k token selection; `scheduler` admits
+//! and evicts concurrent streams against a state-byte budget, prefilling
+//! prompts through the blocked batch kernels and decoding one token per
+//! stream per tick.
+//!
+//! The prefill→decode state-handoff contract this module relies on is
+//! documented on [`crate::ops::SeqMixer::step`]: after a blocked prefill,
+//! stepping continues the stream as if every prompt token had been stepped
+//! individually, which is what makes admission O(prompt) and each decoded
+//! token O(state) instead of O(sequence).
+//!
+//! ```
+//! use sh2::serve::{BatchScheduler, HybridLm, Sampler};
+//! use sh2::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(0);
+//! let model = HybridLm::new(&mut rng, 16, 2, &["SE", "LA"]).unwrap();
+//! let mut sched = BatchScheduler::new(&model, Sampler::Greedy, 4, 1 << 20, 7);
+//! let id = sched.submit(b"ACGT".to_vec(), 8);
+//! let done = sched.run();
+//! assert_eq!(done[0].id, id);
+//! assert_eq!(done[0].output.len(), 8);
+//! ```
+
+pub mod model;
+pub mod sampler;
+pub mod scheduler;
+
+pub use model::{HybridLm, LmState};
+pub use sampler::Sampler;
+pub use scheduler::{BatchScheduler, FinishedStream, ServeStats};

@@ -1,0 +1,191 @@
+//! A self-contained byte-level multi-hybrid LM for the serving engine:
+//! tied byte embedding, a residual stack of `SeqMixer` layers in a
+//! configurable layout (the paper's §2 multi-hybrid pattern), and a linear
+//! LM head. Weights are random unless loaded — the point of this model is
+//! exercising the streaming decode machinery end to end, with per-layer
+//! decode state managed through the `DecodeState` API.
+
+use crate::ops::{self, DecodeState, SeqMixer};
+use crate::tensor::matmul::vecmat;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Byte vocabulary — raw bytes, as in the paper's Evo-style tokenization.
+pub const VOCAB: usize = 256;
+
+/// Operator codes accepted in a layout string (e.g. "SE-MR-MHA-LI").
+pub const LAYOUT_CODES: [&str; 8] =
+    ["SE", "MR", "LI", "MHA", "LA", "SSD", "DN", "MLSTM"];
+
+/// Construct one operator from its layout code.
+pub fn op_from_code(
+    rng: &mut Rng,
+    code: &str,
+    d: usize,
+    n_heads: usize,
+) -> Option<Box<dyn SeqMixer>> {
+    Some(match code {
+        "SE" => Box::new(ops::hyena::HyenaOp::se(rng, d)),
+        "MR" => Box::new(ops::hyena::HyenaOp::mr(rng, d)),
+        "LI" => Box::new(ops::hyena::HyenaOp::li(rng, d)),
+        "MHA" => Box::new(ops::mha::MhaOp::new(rng, d, n_heads)),
+        "LA" => Box::new(ops::linear_attn::LinearAttnOp::new(rng, d, n_heads)),
+        "SSD" => Box::new(ops::ssd::SsdOp::new(rng, d, n_heads)),
+        "DN" => Box::new(ops::deltanet::DeltaNetOp::new(rng, d, n_heads)),
+        "MLSTM" => Box::new(ops::mlstm::MlstmOp::new(rng, d, n_heads)),
+        _ => return None,
+    })
+}
+
+/// Byte-level multi-hybrid language model: embed -> residual mixer stack ->
+/// LM head. All layers share width `d`.
+pub struct HybridLm {
+    pub d: usize,
+    pub n_heads: usize,
+    layout: Vec<String>,
+    embed: Tensor,
+    head: Tensor,
+    layers: Vec<Box<dyn SeqMixer>>,
+}
+
+/// Per-stream model state: one `DecodeState` per layer plus the absolute
+/// position, the unit the serving arena admits and evicts.
+#[derive(Clone, Debug)]
+pub struct LmState {
+    pub pos: usize,
+    pub layers: Vec<DecodeState>,
+}
+
+impl LmState {
+    /// Total heap bytes across all layer states.
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|s| s.bytes()).sum()
+    }
+}
+
+impl HybridLm {
+    /// Build a model with the given width, head count and layer layout
+    /// (operator codes from `LAYOUT_CODES`). Errors on an unknown code.
+    pub fn new(
+        rng: &mut Rng,
+        d: usize,
+        n_heads: usize,
+        layout: &[&str],
+    ) -> Result<HybridLm, String> {
+        assert!(d % n_heads == 0, "width {d} not divisible by {n_heads} heads");
+        let mut layers = Vec::with_capacity(layout.len());
+        for code in layout {
+            let op = op_from_code(rng, code, d, n_heads)
+                .ok_or_else(|| format!("unknown operator code '{code}'"))?;
+            layers.push(op);
+        }
+        Ok(HybridLm {
+            d,
+            n_heads,
+            layout: layout.iter().map(|s| s.to_string()).collect(),
+            embed: Tensor::randn(rng, &[VOCAB, d], 0.5),
+            head: Tensor::randn(rng, &[d, VOCAB], (d as f32).powf(-0.5)),
+            layers,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layout_string(&self) -> String {
+        self.layout.join("-")
+    }
+
+    /// Fresh per-stream state at position 0.
+    pub fn state(&self) -> LmState {
+        LmState {
+            pos: 0,
+            layers: self.layers.iter().map(|op| op.state()).collect(),
+        }
+    }
+
+    /// Prefill a token block through every layer's blocked path. Returns
+    /// the logits at the final position (the next-token distribution).
+    pub fn prefill(&self, st: &mut LmState, tokens: &[u8]) -> Vec<f32> {
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        let l = tokens.len();
+        let mut x = Tensor::zeros(&[l, self.d]);
+        for (t, &tok) in tokens.iter().enumerate() {
+            x.row_mut(t).copy_from_slice(self.embed.row(tok as usize));
+        }
+        for (op, ls) in self.layers.iter().zip(st.layers.iter_mut()) {
+            let y = op.prefill(ls, &x);
+            x.add_assign(&y);
+        }
+        st.pos += l;
+        vecmat(x.row(l - 1), &self.head)
+    }
+
+    /// Decode one token: absorb `token`, return next-token logits.
+    pub fn step(&self, st: &mut LmState, token: u8) -> Vec<f32> {
+        let mut x = self.embed.row(token as usize).to_vec();
+        for (op, ls) in self.layers.iter().zip(st.layers.iter_mut()) {
+            let y = op.step(ls, &x);
+            for (xv, yv) in x.iter_mut().zip(&y) {
+                *xv += yv;
+            }
+        }
+        st.pos += 1;
+        vecmat(&x, &self.head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_matches_prefill_logits() {
+        let mut rng = Rng::new(0);
+        let model = HybridLm::new(&mut rng, 16, 2, &["SE", "LA"]).unwrap();
+        let tokens = b"ACGTACGTAC";
+        // Path A: prefill everything at once.
+        let mut sa = model.state();
+        let la = model.prefill(&mut sa, tokens);
+        // Path B: prefill a prefix, then step the rest.
+        let mut sb = model.state();
+        model.prefill(&mut sb, &tokens[..4]);
+        let mut lb = Vec::new();
+        for &t in &tokens[4..] {
+            lb = model.step(&mut sb, t);
+        }
+        assert_eq!(sa.pos, sb.pos);
+        let diff = la
+            .iter()
+            .zip(&lb)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-4, "prefill/step logit divergence {diff}");
+    }
+
+    #[test]
+    fn unknown_layout_code_is_an_error() {
+        let mut rng = Rng::new(1);
+        assert!(HybridLm::new(&mut rng, 16, 2, &["SE", "XX"]).is_err());
+    }
+
+    #[test]
+    fn every_layout_code_constructs() {
+        let mut rng = Rng::new(2);
+        for code in LAYOUT_CODES {
+            assert!(op_from_code(&mut rng, code, 16, 2).is_some(), "{code}");
+        }
+    }
+
+    #[test]
+    fn state_bytes_accounts_kv_growth() {
+        let mut rng = Rng::new(3);
+        let model = HybridLm::new(&mut rng, 16, 2, &["MHA", "SSD"]).unwrap();
+        let mut st = model.state();
+        model.prefill(&mut st, b"ACGTACGT");
+        let b8 = st.bytes();
+        model.step(&mut st, b'A');
+        assert!(st.bytes() > b8, "KV cache must grow per decoded token");
+    }
+}

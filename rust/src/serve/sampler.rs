@@ -1,0 +1,121 @@
+//! Token samplers for the serving engine — greedy argmax and top-k with
+//! temperature, both deterministic given the stream's `util::rng::Rng`.
+
+use crate::util::rng::Rng;
+
+/// Sampling policy applied to a logit vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampler {
+    /// Argmax (ties broken toward the lowest token id). Consumes no
+    /// randomness, so generations are schedule-independent.
+    Greedy,
+    /// Sample from the softmax over the `k` highest logits at the given
+    /// temperature. `k = 0` or `temperature <= 0` degrade to greedy.
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampler {
+    /// CLI-style constructor: `k = 0` means greedy.
+    pub fn from_options(top_k: usize, temperature: f32) -> Sampler {
+        if top_k == 0 || temperature <= 0.0 {
+            Sampler::Greedy
+        } else {
+            Sampler::TopK { k: top_k, temperature }
+        }
+    }
+
+    /// Draw one token id from `logits`.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> usize {
+        match *self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::TopK { k, temperature } => {
+                if k == 0 || temperature <= 0.0 {
+                    return argmax(logits);
+                }
+                let k = k.min(logits.len());
+                // Indices of the k highest logits, best first; ties toward
+                // the lower id for determinism.
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    logits[b].total_cmp(&logits[a]).then(a.cmp(&b))
+                });
+                idx.truncate(k);
+                let maxl = logits[idx[0]];
+                let weights: Vec<f32> = idx
+                    .iter()
+                    .map(|&i| ((logits[i] - maxl) / temperature).exp())
+                    .collect();
+                let total: f32 = weights.iter().sum();
+                let mut r = rng.f32() * total;
+                for (i, &w) in idx.iter().zip(&weights) {
+                    if r < w {
+                        return *i;
+                    }
+                    r -= w;
+                }
+                idx[k - 1]
+            }
+        }
+    }
+}
+
+fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max_with_low_tie() {
+        let mut rng = Rng::new(0);
+        let logits = [0.1, 2.0, 2.0, -1.0];
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn top1_equals_greedy() {
+        let mut rng = Rng::new(1);
+        let logits: Vec<f32> = (0..16).map(|i| ((i * 7) % 5) as f32).collect();
+        let s = Sampler::TopK { k: 1, temperature: 0.8 };
+        assert_eq!(s.sample(&logits, &mut rng), argmax(&logits));
+    }
+
+    #[test]
+    fn top_k_only_emits_top_candidates() {
+        let mut rng = Rng::new(2);
+        let mut logits = vec![0.0f32; 10];
+        logits[3] = 5.0;
+        logits[7] = 4.0;
+        let s = Sampler::TopK { k: 2, temperature: 1.0 };
+        for _ in 0..200 {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 3 || t == 7, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn zero_k_degrades_to_greedy() {
+        assert_eq!(Sampler::from_options(0, 1.0), Sampler::Greedy);
+        assert_eq!(Sampler::from_options(4, 0.0), Sampler::Greedy);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let s = Sampler::TopK { k: 8, temperature: 1.3 };
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            (0..50).map(|_| s.sample(&logits, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+}

@@ -70,13 +70,33 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// y = A @ x for A [m, k], x [k].
+/// y = A @ x for A [m, k], x of length k.
 pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
     let (m, k) = (a.rows(), a.cols());
     assert_eq!(x.len(), k);
     (0..m)
         .map(|i| a.row(i).iter().zip(x).map(|(p, q)| p * q).sum())
         .collect()
+}
+
+/// y = x @ W for a single row x of length k and row-major W (k rows, n
+/// cols). This is the decode-time projection kernel: it accumulates over k
+/// in the same ascending order as `matmul_into`, so a `step()` that projects
+/// one token reproduces the corresponding `forward()` row bit-for-bit.
+pub fn vecmat(x: &[f32], w: &Tensor) -> Vec<f32> {
+    let (k, n) = (w.rows(), w.cols());
+    assert_eq!(x.len(), k, "vecmat inner dims {} != {k}", x.len());
+    let mut y = vec![0.0f32; n];
+    for (kx, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w.data[kx * n..(kx + 1) * n];
+        for (yv, wv) in y.iter_mut().zip(wrow) {
+            *yv += xv * wv;
+        }
+    }
+    y
 }
 
 /// FLOPs of an [m,k] x [k,n] GEMM (multiply-adds counted as 2).
@@ -150,6 +170,21 @@ mod tests {
         let got = matmul_bt(&a, &b);
         let want = matmul(&a, &b.transpose2());
         assert!(got.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn vecmat_matches_matmul_rows_exactly() {
+        // Decode-path requirement: projecting one row must equal the
+        // corresponding row of the full GEMM bit-for-bit (same summation
+        // order), not just approximately.
+        let mut rng = Rng::new(11);
+        let x = Tensor::randn(&mut rng, &[5, 70], 1.0);
+        let w = Tensor::randn(&mut rng, &[70, 33], 1.0);
+        let full = matmul(&x, &w);
+        for t in 0..5 {
+            let row = vecmat(x.row(t), &w);
+            assert_eq!(row.as_slice(), full.row(t), "row {t}");
+        }
     }
 
     #[test]

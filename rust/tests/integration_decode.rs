@@ -1,0 +1,159 @@
+//! Streaming-decode integration: for every operator in `all_operators`,
+//! token-by-token `step()` must reproduce the full-sequence `forward()`,
+//! and blocked `prefill()` must hand off its state so decode can continue
+//! mid-sequence. This is the correctness backbone of the serving engine.
+
+use sh2::ops::{all_operators, SeqMixer};
+use sh2::serve::{BatchScheduler, HybridLm, Sampler};
+use sh2::tensor::Tensor;
+use sh2::util::rng::Rng;
+
+const D: usize = 16;
+const HEADS: usize = 2;
+const L: usize = 64;
+const TOL: f32 = 1e-4;
+
+fn setup(seed: u64) -> (Vec<Box<dyn SeqMixer>>, Tensor) {
+    let mut rng = Rng::new(seed);
+    let ops = all_operators(&mut rng, D, HEADS);
+    let x = Tensor::randn(&mut rng, &[L, D], 1.0);
+    (ops, x)
+}
+
+#[test]
+fn step_matches_forward_for_every_operator() {
+    let (ops, x) = setup(0);
+    for op in &ops {
+        let want = op.forward(&x);
+        let mut st = op.state();
+        let mut got = Tensor::zeros(&[L, D]);
+        for t in 0..L {
+            let row = op.step(&mut st, x.row(t));
+            got.row_mut(t).copy_from_slice(&row);
+        }
+        assert_eq!(st.pos(), L, "{}", op.name());
+        assert!(
+            got.allclose(&want, TOL),
+            "operator {}: step/forward diff {}",
+            op.name(),
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn prefill_matches_forward_for_every_operator() {
+    // From a fresh state, the blocked prefill routes through the same batch
+    // kernels as forward and must agree to near machine precision.
+    let (ops, x) = setup(1);
+    for op in &ops {
+        let want = op.forward(&x);
+        let mut st = op.state();
+        let got = op.prefill(&mut st, &x);
+        assert_eq!(st.pos(), L, "{}", op.name());
+        assert!(
+            got.allclose(&want, 1e-5),
+            "operator {}: prefill/forward diff {}",
+            op.name(),
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn prefill_then_step_matches_forward() {
+    // The state-handoff contract: prefill a prompt, then decode — outputs
+    // must continue the full-sequence computation.
+    let (ops, x) = setup(2);
+    let split = 40;
+    for op in &ops {
+        let want = op.forward(&x);
+        let mut st = op.state();
+        let head = op.prefill(&mut st, &x.slice_rows(0, split));
+        assert_eq!(st.pos(), split, "{}", op.name());
+        let mut got = Tensor::zeros(&[L, D]);
+        for t in 0..split {
+            got.row_mut(t).copy_from_slice(head.row(t));
+        }
+        for t in split..L {
+            let row = op.step(&mut st, x.row(t));
+            got.row_mut(t).copy_from_slice(&row);
+        }
+        assert!(
+            got.allclose(&want, TOL),
+            "operator {}: prefill+step/forward diff {}",
+            op.name(),
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_forward() {
+    // Prefill in uneven chunks (continuous-batching admission pattern);
+    // every operator must carry state across chunk boundaries.
+    let (ops, x) = setup(3);
+    let cuts = [0usize, 17, 24, 56, L];
+    for op in &ops {
+        let want = op.forward(&x);
+        let mut st = op.state();
+        let mut parts = Vec::new();
+        for w in cuts.windows(2) {
+            parts.push(op.prefill(&mut st, &x.slice_rows(w[0], w[1])));
+        }
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let got = Tensor::vcat(&refs);
+        assert_eq!(st.pos(), L, "{}", op.name());
+        assert!(
+            got.allclose(&want, TOL),
+            "operator {}: chunked-prefill/forward diff {}",
+            op.name(),
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn fixed_state_operators_stay_constant_size() {
+    // Once past the longest FIR window (Hyena-MR carries l_h - 1 = 127
+    // rows), every operator except MHA must hold O(1) state regardless of
+    // position; MHA's KV cache keeps growing.
+    let mut rng = Rng::new(4);
+    let ops = all_operators(&mut rng, D, HEADS);
+    let x = Tensor::randn(&mut rng, &[300, D], 1.0);
+    for op in &ops {
+        let mut st = op.state();
+        op.prefill(&mut st, &x.slice_rows(0, 150));
+        let b150 = st.bytes();
+        op.prefill(&mut st, &x.slice_rows(150, 300));
+        let b300 = st.bytes();
+        if op.name() == "MHA" {
+            assert!(b300 > b150, "MHA KV cache must grow");
+        } else {
+            assert_eq!(b300, b150, "{}: state grew {} -> {}", op.name(), b150, b300);
+        }
+    }
+}
+
+#[test]
+fn served_generation_is_reproducible_end_to_end() {
+    // Full stack: model + sampler + scheduler, twice, same bytes out.
+    let build = || {
+        let mut rng = Rng::new(7);
+        HybridLm::new(&mut rng, D, HEADS, &["SE", "MR", "MHA", "LI"]).unwrap()
+    };
+    let run = |m: &HybridLm| {
+        let mut s =
+            BatchScheduler::new(m, Sampler::TopK { k: 16, temperature: 0.9 }, 2, 1 << 20, 11);
+        s.submit(b"ACGTGGCCAATT".to_vec(), 16);
+        s.submit(b"TTGACA".to_vec(), 16);
+        s.run()
+    };
+    let (ma, mb) = (build(), build());
+    let (a, b) = (run(&ma), run(&mb));
+    assert_eq!(a.len(), 2);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.output, y.output);
+        assert_eq!(x.output.len(), 16);
+    }
+}

@@ -1,7 +1,8 @@
 //! End-to-end integration over the PJRT runtime: AOT artifacts -> rust
-//! training loop. Requires `make artifacts` (tiny config); tests
-//! self-skip (with a loud message) when artifacts are missing so `cargo
-//! test` stays usable before the first artifact build.
+//! training loop. Requires the `pjrt` cargo feature plus `make artifacts`
+//! (tiny config); tests self-skip (with a loud message) when artifacts are
+//! missing so `cargo test` stays usable before the first artifact build.
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 
