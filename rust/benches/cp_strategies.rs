@@ -18,7 +18,7 @@ use sh2::util::bench::Table;
 use sh2::util::rng::Rng;
 
 fn main() {
-    let quick = std::env::var("SH2_BENCH_QUICK").is_ok();
+    let quick = sh2::util::bench::quick_requested();
     let (l, d) = if quick { (1024, 64) } else { (4096, 256) };
     let n = 4;
     let mut rng = Rng::new(0);

@@ -7,14 +7,21 @@
 //! is flat in context length (growth ratio ~1x); MHA grows linearly with
 //! its KV cache; the naive re-forward baseline grows linearly for everyone
 //! (quadratically for MHA).
+//!
+//! The hyena `forward`/`prefill` paths dispatch their inner convolution
+//! through `conv::planner` — set `SH2_CONV_FORCE=direct|fft|two-stage` to
+//! pin an algorithm for before/after comparisons, and `SH2_PLAN_CACHE` to
+//! load a tuned plan cache. Quick mode (`BENCH_QUICK=1`) is the CI smoke
+//! configuration; `SH2_BENCH_JSON=path` writes `sh2-bench-v1` records for
+//! the regression gate.
 
 use sh2::ops::all_operators;
 use sh2::tensor::Tensor;
-use sh2::util::bench::{black_box, fmt_secs, Bencher, Table};
+use sh2::util::bench::{black_box, fmt_secs, quick_requested, BenchLog, Bencher, Table};
 use sh2::util::rng::Rng;
 
 fn main() {
-    let quick = std::env::var("SH2_BENCH_QUICK").is_ok();
+    let quick = quick_requested();
     let b = if quick { Bencher::quick() } else { Bencher::default() };
     let mut rng = Rng::new(0);
     let d = 64; // paper: 4096 (H100); scaled for the CPU testbed
@@ -26,6 +33,7 @@ fn main() {
     // MHA's KV cache) to well under 1% of the measurement while keeping the
     // effective context within ~2% of the nominal one.
     let steps_per_sample = 64;
+    let mut log = BenchLog::new();
 
     let mut header = vec!["operator".to_string()];
     for &l in ctxs {
@@ -55,6 +63,13 @@ fn main() {
                     black_box(op.step(&mut s, row));
                 }
             });
+            // Record the *per-token* cost so the regression gate compares
+            // like against like across quick/full runs.
+            let mut per_token = r.clone();
+            per_token.secs.mean /= steps_per_sample as f64;
+            per_token.secs.p50 /= steps_per_sample as f64;
+            per_token.secs.p90 /= steps_per_sample as f64;
+            log.push_as(&format!("decode/{}/ctx{l}", op.name()), &per_token);
             per_tok.push(r.secs.mean / steps_per_sample as f64);
             cells.push(fmt_secs(r.secs.mean / steps_per_sample as f64));
         }
@@ -66,6 +81,7 @@ fn main() {
         let rf = b.bench(op.name(), || {
             black_box(op.forward(&x));
         });
+        log.push_as(&format!("reforward/{}/ctx{l}", op.name()), &rf);
         cells.push(fmt_secs(rf.secs.mean));
         t.row(cells);
     }
@@ -76,4 +92,7 @@ fn main() {
          (flat per-token decode); MHA ~{span}x (KV attention); naive re-forward \
          grows >= {span}x for every operator."
     );
+    if let Some(path) = log.write_env() {
+        println!("bench records ({}) -> {path}", log.len());
+    }
 }

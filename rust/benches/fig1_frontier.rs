@@ -10,7 +10,7 @@ use sh2::util::bench::{black_box, Bencher, Table};
 use sh2::util::rng::Rng;
 
 fn main() {
-    let quick = std::env::var("SH2_BENCH_QUICK").is_ok();
+    let quick = sh2::util::bench::quick_requested();
     // Axis 1: modeled training throughput at 7B/16K (tokens/s/GPU).
     let eff = Efficiency::default();
     let l = 16_384usize;

@@ -1,20 +1,25 @@
 //! Fig 3.1: Hyena-MR (filter length 128) — baseline direct convolution vs
-//! the two-stage blocked kernel. Measured latency + effective GFLOP/s
-//! across sequence lengths. Paper shape: the blocked kernel wins at every
-//! length, by a growing margin (tensor-core reuse of H0/H1; here, GEMM
-//! cache reuse).
+//! the two-stage blocked kernel, plus the `conv::planner` dispatch row
+//! (which must track the per-shape winner: the planner-dispatched conv is
+//! never slower than the worst hard-coded algorithm). Measured latency +
+//! effective GFLOP/s across sequence lengths. Paper shape: the blocked
+//! kernel wins at every length, by a growing margin (tensor-core reuse of
+//! H0/H1; here, GEMM cache reuse).
 //!
 //! Widths scaled from the paper's 4096 for the CPU testbed (documented).
+//! `BENCH_QUICK=1` is the CI smoke configuration; `SH2_BENCH_JSON=path`
+//! writes `sh2-bench-v1` records for the regression gate; `SH2_PLAN_CACHE`
+//! loads a tuned plan cache into the dispatcher.
 
 use sh2::conv::direct::causal_conv_direct;
 use sh2::conv::two_stage::two_stage_conv;
-use sh2::conv::{CausalConv, GroupedFilter};
+use sh2::conv::{planned_conv, CausalConv, GroupedFilter};
 use sh2::tensor::Tensor;
-use sh2::util::bench::{black_box, fmt_secs, Bencher, Table};
+use sh2::util::bench::{black_box, fmt_secs, quick_requested, BenchLog, Bencher, Table};
 use sh2::util::rng::Rng;
 
 fn main() {
-    let quick = std::env::var("SH2_BENCH_QUICK").is_ok();
+    let quick = quick_requested();
     let b = if quick { Bencher::quick() } else { Bencher::default() };
     let mut rng = Rng::new(0);
     let d = 256; // paper: 4096 (H100); scaled for CPU
@@ -22,11 +27,12 @@ fn main() {
     let lb = 128;
     let groups = d / 16;
     let h = GroupedFilter::random(&mut rng, groups, lh, 16);
+    let mut log = BenchLog::new();
 
     let seqs: &[usize] = if quick { &[512, 2048] } else { &[512, 2048, 8192, 32768] };
     let mut t = Table::new(
-        &format!("Fig 3.1: Hyena-MR conv (l_h=128, d={d}), direct vs two-stage"),
-        &["seq_len", "direct", "two-stage", "speedup", "2s GFLOP/s"],
+        &format!("Fig 3.1: Hyena-MR conv (l_h=128, d={d}), direct vs two-stage vs planner"),
+        &["seq_len", "direct", "two-stage", "planner", "speedup", "2s GFLOP/s"],
     );
     for &l in seqs {
         let x = Tensor::randn(&mut rng, &[l, d], 1.0);
@@ -36,15 +42,25 @@ fn main() {
         let rb = b.bench("two-stage", || {
             black_box(two_stage_conv(&x, &h, lb));
         });
+        let rp = b.bench("planner", || {
+            black_box(planned_conv(&x, &h));
+        });
+        log.push_as(&format!("fig31/direct/l{l}"), &rd);
+        log.push_as(&format!("fig31/two-stage/l{l}"), &rb);
+        log.push_as(&format!("fig31/planner/l{l}"), &rp);
         let ts = sh2::conv::two_stage::TwoStageConv::with_block(lb);
         let gflops = ts.flops(l, d, lh) / rb.secs.mean / 1e9;
         t.row(vec![
             format!("{l}"),
             fmt_secs(rd.secs.mean),
             fmt_secs(rb.secs.mean),
+            fmt_secs(rp.secs.mean),
             format!("{:.2}x", rd.secs.mean / rb.secs.mean),
             format!("{gflops:.1}"),
         ]);
     }
     t.print();
+    if let Some(path) = log.write_env() {
+        println!("bench records ({}) -> {path}", log.len());
+    }
 }

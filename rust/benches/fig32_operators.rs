@@ -13,7 +13,7 @@ use sh2::util::bench::{black_box, fmt_secs, Bencher, Table};
 use sh2::util::rng::Rng;
 
 fn main() {
-    let quick = std::env::var("SH2_BENCH_QUICK").is_ok();
+    let quick = sh2::util::bench::quick_requested();
     let b = if quick { Bencher::quick() } else { Bencher::default() };
     let mut rng = Rng::new(0);
     let d = if quick { 64 } else { 128 }; // paper: 4096

@@ -25,15 +25,17 @@ pub fn causal_conv_direct(x: &Tensor, h: &GroupedFilter) -> Tensor {
     y
 }
 
-/// Same semantics but with the first `history` rows of `halo` logically
-/// prepended (used by p2p context parallelism: `halo` is the tail of the
-/// previous rank's shard).
-pub fn causal_conv_with_history(x: &Tensor, h: &GroupedFilter, halo: &Tensor) -> Tensor {
-    let (l, d) = (x.rows(), x.cols());
+/// Add the boundary ("halo") contribution of `halo` — the rows logically
+/// preceding `y`'s input — to the first `l_h - 1` rows of `y`, which must
+/// hold a zero-padded causal convolution. Shared by the streaming-prefill
+/// paths (direct, two-stage, planner-dispatched) and the p2p CP fix-up.
+pub fn add_halo_correction(y: &mut Tensor, h: &GroupedFilter, halo: &Tensor) {
+    let (l, d) = (y.rows(), y.cols());
     let hist = halo.rows();
     let lh = h.filter_len();
-    let mut y = causal_conv_direct(x, h);
-    // Add contributions of halo rows to the first lh-1 outputs.
+    if hist == 0 {
+        return;
+    }
     for t in 0..l.min(lh.saturating_sub(1)) {
         for k in (t + 1)..lh {
             // Input index t - k < 0 maps into the halo: halo row hist + t - k.
@@ -48,6 +50,14 @@ pub fn causal_conv_with_history(x: &Tensor, h: &GroupedFilter, halo: &Tensor) ->
             }
         }
     }
+}
+
+/// Same semantics but with the first `history` rows of `halo` logically
+/// prepended (used by p2p context parallelism: `halo` is the tail of the
+/// previous rank's shard).
+pub fn causal_conv_with_history(x: &Tensor, h: &GroupedFilter, halo: &Tensor) -> Tensor {
+    let mut y = causal_conv_direct(x, h);
+    add_halo_correction(&mut y, h, halo);
     y
 }
 

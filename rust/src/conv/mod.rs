@@ -8,8 +8,11 @@
 pub mod backward;
 pub mod direct;
 pub mod fft_conv;
+pub mod planner;
 pub mod toeplitz;
 pub mod two_stage;
+
+pub use planner::{planned_conv, planned_prefill, ConvAlgo, ConvPlan, ConvPlanner, ConvShape};
 
 use crate::tensor::Tensor;
 

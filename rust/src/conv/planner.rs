@@ -1,0 +1,659 @@
+//! Cost-model-driven convolution autotuner (DESIGN.md §Autotuning).
+//!
+//! The paper's headline efficiency result comes from matching the conv
+//! algorithm to the shape regime: direct for short filters, the two-stage
+//! blocked GEMM kernel for medium filters, FFT once the filter spans the
+//! sequence (§3, Fig 3.1/3.2). [`ConvPlanner`] makes that choice at
+//! runtime: for each [`ConvShape`] it ranks direct vs FFT vs two-stage
+//! (including the two-stage chunk length) with the analytic
+//! [`ConvCostModel`], optionally sharpened by on-machine microbenchmark
+//! calibration, and memoizes the winner in a process-wide, JSON-persistable
+//! plan cache so the hot path pays a single map lookup.
+//!
+//! `sh2 tune` calibrates and writes the cache; `generate`/`serve` and the
+//! benches load it (`--plan-cache` / `SH2_PLAN_CACHE`). `SH2_CONV_FORCE`
+//! (`direct` | `fft` | `two-stage[:block]`) overrides every decision — the
+//! lever behind the before/after bench tables.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+
+use super::direct::causal_conv_direct;
+use super::fft_conv::fft_causal_conv;
+use super::toeplitz::two_stage_ok;
+use super::two_stage::two_stage_conv;
+use super::{FirTail, GroupedFilter};
+use crate::costmodel::{conv_flops_direct, conv_flops_fft, conv_flops_two_stage, ConvCostModel};
+use crate::tensor::fft::next_pow2;
+use crate::tensor::Tensor;
+use crate::util::bench::Bencher;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Candidate two-stage chunk lengths. Capped at 512: beyond that the
+/// [l_b x l_b] Toeplitz factors stop fitting in cache (and in memory at
+/// Hyena-LI lengths), so longer filters fall to FFT — exactly the paper's
+/// regime split.
+const TWO_STAGE_BLOCKS: [usize; 6] = [16, 32, 64, 128, 256, 512];
+
+/// The shape key a convolution is planned under. `seq_len` is bucketed to
+/// the next power of two by [`ConvShape::bucket`] so a streaming server
+/// with ragged prompt lengths hits a bounded number of cache entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ConvShape {
+    pub batch: usize,
+    pub channels: usize,
+    pub seq_len: usize,
+    pub filter_len: usize,
+    pub group_size: usize,
+}
+
+impl ConvShape {
+    /// Shape of convolving `x` ([l, d], batch 1) with the filter bank `h`.
+    pub fn of(x: &Tensor, h: &GroupedFilter) -> ConvShape {
+        ConvShape {
+            batch: 1,
+            channels: x.cols(),
+            seq_len: x.rows(),
+            filter_len: h.filter_len(),
+            group_size: h.group_size,
+        }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        (self.channels / self.group_size.max(1)).max(1)
+    }
+
+    /// Cache key: identical shape with `seq_len` rounded up to a power of
+    /// two (filter length is kept exact — it decides the algorithm regime).
+    pub fn bucket(&self) -> ConvShape {
+        ConvShape { seq_len: next_pow2(self.seq_len.max(1)), ..*self }
+    }
+}
+
+/// One convolution algorithm choice, with everything needed to run it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvAlgo {
+    Direct,
+    Fft,
+    TwoStage { block: usize },
+}
+
+impl ConvAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvAlgo::Direct => "direct",
+            ConvAlgo::Fft => "fft",
+            ConvAlgo::TwoStage { .. } => "two-stage",
+        }
+    }
+
+    /// Forward FLOPs of this algorithm at the given shape (for fabric
+    /// accounting and calibration).
+    pub fn flops(&self, shape: &ConvShape) -> f64 {
+        let (l, d, lh) = (shape.seq_len, shape.channels, shape.filter_len);
+        match self {
+            ConvAlgo::Direct => conv_flops_direct(l, d, lh),
+            ConvAlgo::Fft => conv_flops_fft(l, d, lh),
+            ConvAlgo::TwoStage { block } => {
+                conv_flops_two_stage(l, d, shape.num_groups(), *block)
+            }
+        }
+    }
+}
+
+/// Execute one causal conv under an explicit algorithm choice.
+pub fn execute(x: &Tensor, h: &GroupedFilter, algo: ConvAlgo) -> Tensor {
+    match algo {
+        ConvAlgo::Direct => causal_conv_direct(x, h),
+        ConvAlgo::Fft => fft_causal_conv(x, h),
+        ConvAlgo::TwoStage { block } => two_stage_conv(x, h, block),
+    }
+}
+
+/// A cached planning decision.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvPlan {
+    pub algo: ConvAlgo,
+    /// Predicted (analytic) or measured (calibrated) seconds per call.
+    pub secs: f64,
+    /// True when `secs` comes from an on-machine microbenchmark.
+    pub calibrated: bool,
+}
+
+/// Hit/miss counters for observability (and the cache-hit unit test).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlannerStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub calibrations: usize,
+}
+
+struct PlannerInner {
+    cache: BTreeMap<ConvShape, ConvPlan>,
+    model: ConvCostModel,
+    stats: PlannerStats,
+}
+
+/// The autotuner. Cheap to query (one `Mutex` + `BTreeMap` lookup on the
+/// hot path), safe to share across rank threads, and persistable to JSON.
+pub struct ConvPlanner {
+    inner: Mutex<PlannerInner>,
+    force: Option<ConvAlgo>,
+}
+
+impl Default for ConvPlanner {
+    fn default() -> Self {
+        ConvPlanner::new()
+    }
+}
+
+impl ConvPlanner {
+    /// Planner with the default analytic model and no forced algorithm.
+    pub fn new() -> ConvPlanner {
+        ConvPlanner {
+            inner: Mutex::new(PlannerInner {
+                cache: BTreeMap::new(),
+                model: ConvCostModel::default(),
+                stats: PlannerStats::default(),
+            }),
+            force: None,
+        }
+    }
+
+    /// Planner honoring the `SH2_CONV_FORCE` override
+    /// (`direct` | `fft` | `two-stage[:block]`).
+    pub fn from_env() -> ConvPlanner {
+        let mut p = ConvPlanner::new();
+        if let Ok(v) = std::env::var("SH2_CONV_FORCE") {
+            p.force = parse_force(&v);
+            if p.force.is_none() && !v.is_empty() {
+                log::warn!("SH2_CONV_FORCE={v} not understood; ignoring");
+            }
+        }
+        p
+    }
+
+    /// Algorithm candidates for a shape: direct and FFT always, two-stage
+    /// at every tile-friendly block satisfying l_h <= l_b + 1.
+    fn candidates(shape: &ConvShape) -> Vec<ConvAlgo> {
+        let mut cands = vec![ConvAlgo::Direct, ConvAlgo::Fft];
+        for &b in &TWO_STAGE_BLOCKS {
+            if two_stage_ok(shape.filter_len, b) {
+                cands.push(ConvAlgo::TwoStage { block: b });
+            }
+        }
+        cands
+    }
+
+    fn predict(model: &ConvCostModel, shape: &ConvShape, algo: ConvAlgo) -> f64 {
+        let (l, d, lh) = (shape.seq_len, shape.channels, shape.filter_len);
+        match algo {
+            ConvAlgo::Direct => model.predict_direct(l, d, lh),
+            ConvAlgo::Fft => model.predict_fft(l, d, lh),
+            ConvAlgo::TwoStage { block } => {
+                model.predict_two_stage(l, d, shape.num_groups(), block)
+            }
+        }
+    }
+
+    /// The plan for a shape: forced algorithm if set, else cached decision,
+    /// else analytic argmin over candidates (cached for next time).
+    pub fn plan(&self, shape: &ConvShape) -> ConvPlan {
+        let key = shape.bucket();
+        if let Some(algo) = self.force {
+            // A forced two-stage block cannot cover every filter
+            // (l_h <= l_b + 1 is a hard correctness condition — dispatching
+            // anyway would panic mid-bench on the Hyena-LI shapes); fall
+            // back to direct there so `SH2_CONV_FORCE=two-stage` still runs
+            // the whole operator zoo.
+            let algo = match algo {
+                ConvAlgo::TwoStage { block } if !two_stage_ok(key.filter_len, block) => {
+                    ConvAlgo::Direct
+                }
+                a => a,
+            };
+            return ConvPlan { algo, secs: 0.0, calibrated: false };
+        }
+        let mut inner = self.inner.lock().expect("planner lock");
+        if let Some(plan) = inner.cache.get(&key) {
+            inner.stats.hits += 1;
+            return *plan;
+        }
+        inner.stats.misses += 1;
+        let mut best: Option<ConvPlan> = None;
+        for algo in Self::candidates(&key) {
+            let secs = Self::predict(&inner.model, &key, algo);
+            if best.map(|b| secs < b.secs).unwrap_or(true) {
+                best = Some(ConvPlan { algo, secs, calibrated: false });
+            }
+        }
+        let plan = best.expect("at least direct and fft are always candidates");
+        inner.cache.insert(key, plan);
+        plan
+    }
+
+    /// Plan + execute in one call — the planner-dispatched conv.
+    pub fn conv(&self, x: &Tensor, h: &GroupedFilter) -> Tensor {
+        let plan = self.plan(&ConvShape::of(x, h));
+        execute(x, h, plan.algo)
+    }
+
+    /// Microbenchmark candidates for a shape on this machine, cache the
+    /// measured winner, and fold the achieved FLOP rates back into the
+    /// analytic model so *uncalibrated* shapes also benefit. Candidates the
+    /// analytic model already rules out by 30x (or that would take > 2 s
+    /// per call — e.g. the quadratic direct conv at Hyena-LI lengths) are
+    /// skipped rather than timed; the analytically-best candidate is always
+    /// measured. Returns the (algo, measured seconds) pairs.
+    pub fn calibrate_shape(&self, shape: &ConvShape, bencher: &Bencher) -> Vec<(ConvAlgo, f64)> {
+        let key = shape.bucket();
+        let mut rng = Rng::new(0x7u64 ^ (key.seq_len as u64) ^ ((key.filter_len as u64) << 20));
+        let x = Tensor::randn(&mut rng, &[key.seq_len, key.channels], 1.0);
+        let h = GroupedFilter::random(&mut rng, key.num_groups(), key.filter_len, key.group_size);
+        let cands = Self::candidates(&key);
+        let preds: Vec<f64> = {
+            let inner = self.inner.lock().expect("planner lock");
+            cands.iter().map(|&a| Self::predict(&inner.model, &key, a)).collect()
+        };
+        let best_idx = preds
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).expect("finite predictions"))
+            .map(|(i, _)| i)
+            .expect("candidates are never empty");
+        let mut measured: Vec<(ConvAlgo, f64)> = Vec::new();
+        for (i, &algo) in cands.iter().enumerate() {
+            if i != best_idx && (preds[i] > 30.0 * preds[best_idx] || preds[i] > 2.0) {
+                continue;
+            }
+            let r = bencher.bench(algo.name(), || {
+                crate::util::bench::black_box(execute(&x, &h, algo));
+            });
+            measured.push((algo, r.secs.p50));
+        }
+        let mut inner = self.inner.lock().expect("planner lock");
+        for &(algo, secs) in &measured {
+            let flops = algo.flops(&key);
+            let rate = match algo {
+                ConvAlgo::Direct => &mut inner.model.direct_flops_per_s,
+                ConvAlgo::Fft => &mut inner.model.fft_flops_per_s,
+                ConvAlgo::TwoStage { .. } => &mut inner.model.two_stage_flops_per_s,
+            };
+            ConvCostModel::observe(rate, flops, secs);
+        }
+        let &(algo, secs) = measured
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite bench times"))
+            .expect("candidates are never empty");
+        inner.cache.insert(key, ConvPlan { algo, secs, calibrated: true });
+        inner.stats.calibrations += 1;
+        measured
+    }
+
+    /// Pre-plan (analytic, no benchmarking) a set of shapes so a serving
+    /// hot path never takes the cache-miss branch.
+    pub fn warm(&self, shapes: &[ConvShape]) {
+        for s in shapes {
+            self.plan(s);
+        }
+    }
+
+    pub fn stats(&self) -> PlannerStats {
+        self.inner.lock().expect("planner lock").stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("planner lock").cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of every cached (shape, plan) pair, sorted by shape.
+    pub fn entries(&self) -> Vec<(ConvShape, ConvPlan)> {
+        let inner = self.inner.lock().expect("planner lock");
+        inner.cache.iter().map(|(s, p)| (*s, *p)).collect()
+    }
+
+    // -- persistence --------------------------------------------------------
+
+    /// Serialize the cache + calibrated model to the plan-cache JSON format
+    /// (`sh2-plan-cache-v1`).
+    pub fn to_json(&self) -> Json {
+        let inner = self.inner.lock().expect("planner lock");
+        let entries: Vec<Json> = inner
+            .cache
+            .iter()
+            .map(|(s, p)| {
+                let block = match p.algo {
+                    ConvAlgo::TwoStage { block } => block,
+                    _ => 0,
+                };
+                Json::obj(vec![
+                    ("batch", Json::num(s.batch as f64)),
+                    ("channels", Json::num(s.channels as f64)),
+                    ("seq_len", Json::num(s.seq_len as f64)),
+                    ("filter_len", Json::num(s.filter_len as f64)),
+                    ("group_size", Json::num(s.group_size as f64)),
+                    ("algo", Json::str(p.algo.name())),
+                    ("block", Json::num(block as f64)),
+                    ("secs", Json::num(p.secs)),
+                    ("calibrated", Json::Bool(p.calibrated)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("sh2-plan-cache-v1")),
+            (
+                "model",
+                Json::obj(vec![
+                    ("direct_flops_per_s", Json::num(inner.model.direct_flops_per_s)),
+                    ("two_stage_flops_per_s", Json::num(inner.model.two_stage_flops_per_s)),
+                    ("fft_flops_per_s", Json::num(inner.model.fft_flops_per_s)),
+                ]),
+            ),
+            ("entries", Json::arr(entries)),
+        ])
+    }
+
+    /// Merge a plan-cache JSON document into this planner (loaded entries
+    /// overwrite same-shape analytic ones; the calibrated model replaces
+    /// the default priors).
+    pub fn merge_json(&self, j: &Json) -> Result<usize, String> {
+        if j.get("schema").and_then(Json::as_str) != Some("sh2-plan-cache-v1") {
+            return Err("not an sh2-plan-cache-v1 document".into());
+        }
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_array)
+            .ok_or("missing 'entries' array")?;
+        let mut inner = self.inner.lock().expect("planner lock");
+        if let Some(m) = j.get("model") {
+            let rate = |k: &str| m.get(k).and_then(Json::as_f64).filter(|r| *r > 0.0);
+            if let Some(r) = rate("direct_flops_per_s") {
+                inner.model.direct_flops_per_s = r;
+            }
+            if let Some(r) = rate("two_stage_flops_per_s") {
+                inner.model.two_stage_flops_per_s = r;
+            }
+            if let Some(r) = rate("fft_flops_per_s") {
+                inner.model.fft_flops_per_s = r;
+            }
+        }
+        let mut n = 0;
+        for e in entries {
+            let num = |k: &str| {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("entry missing '{k}'"))
+            };
+            let shape = ConvShape {
+                batch: num("batch")?,
+                channels: num("channels")?,
+                seq_len: num("seq_len")?,
+                filter_len: num("filter_len")?,
+                group_size: num("group_size")?,
+            };
+            let algo = match e.get("algo").and_then(Json::as_str) {
+                Some("direct") => ConvAlgo::Direct,
+                Some("fft") => ConvAlgo::Fft,
+                Some("two-stage") => {
+                    let block = num("block")?;
+                    if !two_stage_ok(shape.filter_len, block) {
+                        return Err(format!(
+                            "plan-cache entry violates the two-stage condition: \
+                             l_h={} l_b={block}",
+                            shape.filter_len
+                        ));
+                    }
+                    ConvAlgo::TwoStage { block }
+                }
+                other => return Err(format!("unknown algo {other:?}")),
+            };
+            let secs = e.get("secs").and_then(Json::as_f64).unwrap_or(0.0);
+            let calibrated = e.get("calibrated").and_then(Json::as_bool).unwrap_or(false);
+            inner.cache.insert(shape.bucket(), ConvPlan { algo, secs, calibrated });
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Write the plan cache to `path` as JSON.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    /// Load a plan-cache file into this planner. Returns entries merged.
+    pub fn load(&self, path: &Path) -> Result<usize, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        self.merge_json(&j)
+    }
+}
+
+/// The process-wide planner every conv call site dispatches through. On
+/// first touch it honors `SH2_CONV_FORCE` and auto-loads the plan cache
+/// named by `SH2_PLAN_CACHE` (if the file exists).
+pub fn global() -> &'static ConvPlanner {
+    static GLOBAL: OnceLock<ConvPlanner> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let p = ConvPlanner::from_env();
+        if let Ok(path) = std::env::var("SH2_PLAN_CACHE") {
+            let path = Path::new(&path);
+            if path.exists() {
+                match p.load(path) {
+                    Ok(n) => log::info!("plan cache: {n} entries from {}", path.display()),
+                    Err(e) => log::warn!("plan cache ignored: {e}"),
+                }
+            }
+        }
+        p
+    })
+}
+
+/// Planner-dispatched causal conv through the process-wide planner — the
+/// drop-in replacement for hard-coded `causal_conv_direct` /
+/// `fft_causal_conv` / `two_stage_conv` call sites.
+pub fn planned_conv(x: &Tensor, h: &GroupedFilter) -> Tensor {
+    global().conv(x, h)
+}
+
+/// Planner-dispatched streaming prefill: convolve a prompt chunk with the
+/// planned algorithm, correct the first `l_h - 1` outputs with the carried
+/// history, and hand the chunk tail back to the decode state — the
+/// algorithm-generic form of `two_stage::two_stage_prefill`.
+pub fn planned_prefill(x: &Tensor, h: &GroupedFilter, tail: &mut FirTail) -> Tensor {
+    let plan = global().plan(&ConvShape::of(x, h));
+    let mut y = execute(x, h, plan.algo);
+    super::direct::add_halo_correction(&mut y, h, &tail.as_tensor());
+    tail.absorb(x);
+    y
+}
+
+fn parse_force(v: &str) -> Option<ConvAlgo> {
+    match v {
+        "direct" => Some(ConvAlgo::Direct),
+        "fft" => Some(ConvAlgo::Fft),
+        "two-stage" | "two_stage" => Some(ConvAlgo::TwoStage { block: 128 }),
+        other => {
+            let rest = other
+                .strip_prefix("two-stage:")
+                .or_else(|| other.strip_prefix("two_stage:"))?;
+            rest.parse().ok().map(|block| ConvAlgo::TwoStage { block })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn plans_follow_the_paper_regimes() {
+        let p = ConvPlanner::new();
+        let shape = |channels, seq_len, filter_len| ConvShape {
+            batch: 1,
+            channels,
+            seq_len,
+            filter_len,
+            group_size: 16,
+        };
+        // Short explicit filter (Hyena-SE): time-domain, never FFT.
+        assert_ne!(p.plan(&shape(256, 4096, 7)).algo, ConvAlgo::Fft);
+        // Medium filter (Hyena-MR): the blocked kernel at the paper's l_b.
+        assert_eq!(p.plan(&shape(256, 8192, 128)).algo, ConvAlgo::TwoStage { block: 128 });
+        // Sequence-length filter (Hyena-LI) at long l: FFT.
+        assert_eq!(p.plan(&shape(64, 65_536, 65_536)).algo, ConvAlgo::Fft);
+        // ...but at short l the quadratic direct conv is cheaper (H3 obs).
+        assert_ne!(p.plan(&shape(64, 64, 64)).algo, ConvAlgo::Fft);
+    }
+
+    #[test]
+    fn cache_hits_on_second_call_and_buckets_seq_len() {
+        let p = ConvPlanner::new();
+        let s = ConvShape { batch: 1, channels: 32, seq_len: 1000, filter_len: 9, group_size: 4 };
+        let first = p.plan(&s);
+        assert_eq!(p.stats().misses, 1);
+        assert_eq!(p.stats().hits, 0);
+        let second = p.plan(&s);
+        assert_eq!(p.stats().hits, 1, "second identical call must hit");
+        assert_eq!(first.algo, second.algo);
+        // 1000 and 700 share the 1024 bucket; 5000 does not.
+        p.plan(&ConvShape { seq_len: 700, ..s });
+        assert_eq!(p.stats().hits, 2);
+        p.plan(&ConvShape { seq_len: 5000, ..s });
+        assert_eq!(p.stats().misses, 2);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn save_load_round_trips_and_loaded_plans_hit() {
+        let p = ConvPlanner::new();
+        let shapes = [
+            ConvShape { batch: 1, channels: 64, seq_len: 512, filter_len: 7, group_size: 1 },
+            ConvShape { batch: 1, channels: 64, seq_len: 2048, filter_len: 128, group_size: 16 },
+            ConvShape { batch: 1, channels: 32, seq_len: 4096, filter_len: 4096, group_size: 16 },
+        ];
+        for s in &shapes {
+            p.plan(s);
+        }
+        let path = std::env::temp_dir()
+            .join(format!("sh2_plan_cache_test_{}.json", std::process::id()));
+        p.save(&path).expect("save plan cache");
+
+        let q = ConvPlanner::new();
+        let n = q.load(&path).expect("load plan cache");
+        std::fs::remove_file(&path).ok();
+        assert_eq!(n, shapes.len());
+        assert_eq!(q.len(), p.len());
+        // Every loaded shape must be served from the cache (no new misses)
+        // with the identical decision.
+        for s in &shapes {
+            let want = p.plan(s).algo;
+            assert_eq!(q.plan(s).algo, want, "{s:?}");
+        }
+        assert_eq!(q.stats().misses, 0, "loaded plans must hit, not re-plan");
+        assert_eq!(q.stats().hits, shapes.len());
+    }
+
+    #[test]
+    fn merge_rejects_corrupt_documents() {
+        let p = ConvPlanner::new();
+        assert!(p.merge_json(&Json::parse(r#"{"schema":"nope"}"#).unwrap()).is_err());
+        let bad_algo = r#"{"schema":"sh2-plan-cache-v1","entries":[
+            {"batch":1,"channels":8,"seq_len":64,"filter_len":5,"group_size":1,
+             "algo":"winograd","block":0}]}"#;
+        assert!(p.merge_json(&Json::parse(bad_algo).unwrap()).is_err());
+        // A two-stage block violating l_h <= l_b + 1 must not enter the
+        // cache (it would panic at dispatch time).
+        let bad_block = r#"{"schema":"sh2-plan-cache-v1","entries":[
+            {"batch":1,"channels":8,"seq_len":64,"filter_len":33,"group_size":1,
+             "algo":"two-stage","block":8}]}"#;
+        assert!(p.merge_json(&Json::parse(bad_block).unwrap()).is_err());
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn planned_conv_matches_direct_on_random_shapes() {
+        // The satellite property test: whatever the planner picks, the
+        // result must match the reference direct convolution.
+        let planner = ConvPlanner::new();
+        forall(
+            25,
+            |r| {
+                let g = r.below(4) + 1;
+                let dg = r.below(6) + 1;
+                let lh = r.below(40) + 1;
+                let l = r.below(160) + 1;
+                let mut rr = r.fork(11);
+                let x = Tensor::randn(&mut rr, &[l, g * dg], 0.5);
+                let h = GroupedFilter::random(&mut rr, g, lh, dg);
+                (x, h)
+            },
+            |(x, h)| {
+                let plan = planner.plan(&ConvShape::of(x, h));
+                let got = execute(x, h, plan.algo);
+                let want = causal_conv_direct(x, h);
+                if got.allclose(&want, 1e-4) {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "{:?} diverges from direct by {}",
+                        plan.algo,
+                        got.max_abs_diff(&want)
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn calibration_marks_entries_and_updates_model() {
+        let p = ConvPlanner::new();
+        let s = ConvShape { batch: 1, channels: 16, seq_len: 128, filter_len: 7, group_size: 4 };
+        let quick = Bencher { target: std::time::Duration::from_millis(8), samples: 2 };
+        let measured = p.calibrate_shape(&s, &quick);
+        assert!(measured.len() >= 3, "direct, fft and >=1 two-stage block");
+        assert!(measured.iter().all(|(_, secs)| *secs > 0.0));
+        let plan = p.plan(&s);
+        assert!(plan.calibrated);
+        assert_eq!(p.stats().calibrations, 1);
+        assert_eq!(p.stats().hits, 1, "calibrated entry serves the lookup");
+        // Calibrated winner == measured argmin.
+        let want = measured
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(plan.algo, want);
+    }
+
+    #[test]
+    fn force_override_wins() {
+        let mut p = ConvPlanner::new();
+        p.force = parse_force("fft");
+        let mr = ConvShape {
+            batch: 1,
+            channels: 64,
+            seq_len: 2048,
+            filter_len: 128,
+            group_size: 16,
+        };
+        assert_eq!(p.plan(&mr).algo, ConvAlgo::Fft);
+        assert_eq!(parse_force("two-stage:64"), Some(ConvAlgo::TwoStage { block: 64 }));
+        assert_eq!(parse_force("direct"), Some(ConvAlgo::Direct));
+        assert_eq!(parse_force("banana"), None);
+        // Forcing two-stage onto a filter its block cannot cover must fall
+        // back to an exact algorithm, not panic at dispatch.
+        p.force = parse_force("two-stage");
+        let li = ConvShape { seq_len: 4096, filter_len: 4096, ..mr };
+        assert_eq!(p.plan(&li).algo, ConvAlgo::Direct);
+        assert_eq!(p.plan(&mr).algo, ConvAlgo::TwoStage { block: 128 });
+    }
+}

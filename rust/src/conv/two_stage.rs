@@ -116,28 +116,10 @@ pub fn two_stage_prefill(
     l_b: usize,
     tail: &mut FirTail,
 ) -> Tensor {
-    let (l, d) = (x.rows(), x.cols());
-    let lh = h.filter_len();
     let mut y = two_stage_conv(x, h, l_b);
     // Cross-chunk halo correction (same index pattern as
     // `direct::causal_conv_with_history`).
-    let halo = tail.as_tensor();
-    let hist = halo.rows();
-    if hist > 0 {
-        for t in 0..l.min(lh.saturating_sub(1)) {
-            for k in (t + 1)..lh {
-                let hi = hist as isize + t as isize - k as isize;
-                if hi < 0 {
-                    continue;
-                }
-                let xrow = hi as usize * d;
-                let yrow = t * d;
-                for c in 0..d {
-                    y.data[yrow + c] += h.for_channel(c)[k] * halo.data[xrow + c];
-                }
-            }
-        }
-    }
+    crate::conv::direct::add_halo_correction(&mut y, h, &tail.as_tensor());
     tail.absorb(x);
     y
 }

@@ -7,9 +7,87 @@
 //! the paper explicitly notes approximations break at long context.
 
 use crate::ops::hyena::FEATURIZER_LEN;
+use crate::tensor::fft::{fft_flops, next_pow2};
 
 /// One H100's reference peak (the paper uses 1000 TFLOPs for MFU).
 pub const H100_PEAK_FLOPS: f64 = 1000e12;
+
+// ---------------------------------------------------------------------------
+// Single-device convolution cost model (DESIGN.md §Autotuning)
+// ---------------------------------------------------------------------------
+
+/// FLOPs of the direct (time-domain) causal conv: one multiply-add per
+/// (position, channel, tap).
+pub fn conv_flops_direct(l: usize, d: usize, lh: usize) -> f64 {
+    2.0 * l as f64 * d as f64 * lh as f64
+}
+
+/// FLOPs of the two-stage blocked conv: two [l_b x l_b] GEMMs per chunk
+/// (§A.1), plus the per-call Toeplitz-factor materialization (2 l_b² writes
+/// per filter group) that a single forward cannot amortize.
+pub fn conv_flops_two_stage(l: usize, d: usize, groups: usize, block: usize) -> f64 {
+    let setup = 2.0 * groups as f64 * (block * block) as f64;
+    4.0 * l as f64 * block as f64 * d as f64 + setup
+}
+
+/// FLOPs of the FFT conv: 3 transforms + pointwise product per channel at
+/// the zero-padded length.
+pub fn conv_flops_fft(l: usize, d: usize, lh: usize) -> f64 {
+    let n = next_pow2(l + lh);
+    d as f64 * (3.0 * fft_flops(n) + 6.0 * n as f64)
+}
+
+/// Achieved-throughput estimates (FLOPs/s) per convolution algorithm on the
+/// *local* device — the single-device analogue of [`Efficiency`]. Defaults
+/// are CPU-testbed priors with the same ordering the paper measures on H100
+/// (GEMM streams fastest per FLOP, FFT slowest); `ConvPlanner::calibrate`
+/// replaces them with measured values via [`ConvCostModel::observe`].
+#[derive(Clone, Copy, Debug)]
+pub struct ConvCostModel {
+    pub direct_flops_per_s: f64,
+    pub two_stage_flops_per_s: f64,
+    pub fft_flops_per_s: f64,
+    /// Fixed per-call overhead (dispatch, allocation) in seconds.
+    pub overhead_s: f64,
+}
+
+impl Default for ConvCostModel {
+    fn default() -> Self {
+        ConvCostModel {
+            direct_flops_per_s: 2e9,
+            two_stage_flops_per_s: 8e9,
+            fft_flops_per_s: 1e9,
+            overhead_s: 2e-6,
+        }
+    }
+}
+
+impl ConvCostModel {
+    /// Predicted seconds for the direct conv on an [l, d] input.
+    pub fn predict_direct(&self, l: usize, d: usize, lh: usize) -> f64 {
+        conv_flops_direct(l, d, lh) / self.direct_flops_per_s + self.overhead_s
+    }
+
+    /// Predicted seconds for the two-stage conv with chunk length `block`.
+    pub fn predict_two_stage(&self, l: usize, d: usize, groups: usize, block: usize) -> f64 {
+        conv_flops_two_stage(l, d, groups, block) / self.two_stage_flops_per_s + self.overhead_s
+    }
+
+    /// Predicted seconds for the FFT conv.
+    pub fn predict_fft(&self, l: usize, d: usize, lh: usize) -> f64 {
+        conv_flops_fft(l, d, lh) / self.fft_flops_per_s + self.overhead_s
+    }
+
+    /// Fold a measurement into the model: `flops` of work by one algorithm
+    /// took `secs`. EMA keeps the model stable across noisy microbenchmarks.
+    pub fn observe(rate: &mut f64, flops: f64, secs: f64) {
+        if secs <= 0.0 || flops <= 0.0 {
+            return;
+        }
+        let achieved = flops / secs;
+        *rate = if *rate <= 0.0 { achieved } else { 0.5 * *rate + 0.5 * achieved };
+    }
+}
 
 /// Efficiency (achieved / peak) per operator class, calibrated to public
 /// H100 kernel numbers: dense GEMM ~0.75 (FP8 TE), fused attention ~0.5,
@@ -359,6 +437,37 @@ mod tests {
         let (_, a1, _) = layer_fwd_flops(&spec, 0, 1024);
         let (_, a2, _) = layer_fwd_flops(&spec, 0, 2048);
         assert!((a2 / a1 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn conv_cost_model_orders_algorithms_like_the_paper() {
+        let m = ConvCostModel::default();
+        // Short filters (Hyena-SE, l_h=7): time-domain beats FFT everywhere.
+        for &l in &[256usize, 4096, 65_536] {
+            assert!(m.predict_direct(l, 256, 7) < m.predict_fft(l, 256, 7), "l={l}");
+        }
+        // Medium filters (Hyena-MR, l_h=128): the blocked GEMM path wins
+        // once the sequence amortizes the factor setup (Fig 3.1).
+        for &l in &[2048usize, 8192, 32_768] {
+            assert!(m.predict_two_stage(l, 256, 16, 128) < m.predict_direct(l, 256, 128), "l={l}");
+        }
+        // Sequence-length filters (Hyena-LI): FFT wins at long l (Fig 3.2)
+        // but loses to direct at short l — the H3 regime observation.
+        assert!(m.predict_fft(4096, 64, 4096) < m.predict_direct(4096, 64, 4096));
+        assert!(m.predict_direct(64, 64, 64) < m.predict_fft(64, 64, 64));
+    }
+
+    #[test]
+    fn conv_cost_observe_updates_rates() {
+        let mut rate = 0.0;
+        ConvCostModel::observe(&mut rate, 1e9, 0.5); // 2 GFLOP/s measured
+        assert!((rate - 2e9).abs() / 2e9 < 1e-9);
+        ConvCostModel::observe(&mut rate, 4e9, 1.0); // EMA toward 4 GFLOP/s
+        assert!(rate > 2e9 && rate < 4e9);
+        // Degenerate measurements are ignored.
+        ConvCostModel::observe(&mut rate, 0.0, 1.0);
+        ConvCostModel::observe(&mut rate, 1.0, 0.0);
+        assert!(rate > 2e9 && rate < 4e9);
     }
 
     #[test]

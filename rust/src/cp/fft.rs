@@ -226,6 +226,55 @@ pub fn causal_conv_via_p2p_fft(
     (unshard_rows(&outs).slice_rows(0, l), t)
 }
 
+/// Planner-driven CP convolution driver: consults the process-wide
+/// `conv::planner` on the *per-shard* shape and routes to the p2p FFT
+/// scheme when the spectral path wins (the Hyena-LI regime) or to the
+/// halo-exchange p2p convolution otherwise (short/medium filters, where
+/// exchanging `l_h - 1` boundary rows is far cheaper than log2(N) butterfly
+/// exchanges). Exactness constraints trump the cost model: the halo scheme
+/// only reaches one rank back, so it requires `l_h - 1` to fit in a shard,
+/// and the distributed FFT requires a power-of-two rank count; a shape
+/// satisfying neither panics rather than returning silently wrong output.
+/// Returns (output, simulated job time, route name).
+pub fn planned_cp_causal_conv(
+    x: &Tensor,
+    h: &crate::conv::GroupedFilter,
+    n: usize,
+    model: crate::fabric::FabricModel,
+) -> (Tensor, f64, &'static str) {
+    use crate::conv::{planner, ConvAlgo, ConvShape};
+    use crate::cp::sharding::{shard_rows, unshard_rows};
+
+    let lc = (x.rows() / n.max(1)).max(1);
+    let shard = ConvShape {
+        batch: 1,
+        channels: x.cols(),
+        seq_len: lc,
+        filter_len: h.filter_len(),
+        group_size: h.group_size,
+    };
+    let plan = planner::global().plan(&shard);
+    let halo_exact = n == 1 || h.filter_len().saturating_sub(1) <= lc;
+    if (plan.algo == ConvAlgo::Fft || !halo_exact) && n.is_power_of_two() {
+        let (y, t) = causal_conv_via_p2p_fft(x, &h.expand(), n, model);
+        return (y, t, "p2p-fft");
+    }
+    assert!(
+        halo_exact,
+        "no exact CP route: l_h - 1 = {} spans more than one shard of {lc} rows \
+         and N = {n} is not a power of two",
+        h.filter_len() - 1
+    );
+    let shards = std::sync::Arc::new(shard_rows(x, n));
+    let hh = std::sync::Arc::new(h.clone());
+    let reports = crate::fabric::run(n, model, move |ctx| {
+        super::p2p::p2p_conv_overlapped(ctx, &shards[ctx.rank], &hh)
+    });
+    let t = crate::fabric::job_time(&reports);
+    let outs: Vec<Tensor> = reports.into_iter().map(|r| r.value).collect();
+    (unshard_rows(&outs), t, "p2p-halo")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +347,53 @@ mod tests {
                 got.max_abs_diff(&want)
             );
         }
+    }
+
+    #[test]
+    fn planned_driver_routes_by_filter_regime_and_stays_exact() {
+        let mut rng = Rng::new(21);
+        let (l, d, n) = (256usize, 4usize, 4usize);
+        let x = Tensor::randn(&mut rng, &[l, d], 1.0);
+        // Short filter: the halo route must win and match the reference.
+        let h_short = GroupedFilter::random(&mut rng, d, 7, 1);
+        let want = causal_conv_direct(&x, &h_short);
+        let (got, t, route) = planned_cp_causal_conv(&x, &h_short, n, FabricModel::nvlink());
+        assert_eq!(route, "p2p-halo");
+        assert!(t > 0.0);
+        assert!(got.allclose(&want, 1e-3), "diff {}", got.max_abs_diff(&want));
+        // Sequence-length filter at long l (the Hyena-LI regime): the
+        // spectral route wins and matches too. The filter must outgrow the
+        // largest two-stage block (512) for FFT to be the planned choice.
+        let (l2, d2) = (4096usize, 2usize);
+        let x2 = Tensor::randn(&mut rng, &[l2, d2], 0.5);
+        // Small taps keep the padded-FFT roundoff well inside the tolerance.
+        let h_long = GroupedFilter::new(Tensor::randn(&mut rng, &[d2, l2 / n], 0.05), 1);
+        let want = causal_conv_direct(&x2, &h_long);
+        let (got, t, route) = planned_cp_causal_conv(&x2, &h_long, n, FabricModel::nvlink());
+        assert_eq!(route, "p2p-fft");
+        assert!(t > 0.0);
+        assert!(got.allclose(&want, 1e-2), "diff {}", got.max_abs_diff(&want));
+        // A filter spanning multiple shards must take the spectral route
+        // even when the per-shard cost model prefers time-domain: the halo
+        // scheme only reaches one rank back (exactness trumps cost).
+        let x3 = Tensor::randn(&mut rng, &[64, d], 1.0);
+        let h_span = GroupedFilter::random(&mut rng, d, 64, 1);
+        let want = causal_conv_direct(&x3, &h_span);
+        let (got, _t, route) = planned_cp_causal_conv(&x3, &h_span, n, FabricModel::nvlink());
+        assert_eq!(route, "p2p-fft");
+        assert!(got.allclose(&want, 1e-2), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    #[should_panic(expected = "no exact CP route")]
+    fn planned_driver_rejects_unroutable_shapes() {
+        // Filter spans multiple shards AND the rank count rules out the
+        // distributed FFT: no exact scheme exists, so it must panic rather
+        // than return silently wrong numerics.
+        let mut rng = Rng::new(22);
+        let x = Tensor::randn(&mut rng, &[63, 2], 1.0);
+        let h = GroupedFilter::random(&mut rng, 2, 30, 1);
+        planned_cp_causal_conv(&x, &h, 3, FabricModel::nvlink());
     }
 
     #[test]

@@ -6,36 +6,22 @@
 //! to its successor ("halo"). Filters are replicated on every rank (each
 //! rank convolves all D channels — the opposite of a2a's channel split).
 
-use crate::conv::direct::{causal_conv_direct, causal_conv_with_history};
-use crate::conv::GroupedFilter;
-use crate::conv::CausalConv;
+use crate::conv::direct::add_halo_correction;
+use crate::conv::{planner, ConvShape, GroupedFilter};
 use crate::fabric::RankCtx;
 use crate::tensor::Tensor;
 
 const HALO_TAG: u64 = 31;
 
-/// Contribution of `halo` (tail rows of the previous shard) to the first
-/// l_h - 1 outputs of the local shard. This is the "boundary fix-up"
-/// convolution of the overlapped scheme: an extra conv over a window of
-/// shape [2(l_h - 1)] per the paper, implemented directly.
-pub fn halo_correction(h: &GroupedFilter, halo: &Tensor, l: usize, d: usize) -> Tensor {
-    let lh = h.filter_len();
-    let hist = halo.rows();
-    let rows = l.min(lh.saturating_sub(1));
-    let mut fix = Tensor::zeros(&[rows, d]);
-    for t in 0..rows {
-        for k in (t + 1)..lh {
-            let hi = hist as isize + t as isize - k as isize;
-            if hi < 0 {
-                continue;
-            }
-            let src = hi as usize * d;
-            for c in 0..d {
-                fix.data[t * d + c] += h.for_channel(c)[k] * halo.data[src + c];
-            }
-        }
-    }
-    fix
+/// The planner-dispatched local shard convolution shared by both p2p
+/// variants: the main (zero-padded) conv runs whichever algorithm the
+/// autotuner picks for the shard shape; the fabric clock is charged that
+/// algorithm's FLOPs.
+fn local_conv(ctx: &mut RankCtx, local: &Tensor, h: &GroupedFilter) -> Tensor {
+    let shape = ConvShape::of(local, h);
+    let plan = planner::global().plan(&shape);
+    ctx.compute_flops(plan.algo.flops(&shape));
+    planner::execute(local, h, plan.algo)
 }
 
 /// Non-overlapped p2p CP convolution: send tail, wait for halo, convolve
@@ -53,8 +39,9 @@ pub fn p2p_conv(ctx: &mut RankCtx, local: &Tensor, h: &GroupedFilter) -> Tensor 
     } else {
         Tensor::zeros(&[0, d])
     };
-    ctx.compute_flops(crate::conv::direct::DirectConv.flops(lc, d, lh));
-    causal_conv_with_history(local, h, &halo)
+    let mut y = local_conv(ctx, local, h);
+    add_halo_correction(&mut y, h, &halo);
+    y
 }
 
 /// Overlapped p2p CP convolution (Fig B.1): start the local zero-padded
@@ -70,19 +57,13 @@ pub fn p2p_conv_overlapped(ctx: &mut RankCtx, local: &Tensor, h: &GroupedFilter)
     }
     // Main convolution overlaps with the in-flight halo (sim clock advances
     // through compute, so the recv below usually costs nothing extra).
-    ctx.compute_flops(crate::conv::direct::DirectConv.flops(lc, d, lh));
-    let mut y = causal_conv_direct(local, h);
+    let mut y = local_conv(ctx, local, h);
 
     if ctx.rank > 0 {
         let halo = Tensor::from_vec(&[halo_rows, d], ctx.recv(ctx.rank - 1, HALO_TAG));
         // Boundary correction: 2(l_h-1)-window convolution.
         ctx.compute_flops(2.0 * (lh as f64 - 1.0) * d as f64 * lh as f64);
-        let fix = halo_correction(h, &halo, lc, d);
-        for t in 0..fix.rows() {
-            for c in 0..d {
-                y.data[t * d + c] += fix.data[t * d + c];
-            }
-        }
+        add_halo_correction(&mut y, h, &halo);
     }
     y
 }
@@ -90,6 +71,7 @@ pub fn p2p_conv_overlapped(ctx: &mut RankCtx, local: &Tensor, h: &GroupedFilter)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::direct::causal_conv_direct;
     use crate::cp::sharding::{shard_rows, unshard_rows};
     use crate::fabric::{self, FabricModel};
     use crate::util::rng::Rng;
@@ -179,13 +161,12 @@ mod tests {
         let h = GroupedFilter::random(&mut rng, 2, lh, 2);
         let tail = full.slice_rows(l, 2 * l);
         let halo = full.slice_rows(l - (lh - 1), l);
-        let fix = halo_correction(&h, &halo, l, d);
-        let local = causal_conv_direct(&tail, &h);
+        let mut got = causal_conv_direct(&tail, &h);
+        add_halo_correction(&mut got, &h, &halo);
         let want = causal_conv_direct(&full, &h).slice_rows(l, 2 * l);
         for t in 0..lh - 1 {
             for c in 0..d {
-                let got = local.at2(t, c) + fix.at2(t, c);
-                assert!((got - want.at2(t, c)).abs() < 1e-4);
+                assert!((got.at2(t, c) - want.at2(t, c)).abs() < 1e-4);
             }
         }
     }

@@ -6,6 +6,8 @@
 //!   recall      needle-in-a-haystack recall evaluation (Fig B.2)
 //!   generate    stream tokens from a multi-hybrid via the decode-state API
 //!   serve       multi-stream batch-scheduled generation demo
+//!   tune        calibrate the conv autotuner and write the plan cache
+//!   bench-gate  compare a bench JSON against a baseline (CI regression gate)
 //!   cost-model  Fig 2.2 / B.3 iteration-time + MFU estimates at 7B/40B
 //!   cp-demo     context-parallel convolution demo across strategies
 //!   data-gen    emit synthetic OpenGenome2-like bytes
@@ -48,6 +50,8 @@ fn main() {
         Some("recall") => cmd_recall(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("bench-gate") => cmd_bench_gate(&args),
         Some("cost-model") => cmd_cost_model(&args),
         Some("cp-demo") => cmd_cp_demo(&args),
         Some("data-gen") => cmd_data_gen(&args),
@@ -63,14 +67,17 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: sh2 <train|eval|recall|generate|serve|cost-model|cp-demo|data-gen|inspect> [--options]
+const USAGE: &str = "usage: sh2 <train|eval|recall|generate|serve|tune|bench-gate|cost-model|cp-demo|data-gen|inspect> [--options]
   common: --artifacts DIR (default: artifacts) --config NAME (default: tiny)
   train:  --steps N --seed S --log-every K --eval-every K --save PATH --resume PATH --metrics PATH
   eval:   --resume PATH --batches N
   recall: --resume PATH --cases N --depth F
   generate: --prompt STR --max-new N --width D --heads H --layout SE-MR-MHA-LI --top-k K --temp T --seed S
+            --plan-cache PATH (default: plan_cache.json, loaded if present)
   serve:  --streams N --prompt-len L --max-new N --max-active A --budget-kb KB
-          --width D --heads H --layout ... --top-k K --temp T --seed S
+          --width D --heads H --layout ... --top-k K --temp T --seed S --plan-cache PATH
+  tune:   --out PATH (default: plan_cache.json) --widths D1,D2 --quick
+  bench-gate: --current PATH --baseline PATH --tolerance R (default: 2.0)
   cost-model: --scale 7b|40b
   cp-demo: --ranks N --len L --width D --filter LH
   data-gen: --bytes N --seed S";
@@ -90,10 +97,25 @@ fn sampler_from(args: &Args) -> Sampler {
     )
 }
 
+/// Load the persisted conv plan cache (if present) into the process-wide
+/// planner, so every hyena conv in this run dispatches through tuned plans.
+fn load_plan_cache(args: &Args) {
+    let path = PathBuf::from(args.get_or("plan-cache", "plan_cache.json"));
+    if !path.exists() {
+        return;
+    }
+    match sh2::conv::planner::global().load(&path) {
+        Ok(n) => log::info!("plan cache: {n} entries from {}", path.display()),
+        Err(e) => log::warn!("plan cache ignored: {e}"),
+    }
+}
+
 fn cmd_generate(args: &Args) -> Result<()> {
+    load_plan_cache(args);
     let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
     let model = build_lm(args, &mut rng)?;
     let prompt = args.get_or("prompt", "ACGTACGTACGTACGT").as_bytes().to_vec();
+    model.warm_plans(&[prompt.len().max(1)]);
     let max_new = args.get_usize("max-new", 64);
     let sampler = sampler_from(args);
     let mut srng = rng.fork(1);
@@ -130,11 +152,13 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    load_plan_cache(args);
     let seed = args.get_usize("seed", 0) as u64;
     let mut rng = Rng::new(seed);
     let model = build_lm(args, &mut rng)?;
     let n_streams = args.get_usize("streams", 8);
     let prompt_len = args.get_usize("prompt-len", 64);
+    model.warm_plans(&[prompt_len.max(1)]);
     let max_new = args.get_usize("max-new", 32);
     let max_active = args.get_usize("max-active", 4);
     let budget = args.get_usize("budget-kb", 4096) * 1024;
@@ -179,6 +203,180 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.max_concurrent,
         s.preemptions
     );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    use sh2::conv::planner::{self, ConvShape};
+    use sh2::util::bench::{fmt_secs, Bencher};
+
+    let out = PathBuf::from(args.get_or("out", "plan_cache.json"));
+    let quick = args.has_flag("quick") || sh2::util::bench::quick_requested();
+    let bencher = if quick {
+        Bencher::quick()
+    } else {
+        Bencher { target: std::time::Duration::from_millis(400), samples: 5 }
+    };
+    let widths: Vec<usize> = args
+        .get_or("widths", "64,256")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("--widths: {e}")))
+        .collect::<Result<_>>()?;
+    let seqs: &[usize] = if quick { &[256, 1024] } else { &[256, 1024, 4096] };
+
+    let tuner = planner::global();
+    let mut t = Table::new(
+        "conv autotuner calibration (measured p50 per call)",
+        &["l", "d", "l_h", "g_sz", "plan", "p50", "vs worst measured"],
+    );
+    for &d in &widths {
+        for &l in seqs {
+            // The four shape regimes the hyena operators dispatch: the
+            // depthwise featurizer (l_h = 3), SE (7), MR (128), and the
+            // sequence-length LI filter.
+            for (lh, gsz) in [(3usize, 1usize), (7, 16), (128, 16), (l, 16)] {
+                if gsz > d {
+                    continue;
+                }
+                let shape = ConvShape {
+                    batch: 1,
+                    channels: d,
+                    seq_len: l,
+                    filter_len: lh,
+                    group_size: gsz,
+                };
+                let measured = tuner.calibrate_shape(&shape, &bencher);
+                let (best_algo, best) = *measured
+                    .iter()
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite"))
+                    .expect("calibration measures at least one candidate");
+                let worst = measured.iter().map(|m| m.1).fold(best, f64::max);
+                let plan_name = match best_algo {
+                    planner::ConvAlgo::TwoStage { block } => format!("two-stage(l_b={block})"),
+                    other => other.name().to_string(),
+                };
+                t.row(vec![
+                    format!("{l}"),
+                    format!("{d}"),
+                    format!("{lh}"),
+                    format!("{gsz}"),
+                    plan_name,
+                    fmt_secs(best),
+                    format!("{:.2}x", worst / best.max(1e-12)),
+                ]);
+            }
+        }
+    }
+    t.print();
+    tuner.save(&out).map_err(|e| anyhow!(e))?;
+    let stats = tuner.stats();
+    println!(
+        "plan cache: {} entries ({} calibrated) -> {}",
+        tuner.len(),
+        stats.calibrations,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    use sh2::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let current = args
+        .get("current")
+        .ok_or_else(|| anyhow!("bench-gate needs --current PATH"))?;
+    let baseline = args
+        .get("baseline")
+        .ok_or_else(|| anyhow!("bench-gate needs --baseline PATH"))?;
+    let tol = args.get_f64("tolerance", 2.0);
+
+    if !std::path::Path::new(baseline).exists() {
+        println!(
+            "bench-gate: no baseline at {baseline}; skipping comparison. \
+             To create one, copy the bench-smoke artifact JSON there \
+             (README §Bench regression gate)."
+        );
+        return Ok(());
+    }
+    let parse = |path: &str| -> Result<BTreeMap<String, f64>> {
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow!("read {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        let recs = j
+            .get("records")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("{path}: missing 'records' array"))?;
+        let mut m = BTreeMap::new();
+        for r in recs {
+            let name = r
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{path}: record missing 'name'"))?;
+            let p50 = r
+                .get("p50_ns")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("{path}: record '{name}' missing 'p50_ns'"))?;
+            m.insert(name.to_string(), p50);
+        }
+        Ok(m)
+    };
+    let cur = parse(current)?;
+    let base = parse(baseline)?;
+
+    let mut t = Table::new(
+        &format!("bench-gate: {current} vs {baseline} (fail > {tol:.1}x)"),
+        &["benchmark", "baseline p50", "current p50", "ratio", "status"],
+    );
+    let mut failures = Vec::new();
+    for (name, &b) in &base {
+        match cur.get(name) {
+            Some(&c) => {
+                let ratio = c / b.max(1e-9);
+                let status = if ratio > tol { "FAIL" } else { "ok" };
+                if ratio > tol {
+                    failures.push(format!("{name}: {ratio:.2}x"));
+                }
+                t.row(vec![
+                    name.clone(),
+                    format!("{b:.0}ns"),
+                    format!("{c:.0}ns"),
+                    format!("{ratio:.2}x"),
+                    status.to_string(),
+                ]);
+            }
+            None => {
+                // A baseline record the current run no longer emits means
+                // its regression coverage silently vanished (renamed bench,
+                // dropped record): fail, so renames re-baseline on purpose.
+                failures.push(format!("{name}: missing from current run"));
+                t.row(vec![
+                    name.clone(),
+                    format!("{b:.0}ns"),
+                    "-".into(),
+                    "-".into(),
+                    "MISSING".into(),
+                ]);
+            }
+        }
+    }
+    for name in cur.keys().filter(|n| !base.contains_key(*n)) {
+        t.row(vec![
+            name.clone(),
+            "-".into(),
+            format!("{:.0}ns", cur[name]),
+            "-".into(),
+            "new (no baseline)".into(),
+        ]);
+    }
+    t.print();
+    if !failures.is_empty() {
+        bail!(
+            "bench-gate: {} failure(s) (>{tol:.1}x slowdown or missing): {}",
+            failures.len(),
+            failures.join(", ")
+        );
+    }
+    println!("bench-gate: ok ({} benchmarks within {tol:.1}x)", base.len());
     Ok(())
 }
 
@@ -410,6 +608,16 @@ fn cmd_cp_demo(args: &Args) -> Result<()> {
         "p2p FFT".to_string(),
         format!("{:.3}ms", sim * 1e3),
         format!("{:.1e}", got.max_abs_diff(&want_fft)),
+        "-".to_string(),
+    ]);
+    // Autotuned strategy choice on the per-shard shape (DESIGN.md
+    // §Autotuning): halo exchange in the short/medium-filter regime,
+    // distributed FFT in the long-filter regime.
+    let (got, sim, route) = sh2::cp::fft::planned_cp_causal_conv(&x, &h, n, model);
+    t.row(vec![
+        format!("planner ({route})"),
+        format!("{:.3}ms", sim * 1e3),
+        format!("{:.1e}", got.max_abs_diff(&want)),
         "-".to_string(),
     ]);
     t.print();

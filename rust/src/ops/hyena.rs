@@ -2,16 +2,18 @@
 //! dense featurizer projections + short explicit featurizer convs + gated
 //! inner convolution + output projection.
 //!
-//! * SE — inner filter length 7, two-stage blocked path.
-//! * MR — inner filter length 128 with exponential-decay regularizer,
-//!        two-stage blocked path (l_b = 128).
-//! * LI — implicit modal filter as long as the sequence, FFT path.
+//! * SE — inner filter length 7.
+//! * MR — inner filter length 128 with exponential-decay regularizer.
+//! * LI — implicit modal filter as long as the sequence.
+//!
+//! Inner convolutions dispatch through `conv::planner` (DESIGN.md
+//! §Autotuning), which lands on the paper's per-operator choices — the
+//! two-stage blocked path for SE/MR, FFT for LI at long context — without
+//! hard-coding them.
 
 use super::{proj, DecodeState, SeqMixer};
-use crate::conv::direct::{causal_conv_direct, causal_conv_with_history};
-use crate::conv::fft_conv::{fft_causal_conv, modal_filter};
-use crate::conv::two_stage::{two_stage_hyena, two_stage_prefill};
-use crate::conv::{FirTail, GroupedFilter};
+use crate::conv::fft_conv::modal_filter;
+use crate::conv::{planned_conv, planned_prefill, ConvShape, FirTail, GroupedFilter};
 use crate::tensor::fft::{fft_flops, next_pow2};
 use crate::tensor::matmul::{matmul, vecmat};
 use crate::tensor::Tensor;
@@ -184,15 +186,17 @@ impl HyenaOp {
 impl SeqMixer for HyenaOp {
     fn forward(&self, x: &Tensor) -> Tensor {
         let l = x.rows();
-        // Featurizers: dense projection + short explicit conv (Eq. 1).
-        let q = causal_conv_direct(&matmul(x, &self.w), &self.hq);
-        let k = causal_conv_direct(&matmul(x, &self.u), &self.hk);
-        let v = causal_conv_direct(&matmul(x, &self.p), &self.hv);
+        // Featurizers: dense projection + short explicit conv (Eq. 1),
+        // planner-dispatched like every other conv (direct wins at l_h = 3).
+        let q = planned_conv(&matmul(x, &self.w), &self.hq);
+        let k = planned_conv(&matmul(x, &self.u), &self.hk);
+        let v = planned_conv(&matmul(x, &self.p), &self.hv);
+        // Inner gated convolution (Algorithm 1 lines 5 & 11), algorithm
+        // picked per shape by the autotuner: two-stage for SE/MR, FFT for
+        // LI at long l, direct in the small regimes — no hard-coded path.
         let h = self.inner_filter(l);
-        let y = match self.kind {
-            HyenaKind::Se | HyenaKind::Mr => two_stage_hyena(&q, &k, &v, &h, self.block),
-            HyenaKind::Li => q.hadamard(&fft_causal_conv(&k.hadamard(&v), &h)),
-        };
+        let kv = k.hadamard(&v);
+        let y = q.hadamard(&planned_conv(&kv, &h));
         matmul(&y, &self.m)
     }
 
@@ -221,6 +225,31 @@ impl SeqMixer for HyenaOp {
 
     fn width(&self) -> usize {
         self.d
+    }
+
+    fn plan_shapes(&self, l: usize) -> Vec<ConvShape> {
+        let inner_lh = match self.kind {
+            HyenaKind::Se | HyenaKind::Mr => self.inner.filter_len(),
+            HyenaKind::Li => l,
+        };
+        vec![
+            // Featurizer convs (depthwise, len FEATURIZER_LEN).
+            ConvShape {
+                batch: 1,
+                channels: self.d,
+                seq_len: l,
+                filter_len: FEATURIZER_LEN,
+                group_size: 1,
+            },
+            // Inner gated conv.
+            ConvShape {
+                batch: 1,
+                channels: self.d,
+                seq_len: l,
+                filter_len: inner_lh,
+                group_size: self.d / self.num_groups,
+            },
+        ]
     }
 
     fn state(&self) -> DecodeState {
@@ -261,11 +290,11 @@ impl SeqMixer for HyenaOp {
         vecmat(&gated, &self.m)
     }
 
-    /// Blocked prefill (DESIGN.md §Streaming-Decode): featurizers run as
-    /// halo-corrected direct convolutions, the SE/MR inner convolution runs
-    /// through the two-stage overlap-add kernel via `two_stage_prefill`
-    /// (which hands its input tail to the decode state), and LI runs the
-    /// FFT path while rebuilding the modal IIR state by recurrence.
+    /// Blocked prefill (DESIGN.md §Streaming-Decode): featurizers and the
+    /// SE/MR inner convolution run through `conv::planned_prefill` — the
+    /// planner-dispatched halo-corrected blocked path, which hands each
+    /// input tail to the decode state — and LI runs the planned long-filter
+    /// path while rebuilding the modal IIR state by recurrence.
     fn prefill(&self, state: &mut DecodeState, x: &Tensor) -> Tensor {
         // A mid-stream LI restart has no blocked path (the FFT kernel can't
         // start from a nonzero IIR state); fall back to stepping.
@@ -284,20 +313,17 @@ impl SeqMixer for HyenaOp {
         let xw = matmul(x, &self.w);
         let xu = matmul(x, &self.u);
         let xp = matmul(x, &self.p);
-        let q = causal_conv_with_history(&xw, &self.hq, &st.w_tail.as_tensor());
-        let k = causal_conv_with_history(&xu, &self.hk, &st.u_tail.as_tensor());
-        let v = causal_conv_with_history(&xp, &self.hv, &st.p_tail.as_tensor());
-        st.w_tail.absorb(&xw);
-        st.u_tail.absorb(&xu);
-        st.p_tail.absorb(&xp);
+        let q = planned_prefill(&xw, &self.hq, &mut st.w_tail);
+        let k = planned_prefill(&xu, &self.hk, &mut st.u_tail);
+        let v = planned_prefill(&xp, &self.hv, &mut st.p_tail);
         let kv = k.hadamard(&v);
         let inner = match self.kind {
             HyenaKind::Se | HyenaKind::Mr => {
-                two_stage_prefill(&kv, &self.inner, self.block, &mut st.inner_tail)
+                planned_prefill(&kv, &self.inner, &mut st.inner_tail)
             }
             HyenaKind::Li => {
                 let h = self.inner_filter(l);
-                let y = fft_causal_conv(&kv, &h);
+                let y = planned_conv(&kv, &h);
                 // State-only modal recurrence over the chunk.
                 let order = self.li_order();
                 let gsz = self.d / self.num_groups;
@@ -322,6 +348,7 @@ impl SeqMixer for HyenaOp {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::direct::causal_conv_direct;
 
     #[test]
     fn kinds_have_expected_structure() {

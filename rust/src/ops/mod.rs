@@ -73,6 +73,15 @@ pub trait SeqMixer {
     fn flops(&self, l: usize) -> f64;
     fn width(&self) -> usize;
 
+    /// Convolution shapes this operator dispatches through the
+    /// [`crate::conv::planner`] at sequence length `l` — used by serving to
+    /// pre-plan ("warm") the plan cache before traffic arrives. Operators
+    /// without planner-dispatched convolutions return none.
+    fn plan_shapes(&self, l: usize) -> Vec<crate::conv::ConvShape> {
+        let _ = l;
+        Vec::new()
+    }
+
     /// Fresh decode state at position 0 (no tokens absorbed yet).
     fn state(&self) -> DecodeState;
 

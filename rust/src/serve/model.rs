@@ -97,6 +97,21 @@ impl HybridLm {
         self.layout.join("-")
     }
 
+    /// Pre-plan the convolution shapes this model will dispatch at the
+    /// given prefill lengths, so the serving hot path only ever takes the
+    /// plan-cache *hit* branch (DESIGN.md §Autotuning). Returns how many
+    /// plans are now cached. Call after loading a tuned plan cache — shapes
+    /// it already covers are left untouched (one lookup each).
+    pub fn warm_plans(&self, prefill_lens: &[usize]) -> usize {
+        let planner = crate::conv::planner::global();
+        for &l in prefill_lens {
+            for op in &self.layers {
+                planner.warm(&op.plan_shapes(l));
+            }
+        }
+        planner.len()
+    }
+
     /// Fresh per-stream state at position 0.
     pub fn state(&self) -> LmState {
         LmState {
@@ -162,6 +177,16 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(diff < 1e-4, "prefill/step logit divergence {diff}");
+    }
+
+    #[test]
+    fn warm_plans_caches_hyena_conv_shapes() {
+        let mut rng = Rng::new(7);
+        let model = HybridLm::new(&mut rng, 32, 2, &["SE", "MR", "MHA"]).unwrap();
+        // SE and MR each contribute a featurizer shape and an inner shape;
+        // MHA contributes none. Warming must make them all resident.
+        let n = model.warm_plans(&[64, 256]);
+        assert!(n >= 3, "expected >=3 cached plans, got {n}");
     }
 
     #[test]

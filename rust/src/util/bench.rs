@@ -2,11 +2,14 @@
 //! offline; cargo bench targets use `harness = false` and this module).
 //!
 //! Auto-calibrates iteration counts to a target measurement time, reports
-//! mean/p50/std, and renders aligned tables so every paper table/figure
-//! bench prints its rows in one place.
+//! mean/p50/std, renders aligned tables so every paper table/figure bench
+//! prints its rows in one place, and emits machine-readable JSON records
+//! (`sh2-bench-v1`: name, iters, p50/p90 ns, git sha) — the one format the
+//! benches, the conv-planner calibrator, and the CI regression gate share.
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Summary;
 
 #[derive(Clone, Debug)]
@@ -20,6 +23,98 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn mean_ms(&self) -> f64 {
         self.secs.mean * 1e3
+    }
+
+    /// One `sh2-bench-v1` record: timings in integral nanoseconds.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num((self.secs.mean * 1e9).round())),
+            ("p50_ns", Json::num((self.secs.p50 * 1e9).round())),
+            ("p90_ns", Json::num((self.secs.p90 * 1e9).round())),
+        ])
+    }
+}
+
+/// True when a quick (CI smoke) run was requested via `BENCH_QUICK=1` or
+/// the legacy `SH2_BENCH_QUICK`.
+pub fn quick_requested() -> bool {
+    std::env::var("BENCH_QUICK").is_ok() || std::env::var("SH2_BENCH_QUICK").is_ok()
+}
+
+/// Git commit the benches ran at: `GITHUB_SHA` in CI, `git rev-parse` in a
+/// checkout, `"unknown"` otherwise.
+pub fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        return sha;
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Accumulates [`BenchResult`]s and serializes them as one `sh2-bench-v1`
+/// document. Benches call [`BenchLog::write_env`] at exit so a CI job can
+/// request the JSON with `SH2_BENCH_JSON=path`.
+#[derive(Default)]
+pub struct BenchLog {
+    records: Vec<BenchResult>,
+}
+
+impl BenchLog {
+    pub fn new() -> BenchLog {
+        BenchLog::default()
+    }
+
+    pub fn push(&mut self, r: &BenchResult) {
+        self.records.push(r.clone());
+    }
+
+    /// Push under a different (namespaced) record name, e.g.
+    /// `"fig31/direct/l2048"` — bench JSON names must be unique.
+    pub fn push_as(&mut self, name: &str, r: &BenchResult) {
+        let mut r = r.clone();
+        r.name = name.to_string();
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("sh2-bench-v1")),
+            ("git_sha", Json::str(&git_sha())),
+            ("quick", Json::Bool(quick_requested())),
+            ("records", Json::arr(self.records.iter().map(BenchResult::to_json))),
+        ])
+    }
+
+    /// Write the document to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+
+    /// Write to the path named by `SH2_BENCH_JSON`, if set. Returns the
+    /// path written, and panics on an unwritable path (a CI job asking for
+    /// records must not silently lose them).
+    pub fn write_env(&self) -> Option<String> {
+        let path = std::env::var("SH2_BENCH_JSON").ok()?;
+        self.write(&path)
+            .unwrap_or_else(|e| panic!("SH2_BENCH_JSON={path}: {e}"));
+        Some(path)
     }
 }
 
@@ -164,5 +259,35 @@ mod tests {
         assert!(fmt_secs(5e-6).ends_with("µs"));
         assert!(fmt_secs(5e-3).ends_with("ms"));
         assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_log_serializes_v1_records() {
+        let b = Bencher { target: Duration::from_millis(10), samples: 3 };
+        let r = b.bench("unit/x", || {
+            black_box((0..64).sum::<usize>());
+        });
+        let mut log = BenchLog::new();
+        log.push(&r);
+        log.push_as("unit/x/renamed", &r);
+        assert_eq!(log.len(), 2);
+        let j = Json::parse(&log.to_json().to_string()).expect("self-parse");
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("sh2-bench-v1"));
+        assert!(j.get("git_sha").and_then(Json::as_str).is_some());
+        let recs = j.get("records").and_then(Json::as_array).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("name").and_then(Json::as_str), Some("unit/x"));
+        assert_eq!(
+            recs[1].get("name").and_then(Json::as_str),
+            Some("unit/x/renamed")
+        );
+        for r in recs {
+            assert!(r.get("p50_ns").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(
+                r.get("p90_ns").and_then(Json::as_f64).unwrap()
+                    >= r.get("p50_ns").and_then(Json::as_f64).unwrap()
+            );
+            assert!(r.get("iters").and_then(Json::as_usize).unwrap() >= 1);
+        }
     }
 }

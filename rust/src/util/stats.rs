@@ -9,6 +9,7 @@ pub struct Summary {
     pub min: f64,
     pub max: f64,
     pub p50: f64,
+    pub p90: f64,
     pub p99: f64,
 }
 
@@ -28,6 +29,7 @@ impl Summary {
             min: sorted[0],
             max: sorted[n - 1],
             p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
             p99: percentile_sorted(&sorted, 99.0),
         }
     }
@@ -80,6 +82,7 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert!((s.p90 - 4.6).abs() < 1e-9);
         assert!((s.std - 1.5811).abs() < 1e-3);
     }
 

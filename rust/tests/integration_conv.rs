@@ -73,6 +73,29 @@ fn two_stage_property_vs_direct_wide() {
 }
 
 #[test]
+fn planner_dispatch_is_exact_across_regimes() {
+    // The process-wide planner, as used by the hyena call sites: whatever
+    // regime it routes each shape to, the output must match the direct
+    // reference. Covers the SE (short), MR (medium, Fig 3.1 shape) and
+    // LI (sequence-length filter) regimes.
+    use sh2::conv::planned_conv;
+    let mut rng = Rng::new(9);
+    for &(l, g, dg, lh) in
+        &[(256usize, 16usize, 4usize, 7usize), (1024, 16, 8, 128), (512, 4, 4, 512)]
+    {
+        let x = Tensor::randn(&mut rng, &[l, g * dg], 0.5);
+        let h = GroupedFilter::random(&mut rng, g, lh, dg);
+        let got = planned_conv(&x, &h);
+        let want = causal_conv_direct(&x, &h);
+        assert!(
+            got.allclose(&want, 5e-3),
+            "l={l} lh={lh}: planner dispatch diverges by {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
 fn backward_two_pass_matches_fd_at_mr_scale() {
     let mut rng = Rng::new(2);
     let (l, g, dg, lh) = (64usize, 2usize, 4usize, 16usize);
