@@ -1,0 +1,56 @@
+//! Training-step microbench: forward + backward + AdamW step of the tape
+//! trainer at serving-relevant tiny-model shapes, p50/p90 via `util::bench`.
+//! Emits `sh2-bench-v1` records (SH2_BENCH_JSON) for the CI bench gate
+//! against `bench/baseline/BENCH_train_step.json`.
+
+use sh2::serve::{HybridLm, LmConfig};
+use sh2::train::tasks::{Task, TaskGen};
+use sh2::train::Trainer;
+use sh2::util::bench::{quick_requested, BenchLog, Bencher, Table};
+use sh2::util::rng::Rng;
+
+fn main() {
+    let quick = quick_requested();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut log = BenchLog::new();
+    let mut table = Table::new(
+        "train_step: fwd+bwd+AdamW per microbatch (batch=4)",
+        &["layout", "d", "seq", "p50 ms", "p90 ms", "tok/s"],
+    );
+
+    // One conv-family stack, one attention stack, and the multi-hybrid.
+    // Shapes (d=64, seq=32) must match bench/baseline/BENCH_train_step.json
+    // record names — the gate fails on missing records.
+    let configs: &[(&str, &[&str], usize, usize)] = &[
+        ("se_x2", &["SE", "SE"], 64, 32),
+        ("mha_x2", &["MHA", "MHA"], 64, 32),
+        ("hybrid", &["SE", "MR", "MHA", "LI"], 64, 32),
+    ];
+    let batch = 4usize;
+    for &(name, layout, d, seq) in configs {
+        let cfg = LmConfig::trainable(d, 2, layout, seq);
+        let model = HybridLm::with_config(&mut Rng::new(0), &cfg).unwrap();
+        let mut trainer = Trainer::new(model, 1e-3, 1_000_000);
+        let gen = TaskGen::new(Task::InContextRecall, seq);
+        let mut data_rng = Rng::new(1);
+        let cases: Vec<_> = (0..batch).map(|_| gen.sample(&mut data_rng)).collect();
+        let r = bencher.bench(&format!("train_step/{name}/d{d}/l{seq}"), || {
+            let res = trainer.train_step(&cases);
+            sh2::util::bench::black_box(res.loss);
+        });
+        log.push(&r);
+        let toks = (batch * seq) as f64;
+        table.row(vec![
+            name.to_string(),
+            format!("{d}"),
+            format!("{seq}"),
+            format!("{:.2}", r.secs.p50 * 1e3),
+            format!("{:.2}", r.secs.p90 * 1e3),
+            format!("{:.0}", toks / r.secs.p50),
+        ]);
+    }
+    table.print();
+    if let Some(path) = log.write_env() {
+        println!("bench records -> {path}");
+    }
+}

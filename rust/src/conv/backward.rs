@@ -82,6 +82,21 @@ pub fn conv_backward(
     (dx, dh)
 }
 
+/// Backward paired with the planner-dispatched forward (`planned_conv`):
+/// the partial-gradient chunking follows the planned two-stage block size
+/// when the autotuner picked two-stage for this shape (so forward and
+/// backward share a dataflow), and a fixed 128-row chunk otherwise. The
+/// training tape's convolution node calls this.
+pub fn conv_backward_planned(x: &Tensor, dy: &Tensor, h: &GroupedFilter) -> (Tensor, Tensor) {
+    use super::planner::{self, ConvAlgo, ConvShape};
+    let plan = planner::global().plan(&ConvShape::of(x, h));
+    let l_b = match plan.algo {
+        ConvAlgo::TwoStage { block } => block.max(1),
+        _ => 128,
+    };
+    conv_backward(x, dy, h, l_b)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +156,18 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn planned_backward_matches_fixed_chunk() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&mut rng, &[64, 8], 1.0);
+        let dy = Tensor::randn(&mut rng, &[64, 8], 1.0);
+        let h = GroupedFilter::random(&mut rng, 4, 7, 2);
+        let (dx_a, dh_a) = conv_backward_planned(&x, &dy, &h);
+        let (dx_b, dh_b) = conv_backward(&x, &dy, &h, 64);
+        assert!(dx_a.allclose(&dx_b, 1e-4));
+        assert!(dh_a.allclose(&dh_b, 1e-3));
     }
 
     #[test]

@@ -7,8 +7,10 @@
 //! * **L3 (this crate)** — training coordinator: data pipeline, microbatch
 //!   scheduling, context-parallel runtime, metrics; plus the paper's
 //!   convolution algorithms, baseline operators, communication fabric and
-//!   cost model, all from scratch; and the streaming inference engine
-//!   (`serve`) with per-operator decode state.
+//!   cost model, all from scratch; the streaming inference engine
+//!   (`serve`) with per-operator decode state; and the pure-Rust training
+//!   subsystem (`train`) — autograd through the operator zoo, token-
+//!   manipulation synthetics, and native `sh2 train`/`train-tasks`.
 //! * **L2/L1 (python/, build-time only)** — the JAX model + Pallas kernels,
 //!   AOT-lowered to HLO text artifacts executed here via PJRT (behind the
 //!   `pjrt` feature; see DESIGN.md §PJRT-Runtime).
@@ -22,4 +24,5 @@ pub mod ops;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
+pub mod train;
 pub mod util;

@@ -1,9 +1,12 @@
 //! `sh2` — StripedHyena 2 training + serving CLI.
 //!
 //! Subcommands:
-//!   train       train a multi-hybrid from AOT artifacts on synthetic genome data
-//!   eval        validation perplexity of a checkpoint
-//!   recall      needle-in-a-haystack recall evaluation (Fig B.2)
+//!   train       native pure-Rust training of a multi-hybrid byte LM on
+//!               synthetic genome data (--backend xla for the AOT/PJRT path)
+//!   train-tasks operator-vs-task harness on the §12 token-manipulation
+//!               synthetics; emits the complementarity table
+//!   eval        validation perplexity of a checkpoint (pjrt)
+//!   recall      needle-in-a-haystack recall evaluation (Fig B.2, pjrt)
 //!   generate    stream tokens from a multi-hybrid via the decode-state API
 //!   serve       multi-stream batch-scheduled generation demo
 //!   tune        calibrate the conv autotuner and write the plan cache
@@ -13,30 +16,29 @@
 //!   data-gen    emit synthetic OpenGenome2-like bytes
 //!   inspect     print an artifact's meta (params, programs)
 //!
-//! `train`/`eval`/`recall` execute AOT HLO artifacts and require the `pjrt`
-//! feature (see DESIGN.md §PJRT-Runtime); everything else is pure Rust.
+//! `train --backend xla`/`eval`/`recall` execute AOT HLO artifacts and
+//! require the `pjrt` feature (DESIGN.md §PJRT-Runtime); everything else —
+//! including `train` and `train-tasks` — is pure Rust.
 
-#[cfg(feature = "pjrt")]
-use std::path::Path;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-#[cfg(feature = "pjrt")]
-use sh2::coordinator::data::DataPipeline;
-use sh2::coordinator::data::{GenomeConfig, GenomeGenerator};
+use sh2::coordinator::data::{DataPipeline, GenomeConfig, GenomeGenerator};
 #[cfg(feature = "pjrt")]
 use sh2::coordinator::eval::{needle_recall, validation_ppl};
-#[cfg(feature = "pjrt")]
 use sh2::coordinator::metrics::MetricsLog;
 #[cfg(feature = "pjrt")]
-use sh2::coordinator::Trainer;
+use sh2::coordinator::Trainer as XlaTrainer;
 use sh2::costmodel::{iteration_time, ArchSpec, ClusterConfig, Efficiency};
 #[cfg(feature = "pjrt")]
 use sh2::runtime::Engine;
 use sh2::runtime::ModelMeta;
-use sh2::serve::{BatchScheduler, HybridLm, Sampler};
+use sh2::serve::{BatchScheduler, HybridLm, LmConfig, Sampler};
+use sh2::train::checkpoint::{load_lm, save_lm};
+use sh2::train::tasks::TaskCase;
+use sh2::train::{HarnessCfg, Task, Trainer};
 use sh2::util::bench::Table;
 use sh2::util::cli::Args;
 use sh2::util::rng::Rng;
@@ -46,6 +48,7 @@ fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("train-tasks") => cmd_train_tasks(&args),
         Some("eval") => cmd_eval(&args),
         Some("recall") => cmd_recall(&args),
         Some("generate") => cmd_generate(&args),
@@ -67,22 +70,44 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: sh2 <train|eval|recall|generate|serve|tune|bench-gate|cost-model|cp-demo|data-gen|inspect> [--options]
+const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|tune|bench-gate|cost-model|cp-demo|data-gen|inspect> [--options]
   common: --artifacts DIR (default: artifacts) --config NAME (default: tiny)
-  train:  --steps N --seed S --log-every K --eval-every K --save PATH --resume PATH --metrics PATH
+  train:  --steps N --width D --heads H --layout SE-MR-MHA-LI --seq-len L --batch B
+          --lr F --seed S --log-every K --eval-every K --save PATH --metrics PATH
+          --backend native|xla (default: native; xla needs --features pjrt and
+          takes --resume PATH like before)
+  train-tasks: --task NAME|all --op NAME|all (hyena_se|hyena_mr|hyena_li|mha|
+          linear_attn|ssd|deltanet|mlstm or a layout like SE-MHA) --steps N
+          --width D --heads H --layers N --seq-len L --batch B --lr F --seed S
+          --eval-cases N --out PATH (sh2-tasks-v1 JSON)
+          --assert-improve (exit 1 unless final loss < first loss)
   eval:   --resume PATH --batches N
-  recall: --resume PATH --cases N --depth F
-  generate: --prompt STR --max-new N --width D --heads H --layout SE-MR-MHA-LI --top-k K --temp T --seed S
+  recall: --load CKPT --cases N --depth F --len L (native)
+          or --resume PATH --cases N --depth F (pjrt)
+  generate: --prompt STR --max-new N --width D --heads H --layout SE-MR-MHA-LI
+            --top-k K --temp T --seed S --load CKPT (sh2-lm-ckpt-v1)
             --plan-cache PATH (default: plan_cache.json, loaded if present)
   serve:  --streams N --prompt-len L --max-new N --max-active A --budget-kb KB
-          --width D --heads H --layout ... --top-k K --temp T --seed S --plan-cache PATH
+          --width D --heads H --layout ... --top-k K --temp T --seed S
+          --load CKPT --plan-cache PATH
   tune:   --out PATH (default: plan_cache.json) --widths D1,D2 --quick
   bench-gate: --current PATH --baseline PATH --tolerance R (default: 2.0)
   cost-model: --scale 7b|40b
   cp-demo: --ranks N --len L --width D --filter LH
   data-gen: --bytes N --seed S";
 
+/// Build the serving model: from a checkpoint when `--load` is given (the
+/// trained architecture travels in the header), otherwise random weights
+/// from `--width/--heads/--layout`.
 fn build_lm(args: &Args, rng: &mut Rng) -> Result<HybridLm> {
+    if let Some(ckpt) = args.get("load") {
+        let (model, step) = load_lm(Path::new(ckpt))?;
+        log::info!(
+            "loaded checkpoint {ckpt} (step {step}, layout {})",
+            model.layout_string()
+        );
+        return Ok(model);
+    }
     let d = args.get_usize("width", 64);
     let heads = args.get_usize("heads", 4);
     let layout_s = args.get_or("layout", "SE-MR-MHA-LI").to_string();
@@ -393,26 +418,240 @@ fn pjrt_unavailable(cmd: &str) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_train(_args: &Args) -> Result<()> {
-    pjrt_unavailable("train")
-}
-
-#[cfg(not(feature = "pjrt"))]
 fn cmd_eval(_args: &Args) -> Result<()> {
     pjrt_unavailable("eval")
 }
 
+/// Needle-in-a-haystack recall. With `--load CKPT` this runs natively on
+/// the pure-Rust model (no `pjrt` needed); otherwise it evaluates an AOT
+/// checkpoint through the PJRT runtime.
+fn cmd_recall(args: &Args) -> Result<()> {
+    if let Some(ckpt) = args.get("load") {
+        let (model, step) = load_lm(Path::new(ckpt))?;
+        let cases = args.get_usize("cases", 16);
+        let depth = args.get_f64("depth", 0.25);
+        let len = args.get_usize("len", 256);
+        if len < 32 {
+            bail!("recall --len must be at least 32 (needle + query need ~26 bytes)");
+        }
+        let mut rng = Rng::new(7);
+        let mut task_cases = Vec::with_capacity(cases);
+        for _ in 0..cases {
+            let c = sh2::coordinator::data::needle_case(&mut rng, len, depth, 8, 4);
+            let tokens: Vec<u8> = c.tokens.iter().map(|&t| t as u8).collect();
+            let mut targets = vec![0u8; tokens.len()];
+            targets[..tokens.len() - 1].copy_from_slice(&tokens[1..]);
+            let mut mask = vec![0.0f32; tokens.len()];
+            for &p in &c.payload_positions {
+                mask[p] = 1.0;
+            }
+            task_cases.push(TaskCase {
+                tokens,
+                targets,
+                mask,
+            });
+        }
+        let ev = sh2::train::eval_model(&model, &task_cases);
+        println!(
+            "recall (native, step {step}): cases={cases} byte_acc={:.3} payload_nll={:.3}",
+            ev.accuracy, ev.loss
+        );
+        return Ok(());
+    }
+    cmd_recall_xla(args)
+}
+
 #[cfg(not(feature = "pjrt"))]
-fn cmd_recall(_args: &Args) -> Result<()> {
-    pjrt_unavailable("recall")
+fn cmd_recall_xla(_args: &Args) -> Result<()> {
+    pjrt_unavailable("recall (without --load)")
+}
+
+/// Rows of a genome `Batch` as all-positions-scored training cases.
+fn cases_from_batch(b: &sh2::coordinator::data::Batch) -> Vec<TaskCase> {
+    (0..b.batch)
+        .map(|i| {
+            let lo = i * b.seq_len;
+            let hi = lo + b.seq_len;
+            TaskCase {
+                tokens: b.tokens[lo..hi].iter().map(|&x| x as u8).collect(),
+                targets: b.targets[lo..hi].iter().map(|&x| x as u8).collect(),
+                mask: vec![1.0; b.seq_len],
+            }
+        })
+        .collect()
+}
+
+/// Native pure-Rust training: tape autograd + AdamW over a trainable
+/// `HybridLm` block stack, next-byte prediction on the synthetic genome.
+fn cmd_train(args: &Args) -> Result<()> {
+    if args.get_or("backend", "native") == "xla" {
+        return cmd_train_xla(args);
+    }
+    let d = args.get_usize("width", 64);
+    let heads = args.get_usize("heads", 2);
+    let layout_s = args.get_or("layout", "SE-MR-MHA-LI").to_string();
+    let layout: Vec<&str> = layout_s.split('-').collect();
+    let seq_len = args.get_usize("seq-len", 64);
+    let batch = args.get_usize("batch", 8);
+    let steps = args.get_usize("steps", 200);
+    let lr = args.get_f64("lr", 3e-3) as f32;
+    let seed = args.get_usize("seed", 0) as u64;
+    let log_every = args.get_usize("log-every", 10);
+    let eval_every = args.get_usize("eval-every", 0);
+
+    if seq_len < 4 {
+        bail!("--seq-len must be at least 4");
+    }
+    let cfg = LmConfig::trainable(d, heads, &layout, seq_len);
+    let model = HybridLm::with_config(&mut Rng::new(seed ^ 0xA11CE), &cfg)
+        .map_err(|e| anyhow!(e))?;
+    let mut trainer = Trainer::new(model, lr, steps);
+    let mut pipe = DataPipeline::new(seed + 1, batch, seq_len);
+    let mut metrics = MetricsLog::new(batch * seq_len);
+    log::info!(
+        "native training: {} params, layout {}, {steps} steps of {batch}x{seq_len}",
+        trainer.param_count(),
+        layout_s
+    );
+    let val_cases = {
+        let mut val_pipe = DataPipeline::new(seed ^ 0xEAA, batch, seq_len);
+        let mut cases = Vec::new();
+        for _ in 0..4 {
+            cases.extend(cases_from_batch(&val_pipe.next_batch()));
+        }
+        cases
+    };
+    for _ in 0..steps {
+        let cases = cases_from_batch(&pipe.next_batch());
+        let r = trainer.train_step(&cases);
+        let m = metrics.record(trainer.step, r.loss as f64, r.grad_norm as f64);
+        if log_every > 0 && trainer.step % log_every == 0 {
+            log::info!(
+                "step {:5}  loss {:.4}  ema {:.4}  gnorm {:.2}  {:.0} tok/s",
+                m.step,
+                m.loss,
+                m.loss_ema,
+                m.grad_norm,
+                m.tokens_per_sec
+            );
+        }
+        if eval_every > 0 && trainer.step % eval_every == 0 {
+            let ev = trainer.eval(&val_cases);
+            log::info!(
+                "step {:5}  val_ppl {:.4}",
+                trainer.step,
+                sh2::coordinator::metrics::ppl(ev.loss)
+            );
+        }
+    }
+    let ev = trainer.eval(&val_cases);
+    println!(
+        "final: steps={} loss_ema={:.4} val_ppl={:.4} byte_acc={:.3} throughput={:.0} tok/s",
+        trainer.step,
+        metrics.last_loss_ema(),
+        sh2::coordinator::metrics::ppl(ev.loss),
+        ev.accuracy,
+        metrics.throughput(50)
+    );
+    if let Some(save) = args.get("save") {
+        save_lm(Path::new(save), &trainer.model, trainer.step as u64)?;
+        log::info!("checkpoint saved to {save} (drive it with `sh2 generate --load {save}`)");
+    }
+    if let Some(mpath) = args.get("metrics") {
+        metrics.write_jsonl(Path::new(mpath))?;
+    }
+    Ok(())
+}
+
+/// Operator-vs-task harness: train small models per (operator, task) and
+/// emit the Fig. 2-style complementarity table.
+fn cmd_train_tasks(args: &Args) -> Result<()> {
+    let cfg = HarnessCfg {
+        d: args.get_usize("width", 64),
+        n_heads: args.get_usize("heads", 2),
+        n_layers: args.get_usize("layers", 4),
+        seq_len: args.get_usize("seq-len", 32),
+        steps: args.get_usize("steps", 1500),
+        batch: args.get_usize("batch", 16),
+        lr: args.get_f64("lr", 3e-3) as f32,
+        seed: args.get_usize("seed", 0) as u64,
+        eval_cases: args.get_usize("eval-cases", 100),
+        log_every: args.get_usize("log-every", 100),
+    };
+    let task_arg = args.get_or("task", "all");
+    let tasks: Vec<Task> = if task_arg == "all" {
+        Task::all().to_vec()
+    } else {
+        vec![Task::parse(task_arg)
+            .ok_or_else(|| anyhow!("unknown task '{task_arg}' (see --help)"))?]
+    };
+    for t in &tasks {
+        if cfg.seq_len < t.min_seq_len() {
+            bail!(
+                "--seq-len {} too short for task '{}' (needs >= {})",
+                cfg.seq_len,
+                t.name(),
+                t.min_seq_len()
+            );
+        }
+    }
+    let op_arg = args.get_or("op", "all");
+    let ops: Vec<String> = if op_arg == "all" {
+        let mut v: Vec<String> = sh2::train::harness::OP_NAMES
+            .iter()
+            .map(|(name, _)| name.to_string())
+            .collect();
+        // the multi-hybrid row of the table
+        v.push("SE-MR-MHA-LI".to_string());
+        v
+    } else {
+        op_arg.split(',').map(|s| s.trim().to_string()).collect()
+    };
+    for op in &ops {
+        if sh2::train::harness::resolve_op(op, cfg.n_layers).is_none() {
+            bail!("unknown operator '{op}' (see --help)");
+        }
+    }
+    let table = sh2::train::run_matrix(&cfg, &ops, &tasks);
+    table.render().print();
+    for (task, op) in table.winners() {
+        println!("winner[{task}] = {op}");
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, format!("{}\n", table.to_json()))?;
+        println!("task table -> {out}");
+    }
+    if args.has_flag("assert-improve") {
+        for c in &table.cells {
+            if !(c.final_loss < c.first_loss) {
+                bail!(
+                    "loss did not improve for {}/{}: {:.4} -> {:.4}",
+                    c.op,
+                    c.task,
+                    c.first_loss,
+                    c.final_loss
+                );
+            }
+        }
+        println!(
+            "assert-improve: ok ({} cells improved their loss)",
+            table.cells.len()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_xla(_args: &Args) -> Result<()> {
+    pjrt_unavailable("train --backend xla")
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_train(args: &Args) -> Result<()> {
+fn cmd_train_xla(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny");
     let engine = Engine::cpu()?;
     log::info!("compiling programs for config '{config}'...");
-    let mut trainer = Trainer::new(
+    let mut trainer = XlaTrainer::new(
         &engine,
         &artifacts_dir(args),
         config,
@@ -473,7 +712,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny");
     let engine = Engine::cpu()?;
-    let mut trainer = Trainer::new(&engine, &artifacts_dir(args), config, 0)?;
+    let mut trainer = XlaTrainer::new(&engine, &artifacts_dir(args), config, 0)?;
     if let Some(resume) = args.get("resume") {
         trainer.load_checkpoint(Path::new(resume))?;
     }
@@ -483,10 +722,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_recall(args: &Args) -> Result<()> {
+fn cmd_recall_xla(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny");
     let engine = Engine::cpu()?;
-    let mut trainer = Trainer::new(&engine, &artifacts_dir(args), config, 0)?;
+    let mut trainer = XlaTrainer::new(&engine, &artifacts_dir(args), config, 0)?;
     if let Some(resume) = args.get("resume") {
         trainer.load_checkpoint(Path::new(resume))?;
     }

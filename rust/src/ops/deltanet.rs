@@ -135,6 +135,18 @@ impl SeqMixer for DeltaNetOp {
         self.d
     }
 
+    fn params(&self) -> Vec<(&'static str, &Tensor)> {
+        vec![("wqkv", &self.wqkv), ("wbeta", &self.wbeta), ("wo", &self.wo)]
+    }
+
+    fn params_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        vec![
+            ("wqkv", &mut self.wqkv),
+            ("wbeta", &mut self.wbeta),
+            ("wo", &mut self.wo),
+        ]
+    }
+
     fn state(&self) -> DecodeState {
         let dh = self.d / self.n_heads;
         DecodeState::DeltaNet(DeltaNetState {

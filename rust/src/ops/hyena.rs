@@ -41,8 +41,9 @@ pub struct HyenaOp {
     hv: GroupedFilter,
     /// SE/MR: explicit inner taps. LI: modal parameters.
     inner: GroupedFilter,
-    li_residues: Vec<f32>,
-    li_poles: Vec<f32>,
+    /// LI only: [groups, order] modal residues/poles ([0, 0] for SE/MR).
+    li_residues: Tensor,
+    li_poles: Tensor,
     pub block: usize,
 }
 
@@ -74,11 +75,7 @@ impl HyenaState {
 impl HyenaOp {
     /// Modal order of the LI filter (0 for SE/MR).
     fn li_order(&self) -> usize {
-        if self.num_groups == 0 {
-            0
-        } else {
-            self.li_residues.len() / self.num_groups
-        }
+        self.li_residues.cols()
     }
 
     /// One decode step of the LI modal IIR: s <- λ s + kv, y = Σ R s, the
@@ -92,8 +89,8 @@ impl HyenaOp {
             let mut acc = 0.0f32;
             for o in 0..order {
                 let s = &mut modal[c * order + o];
-                *s = self.li_poles[gi * order + o] * *s + kv[c];
-                acc += self.li_residues[gi * order + o] * *s;
+                *s = self.li_poles.data[gi * order + o] * *s + kv[c];
+                acc += self.li_residues.data[gi * order + o] * *s;
             }
             *yv = acc;
         }
@@ -123,8 +120,8 @@ impl HyenaOp {
             hk: Self::featurizer(rng, d),
             hv: Self::featurizer(rng, d),
             inner,
-            li_residues: vec![],
-            li_poles: vec![],
+            li_residues: Tensor::zeros(&[0, 0]),
+            li_poles: Tensor::zeros(&[0, 0]),
             block,
         }
     }
@@ -157,8 +154,14 @@ impl HyenaOp {
         let groups = (d / 16).max(1);
         let order = 8;
         let mut op = Self::base(rng, d, HyenaKind::Li, groups, 1, 16);
-        op.li_residues = rng.normal_vec(groups * order, 1.0 / order as f32);
-        op.li_poles = (0..groups * order).map(|_| 0.3 + 0.69 * rng.f32()).collect();
+        op.li_residues = Tensor::from_vec(
+            &[groups, order],
+            rng.normal_vec(groups * order, 1.0 / order as f32),
+        );
+        op.li_poles = Tensor::from_vec(
+            &[groups, order],
+            (0..groups * order).map(|_| 0.3 + 0.69 * rng.f32()).collect(),
+        );
         op
     }
 
@@ -167,12 +170,12 @@ impl HyenaOp {
             HyenaKind::Se | HyenaKind::Mr => self.inner.clone(),
             HyenaKind::Li => {
                 let g = self.num_groups;
-                let order = self.li_residues.len() / g;
+                let order = self.li_order();
                 let mut taps = Tensor::zeros(&[g, l]);
                 for gi in 0..g {
                     let h = modal_filter(
-                        &self.li_residues[gi * order..(gi + 1) * order],
-                        &self.li_poles[gi * order..(gi + 1) * order],
+                        &self.li_residues.data[gi * order..(gi + 1) * order],
+                        &self.li_poles.data[gi * order..(gi + 1) * order],
                         l,
                     );
                     taps.row_mut(gi).copy_from_slice(&h);
@@ -225,6 +228,46 @@ impl SeqMixer for HyenaOp {
 
     fn width(&self) -> usize {
         self.d
+    }
+
+    fn params(&self) -> Vec<(&'static str, &Tensor)> {
+        let mut p = vec![
+            ("w", &self.w),
+            ("u", &self.u),
+            ("p", &self.p),
+            ("m", &self.m),
+            ("hq", &self.hq.taps),
+            ("hk", &self.hk.taps),
+            ("hv", &self.hv.taps),
+        ];
+        match self.kind {
+            HyenaKind::Se | HyenaKind::Mr => p.push(("inner", &self.inner.taps)),
+            HyenaKind::Li => {
+                p.push(("li_residues", &self.li_residues));
+                p.push(("li_poles", &self.li_poles));
+            }
+        }
+        p
+    }
+
+    fn params_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        let mut p = vec![
+            ("w", &mut self.w),
+            ("u", &mut self.u),
+            ("p", &mut self.p),
+            ("m", &mut self.m),
+            ("hq", &mut self.hq.taps),
+            ("hk", &mut self.hk.taps),
+            ("hv", &mut self.hv.taps),
+        ];
+        match self.kind {
+            HyenaKind::Se | HyenaKind::Mr => p.push(("inner", &mut self.inner.taps)),
+            HyenaKind::Li => {
+                p.push(("li_residues", &mut self.li_residues));
+                p.push(("li_poles", &mut self.li_poles));
+            }
+        }
+        p
     }
 
     fn plan_shapes(&self, l: usize) -> Vec<ConvShape> {
@@ -333,7 +376,7 @@ impl SeqMixer for HyenaOp {
                         let gi = c / gsz;
                         for o in 0..order {
                             let s = &mut st.modal[c * order + o];
-                            *s = self.li_poles[gi * order + o] * *s + row[c];
+                            *s = self.li_poles.data[gi * order + o] * *s + row[c];
                         }
                     }
                 }

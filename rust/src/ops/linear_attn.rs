@@ -135,6 +135,14 @@ impl SeqMixer for LinearAttnOp {
         self.d
     }
 
+    fn params(&self) -> Vec<(&'static str, &Tensor)> {
+        vec![("wqkv", &self.wqkv), ("wo", &self.wo)]
+    }
+
+    fn params_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        vec![("wqkv", &mut self.wqkv), ("wo", &mut self.wo)]
+    }
+
     fn state(&self) -> DecodeState {
         let dh = self.d / self.n_heads;
         DecodeState::LinearAttn(LinearAttnState {

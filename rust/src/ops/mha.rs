@@ -146,6 +146,14 @@ impl SeqMixer for MhaOp {
         self.d
     }
 
+    fn params(&self) -> Vec<(&'static str, &Tensor)> {
+        vec![("wqkv", &self.wqkv), ("wo", &self.wo)]
+    }
+
+    fn params_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        vec![("wqkv", &mut self.wqkv), ("wo", &mut self.wo)]
+    }
+
     fn state(&self) -> DecodeState {
         DecodeState::Mha(MhaState { pos: 0, k: Vec::new(), v: Vec::new() })
     }

@@ -135,6 +135,18 @@ impl SeqMixer for MlstmOp {
         self.d
     }
 
+    fn params(&self) -> Vec<(&'static str, &Tensor)> {
+        vec![("wqkv", &self.wqkv), ("wif", &self.wif), ("wo", &self.wo)]
+    }
+
+    fn params_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        vec![
+            ("wqkv", &mut self.wqkv),
+            ("wif", &mut self.wif),
+            ("wo", &mut self.wo),
+        ]
+    }
+
     fn state(&self) -> DecodeState {
         let dh = self.d / self.n_heads;
         DecodeState::Mlstm(MlstmState {

@@ -82,6 +82,16 @@ pub trait SeqMixer {
         Vec::new()
     }
 
+    /// Named learnable parameters of this operator in a stable, documented
+    /// order. The names are the contract shared by the training subsystem
+    /// (`train::model` builds its tape forward from them), the checkpoint
+    /// format (`train::checkpoint` serializes them), and `params_mut` (the
+    /// optimizer writes updates back through it) — all three must agree.
+    fn params(&self) -> Vec<(&'static str, &Tensor)>;
+
+    /// Mutable view of the same parameters, same names, same order.
+    fn params_mut(&mut self) -> Vec<(&'static str, &mut Tensor)>;
+
     /// Fresh decode state at position 0 (no tokens absorbed yet).
     fn state(&self) -> DecodeState;
 

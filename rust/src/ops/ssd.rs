@@ -137,6 +137,26 @@ impl SeqMixer for SsdOp {
         self.d
     }
 
+    fn params(&self) -> Vec<(&'static str, &Tensor)> {
+        vec![
+            ("wx", &self.wx),
+            ("wb", &self.wb),
+            ("wc", &self.wc),
+            ("wdt", &self.wdt),
+            ("wo", &self.wo),
+        ]
+    }
+
+    fn params_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        vec![
+            ("wx", &mut self.wx),
+            ("wb", &mut self.wb),
+            ("wc", &mut self.wc),
+            ("wdt", &mut self.wdt),
+            ("wo", &mut self.wo),
+        ]
+    }
+
     fn state(&self) -> DecodeState {
         let dh = self.d / self.n_heads;
         DecodeState::Ssd(SsdState {

@@ -31,6 +31,6 @@ pub mod model;
 pub mod sampler;
 pub mod scheduler;
 
-pub use model::{HybridLm, LmState};
+pub use model::{HybridLm, LmConfig, LmState};
 pub use sampler::Sampler;
 pub use scheduler::{BatchScheduler, FinishedStream, ServeStats};

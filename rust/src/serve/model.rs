@@ -1,13 +1,24 @@
-//! A self-contained byte-level multi-hybrid LM for the serving engine:
-//! tied byte embedding, a residual stack of `SeqMixer` layers in a
-//! configurable layout (the paper's §2 multi-hybrid pattern), and a linear
-//! LM head. Weights are random unless loaded — the point of this model is
-//! exercising the streaming decode machinery end to end, with per-layer
-//! decode state managed through the `DecodeState` API.
+//! A self-contained byte-level multi-hybrid LM for the serving engine and
+//! the native trainer: tied byte embedding, a residual stack of `SeqMixer`
+//! layers in a configurable layout (the paper's §2 multi-hybrid pattern),
+//! and a linear LM head. Two shapes of stack exist:
+//!
+//! * the bare mixer stack (`HybridLm::new`) — `x += mixer(x)` per layer,
+//!   random weights, the minimal harness for exercising streaming decode;
+//! * the training block stack (`HybridLm::with_config`, `blocks = true`) —
+//!   learned positional embedding, pre-RMSNorm before each mixer, a silu
+//!   MLP sublayer with its own pre-norm, and a final norm before the head.
+//!   This is the architecture `train::Trainer` optimizes; its checkpoints
+//!   (`train::checkpoint`) rebuild the identical stack here, so a trained
+//!   model drives `generate`/`serve` unchanged.
+//!
+//! All norm/MLP/positional components are stateless per token, so the
+//! decode-state machinery (`DecodeState` per mixer) is untouched by them.
 
 use crate::ops::{self, DecodeState, SeqMixer};
-use crate::tensor::matmul::vecmat;
+use crate::tensor::matmul::{matmul, vecmat};
 use crate::tensor::Tensor;
+use crate::util::math::{rmsnorm_row, silu};
 use crate::util::rng::Rng;
 
 /// Byte vocabulary — raw bytes, as in the paper's Evo-style tokenization.
@@ -37,15 +48,79 @@ pub fn op_from_code(
     })
 }
 
-/// Byte-level multi-hybrid language model: embed -> residual mixer stack ->
-/// LM head. All layers share width `d`.
+/// Architecture description of a [`HybridLm`] — everything needed to
+/// rebuild the same parameter shapes (the checkpoint header serializes it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LmConfig {
+    pub d: usize,
+    pub n_heads: usize,
+    pub layout: Vec<String>,
+    /// Training blocks: positional table + pre-norms + MLP + final norm.
+    pub blocks: bool,
+    /// MLP hidden width multiple (used when `blocks`).
+    pub mlp_mult: usize,
+    /// Positional-embedding capacity (used when `blocks`). Positions past
+    /// it reuse the last row.
+    pub max_pos: usize,
+    /// Init scale of the embedding / positional tables.
+    pub embed_scale: f32,
+}
+
+impl LmConfig {
+    /// The bare residual mixer stack (serving-demo default).
+    pub fn bare(d: usize, n_heads: usize, layout: &[&str]) -> LmConfig {
+        LmConfig {
+            d,
+            n_heads,
+            layout: layout.iter().map(|s| s.to_string()).collect(),
+            blocks: false,
+            mlp_mult: 0,
+            max_pos: 0,
+            embed_scale: 0.5,
+        }
+    }
+
+    /// The trainable block stack (DESIGN.md §12).
+    pub fn trainable(d: usize, n_heads: usize, layout: &[&str], max_pos: usize) -> LmConfig {
+        LmConfig {
+            d,
+            n_heads,
+            layout: layout.iter().map(|s| s.to_string()).collect(),
+            blocks: true,
+            mlp_mult: 2,
+            max_pos,
+            embed_scale: 0.02,
+        }
+    }
+}
+
+struct Mlp {
+    norm_g: Tensor, // [d]
+    w1: Tensor,     // [d, mlp_mult*d]
+    w2: Tensor,     // [mlp_mult*d, d]
+}
+
+struct Block {
+    mixer: Box<dyn SeqMixer>,
+    /// Pre-mixer RMSNorm gain ([d]); absent in the bare stack.
+    norm_g: Option<Tensor>,
+    mlp: Option<Mlp>,
+}
+
+/// Byte-level multi-hybrid language model: embed (+pos) -> residual mixer
+/// (+MLP) stack -> (norm ->) LM head. All layers share width `d`.
 pub struct HybridLm {
     pub d: usize,
     pub n_heads: usize,
     layout: Vec<String>,
+    cfg: LmConfig,
     embed: Tensor,
     head: Tensor,
-    layers: Vec<Box<dyn SeqMixer>>,
+    /// Learned positional table [max_pos, d] (blocks only).
+    pos: Option<Tensor>,
+    /// Final RMSNorm gain (blocks only).
+    norm_f: Option<Tensor>,
+    layers: Vec<Block>,
 }
 
 /// Per-stream model state: one `DecodeState` per layer plus the absolute
@@ -64,27 +139,52 @@ impl LmState {
 }
 
 impl HybridLm {
-    /// Build a model with the given width, head count and layer layout
-    /// (operator codes from `LAYOUT_CODES`). Errors on an unknown code.
+    /// Build the bare mixer stack with the given width, head count and
+    /// layer layout (operator codes from `LAYOUT_CODES`). Errors on an
+    /// unknown code.
     pub fn new(
         rng: &mut Rng,
         d: usize,
         n_heads: usize,
         layout: &[&str],
     ) -> Result<HybridLm, String> {
+        Self::with_config(rng, &LmConfig::bare(d, n_heads, layout))
+    }
+
+    /// Build from a full architecture description (bare or block stack).
+    pub fn with_config(rng: &mut Rng, cfg: &LmConfig) -> Result<HybridLm, String> {
+        let (d, n_heads) = (cfg.d, cfg.n_heads);
         assert!(d % n_heads == 0, "width {d} not divisible by {n_heads} heads");
-        let mut layers = Vec::with_capacity(layout.len());
-        for code in layout {
-            let op = op_from_code(rng, code, d, n_heads)
+        let mut layers = Vec::with_capacity(cfg.layout.len());
+        for code in &cfg.layout {
+            let mixer = op_from_code(rng, code, d, n_heads)
                 .ok_or_else(|| format!("unknown operator code '{code}'"))?;
-            layers.push(op);
+            let (norm_g, mlp) = if cfg.blocks {
+                let hidden = cfg.mlp_mult * d;
+                (
+                    Some(Tensor::from_vec(&[d], vec![1.0; d])),
+                    Some(Mlp {
+                        norm_g: Tensor::from_vec(&[d], vec![1.0; d]),
+                        w1: Tensor::randn(rng, &[d, hidden], (d as f32).powf(-0.5)),
+                        w2: Tensor::randn(rng, &[hidden, d], (hidden as f32).powf(-0.5)),
+                    }),
+                )
+            } else {
+                (None, None)
+            };
+            layers.push(Block { mixer, norm_g, mlp });
         }
         Ok(HybridLm {
             d,
             n_heads,
-            layout: layout.iter().map(|s| s.to_string()).collect(),
-            embed: Tensor::randn(rng, &[VOCAB, d], 0.5),
+            layout: cfg.layout.clone(),
+            cfg: cfg.clone(),
+            embed: Tensor::randn(rng, &[VOCAB, d], cfg.embed_scale),
             head: Tensor::randn(rng, &[d, VOCAB], (d as f32).powf(-0.5)),
+            pos: cfg
+                .blocks
+                .then(|| Tensor::randn(rng, &[cfg.max_pos.max(1), d], cfg.embed_scale)),
+            norm_f: cfg.blocks.then(|| Tensor::from_vec(&[d], vec![1.0; d])),
             layers,
         })
     }
@@ -97,6 +197,67 @@ impl HybridLm {
         self.layout.join("-")
     }
 
+    pub fn config(&self) -> &LmConfig {
+        &self.cfg
+    }
+
+    /// Every learnable tensor with its checkpoint name — the contract
+    /// shared by `train::model` (tape forward), `train::optim` (updates)
+    /// and `train::checkpoint` (serialization). Order is stable.
+    pub fn named_params(&self) -> Vec<(String, &Tensor)> {
+        let mut out: Vec<(String, &Tensor)> = vec![("embed".into(), &self.embed)];
+        if let Some(p) = &self.pos {
+            out.push(("pos".into(), p));
+        }
+        for (i, b) in self.layers.iter().enumerate() {
+            if let Some(g) = &b.norm_g {
+                out.push((format!("layers.{i}.norm_g"), g));
+            }
+            let code = &self.layout[i];
+            for (name, t) in b.mixer.params() {
+                out.push((format!("layers.{i}.{code}.{name}"), t));
+            }
+            if let Some(m) = &b.mlp {
+                out.push((format!("layers.{i}.mlp.norm_g"), &m.norm_g));
+                out.push((format!("layers.{i}.mlp.w1"), &m.w1));
+                out.push((format!("layers.{i}.mlp.w2"), &m.w2));
+            }
+        }
+        if let Some(g) = &self.norm_f {
+            out.push(("norm_f".into(), g));
+        }
+        out.push(("head".into(), &self.head));
+        out
+    }
+
+    /// Mutable view of [`HybridLm::named_params`], same names, same order.
+    pub fn named_params_mut(&mut self) -> Vec<(String, &mut Tensor)> {
+        let mut out: Vec<(String, &mut Tensor)> =
+            vec![("embed".into(), &mut self.embed)];
+        if let Some(p) = &mut self.pos {
+            out.push(("pos".into(), p));
+        }
+        for (i, b) in self.layers.iter_mut().enumerate() {
+            if let Some(g) = &mut b.norm_g {
+                out.push((format!("layers.{i}.norm_g"), g));
+            }
+            let code = &self.layout[i];
+            for (name, t) in b.mixer.params_mut() {
+                out.push((format!("layers.{i}.{code}.{name}"), t));
+            }
+            if let Some(m) = &mut b.mlp {
+                out.push((format!("layers.{i}.mlp.norm_g"), &mut m.norm_g));
+                out.push((format!("layers.{i}.mlp.w1"), &mut m.w1));
+                out.push((format!("layers.{i}.mlp.w2"), &mut m.w2));
+            }
+        }
+        if let Some(g) = &mut self.norm_f {
+            out.push(("norm_f".into(), g));
+        }
+        out.push(("head".into(), &mut self.head));
+        out
+    }
+
     /// Pre-plan the convolution shapes this model will dispatch at the
     /// given prefill lengths, so the serving hot path only ever takes the
     /// plan-cache *hit* branch (DESIGN.md §Autotuning). Returns how many
@@ -105,8 +266,8 @@ impl HybridLm {
     pub fn warm_plans(&self, prefill_lens: &[usize]) -> usize {
         let planner = crate::conv::planner::global();
         for &l in prefill_lens {
-            for op in &self.layers {
-                planner.warm(&op.plan_shapes(l));
+            for b in &self.layers {
+                planner.warm(&b.mixer.plan_shapes(l));
             }
         }
         planner.len()
@@ -116,8 +277,14 @@ impl HybridLm {
     pub fn state(&self) -> LmState {
         LmState {
             pos: 0,
-            layers: self.layers.iter().map(|op| op.state()).collect(),
+            layers: self.layers.iter().map(|b| b.mixer.state()).collect(),
         }
+    }
+
+    /// Positional row for absolute position `p` (last row reused past
+    /// capacity), or None in the bare stack.
+    fn pos_row(&self, p: usize) -> Option<&[f32]> {
+        self.pos.as_ref().map(|t| t.row(p.min(t.rows() - 1)))
     }
 
     /// Prefill a token block through every layer's blocked path. Returns
@@ -128,27 +295,129 @@ impl HybridLm {
         let mut x = Tensor::zeros(&[l, self.d]);
         for (t, &tok) in tokens.iter().enumerate() {
             x.row_mut(t).copy_from_slice(self.embed.row(tok as usize));
+            if let Some(pr) = self.pos_row(st.pos + t) {
+                for (xv, pv) in x.row_mut(t).iter_mut().zip(pr) {
+                    *xv += pv;
+                }
+            }
         }
-        for (op, ls) in self.layers.iter().zip(st.layers.iter_mut()) {
-            let y = op.prefill(ls, &x);
+        for (b, ls) in self.layers.iter().zip(st.layers.iter_mut()) {
+            // borrow x directly in the bare stack — no copy on the hot path
+            let y = match &b.norm_g {
+                Some(g) => {
+                    let mut xn = Tensor::zeros(&[l, self.d]);
+                    for t in 0..l {
+                        xn.row_mut(t).copy_from_slice(&rmsnorm_row(x.row(t), &g.data));
+                    }
+                    b.mixer.prefill(ls, &xn)
+                }
+                None => b.mixer.prefill(ls, &x),
+            };
             x.add_assign(&y);
+            if let Some(m) = &b.mlp {
+                for t in 0..l {
+                    let out = mlp_row(x.row(t), m);
+                    for (xv, ov) in x.row_mut(t).iter_mut().zip(&out) {
+                        *xv += ov;
+                    }
+                }
+            }
         }
         st.pos += l;
-        vecmat(x.row(l - 1), &self.head)
+        let last = match &self.norm_f {
+            Some(g) => rmsnorm_row(x.row(l - 1), &g.data),
+            None => x.row(l - 1).to_vec(),
+        };
+        vecmat(&last, &self.head)
     }
 
     /// Decode one token: absorb `token`, return next-token logits.
     pub fn step(&self, st: &mut LmState, token: u8) -> Vec<f32> {
         let mut x = self.embed.row(token as usize).to_vec();
-        for (op, ls) in self.layers.iter().zip(st.layers.iter_mut()) {
-            let y = op.step(ls, &x);
+        if let Some(pr) = self.pos_row(st.pos) {
+            for (xv, pv) in x.iter_mut().zip(pr) {
+                *xv += pv;
+            }
+        }
+        for (b, ls) in self.layers.iter().zip(st.layers.iter_mut()) {
+            let y = match &b.norm_g {
+                Some(g) => b.mixer.step(ls, &rmsnorm_row(&x, &g.data)),
+                None => b.mixer.step(ls, &x),
+            };
             for (xv, yv) in x.iter_mut().zip(&y) {
                 *xv += yv;
             }
+            if let Some(m) = &b.mlp {
+                let out = mlp_row(&x, m);
+                for (xv, ov) in x.iter_mut().zip(&out) {
+                    *xv += ov;
+                }
+            }
         }
         st.pos += 1;
-        vecmat(&x, &self.head)
+        let last = match &self.norm_f {
+            Some(g) => rmsnorm_row(&x, &g.data),
+            None => x,
+        };
+        vecmat(&last, &self.head)
     }
+
+    /// Full-sequence logits [l, VOCAB] via the batch `forward` of every
+    /// mixer — the training-parity reference path (no decode state).
+    pub fn logits(&self, tokens: &[u8]) -> Tensor {
+        let l = tokens.len();
+        let mut x = Tensor::zeros(&[l, self.d]);
+        for (t, &tok) in tokens.iter().enumerate() {
+            x.row_mut(t).copy_from_slice(self.embed.row(tok as usize));
+            if let Some(pr) = self.pos_row(t) {
+                for (xv, pv) in x.row_mut(t).iter_mut().zip(pr) {
+                    *xv += pv;
+                }
+            }
+        }
+        for b in &self.layers {
+            let y = match &b.norm_g {
+                Some(g) => {
+                    let mut xn = Tensor::zeros(&[l, self.d]);
+                    for t in 0..l {
+                        xn.row_mut(t).copy_from_slice(&rmsnorm_row(x.row(t), &g.data));
+                    }
+                    b.mixer.forward(&xn)
+                }
+                None => b.mixer.forward(&x),
+            };
+            x.add_assign(&y);
+            if let Some(m) = &b.mlp {
+                for t in 0..l {
+                    let out = mlp_row(x.row(t), m);
+                    for (xv, ov) in x.row_mut(t).iter_mut().zip(&out) {
+                        *xv += ov;
+                    }
+                }
+            }
+        }
+        let xf = match &self.norm_f {
+            Some(g) => {
+                let mut xn = Tensor::zeros(&[l, self.d]);
+                for t in 0..l {
+                    xn.row_mut(t).copy_from_slice(&rmsnorm_row(x.row(t), &g.data));
+                }
+                xn
+            }
+            None => x,
+        };
+        matmul(&xf, &self.head)
+    }
+}
+
+/// MLP sublayer on one row: silu(rmsnorm(x) W1) W2.
+fn mlp_row(x: &[f32], m: &Mlp) -> Vec<f32> {
+    let xn = rmsnorm_row(x, &m.norm_g.data);
+    let mut h = vecmat(&xn, &m.w1);
+    for v in h.iter_mut() {
+        *v = silu(*v);
+    }
+    vecmat(&h, &m.w2)
 }
 
 #[cfg(test)]
@@ -177,6 +446,66 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(diff < 1e-4, "prefill/step logit divergence {diff}");
+    }
+
+    #[test]
+    fn block_stack_step_matches_prefill() {
+        let mut rng = Rng::new(5);
+        let cfg = LmConfig::trainable(16, 2, &["SE", "MHA"], 64);
+        let model = HybridLm::with_config(&mut rng, &cfg).unwrap();
+        let tokens = b"ACGTACGTACGT";
+        let mut sa = model.state();
+        let la = model.prefill(&mut sa, tokens);
+        let mut sb = model.state();
+        model.prefill(&mut sb, &tokens[..5]);
+        let mut lb = Vec::new();
+        for &t in &tokens[5..] {
+            lb = model.step(&mut sb, t);
+        }
+        let diff = la
+            .iter()
+            .zip(&lb)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-4, "block-stack prefill/step divergence {diff}");
+        // And the batch `logits` path agrees at the last position.
+        let full = model.logits(tokens);
+        let diff2 = la
+            .iter()
+            .zip(full.row(tokens.len() - 1))
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff2 < 1e-3, "logits/prefill divergence {diff2}");
+    }
+
+    #[test]
+    fn named_params_roundtrip_through_mut() {
+        let mut rng = Rng::new(6);
+        let cfg = LmConfig::trainable(16, 2, &["LI", "DN"], 32);
+        let mut model = HybridLm::with_config(&mut rng, &cfg).unwrap();
+        let names: Vec<String> =
+            model.named_params().iter().map(|(n, _)| n.clone()).collect();
+        assert!(names.contains(&"embed".to_string()));
+        assert!(names.contains(&"pos".to_string()));
+        assert!(names.contains(&"layers.0.LI.li_poles".to_string()));
+        assert!(names.contains(&"layers.1.DN.wbeta".to_string()));
+        assert!(names.contains(&"layers.0.mlp.w1".to_string()));
+        assert!(names.contains(&"norm_f".to_string()));
+        let names_mut: Vec<String> =
+            model.named_params_mut().iter().map(|(n, _)| n.clone()).collect();
+        assert_eq!(names, names_mut, "params and params_mut must agree");
+        // Zeroing a param through the mut view changes the model output.
+        let before = model.logits(b"ACGT");
+        for (n, t) in model.named_params_mut() {
+            if n == "head" {
+                for v in t.data.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+        let after = model.logits(b"ACGT");
+        assert!(before.max_abs_diff(&after) > 0.0);
+        assert!(after.data.iter().all(|&v| v == 0.0));
     }
 
     #[test]

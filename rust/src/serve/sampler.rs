@@ -1,6 +1,9 @@
 //! Token samplers for the serving engine — greedy argmax and top-k with
 //! temperature, both deterministic given the stream's `util::rng::Rng`.
+//! The top-k distribution is the shared stable softmax from `util::math`,
+//! the same implementation the training loss uses.
 
+use crate::util::math::softmax_in_place;
 use crate::util::rng::Rng;
 
 /// Sampling policy applied to a logit vector.
@@ -40,13 +43,10 @@ impl Sampler {
                     logits[b].total_cmp(&logits[a]).then(a.cmp(&b))
                 });
                 idx.truncate(k);
-                let maxl = logits[idx[0]];
-                let weights: Vec<f32> = idx
-                    .iter()
-                    .map(|&i| ((logits[i] - maxl) / temperature).exp())
-                    .collect();
-                let total: f32 = weights.iter().sum();
-                let mut r = rng.f32() * total;
+                let mut weights: Vec<f32> =
+                    idx.iter().map(|&i| logits[i] / temperature).collect();
+                softmax_in_place(&mut weights);
+                let mut r = rng.f32();
                 for (i, &w) in idx.iter().zip(&weights) {
                     if r < w {
                         return *i;

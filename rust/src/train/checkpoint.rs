@@ -1,0 +1,214 @@
+//! Pure-Rust weight checkpoints for [`HybridLm`] (`sh2-lm-ckpt-v1`): one
+//! file holding a JSON architecture header plus raw little-endian f32
+//! parameter data, so a `sh2 train`-produced model can be handed directly
+//! to `generate`/`serve` without the `pjrt` feature.
+//!
+//! Layout: magic `SH2LMCK1` | u64 header byte length | header JSON |
+//! per parameter (in header order): raw f32 LE bytes. The header records
+//! the full [`LmConfig`] and each parameter's name + shape; loading
+//! rebuilds the architecture and copies arrays in by name, so any drift
+//! between writer and reader fails loudly instead of silently.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::{HybridLm, LmConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 8] = b"SH2LMCK1";
+const SCHEMA: &str = "sh2-lm-ckpt-v1";
+
+/// Serialize `model` (and the training step that produced it) to `path`.
+pub fn save_lm(path: &Path, model: &HybridLm, step: u64) -> Result<()> {
+    let cfg = model.config();
+    let params = model.named_params();
+    let header = Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("step", Json::num(step as f64)),
+        ("d", Json::num(cfg.d as f64)),
+        ("n_heads", Json::num(cfg.n_heads as f64)),
+        (
+            "layout",
+            Json::arr(cfg.layout.iter().map(|c| Json::str(c))),
+        ),
+        ("blocks", Json::Bool(cfg.blocks)),
+        ("mlp_mult", Json::num(cfg.mlp_mult as f64)),
+        ("max_pos", Json::num(cfg.max_pos as f64)),
+        ("embed_scale", Json::num(cfg.embed_scale as f64)),
+        (
+            "params",
+            Json::arr(params.iter().map(|(name, t)| {
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    (
+                        "shape",
+                        Json::arr(t.shape.iter().map(|&s| Json::num(s as f64))),
+                    ),
+                ])
+            })),
+        ),
+    ])
+    .to_string();
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for (_, t) in &params {
+        let mut buf = Vec::with_capacity(t.data.len() * 4);
+        for &x in &t.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Rebuild a model from `path`. Returns the model and the recorded step.
+pub fn load_lm(path: &Path) -> Result<(HybridLm, u64)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an sh2 LM checkpoint (bad magic)", path.display());
+    }
+    let mut lenbuf = [0u8; 8];
+    f.read_exact(&mut lenbuf)?;
+    let hlen = u64::from_le_bytes(lenbuf) as usize;
+    if hlen > 1 << 24 {
+        bail!("corrupt checkpoint: header length {hlen}");
+    }
+    let mut hraw = vec![0u8; hlen];
+    f.read_exact(&mut hraw)?;
+    let header = Json::parse(std::str::from_utf8(&hraw).context("header utf8")?)
+        .map_err(|e| anyhow::anyhow!("header json: {e}"))?;
+    if header.get("schema").and_then(Json::as_str) != Some(SCHEMA) {
+        bail!("unsupported checkpoint schema");
+    }
+    let get_usize = |k: &str| -> Result<usize> {
+        header
+            .get(k)
+            .and_then(Json::as_usize)
+            .with_context(|| format!("header missing '{k}'"))
+    };
+    let layout: Vec<String> = header
+        .get("layout")
+        .and_then(Json::as_array)
+        .context("header missing 'layout'")?
+        .iter()
+        .map(|j| j.as_str().map(|s| s.to_string()).context("layout entry"))
+        .collect::<Result<_>>()?;
+    let layout_refs: Vec<&str> = layout.iter().map(|s| s.as_str()).collect();
+    let cfg = LmConfig {
+        d: get_usize("d")?,
+        n_heads: get_usize("n_heads")?,
+        layout: layout_refs.iter().map(|s| s.to_string()).collect(),
+        blocks: header
+            .get("blocks")
+            .and_then(Json::as_bool)
+            .context("header missing 'blocks'")?,
+        mlp_mult: get_usize("mlp_mult")?,
+        max_pos: get_usize("max_pos")?,
+        embed_scale: header
+            .get("embed_scale")
+            .and_then(Json::as_f64)
+            .context("header missing 'embed_scale'")? as f32,
+    };
+    let step = get_usize("step")? as u64;
+    let mut model = HybridLm::with_config(&mut Rng::new(0), &cfg)
+        .map_err(|e| anyhow::anyhow!("rebuilding architecture: {e}"))?;
+    let entries = header
+        .get("params")
+        .and_then(Json::as_array)
+        .context("header missing 'params'")?;
+    let mut params = model.named_params_mut();
+    if entries.len() != params.len() {
+        bail!(
+            "checkpoint has {} parameters, architecture has {}",
+            entries.len(),
+            params.len()
+        );
+    }
+    for (entry, (name, tensor)) in entries.iter().zip(params.iter_mut()) {
+        let ename = entry.get("name").and_then(Json::as_str).context("param name")?;
+        if ename != name {
+            bail!("parameter order mismatch: checkpoint '{ename}' vs model '{name}'");
+        }
+        let shape: Vec<usize> = entry
+            .get("shape")
+            .and_then(Json::as_array)
+            .context("param shape")?
+            .iter()
+            .map(|j| j.as_usize().context("shape entry"))
+            .collect::<Result<_>>()?;
+        if shape != tensor.shape {
+            bail!(
+                "shape mismatch for '{name}': checkpoint {shape:?} vs model {:?}",
+                tensor.shape
+            );
+        }
+        let n = tensor.numel();
+        let mut raw = vec![0u8; n * 4];
+        f.read_exact(&mut raw)
+            .with_context(|| format!("reading data for '{name}'"))?;
+        for (i, chunk) in raw.chunks_exact(4).enumerate() {
+            tensor.data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+    }
+    drop(params);
+    Ok((model, step))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_logits() {
+        let dir = std::env::temp_dir().join("sh2_lm_ckpt_test.bin");
+        let mut rng = Rng::new(3);
+        let cfg = LmConfig::trainable(16, 2, &["SE", "MHA", "LI"], 24);
+        let model = HybridLm::with_config(&mut rng, &cfg).unwrap();
+        let want = model.logits(b"ACGTACGT");
+        save_lm(&dir, &model, 7).unwrap();
+        let (loaded, step) = load_lm(&dir).unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(loaded.config(), model.config());
+        let got = loaded.logits(b"ACGTACGT");
+        assert!(
+            got.allclose(&want, 1e-6),
+            "logits diverged after roundtrip: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn bare_stack_roundtrips_too() {
+        let p = std::env::temp_dir().join("sh2_lm_ckpt_bare.bin");
+        let mut rng = Rng::new(4);
+        let model = HybridLm::new(&mut rng, 16, 2, &["DN", "MLSTM"]).unwrap();
+        save_lm(&p, &model, 0).unwrap();
+        let (loaded, _) = load_lm(&p).unwrap();
+        let toks = b"ACGT";
+        assert!(loaded.logits(toks).allclose(&model.logits(toks), 1e-6));
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let p = std::env::temp_dir().join("sh2_lm_ckpt_garbage.bin");
+        std::fs::write(&p, b"definitely not a checkpoint").unwrap();
+        assert!(load_lm(&p).is_err());
+        // truncated: valid header, missing data
+        let p2 = std::env::temp_dir().join("sh2_lm_ckpt_trunc.bin");
+        let mut rng = Rng::new(5);
+        let model = HybridLm::new(&mut rng, 16, 2, &["SE"]).unwrap();
+        save_lm(&p2, &model, 0).unwrap();
+        let full = std::fs::read(&p2).unwrap();
+        std::fs::write(&p2, &full[..full.len() - 64]).unwrap();
+        assert!(load_lm(&p2).is_err());
+    }
+}

@@ -1,0 +1,730 @@
+//! Backward-through-time "super-op" tape nodes for the recurrent /
+//! attention mixer heads (DESIGN.md §12).
+//!
+//! Expressing these scans as primitive tape nodes would cost one node per
+//! timestep; instead each head is a single node whose backward closure
+//! replays the recurrence in reverse with hand-derived adjoints. Every
+//! derivation here is covered by the finite-difference checks in
+//! `tests/integration_train.rs` (and mirrored, per-head, in this module's
+//! unit tests).
+//!
+//! State reconstruction strategy per family:
+//! * attention — nothing stored; per-row probabilities are recomputed.
+//! * linear attention — final (S, z) recomputed, then *reverse-subtracted*
+//!   step by step (the update is additive, so this is exact).
+//! * SSD — the decay `a_t` can be arbitrarily small, so dividing to invert
+//!   the update is unstable; the forward state history is rematerialized.
+//! * DeltaNet — `S_{t-1} = S_t − β err knᵀ` with stored (kn, pred) per step
+//!   reconstructs exactly without division.
+//! * mLSTM — forget gate can be ~0, so like SSD the (C, n) history is
+//!   rematerialized.
+
+use crate::tensor::Tensor;
+use crate::util::math::{sigmoid, softplus};
+
+use super::tape::{Tape, Var};
+
+#[inline]
+fn elu1(x: f32) -> f32 {
+    if x > 0.0 {
+        x + 1.0
+    } else {
+        x.exp()
+    }
+}
+
+#[inline]
+fn delu1(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else {
+        x.exp()
+    }
+}
+
+/// Causal softmax attention for one head (same math as
+/// `ops::mha::causal_attention_head`), as one tape node. q, k, v: [l, dh].
+pub fn attention_head(tape: &mut Tape, q: Var, k: Var, v: Var) -> Var {
+    let y = crate::ops::mha::causal_attention_head(
+        tape.value(q),
+        tape.value(k),
+        tape.value(v),
+    );
+    let (qi, ki, vi) = (q.0, k.0, v.0);
+    tape.push_node(
+        y,
+        Box::new(move |vals, dy| {
+            let (q, k, v) = (&vals[qi], &vals[ki], &vals[vi]);
+            let (l, dh) = (q.rows(), q.cols());
+            let scale = (dh as f32).powf(-0.5);
+            let mut dq = Tensor::zeros(&[l, dh]);
+            let mut dk = Tensor::zeros(&[l, dh]);
+            let mut dv = Tensor::zeros(&[l, dh]);
+            let mut p = vec![0.0f32; l];
+            for t in 0..l {
+                // recompute row-t probabilities
+                let qr = q.row(t);
+                let mut maxs = f32::NEG_INFINITY;
+                for (s, pv) in p.iter_mut().take(t + 1).enumerate() {
+                    let mut dot = 0.0f32;
+                    for (a, b) in qr.iter().zip(k.row(s)) {
+                        dot += a * b;
+                    }
+                    *pv = dot * scale;
+                    maxs = maxs.max(*pv);
+                }
+                let mut denom = 0.0f32;
+                for pv in p.iter_mut().take(t + 1) {
+                    *pv = (*pv - maxs).exp();
+                    denom += *pv;
+                }
+                for pv in p.iter_mut().take(t + 1) {
+                    *pv /= denom;
+                }
+                let dyr = dy.row(t);
+                // dp_s = dy · v_s ; dot = Σ p dp
+                let mut dot = 0.0f32;
+                let mut dp = vec![0.0f32; t + 1];
+                for s in 0..=t {
+                    let mut acc = 0.0f32;
+                    for (a, b) in dyr.iter().zip(v.row(s)) {
+                        acc += a * b;
+                    }
+                    dp[s] = acc;
+                    dot += p[s] * acc;
+                    // dv_s += p_s dy
+                    for (o, g) in dv.row_mut(s).iter_mut().zip(dyr) {
+                        *o += p[s] * g;
+                    }
+                }
+                for s in 0..=t {
+                    let ds = p[s] * (dp[s] - dot) * scale;
+                    for (o, kv_) in dq.row_mut(t).iter_mut().zip(k.row(s)) {
+                        *o += ds * kv_;
+                    }
+                    for (o, qv) in dk.row_mut(s).iter_mut().zip(qr) {
+                        *o += ds * qv;
+                    }
+                }
+            }
+            vec![(qi, dq), (ki, dk), (vi, dv)]
+        }),
+    )
+}
+
+/// Linear attention for one head (same math as
+/// `ops::linear_attn::linear_attention_head`). q, k, v: [l, dh].
+pub fn linear_attn_head(tape: &mut Tape, q: Var, k: Var, v: Var) -> Var {
+    let y = crate::ops::linear_attn::linear_attention_head(
+        tape.value(q),
+        tape.value(k),
+        tape.value(v),
+    );
+    let (qi, ki, vi) = (q.0, k.0, v.0);
+    tape.push_node(
+        y,
+        Box::new(move |vals, dy| {
+            let (q, k, v) = (&vals[qi], &vals[ki], &vals[vi]);
+            let (l, dh) = (q.rows(), q.cols());
+            // forward replay for the final state
+            let mut s = vec![0.0f32; dh * dh];
+            let mut z = vec![0.0f32; dh];
+            let mut fq = Tensor::zeros(&[l, dh]);
+            let mut fk = Tensor::zeros(&[l, dh]);
+            for t in 0..l {
+                for i in 0..dh {
+                    *fq.at2_mut(t, i) = elu1(q.at2(t, i));
+                    *fk.at2_mut(t, i) = elu1(k.at2(t, i));
+                }
+                let vr = v.row(t);
+                for i in 0..dh {
+                    let fki = fk.at2(t, i);
+                    z[i] += fki;
+                    for (sv, &vv) in s[i * dh..(i + 1) * dh].iter_mut().zip(vr) {
+                        *sv += fki * vv;
+                    }
+                }
+            }
+            // reverse pass with reverse-subtracted state
+            let mut ds = vec![0.0f32; dh * dh];
+            let mut dz = vec![0.0f32; dh];
+            let mut dq = Tensor::zeros(&[l, dh]);
+            let mut dk = Tensor::zeros(&[l, dh]);
+            let mut dv = Tensor::zeros(&[l, dh]);
+            for t in (0..l).rev() {
+                let fqr = fq.row(t);
+                let fkr = fk.row(t);
+                let vr = v.row(t);
+                let dyr = dy.row(t);
+                let mut denom = 1e-6f32;
+                for i in 0..dh {
+                    denom += fqr[i] * z[i];
+                }
+                // u = fq^T S (length dh over value index j)
+                let mut u = vec![0.0f32; dh];
+                for i in 0..dh {
+                    let fqi = fqr[i];
+                    for (uv, &sv) in u.iter_mut().zip(&s[i * dh..(i + 1) * dh]) {
+                        *uv += fqi * sv;
+                    }
+                }
+                let du: Vec<f32> = dyr.iter().map(|g| g / denom).collect();
+                let mut dy_dot_u = 0.0f32;
+                for (g, uv) in dyr.iter().zip(&u) {
+                    dy_dot_u += g * uv;
+                }
+                let ddenom = -dy_dot_u / (denom * denom);
+                // dfq = ddenom*z + S du ; dz += ddenom*fq ; dS += fq ⊗ du
+                for i in 0..dh {
+                    let srow = &mut ds[i * dh..(i + 1) * dh];
+                    let mut sdu = 0.0f32;
+                    for ((sv, &duv), &s_ij) in
+                        srow.iter_mut().zip(&du).zip(&s[i * dh..(i + 1) * dh])
+                    {
+                        sdu += s_ij * duv;
+                        *sv += fqr[i] * duv;
+                    }
+                    let dfq = ddenom * z[i] + sdu;
+                    *dq.at2_mut(t, i) = dfq * delu1(q.at2(t, i));
+                    dz[i] += ddenom * fqr[i];
+                }
+                // undo the step-t update
+                for i in 0..dh {
+                    let fki = fkr[i];
+                    z[i] -= fki;
+                    for (sv, &vv) in s[i * dh..(i + 1) * dh].iter_mut().zip(vr) {
+                        *sv -= fki * vv;
+                    }
+                }
+                // dfk = dS v + dz ; dv = dS^T fk
+                for i in 0..dh {
+                    let dsrow = &ds[i * dh..(i + 1) * dh];
+                    let mut dsv = 0.0f32;
+                    for (dsij, &vv) in dsrow.iter().zip(vr) {
+                        dsv += dsij * vv;
+                    }
+                    let dfk = dsv + dz[i];
+                    *dk.at2_mut(t, i) = dfk * delu1(k.at2(t, i));
+                    let fki = fkr[i];
+                    for (o, dsij) in dv.row_mut(t).iter_mut().zip(dsrow) {
+                        *o += fki * dsij;
+                    }
+                }
+            }
+            vec![(qi, dq), (ki, dk), (vi, dv)]
+        }),
+    )
+}
+
+/// SSD selective scan for one head (same math as `ops::ssd::ssd_head_scan`).
+/// x: [l, dh]; b, c: [l, n]; dt_raw: [l, 1] pre-softplus.
+pub fn ssd_head(tape: &mut Tape, x: Var, b: Var, c: Var, dt_raw: Var) -> Var {
+    let dts: Vec<f32> = tape.value(dt_raw).data.clone();
+    let y = crate::ops::ssd::ssd_head_scan(
+        tape.value(x),
+        tape.value(b),
+        tape.value(c),
+        &dts,
+    );
+    let (xi, bi, ci, di) = (x.0, b.0, c.0, dt_raw.0);
+    tape.push_node(
+        y,
+        Box::new(move |vals, dy| {
+            let (x, b, c, dt) = (&vals[xi], &vals[bi], &vals[ci], &vals[di]);
+            let (l, dh) = (x.rows(), x.cols());
+            let n = b.cols();
+            // forward replay, storing the state history (a_t may be ~0, so
+            // the update is not invertible)
+            let a: Vec<f32> = dt.data.iter().map(|&v| (-softplus(v)).exp()).collect();
+            let mut hs = vec![0.0f32; l * n * dh];
+            let mut h = vec![0.0f32; n * dh];
+            for t in 0..l {
+                let xr = x.row(t);
+                let br = b.row(t);
+                for i in 0..n {
+                    let bi_ = br[i];
+                    for (hv, &xv) in h[i * dh..(i + 1) * dh].iter_mut().zip(xr) {
+                        *hv = a[t] * *hv + bi_ * xv;
+                    }
+                }
+                hs[t * n * dh..(t + 1) * n * dh].copy_from_slice(&h);
+            }
+            // reverse pass
+            let mut dh_adj = vec![0.0f32; n * dh];
+            let mut dx = Tensor::zeros(&[l, dh]);
+            let mut db = Tensor::zeros(&[l, n]);
+            let mut dc = Tensor::zeros(&[l, n]);
+            let mut ddt = Tensor::zeros(&[l, 1]);
+            let zeros = vec![0.0f32; n * dh];
+            for t in (0..l).rev() {
+                let ht = &hs[t * n * dh..(t + 1) * n * dh];
+                let hprev: &[f32] = if t > 0 {
+                    &hs[(t - 1) * n * dh..t * n * dh]
+                } else {
+                    &zeros
+                };
+                let dyr = dy.row(t);
+                let cr = c.row(t);
+                for i in 0..n {
+                    let hrow = &ht[i * dh..(i + 1) * dh];
+                    let mut acc = 0.0f32;
+                    for (hv, g) in hrow.iter().zip(dyr) {
+                        acc += hv * g;
+                    }
+                    *dc.at2_mut(t, i) = acc;
+                    let ci_ = cr[i];
+                    for (dv, g) in dh_adj[i * dh..(i + 1) * dh].iter_mut().zip(dyr) {
+                        *dv += ci_ * g;
+                    }
+                }
+                let mut da = 0.0f32;
+                let br = b.row(t);
+                let xr = x.row(t);
+                for i in 0..n {
+                    let drow = &dh_adj[i * dh..(i + 1) * dh];
+                    let hp = &hprev[i * dh..(i + 1) * dh];
+                    let mut dbv = 0.0f32;
+                    for j in 0..dh {
+                        da += drow[j] * hp[j];
+                        dbv += drow[j] * xr[j];
+                        *dx.at2_mut(t, j) += drow[j] * br[i];
+                    }
+                    *db.at2_mut(t, i) = dbv;
+                }
+                // a = exp(-softplus(dt)): da/ddt = -a * sigmoid(dt)
+                *ddt.at2_mut(t, 0) = -da * a[t] * sigmoid(dt.data[t]);
+                for dv in dh_adj.iter_mut() {
+                    *dv *= a[t];
+                }
+            }
+            vec![(xi, dx), (bi, db), (ci, dc), (di, ddt)]
+        }),
+    )
+}
+
+/// DeltaNet delta-rule scan for one head (same math as
+/// `ops::deltanet::deltanet_head`). q, k, v: [l, dh]; beta_raw: [l, 1]
+/// pre-sigmoid (the sigmoid is inside this node).
+pub fn deltanet_head(tape: &mut Tape, q: Var, k: Var, v: Var, beta_raw: Var) -> Var {
+    let beta: Vec<f32> = tape.value(beta_raw).data.iter().map(|&b| sigmoid(b)).collect();
+    let y = crate::ops::deltanet::deltanet_head(
+        tape.value(q),
+        tape.value(k),
+        tape.value(v),
+        &beta,
+    );
+    let (qi, ki, vi, bi) = (q.0, k.0, v.0, beta_raw.0);
+    tape.push_node(
+        y,
+        Box::new(move |vals, dy| {
+            let (q, k, v, braw) = (&vals[qi], &vals[ki], &vals[vi], &vals[bi]);
+            let (l, dh) = (q.rows(), q.cols());
+            let beta: Vec<f32> = braw.data.iter().map(|&b| sigmoid(b)).collect();
+            // forward replay, storing kn_t and pred_t (enough to exactly
+            // reverse the additive update without division)
+            let mut s = vec![0.0f32; dh * dh];
+            let mut kns = Tensor::zeros(&[l, dh]);
+            let mut preds = Tensor::zeros(&[l, dh]);
+            let mut norms = vec![0.0f32; l];
+            for t in 0..l {
+                let kr = k.row(t);
+                let norm = kr.iter().map(|x| x * x).sum::<f32>().sqrt();
+                norms[t] = norm;
+                let nrm = norm.max(1e-6);
+                for i in 0..dh {
+                    *kns.at2_mut(t, i) = kr[i] / nrm;
+                }
+                let knr: Vec<f32> = kns.row(t).to_vec();
+                for i in 0..dh {
+                    let mut acc = 0.0f32;
+                    for (sv, &kv_) in s[i * dh..(i + 1) * dh].iter().zip(&knr) {
+                        acc += sv * kv_;
+                    }
+                    *preds.at2_mut(t, i) = acc;
+                }
+                let vr = v.row(t);
+                for i in 0..dh {
+                    let err = beta[t] * (vr[i] - preds.at2(t, i));
+                    for (sv, &kv_) in s[i * dh..(i + 1) * dh].iter_mut().zip(&knr) {
+                        *sv += err * kv_;
+                    }
+                }
+            }
+            // reverse pass
+            let mut ds = vec![0.0f32; dh * dh];
+            let mut dq = Tensor::zeros(&[l, dh]);
+            let mut dk = Tensor::zeros(&[l, dh]);
+            let mut dv = Tensor::zeros(&[l, dh]);
+            let mut dbraw = Tensor::zeros(&[l, 1]);
+            for t in (0..l).rev() {
+                let dyr = dy.row(t);
+                let qr = q.row(t);
+                let knr = kns.row(t);
+                let err: Vec<f32> = v
+                    .row(t)
+                    .iter()
+                    .zip(preds.row(t))
+                    .map(|(a, b)| a - b)
+                    .collect();
+                // y_t = S_t q_t : dq = S^T dy ; dS += dy ⊗ q
+                for i in 0..dh {
+                    let srow = &s[i * dh..(i + 1) * dh];
+                    let dsrow = &mut ds[i * dh..(i + 1) * dh];
+                    for j in 0..dh {
+                        *dq.at2_mut(t, j) += srow[j] * dyr[i];
+                        dsrow[j] += dyr[i] * qr[j];
+                    }
+                }
+                // dβ = err^T (dS kn) ; derr = β dS kn ; dkn = β dS^T err
+                let mut dbeta = 0.0f32;
+                let mut derr = vec![0.0f32; dh];
+                let mut dkn = vec![0.0f32; dh];
+                for i in 0..dh {
+                    let dsrow = &ds[i * dh..(i + 1) * dh];
+                    let mut dskn = 0.0f32;
+                    for (dsij, &kv_) in dsrow.iter().zip(knr) {
+                        dskn += dsij * kv_;
+                    }
+                    dbeta += err[i] * dskn;
+                    derr[i] = beta[t] * dskn;
+                    for (dknj, dsij) in dkn.iter_mut().zip(dsrow) {
+                        *dknj += beta[t] * dsij * err[i];
+                    }
+                }
+                // reconstruct S_{t-1}
+                for i in 0..dh {
+                    let e = beta[t] * err[i];
+                    for (sv, &kv_) in s[i * dh..(i + 1) * dh].iter_mut().zip(knr) {
+                        *sv -= e * kv_;
+                    }
+                }
+                // err = v − S_{t-1} kn : dv = derr ; dS_{t-1} −= derr ⊗ kn ;
+                // dkn −= S_{t-1}^T derr
+                for i in 0..dh {
+                    *dv.at2_mut(t, i) = derr[i];
+                    let srow = &s[i * dh..(i + 1) * dh];
+                    let dsrow = &mut ds[i * dh..(i + 1) * dh];
+                    for j in 0..dh {
+                        dsrow[j] -= derr[i] * knr[j];
+                        dkn[j] -= srow[j] * derr[i];
+                    }
+                }
+                // kn = k / max(‖k‖, 1e-6)
+                if norms[t] > 1e-6 {
+                    let mut kn_dot = 0.0f32;
+                    for (knj, dknj) in knr.iter().zip(&dkn) {
+                        kn_dot += knj * dknj;
+                    }
+                    for j in 0..dh {
+                        *dk.at2_mut(t, j) = (dkn[j] - knr[j] * kn_dot) / norms[t];
+                    }
+                } else {
+                    for j in 0..dh {
+                        *dk.at2_mut(t, j) = dkn[j] / 1e-6;
+                    }
+                }
+                *dbraw.at2_mut(t, 0) = dbeta * beta[t] * (1.0 - beta[t]);
+            }
+            vec![(qi, dq), (ki, dk), (vi, dv), (bi, dbraw)]
+        }),
+    )
+}
+
+/// mLSTM matrix-memory recurrence for one head (same math as
+/// `ops::mlstm::mlstm_head`). q, k, v: [l, dh]; gi_raw/gf_raw: [l, 1]
+/// pre-sigmoid input/forget gates (sigmoids are inside this node).
+pub fn mlstm_head(
+    tape: &mut Tape,
+    q: Var,
+    k: Var,
+    v: Var,
+    gi_raw: Var,
+    gf_raw: Var,
+) -> Var {
+    let ig: Vec<f32> = tape.value(gi_raw).data.iter().map(|&g| sigmoid(g)).collect();
+    let fg: Vec<f32> = tape.value(gf_raw).data.iter().map(|&g| sigmoid(g)).collect();
+    let y = crate::ops::mlstm::mlstm_head(
+        tape.value(q),
+        tape.value(k),
+        tape.value(v),
+        &ig,
+        &fg,
+    );
+    let (qi, ki, vi, gii, gfi) = (q.0, k.0, v.0, gi_raw.0, gf_raw.0);
+    tape.push_node(
+        y,
+        Box::new(move |vals, dy| {
+            let (q, k, v) = (&vals[qi], &vals[ki], &vals[vi]);
+            let (gir, gfr) = (&vals[gii], &vals[gfi]);
+            let (l, dh) = (q.rows(), q.cols());
+            let ig: Vec<f32> = gir.data.iter().map(|&g| sigmoid(g)).collect();
+            let fg: Vec<f32> = gfr.data.iter().map(|&g| sigmoid(g)).collect();
+            // forward replay storing (C, n) history (f_t may be ~0)
+            let mut cs = vec![0.0f32; l * dh * dh];
+            let mut ns = vec![0.0f32; l * dh];
+            let mut cst = vec![0.0f32; dh * dh];
+            let mut nst = vec![0.0f32; dh];
+            for t in 0..l {
+                let kr = k.row(t);
+                let vr = v.row(t);
+                for a in 0..dh {
+                    let iv = ig[t] * vr[a];
+                    for (cv, &kv_) in cst[a * dh..(a + 1) * dh].iter_mut().zip(kr) {
+                        *cv = fg[t] * *cv + iv * kv_;
+                    }
+                }
+                for (nv, &kv_) in nst.iter_mut().zip(kr) {
+                    *nv = fg[t] * *nv + ig[t] * kv_;
+                }
+                cs[t * dh * dh..(t + 1) * dh * dh].copy_from_slice(&cst);
+                ns[t * dh..(t + 1) * dh].copy_from_slice(&nst);
+            }
+            // reverse pass
+            let mut dc = vec![0.0f32; dh * dh];
+            let mut dn = vec![0.0f32; dh];
+            let mut dq = Tensor::zeros(&[l, dh]);
+            let mut dk = Tensor::zeros(&[l, dh]);
+            let mut dv = Tensor::zeros(&[l, dh]);
+            let mut dgi = Tensor::zeros(&[l, 1]);
+            let mut dgf = Tensor::zeros(&[l, 1]);
+            let zeros_c = vec![0.0f32; dh * dh];
+            let zeros_n = vec![0.0f32; dh];
+            for t in (0..l).rev() {
+                let ct = &cs[t * dh * dh..(t + 1) * dh * dh];
+                let nt = &ns[t * dh..(t + 1) * dh];
+                let (cprev, nprev): (&[f32], &[f32]) = if t > 0 {
+                    (
+                        &cs[(t - 1) * dh * dh..t * dh * dh],
+                        &ns[(t - 1) * dh..t * dh],
+                    )
+                } else {
+                    (&zeros_c, &zeros_n)
+                };
+                let qr = q.row(t);
+                let kr = k.row(t);
+                let vr = v.row(t);
+                let dyr = dy.row(t);
+                let mut m = 0.0f32;
+                for (nv, &qv) in nt.iter().zip(qr) {
+                    m += nv * qv;
+                }
+                let denom = m.abs().max(1.0);
+                // s = C q ; y = s / denom
+                let mut s = vec![0.0f32; dh];
+                for a in 0..dh {
+                    let crow = &ct[a * dh..(a + 1) * dh];
+                    let mut acc = 0.0f32;
+                    for (cv, &qv) in crow.iter().zip(qr) {
+                        acc += cv * qv;
+                    }
+                    s[a] = acc;
+                }
+                let ds: Vec<f32> = dyr.iter().map(|g| g / denom).collect();
+                let mut dy_dot_s = 0.0f32;
+                for (g, sv) in dyr.iter().zip(&s) {
+                    dy_dot_s += g * sv;
+                }
+                let ddenom = -dy_dot_s / (denom * denom);
+                let dm = if m.abs() > 1.0 {
+                    ddenom * m.signum()
+                } else {
+                    0.0
+                };
+                for j in 0..dh {
+                    dn[j] += dm * qr[j];
+                    // dq from m-path and s-path
+                    let mut ctds = 0.0f32;
+                    for a in 0..dh {
+                        ctds += ct[a * dh + j] * ds[a];
+                    }
+                    *dq.at2_mut(t, j) = dm * nt[j] + ctds;
+                }
+                for a in 0..dh {
+                    let dcrow = &mut dc[a * dh..(a + 1) * dh];
+                    for (dcv, &qv) in dcrow.iter_mut().zip(qr) {
+                        *dcv += ds[a] * qv;
+                    }
+                }
+                // gate and input grads from the C/n updates
+                let mut di = 0.0f32;
+                let mut df = 0.0f32;
+                for a in 0..dh {
+                    let dcrow = &dc[a * dh..(a + 1) * dh];
+                    let cprow = &cprev[a * dh..(a + 1) * dh];
+                    let mut dck = 0.0f32;
+                    for j in 0..dh {
+                        di += dcrow[j] * vr[a] * kr[j];
+                        df += dcrow[j] * cprow[j];
+                        dck += dcrow[j] * kr[j];
+                        *dk.at2_mut(t, j) += ig[t] * dcrow[j] * vr[a];
+                    }
+                    *dv.at2_mut(t, a) = ig[t] * dck;
+                }
+                for j in 0..dh {
+                    di += dn[j] * kr[j];
+                    df += dn[j] * nprev[j];
+                    *dk.at2_mut(t, j) += ig[t] * dn[j];
+                }
+                *dgi.at2_mut(t, 0) = di * ig[t] * (1.0 - ig[t]);
+                *dgf.at2_mut(t, 0) = df * fg[t] * (1.0 - fg[t]);
+                for dcv in dc.iter_mut() {
+                    *dcv *= fg[t];
+                }
+                for dnv in dn.iter_mut() {
+                    *dnv *= fg[t];
+                }
+            }
+            vec![(qi, dq), (ki, dk), (vi, dv), (gii, dgi), (gfi, dgf)]
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// fd-check d(input) for a head node, loss = Σ y ⊙ w.
+    fn check_head(
+        inputs: Vec<Tensor>,
+        build: impl Fn(&mut Tape, &[Var]) -> Var,
+        tol: f64,
+    ) {
+        let mut rng = Rng::new(99);
+        let (y_shape, analytic): (Vec<usize>, Vec<Tensor>) = {
+            let mut tape = Tape::new();
+            let vars: Vec<Var> = inputs.iter().map(|t| tape.leaf(t.clone())).collect();
+            let y = build(&mut tape, &vars);
+            let shape = tape.value(y).shape.clone();
+            let w = Tensor::randn(&mut rng, &shape, 1.0);
+            let loss = tape.weighted_sum(y, &w);
+            let grads = tape.backward(loss);
+            let gs = vars
+                .iter()
+                .zip(&inputs)
+                .map(|(v, t)| grads.get_or_zeros(*v, &t.shape))
+                .collect();
+            (shape, gs)
+        };
+        let w = {
+            let mut r2 = Rng::new(99);
+            Tensor::randn(&mut r2, &y_shape, 1.0)
+        };
+        let loss_of = |ins: &[Tensor]| -> f64 {
+            let mut tape = Tape::new();
+            let vars: Vec<Var> = ins.iter().map(|t| tape.leaf(t.clone())).collect();
+            let y = build(&mut tape, &vars);
+            tape.value(y)
+                .data
+                .iter()
+                .zip(&w.data)
+                .map(|(a, b)| *a as f64 * *b as f64)
+                .sum()
+        };
+        let eps = 1e-2f32;
+        let mut idx_rng = Rng::new(17);
+        for (ai, grad) in analytic.iter().enumerate() {
+            for _ in 0..8 {
+                let i = idx_rng.below(inputs[ai].numel());
+                let mut plus = inputs.to_vec();
+                plus[ai].data[i] += eps;
+                let mut minus = inputs.to_vec();
+                minus[ai].data[i] -= eps;
+                let num = (loss_of(&plus) - loss_of(&minus)) / (2.0 * eps as f64);
+                let ana = grad.data[i] as f64;
+                let rel = (num - ana).abs() / num.abs().max(ana.abs()).max(1e-2);
+                assert!(
+                    rel < tol,
+                    "input {ai} coord {i}: numeric {num} vs analytic {ana} (rel {rel})"
+                );
+            }
+        }
+    }
+
+    fn rand_lx(rng: &mut Rng, l: usize, d: usize) -> Tensor {
+        Tensor::randn(rng, &[l, d], 1.0)
+    }
+
+    #[test]
+    fn attention_head_fd() {
+        let mut rng = Rng::new(0);
+        let (l, dh) = (8, 4);
+        let ins = vec![
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, dh),
+        ];
+        check_head(ins, |t, v| attention_head(t, v[0], v[1], v[2]), 2e-2);
+    }
+
+    #[test]
+    fn linear_attn_head_fd() {
+        let mut rng = Rng::new(1);
+        let (l, dh) = (8, 4);
+        let ins = vec![
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, dh),
+        ];
+        check_head(ins, |t, v| linear_attn_head(t, v[0], v[1], v[2]), 2e-2);
+    }
+
+    #[test]
+    fn ssd_head_fd() {
+        let mut rng = Rng::new(2);
+        let (l, dh, n) = (8, 4, 3);
+        let ins = vec![
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, n),
+            rand_lx(&mut rng, l, n),
+            rand_lx(&mut rng, l, 1),
+        ];
+        check_head(ins, |t, v| ssd_head(t, v[0], v[1], v[2], v[3]), 2e-2);
+    }
+
+    #[test]
+    fn deltanet_head_fd() {
+        let mut rng = Rng::new(3);
+        let (l, dh) = (8, 4);
+        let ins = vec![
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, 1),
+        ];
+        check_head(ins, |t, v| deltanet_head(t, v[0], v[1], v[2], v[3]), 2e-2);
+    }
+
+    #[test]
+    fn mlstm_head_fd() {
+        let mut rng = Rng::new(4);
+        let (l, dh) = (8, 4);
+        let ins = vec![
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, dh),
+            rand_lx(&mut rng, l, 1),
+            rand_lx(&mut rng, l, 1),
+        ];
+        check_head(ins, |t, v| mlstm_head(t, v[0], v[1], v[2], v[3], v[4]), 2e-2);
+    }
+
+    #[test]
+    fn heads_match_ops_forward() {
+        // The tape forward must be the literal ops implementation.
+        let mut rng = Rng::new(5);
+        let (l, dh) = (10, 4);
+        let q = rand_lx(&mut rng, l, dh);
+        let k = rand_lx(&mut rng, l, dh);
+        let v = rand_lx(&mut rng, l, dh);
+        let mut tape = Tape::new();
+        let (qv, kv, vv) = (
+            tape.leaf(q.clone()),
+            tape.leaf(k.clone()),
+            tape.leaf(v.clone()),
+        );
+        let y = attention_head(&mut tape, qv, kv, vv);
+        let want = crate::ops::mha::causal_attention_head(&q, &k, &v);
+        assert!(tape.value(y).allclose(&want, 1e-6));
+    }
+}

@@ -1,0 +1,30 @@
+//! Pure-Rust training subsystem (DESIGN.md §12): reverse-mode autograd
+//! over the `tensor` layer with backward implementations for every mixer
+//! in the operator zoo, an AdamW optimizer, the paper's byte-tokenized
+//! token-manipulation synthetics, and the operator-vs-task harness behind
+//! `sh2 train-tasks` / `sh2 train`.
+//!
+//! Layering: `tape` records primitive tensor ops (convolutions dispatch
+//! through `conv::planner` forward and `conv::backward` backward);
+//! `heads` adds one backward-through-time super-op per recurrent mixer
+//! family; `model` rebuilds a [`crate::serve::HybridLm`] forward on the
+//! tape from its named parameters, so there is exactly one model
+//! definition shared between training and serving; `optim` applies AdamW;
+//! `tasks`/`harness` generate the synthetics and run the Fig. 2-style
+//! complementarity matrix; `checkpoint` round-trips trained weights into
+//! the serving engine (`generate`/`serve --load`).
+
+pub mod checkpoint;
+pub mod harness;
+pub mod heads;
+pub mod model;
+pub mod optim;
+pub mod tape;
+pub mod tasks;
+pub mod trainer;
+
+pub use harness::{run_matrix, HarnessCfg, TaskTable};
+pub use optim::AdamW;
+pub use tape::{Grads, Tape, Var};
+pub use tasks::{Task, TaskCase, TaskGen};
+pub use trainer::{eval_model, Trainer};

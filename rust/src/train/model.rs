@@ -1,0 +1,276 @@
+//! Tape forward of a [`HybridLm`] — the bridge between the serving model
+//! and the autograd tape (DESIGN.md §12).
+//!
+//! The serving model owns the parameters (`HybridLm::named_params`); each
+//! training step copies them onto a fresh [`Tape`] as leaves, rebuilds the
+//! forward graph per operator code from those leaves, and reads gradients
+//! back out by name. There is exactly one model definition: the tape
+//! forward reuses the per-head kernels of `ops::*` (via `train::heads`),
+//! the planner-dispatched convolutions, and the shared `util::math`
+//! RMSNorm, so tape logits match `HybridLm::logits` to float tolerance —
+//! asserted by `tests/integration_train.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::ops::ssd::STATE_DIM;
+use crate::serve::{HybridLm, LmConfig};
+use crate::tensor::Tensor;
+
+use super::heads;
+use super::tape::{Grads, Tape, Var};
+
+/// Tape leaves for every named parameter of a model.
+pub struct ParamVars {
+    map: BTreeMap<String, Var>,
+}
+
+impl ParamVars {
+    /// Insert one leaf per parameter (cloning the current values).
+    pub fn insert(tape: &mut Tape, model: &HybridLm) -> ParamVars {
+        let mut map = BTreeMap::new();
+        for (name, t) in model.named_params() {
+            map.insert(name, tape.leaf(t.clone()));
+        }
+        ParamVars { map }
+    }
+
+    pub fn var(&self, name: &str) -> Var {
+        *self
+            .map
+            .get(name)
+            .unwrap_or_else(|| panic!("no parameter leaf named '{name}'"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    /// Gradients of all parameter leaves, by name (absent = no grad path).
+    pub fn collect_grads(&self, grads: &Grads) -> BTreeMap<String, Tensor> {
+        let mut out = BTreeMap::new();
+        for (name, var) in &self.map {
+            if let Some(g) = grads.get(*var) {
+                out.insert(name.clone(), g.clone());
+            }
+        }
+        out
+    }
+}
+
+/// One mixer layer on the tape: `xn` is the (normed) layer input [l, d].
+fn mixer_forward(
+    tape: &mut Tape,
+    code: &str,
+    cfg: &LmConfig,
+    prefix: &str,
+    pv: &ParamVars,
+    xn: Var,
+    l: usize,
+) -> Var {
+    let d = cfg.d;
+    let heads = cfg.n_heads;
+    let dh = d / heads;
+    let p = |name: &str| pv.var(&format!("{prefix}.{name}"));
+    match code {
+        "MHA" | "LA" => {
+            let wqkv = p("wqkv");
+            let qkv = tape.matmul(xn, wqkv);
+            let q = tape.slice_cols(qkv, 0, d);
+            let k = tape.slice_cols(qkv, d, 2 * d);
+            let v = tape.slice_cols(qkv, 2 * d, 3 * d);
+            let mut outs = Vec::with_capacity(heads);
+            for h in 0..heads {
+                let qh = tape.slice_cols(q, h * dh, (h + 1) * dh);
+                let kh = tape.slice_cols(k, h * dh, (h + 1) * dh);
+                let vh = tape.slice_cols(v, h * dh, (h + 1) * dh);
+                outs.push(if code == "MHA" {
+                    heads::attention_head(tape, qh, kh, vh)
+                } else {
+                    heads::linear_attn_head(tape, qh, kh, vh)
+                });
+            }
+            let cat = tape.concat_cols(&outs);
+            let wo = p("wo");
+            tape.matmul(cat, wo)
+        }
+        "SSD" => {
+            let (wx, wb, wc, wdt, wo) = (p("wx"), p("wb"), p("wc"), p("wdt"), p("wo"));
+            let xv = tape.matmul(xn, wx);
+            let b = tape.matmul(xn, wb);
+            let c = tape.matmul(xn, wc);
+            let dt = tape.matmul(xn, wdt);
+            let mut outs = Vec::with_capacity(heads);
+            for h in 0..heads {
+                let xh = tape.slice_cols(xv, h * dh, (h + 1) * dh);
+                let bh = tape.slice_cols(b, h * STATE_DIM, (h + 1) * STATE_DIM);
+                let ch = tape.slice_cols(c, h * STATE_DIM, (h + 1) * STATE_DIM);
+                let dth = tape.slice_cols(dt, h, h + 1);
+                outs.push(heads::ssd_head(tape, xh, bh, ch, dth));
+            }
+            let cat = tape.concat_cols(&outs);
+            tape.matmul(cat, wo)
+        }
+        "DN" => {
+            let (wqkv, wbeta, wo) = (p("wqkv"), p("wbeta"), p("wo"));
+            let qkv = tape.matmul(xn, wqkv);
+            let braw = tape.matmul(xn, wbeta);
+            let q = tape.slice_cols(qkv, 0, d);
+            let k = tape.slice_cols(qkv, d, 2 * d);
+            let v = tape.slice_cols(qkv, 2 * d, 3 * d);
+            let mut outs = Vec::with_capacity(heads);
+            for h in 0..heads {
+                let qh = tape.slice_cols(q, h * dh, (h + 1) * dh);
+                let kh = tape.slice_cols(k, h * dh, (h + 1) * dh);
+                let vh = tape.slice_cols(v, h * dh, (h + 1) * dh);
+                let bh = tape.slice_cols(braw, h, h + 1);
+                outs.push(heads::deltanet_head(tape, qh, kh, vh, bh));
+            }
+            let cat = tape.concat_cols(&outs);
+            tape.matmul(cat, wo)
+        }
+        "MLSTM" => {
+            let (wqkv, wif, wo) = (p("wqkv"), p("wif"), p("wo"));
+            let qkv = tape.matmul(xn, wqkv);
+            let graw = tape.matmul(xn, wif);
+            let q = tape.slice_cols(qkv, 0, d);
+            let k = tape.slice_cols(qkv, d, 2 * d);
+            let v = tape.slice_cols(qkv, 2 * d, 3 * d);
+            let mut outs = Vec::with_capacity(heads);
+            for h in 0..heads {
+                let qh = tape.slice_cols(q, h * dh, (h + 1) * dh);
+                let kh = tape.slice_cols(k, h * dh, (h + 1) * dh);
+                let vh = tape.slice_cols(v, h * dh, (h + 1) * dh);
+                let gi = tape.slice_cols(graw, 2 * h, 2 * h + 1);
+                let gf = tape.slice_cols(graw, 2 * h + 1, 2 * h + 2);
+                outs.push(heads::mlstm_head(tape, qh, kh, vh, gi, gf));
+            }
+            let cat = tape.concat_cols(&outs);
+            tape.matmul(cat, wo)
+        }
+        "SE" | "MR" | "LI" => {
+            // Same construction as HyenaOp::{se,mr,li}: featurizer group
+            // size 1, inner groups d/16 (min 1).
+            let groups = (d / 16).max(1);
+            let (w, u, pp, m) = (p("w"), p("u"), p("p"), p("m"));
+            let (hq, hk, hv) = (p("hq"), p("hk"), p("hv"));
+            let xw = tape.matmul(xn, w);
+            let xu = tape.matmul(xn, u);
+            let xp = tape.matmul(xn, pp);
+            let q = tape.conv(xw, hq, 1);
+            let k = tape.conv(xu, hk, 1);
+            let v = tape.conv(xp, hv, 1);
+            let kv = tape.hadamard(k, v);
+            let taps = if code == "LI" {
+                let res = p("li_residues");
+                let poles = p("li_poles");
+                tape.modal_taps(res, poles, l)
+            } else {
+                p("inner")
+            };
+            let inner = tape.conv(kv, taps, d / groups);
+            let gated = tape.hadamard(q, inner);
+            tape.matmul(gated, m)
+        }
+        other => panic!("unknown operator code '{other}'"),
+    }
+}
+
+/// Full LM forward on the tape: logits node [l, VOCAB].
+pub fn lm_logits(tape: &mut Tape, cfg: &LmConfig, pv: &ParamVars, tokens: &[u8]) -> Var {
+    let l = tokens.len();
+    let embed = pv.var("embed");
+    let pos = cfg.blocks.then(|| pv.var("pos"));
+    let mut x = tape.embed(embed, pos, tokens);
+    for (i, code) in cfg.layout.iter().enumerate() {
+        let xn = if cfg.blocks {
+            let g = pv.var(&format!("layers.{i}.norm_g"));
+            tape.rmsnorm(x, g)
+        } else {
+            x
+        };
+        let prefix = format!("layers.{i}.{code}");
+        let y = mixer_forward(tape, code, cfg, &prefix, pv, xn, l);
+        let x1 = tape.add(x, y);
+        x = if cfg.blocks {
+            let g2 = pv.var(&format!("layers.{i}.mlp.norm_g"));
+            let hn = tape.rmsnorm(x1, g2);
+            let w1 = pv.var(&format!("layers.{i}.mlp.w1"));
+            let w2 = pv.var(&format!("layers.{i}.mlp.w2"));
+            let a = tape.matmul(hn, w1);
+            let hmid = tape.silu(a);
+            let out = tape.matmul(hmid, w2);
+            tape.add(x1, out)
+        } else {
+            x1
+        };
+    }
+    let xf = if cfg.blocks {
+        let g = pv.var("norm_f");
+        tape.rmsnorm(x, g)
+    } else {
+        x
+    };
+    let head = pv.var("head");
+    tape.matmul(xf, head)
+}
+
+/// LM forward + masked cross-entropy: scalar loss node for one sequence.
+pub fn lm_loss(
+    tape: &mut Tape,
+    cfg: &LmConfig,
+    pv: &ParamVars,
+    tokens: &[u8],
+    targets: &[u8],
+    mask: &[f32],
+) -> Var {
+    let logits = lm_logits(tape, cfg, pv, tokens);
+    let tg: Vec<usize> = targets.iter().map(|&t| t as usize).collect();
+    tape.cross_entropy_masked(logits, &tg, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tape_logits_match_model_logits_bare_and_blocks() {
+        let mut rng = Rng::new(0);
+        for cfg in [
+            LmConfig::bare(16, 2, &["SE", "MHA"]),
+            LmConfig::trainable(16, 2, &["LA", "SSD"], 32),
+        ] {
+            let model = HybridLm::with_config(&mut rng, &cfg).unwrap();
+            let tokens = b"ACGTACGTACGT";
+            let want = model.logits(tokens);
+            let mut tape = Tape::new();
+            let pv = ParamVars::insert(&mut tape, &model);
+            let got = lm_logits(&mut tape, &cfg, &pv, tokens);
+            let diff = tape.value(got).max_abs_diff(&want);
+            assert!(diff < 1e-3, "layout {:?}: diff {diff}", cfg.layout);
+        }
+    }
+
+    #[test]
+    fn loss_gradients_reach_every_parameter() {
+        let mut rng = Rng::new(1);
+        let cfg = LmConfig::trainable(16, 2, &["MR", "DN"], 24);
+        let model = HybridLm::with_config(&mut rng, &cfg).unwrap();
+        let tokens = b"ACGTACGTACGTACGT";
+        let targets = b"CGTACGTACGTACGTA";
+        let mask = vec![1.0f32; tokens.len()];
+        let mut tape = Tape::new();
+        let pv = ParamVars::insert(&mut tape, &model);
+        let loss = lm_loss(&mut tape, &cfg, &pv, tokens, targets, &mask);
+        assert!(tape.value(loss).data[0].is_finite());
+        let grads = tape.backward(loss);
+        let by_name = pv.collect_grads(&grads);
+        for (name, _) in model.named_params() {
+            assert!(by_name.contains_key(&name), "no gradient for {name}");
+            assert!(
+                by_name[&name].data.iter().all(|v| v.is_finite()),
+                "non-finite gradient for {name}"
+            );
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! AdamW with global-norm gradient clipping and a warmup + cosine learning
+//! rate schedule — the optimizer behind `sh2 train` / `sh2 train-tasks`.
+//!
+//! Conventions (matched to the defaults that solve the §12 synthetics):
+//! decoupled weight decay applies to 2-D matrices only (norm gains, modal
+//! parameters and embeddings-as-vectors are exempt by the "name contains
+//! `norm`" / rank rule), and Hyena-LI pole parameters are clamped back into
+//! the stable disc (0.05, 0.999) after every update.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+/// Hyperparameters + slot state. Keyed by checkpoint parameter name, so the
+/// optimizer survives `named_params_mut` ordering changes.
+pub struct AdamW {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Global-norm clip threshold.
+    pub clip: f32,
+    /// Linear warmup steps.
+    pub warmup: usize,
+    /// Total schedule length (cosine decays to `floor` x lr by this step).
+    pub total_steps: usize,
+    /// Cosine floor as a fraction of peak lr.
+    pub floor: f32,
+    t: usize,
+    m: BTreeMap<String, Vec<f32>>,
+    v: BTreeMap<String, Vec<f32>>,
+}
+
+/// What one optimizer step observed (for logging).
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub grad_norm: f32,
+    pub lr: f32,
+    pub clipped: bool,
+}
+
+impl AdamW {
+    pub fn new(lr: f32, total_steps: usize) -> AdamW {
+        AdamW {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            clip: 1.0,
+            warmup: 20,
+            total_steps,
+            floor: 0.1,
+            t: 0,
+            m: BTreeMap::new(),
+            v: BTreeMap::new(),
+        }
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.t
+    }
+
+    /// Learning rate at step t (1-based): linear warmup to `lr`, then
+    /// cosine to `floor * lr` at `total_steps`.
+    pub fn lr_at(&self, t: usize) -> f32 {
+        if t <= self.warmup {
+            return self.lr * t as f32 / self.warmup.max(1) as f32;
+        }
+        let span = (self.total_steps.saturating_sub(self.warmup)).max(1) as f32;
+        let prog = ((t - self.warmup) as f32 / span).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * prog).cos());
+        self.lr * (self.floor + (1.0 - self.floor) * cos)
+    }
+
+    /// Apply one update. `params` is the model's `named_params_mut()` view;
+    /// `grads` maps the same names to gradient tensors (missing names are
+    /// skipped — their parameters simply do not update this step).
+    pub fn step(
+        &mut self,
+        params: &mut [(String, &mut Tensor)],
+        grads: &BTreeMap<String, Tensor>,
+    ) -> StepStats {
+        self.t += 1;
+        let lr = self.lr_at(self.t);
+        let mut sq = 0.0f64;
+        for g in grads.values() {
+            for &x in &g.data {
+                sq += (x as f64) * (x as f64);
+            }
+        }
+        let grad_norm = sq.sqrt() as f32;
+        let scale = if grad_norm > self.clip {
+            self.clip / grad_norm.max(1e-12)
+        } else {
+            1.0
+        };
+        let (b1, b2) = (self.beta1, self.beta2);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for (name, p) in params.iter_mut() {
+            let Some(g) = grads.get(name) else { continue };
+            assert_eq!(
+                g.shape, p.shape,
+                "gradient/parameter shape mismatch for {name}"
+            );
+            let m = self
+                .m
+                .entry(name.clone())
+                .or_insert_with(|| vec![0.0; p.numel()]);
+            let v = self
+                .v
+                .entry(name.clone())
+                .or_insert_with(|| vec![0.0; p.numel()]);
+            let decay = if p.shape.len() == 2
+                && !name.contains("norm")
+                && !name.ends_with("li_poles")
+                && !name.ends_with("li_residues")
+            {
+                self.weight_decay
+            } else {
+                0.0
+            };
+            for i in 0..p.data.len() {
+                let gi = g.data[i] * scale;
+                m[i] = b1 * m[i] + (1.0 - b1) * gi;
+                v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+                let mh = m[i] / bc1;
+                let vh = v[i] / bc2;
+                let mut upd = mh / (vh.sqrt() + self.eps);
+                if decay > 0.0 {
+                    upd += decay * p.data[i];
+                }
+                p.data[i] -= lr * upd;
+            }
+            if name.ends_with("li_poles") {
+                for x in p.data.iter_mut() {
+                    *x = x.clamp(0.05, 0.999);
+                }
+            }
+        }
+        StepStats {
+            grad_norm,
+            lr,
+            clipped: scale < 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_param() -> Tensor {
+        Tensor::from_vec(&[2, 2], vec![1.0, -2.0, 3.0, -4.0])
+    }
+
+    #[test]
+    fn minimizes_a_quadratic() {
+        // loss = ½‖p‖² -> grad = p; AdamW should pull p toward 0.
+        let mut p = quad_param();
+        let mut opt = AdamW::new(0.05, 200);
+        opt.weight_decay = 0.0;
+        for _ in 0..200 {
+            let g = p.clone();
+            let mut grads = BTreeMap::new();
+            grads.insert("p".to_string(), g);
+            let mut view = vec![("p".to_string(), &mut p)];
+            opt.step(&mut view, &grads);
+        }
+        assert!(p.data.iter().all(|x| x.abs() < 0.05), "{:?}", p.data);
+    }
+
+    #[test]
+    fn warmup_then_cosine() {
+        let opt = AdamW::new(1.0, 120);
+        assert!(opt.lr_at(1) < 0.1);
+        assert!((opt.lr_at(20) - 1.0).abs() < 1e-6);
+        assert!(opt.lr_at(70) < 1.0);
+        let end = opt.lr_at(120);
+        assert!((end - 0.1).abs() < 0.02, "cosine floor, got {end}");
+    }
+
+    #[test]
+    fn clips_large_gradients() {
+        let mut p = quad_param();
+        let mut opt = AdamW::new(0.1, 10);
+        let mut grads = BTreeMap::new();
+        grads.insert("p".to_string(), Tensor::from_vec(&[2, 2], vec![100.0; 4]));
+        let mut view = vec![("p".to_string(), &mut p)];
+        let stats = opt.step(&mut view, &grads);
+        assert!(stats.clipped);
+        assert!((stats.grad_norm - 200.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn poles_stay_in_stable_disc() {
+        let mut p = Tensor::from_vec(&[1, 2], vec![0.998, 0.1]);
+        let mut opt = AdamW::new(0.5, 10);
+        opt.warmup = 1;
+        let mut grads = BTreeMap::new();
+        grads.insert(
+            "layers.0.LI.li_poles".to_string(),
+            Tensor::from_vec(&[1, 2], vec![-5.0, 5.0]),
+        );
+        let mut view = vec![("layers.0.LI.li_poles".to_string(), &mut p)];
+        opt.step(&mut view, &grads);
+        assert!(p.data[0] <= 0.999 && p.data[0] >= 0.05);
+        assert!(p.data[1] <= 0.999 && p.data[1] >= 0.05);
+    }
+
+    #[test]
+    fn missing_grad_is_a_noop_for_that_param() {
+        let mut p = quad_param();
+        let before = p.clone();
+        let mut opt = AdamW::new(0.1, 10);
+        let grads = BTreeMap::new();
+        let mut view = vec![("p".to_string(), &mut p)];
+        opt.step(&mut view, &grads);
+        assert_eq!(p, before);
+    }
+}

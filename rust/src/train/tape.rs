@@ -1,0 +1,664 @@
+//! Reverse-mode autograd tape over the `tensor` layer (DESIGN.md §12).
+//!
+//! A [`Tape`] records a DAG of tensor operations as they execute; each node
+//! stores its forward value and a backward closure that maps the node's
+//! cotangent to cotangent contributions for its parents. [`Tape::backward`]
+//! walks the nodes in reverse creation order (a valid reverse topological
+//! order, since parents are always created before children) accumulating
+//! gradients for every node, leaves included.
+//!
+//! Primitive nodes live here: GEMMs, elementwise algebra, column
+//! slicing/concat, causal grouped convolution (forward dispatched through
+//! `conv::planner` like every other conv in the repo, backward through
+//! `conv::backward`), RMSNorm, silu, embedding gather, modal-filter
+//! materialization, and the masked cross-entropy loss. The per-operator
+//! recurrences (attention, linear attention, SSD, DeltaNet, mLSTM) are
+//! single "super-op" nodes with hand-derived backward-through-time closures
+//! in [`crate::train::heads`].
+
+use crate::conv::backward::conv_backward_planned;
+use crate::conv::{planned_conv, GroupedFilter};
+use crate::tensor::matmul::{matmul, matmul_bt};
+use crate::tensor::Tensor;
+use crate::util::math::{dsilu, log_softmax, silu, RMS_EPS};
+
+/// Handle to a tape node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Var(pub(crate) usize);
+
+/// Backward closure: (all node values, this node's cotangent) ->
+/// (parent id, cotangent contribution) pairs.
+type BackFn = Box<dyn Fn(&[Tensor], &Tensor) -> Vec<(usize, Tensor)>>;
+
+/// Reverse-mode tape. Create one per training step, insert parameter
+/// leaves, build the forward graph, then call [`Tape::backward`] once.
+#[derive(Default)]
+pub struct Tape {
+    values: Vec<Tensor>,
+    backs: Vec<Option<BackFn>>,
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Insert a leaf (parameter or constant). Gradients accumulate for
+    /// leaves like any other node; read them from the [`Grads`] result.
+    pub fn leaf(&mut self, t: Tensor) -> Var {
+        self.push(t, None)
+    }
+
+    /// Forward value of a node.
+    pub fn value(&self, v: Var) -> &Tensor {
+        &self.values[v.0]
+    }
+
+    pub(crate) fn push(&mut self, t: Tensor, back: Option<BackFn>) -> Var {
+        self.values.push(t);
+        self.backs.push(back);
+        Var(self.values.len() - 1)
+    }
+
+    /// Insert a node with a custom backward closure — the extension point
+    /// the per-operator super-ops in [`crate::train::heads`] use.
+    pub(crate) fn push_node(&mut self, t: Tensor, back: BackFn) -> Var {
+        self.push(t, Some(back))
+    }
+
+    /// Scalar node Σ a ⊙ w for a fixed cotangent `w` (same shape as `a`) —
+    /// the "loss = weighted sum of outputs" reducer the gradient checks
+    /// build on.
+    pub fn weighted_sum(&mut self, a: Var, w: &Tensor) -> Var {
+        let av = &self.values[a.0];
+        assert_eq!(av.shape, w.shape);
+        let total: f32 = av.data.iter().zip(&w.data).map(|(x, y)| x * y).sum();
+        let ai = a.0;
+        let w = w.clone();
+        self.push(
+            Tensor::from_vec(&[1], vec![total]),
+            Some(Box::new(move |_, dy| vec![(ai, w.scale(dy.data[0]))])),
+        )
+    }
+
+    // ---- elementwise & linear algebra ----
+
+    /// C = A @ B.
+    pub fn matmul(&mut self, a: Var, b: Var) -> Var {
+        let y = matmul(&self.values[a.0], &self.values[b.0]);
+        let (ai, bi) = (a.0, b.0);
+        self.push(
+            y,
+            Some(Box::new(move |vals, dy| {
+                let da = matmul_bt(dy, &vals[bi]); // dy @ B^T
+                let db = matmul(&vals[ai].transpose2(), dy); // A^T @ dy
+                vec![(ai, da), (bi, db)]
+            })),
+        )
+    }
+
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let y = self.values[a.0].add(&self.values[b.0]);
+        let (ai, bi) = (a.0, b.0);
+        self.push(
+            y,
+            Some(Box::new(move |_, dy| {
+                vec![(ai, dy.clone()), (bi, dy.clone())]
+            })),
+        )
+    }
+
+    /// Broadcast-add a bias vector b ([n]) to every row of a ([l, n]).
+    pub fn add_bias(&mut self, a: Var, b: Var) -> Var {
+        let av = &self.values[a.0];
+        let bv = &self.values[b.0];
+        assert_eq!(av.cols(), bv.numel());
+        let mut y = av.clone();
+        for t in 0..y.rows() {
+            for (yv, bb) in y.row_mut(t).iter_mut().zip(&bv.data) {
+                *yv += bb;
+            }
+        }
+        let (ai, bi) = (a.0, b.0);
+        self.push(
+            y,
+            Some(Box::new(move |vals, dy| {
+                let n = vals[bi].numel();
+                let mut db = Tensor::zeros(&vals[bi].shape);
+                for t in 0..dy.rows() {
+                    for j in 0..n {
+                        db.data[j] += dy.at2(t, j);
+                    }
+                }
+                vec![(ai, dy.clone()), (bi, db)]
+            })),
+        )
+    }
+
+    pub fn hadamard(&mut self, a: Var, b: Var) -> Var {
+        let y = self.values[a.0].hadamard(&self.values[b.0]);
+        let (ai, bi) = (a.0, b.0);
+        self.push(
+            y,
+            Some(Box::new(move |vals, dy| {
+                vec![(ai, dy.hadamard(&vals[bi])), (bi, dy.hadamard(&vals[ai]))]
+            })),
+        )
+    }
+
+    pub fn scale(&mut self, a: Var, s: f32) -> Var {
+        let y = self.values[a.0].scale(s);
+        let ai = a.0;
+        self.push(y, Some(Box::new(move |_, dy| vec![(ai, dy.scale(s))])))
+    }
+
+    /// silu(x) elementwise.
+    pub fn silu(&mut self, a: Var) -> Var {
+        let y = self.values[a.0].map(silu);
+        let ai = a.0;
+        self.push(
+            y,
+            Some(Box::new(move |vals, dy| {
+                vec![(ai, dy.binary(&vals[ai].map(dsilu), |g, d| g * d))]
+            })),
+        )
+    }
+
+    /// Columns [lo, hi) of a 2-D node.
+    pub fn slice_cols(&mut self, a: Var, lo: usize, hi: usize) -> Var {
+        let y = self.values[a.0].slice_cols(lo, hi);
+        let ai = a.0;
+        let full = self.values[a.0].cols();
+        self.push(
+            y,
+            Some(Box::new(move |vals, dy| {
+                let rows = vals[ai].rows();
+                let mut da = Tensor::zeros(&[rows, full]);
+                for t in 0..rows {
+                    da.row_mut(t)[lo..hi].copy_from_slice(dy.row(t));
+                }
+                vec![(ai, da)]
+            })),
+        )
+    }
+
+    /// Horizontal concat of 2-D nodes.
+    pub fn concat_cols(&mut self, parts: &[Var]) -> Var {
+        let refs: Vec<&Tensor> = parts.iter().map(|v| &self.values[v.0]).collect();
+        let y = Tensor::hcat(&refs);
+        let ids: Vec<usize> = parts.iter().map(|v| v.0).collect();
+        self.push(
+            y,
+            Some(Box::new(move |vals, dy| {
+                let mut out = Vec::with_capacity(ids.len());
+                let mut off = 0;
+                for &id in &ids {
+                    let w = vals[id].cols();
+                    out.push((id, dy.slice_cols(off, off + w)));
+                    off += w;
+                }
+                out
+            })),
+        )
+    }
+
+    // ---- structured ops ----
+
+    /// Causal grouped convolution y = x * h (channel c uses filter row
+    /// c / group_size). Forward is planner-dispatched; backward is the
+    /// two-pass blocked backward of `conv::backward`.
+    pub fn conv(&mut self, x: Var, taps: Var, group_size: usize) -> Var {
+        let h = GroupedFilter::new(self.values[taps.0].clone(), group_size);
+        let y = planned_conv(&self.values[x.0], &h);
+        let (xi, ti) = (x.0, taps.0);
+        self.push(
+            y,
+            Some(Box::new(move |vals, dy| {
+                let h = GroupedFilter::new(vals[ti].clone(), group_size);
+                let (dx, dh) = conv_backward_planned(&vals[xi], dy, &h);
+                vec![(xi, dx), (ti, dh)]
+            })),
+        )
+    }
+
+    /// Row-wise RMSNorm with gain g ([d]): y_tj = g_j x_tj / rms(x_t).
+    pub fn rmsnorm(&mut self, x: Var, g: Var) -> Var {
+        let xv = &self.values[x.0];
+        let gv = &self.values[g.0];
+        let (l, d) = (xv.rows(), xv.cols());
+        let mut y = Tensor::zeros(&[l, d]);
+        for t in 0..l {
+            y.row_mut(t)
+                .copy_from_slice(&crate::util::math::rmsnorm_row(xv.row(t), &gv.data));
+        }
+        let (xi, gi) = (x.0, g.0);
+        self.push(
+            y,
+            Some(Box::new(move |vals, dy| {
+                let xv = &vals[xi];
+                let gv = &vals[gi];
+                let (l, d) = (xv.rows(), xv.cols());
+                let mut dx = Tensor::zeros(&[l, d]);
+                let mut dg = Tensor::zeros(&[d]);
+                for t in 0..l {
+                    let xr = xv.row(t);
+                    let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+                    let r = (ms + RMS_EPS).sqrt();
+                    // xh = x / r; dxh = dy * g; dx = (dxh - xh*mean(dxh*xh))/r
+                    let mut dot = 0.0f32;
+                    for j in 0..d {
+                        let xh = xr[j] / r;
+                        let dxh = dy.at2(t, j) * gv.data[j];
+                        dg.data[j] += dy.at2(t, j) * xh;
+                        dot += dxh * xh;
+                    }
+                    let mean = dot / d as f32;
+                    for j in 0..d {
+                        let xh = xr[j] / r;
+                        let dxh = dy.at2(t, j) * gv.data[j];
+                        *dx.at2_mut(t, j) = (dxh - xh * mean) / r;
+                    }
+                }
+                vec![(xi, dx), (gi, dg)]
+            })),
+        )
+    }
+
+    /// Embedding gather: row `tokens[t]` of `table` per position, plus the
+    /// positional row t (if `pos` given). Backward scatter-adds.
+    pub fn embed(&mut self, table: Var, pos: Option<Var>, tokens: &[u8]) -> Var {
+        let tv = &self.values[table.0];
+        let d = tv.cols();
+        let l = tokens.len();
+        let mut y = Tensor::zeros(&[l, d]);
+        for (t, &tok) in tokens.iter().enumerate() {
+            y.row_mut(t).copy_from_slice(tv.row(tok as usize));
+        }
+        if let Some(p) = pos {
+            let pv = &self.values[p.0];
+            assert!(l <= pv.rows(), "sequence longer than positional table");
+            for t in 0..l {
+                let pr = pv.row(t);
+                for (yv, pvv) in y.row_mut(t).iter_mut().zip(pr) {
+                    *yv += pvv;
+                }
+            }
+        }
+        let ti = table.0;
+        let pi = pos.map(|p| p.0);
+        let toks: Vec<u8> = tokens.to_vec();
+        self.push(
+            y,
+            Some(Box::new(move |vals, dy| {
+                let mut dt = Tensor::zeros(&vals[ti].shape);
+                for (t, &tok) in toks.iter().enumerate() {
+                    let dst = dt.row_mut(tok as usize);
+                    for (dv, g) in dst.iter_mut().zip(dy.row(t)) {
+                        *dv += g;
+                    }
+                }
+                let mut out = vec![(ti, dt)];
+                if let Some(pi) = pi {
+                    let mut dp = Tensor::zeros(&vals[pi].shape);
+                    for t in 0..toks.len() {
+                        dp.row_mut(t).copy_from_slice(dy.row(t));
+                    }
+                    out.push((pi, dp));
+                }
+                out
+            })),
+        )
+    }
+
+    /// Materialize a length-`l` modal filter from residues/poles ([g, order]
+    /// each): taps[gi, t] = Σ_o R[gi,o] λ[gi,o]^t — the differentiable form
+    /// of `conv::fft_conv::modal_filter`.
+    pub fn modal_taps(&mut self, residues: Var, poles: Var, l: usize) -> Var {
+        let rv = &self.values[residues.0];
+        let pv = &self.values[poles.0];
+        let (g, order) = (rv.rows(), rv.cols());
+        assert_eq!(pv.shape, rv.shape);
+        let mut taps = Tensor::zeros(&[g, l]);
+        for gi in 0..g {
+            let h = crate::conv::fft_conv::modal_filter(
+                &rv.data[gi * order..(gi + 1) * order],
+                &pv.data[gi * order..(gi + 1) * order],
+                l,
+            );
+            taps.row_mut(gi).copy_from_slice(&h);
+        }
+        let (ri, pi) = (residues.0, poles.0);
+        self.push(
+            taps,
+            Some(Box::new(move |vals, dy| {
+                let rv = &vals[ri];
+                let pv = &vals[pi];
+                let (g, order) = (rv.rows(), rv.cols());
+                let l = dy.cols();
+                let mut dr = Tensor::zeros(&[g, order]);
+                let mut dp = Tensor::zeros(&[g, order]);
+                for gi in 0..g {
+                    for o in 0..order {
+                        let lam = pv.data[gi * order + o];
+                        let res = rv.data[gi * order + o];
+                        // powers λ^t and t λ^{t-1} accumulated in one pass
+                        let mut pw = 1.0f32; // λ^t
+                        let mut dpw = 0.0f32; // t λ^{t-1}
+                        let (mut sr, mut sp) = (0.0f32, 0.0f32);
+                        for t in 0..l {
+                            let g_t = dy.at2(gi, t);
+                            sr += g_t * pw;
+                            sp += g_t * res * dpw;
+                            dpw = dpw * lam + pw; // (t+1) λ^t
+                            pw *= lam;
+                        }
+                        dr.data[gi * order + o] = sr;
+                        dp.data[gi * order + o] = sp;
+                    }
+                }
+                vec![(ri, dr), (pi, dp)]
+            })),
+        )
+    }
+
+    /// Masked mean cross-entropy over rows of `logits` ([l, V]): scalar [1]
+    /// node. `mask[t]` weights position t's NLL; weights are normalized by
+    /// their sum (which must be positive).
+    pub fn cross_entropy_masked(
+        &mut self,
+        logits: Var,
+        targets: &[usize],
+        mask: &[f32],
+    ) -> Var {
+        let lv = &self.values[logits.0];
+        let l = lv.rows();
+        assert_eq!(targets.len(), l);
+        assert_eq!(mask.len(), l);
+        let wsum: f32 = mask.iter().sum();
+        assert!(wsum > 0.0, "cross_entropy_masked: empty mask");
+        let mut loss = 0.0f32;
+        for t in 0..l {
+            if mask[t] == 0.0 {
+                continue;
+            }
+            loss += mask[t] * -log_softmax(lv.row(t))[targets[t]];
+        }
+        loss /= wsum;
+        let li = logits.0;
+        let tg: Vec<usize> = targets.to_vec();
+        let mk: Vec<f32> = mask.to_vec();
+        self.push(
+            Tensor::from_vec(&[1], vec![loss]),
+            Some(Box::new(move |vals, dy| {
+                let lv = &vals[li];
+                let (l, v) = (lv.rows(), lv.cols());
+                let seed = dy.data[0];
+                let mut dl = Tensor::zeros(&[l, v]);
+                for t in 0..l {
+                    if mk[t] == 0.0 {
+                        continue;
+                    }
+                    let w = seed * mk[t] / wsum;
+                    let mut p = lv.row(t).to_vec();
+                    crate::util::math::softmax_in_place(&mut p);
+                    let dst = dl.row_mut(t);
+                    for (dv, pv) in dst.iter_mut().zip(&p) {
+                        *dv = w * pv;
+                    }
+                    dst[tg[t]] -= w;
+                }
+                vec![(li, dl)]
+            })),
+        )
+    }
+
+    /// Run the reverse pass from scalar node `root` (seed gradient 1).
+    /// The tape stays intact (closures are `Fn`), so further nodes can be
+    /// added and differentiated, though one pass per step is the norm.
+    pub fn backward(&mut self, root: Var) -> Grads {
+        let n = self.values.len();
+        assert_eq!(
+            self.values[root.0].numel(),
+            1,
+            "backward root must be a scalar node"
+        );
+        let mut grads: Vec<Option<Tensor>> = vec![None; n];
+        grads[root.0] = Some(Tensor::from_vec(&[1], vec![1.0]));
+        let backs = std::mem::take(&mut self.backs);
+        for i in (0..n).rev() {
+            let Some(back) = &backs[i] else { continue };
+            let Some(dy) = grads[i].take() else { continue };
+            for (pid, g) in back(&self.values, &dy) {
+                debug_assert!(pid < i, "tape parent {pid} not before child {i}");
+                match &mut grads[pid] {
+                    Some(acc) => acc.add_assign(&g),
+                    slot @ None => *slot = Some(g),
+                }
+            }
+        }
+        self.backs = backs;
+        Grads { grads }
+    }
+}
+
+/// Result of a reverse pass: gradient per node (None where no path from the
+/// loss reached the node).
+pub struct Grads {
+    grads: Vec<Option<Tensor>>,
+}
+
+impl Grads {
+    pub fn get(&self, v: Var) -> Option<&Tensor> {
+        self.grads[v.0].as_ref()
+    }
+
+    /// Gradient of a node, or zeros in its shape.
+    pub fn get_or_zeros(&self, v: Var, shape: &[usize]) -> Tensor {
+        self.grads[v.0]
+            .clone()
+            .unwrap_or_else(|| Tensor::zeros(shape))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// loss = Σ f(x) ⊙ w for random cotangent w; fd-check dx.
+    fn fd_check(
+        x0: &Tensor,
+        build: impl Fn(&mut Tape, Var) -> Var,
+        tol: f32,
+    ) {
+        let mut rng = Rng::new(7);
+        let w = Tensor::randn(&mut rng, &x0.shape, 1.0);
+        let loss_of = |x: &Tensor| -> f64 {
+            let mut tape = Tape::new();
+            let xv = tape.leaf(x.clone());
+            let y = build(&mut tape, xv);
+            tape.value(y)
+                .data
+                .iter()
+                .zip(&w.data)
+                .map(|(a, b)| *a as f64 * *b as f64)
+                .sum()
+        };
+        // analytic
+        let mut tape = Tape::new();
+        let xv = tape.leaf(x0.clone());
+        let y = build(&mut tape, xv);
+        let sum = tape.weighted_sum(y, &w);
+        let grads = tape.backward(sum);
+        let dx = grads.get(xv).expect("grad reaches input").clone();
+
+        let eps = 1e-2f32;
+        let mut idx_rng = Rng::new(3);
+        for _ in 0..20 {
+            let i = idx_rng.below(x0.numel());
+            let mut xp = x0.clone();
+            xp.data[i] += eps;
+            let mut xm = x0.clone();
+            xm.data[i] -= eps;
+            let num = (loss_of(&xp) - loss_of(&xm)) / (2.0 * eps as f64);
+            let ana = dx.data[i] as f64;
+            let rel = (num - ana).abs() / num.abs().max(ana.abs()).max(1e-3);
+            assert!(rel < tol as f64, "coord {i}: num {num} ana {ana} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn matmul_grad_checks() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&mut rng, &[5, 4], 1.0);
+        let w = Tensor::randn(&mut rng, &[4, 6], 1.0);
+        fd_check(&x, |t, xv| {
+            let wv = t.leaf(w.clone());
+            t.matmul(xv, wv)
+        }, 5e-3);
+    }
+
+    #[test]
+    fn rmsnorm_grad_checks() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[6, 8], 1.0);
+        let g = Tensor::randn(&mut rng, &[8], 0.3).map(|v| v + 1.0);
+        fd_check(&x, |t, xv| {
+            let gv = t.leaf(g.clone());
+            t.rmsnorm(xv, gv)
+        }, 1e-2);
+    }
+
+    #[test]
+    fn conv_grad_checks() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&mut rng, &[12, 6], 1.0);
+        let taps = Tensor::randn(&mut rng, &[3, 4], 0.5);
+        fd_check(&x, |t, xv| {
+            let tv = t.leaf(taps.clone());
+            t.conv(xv, tv, 2)
+        }, 1e-2);
+    }
+
+    #[test]
+    fn add_bias_broadcasts_and_sums_grad() {
+        let mut rng = Rng::new(8);
+        let x = Tensor::randn(&mut rng, &[5, 3], 1.0);
+        let b = Tensor::randn(&mut rng, &[3], 1.0);
+        let mut tape = Tape::new();
+        let xv = tape.leaf(x.clone());
+        let bv = tape.leaf(b.clone());
+        let y = tape.add_bias(xv, bv);
+        for t in 0..5 {
+            for j in 0..3 {
+                assert!((tape.value(y).at2(t, j) - (x.at2(t, j) + b.data[j])).abs() < 1e-6);
+            }
+        }
+        let ones = Tensor::from_vec(&[5, 3], vec![1.0; 15]);
+        let sum = tape.weighted_sum(y, &ones);
+        let grads = tape.backward(sum);
+        let db = grads.get(bv).unwrap();
+        // each bias column receives one unit per row
+        assert!(db.data.iter().all(|&g| (g - 5.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn silu_slice_concat_grad_checks() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&mut rng, &[4, 6], 1.0);
+        fd_check(&x, |t, xv| {
+            let a = t.slice_cols(xv, 0, 3);
+            let b = t.slice_cols(xv, 3, 6);
+            let sa = t.silu(a);
+            let h = t.hadamard(sa, b);
+            t.concat_cols(&[h, b])
+        }, 1e-2);
+    }
+
+    #[test]
+    fn modal_taps_grad_checks() {
+        let mut rng = Rng::new(4);
+        let r = Tensor::randn(&mut rng, &[2, 3], 0.5);
+        let p = Tensor::from_vec(
+            &[2, 3],
+            (0..6).map(|_| 0.3 + 0.6 * rng.f32()).collect(),
+        );
+        fd_check(&r, |t, rv| {
+            let pv = t.leaf(p.clone());
+            t.modal_taps(rv, pv, 10)
+        }, 1e-2);
+        fd_check(&p, |t, pv| {
+            let rv = t.leaf(r.clone());
+            t.modal_taps(rv, pv, 10)
+        }, 1e-2);
+    }
+
+    #[test]
+    fn cross_entropy_grad_is_softmax_minus_onehot() {
+        let mut rng = Rng::new(5);
+        let logits = Tensor::randn(&mut rng, &[3, 5], 1.0);
+        let targets = vec![1usize, 4, 0];
+        let mask = vec![1.0f32, 0.0, 1.0];
+        let mut tape = Tape::new();
+        let lv = tape.leaf(logits.clone());
+        let loss = tape.cross_entropy_masked(lv, &targets, &mask);
+        let grads = tape.backward(loss);
+        let dl = grads.get(lv).unwrap();
+        // masked-out row has zero grad
+        assert!(dl.row(1).iter().all(|&v| v == 0.0));
+        // active rows: softmax - onehot, weighted 1/2
+        let mut p = logits.row(0).to_vec();
+        crate::util::math::softmax_in_place(&mut p);
+        for j in 0..5 {
+            let want = 0.5 * (p[j] - if j == 1 { 1.0 } else { 0.0 });
+            assert!((dl.at2(0, j) - want).abs() < 1e-5);
+        }
+        // loss value matches the shared helper
+        let want_loss = 0.5
+            * (crate::util::math::cross_entropy_row(logits.row(0), 1)
+                + crate::util::math::cross_entropy_row(logits.row(2), 0));
+        assert!((tape.value(loss).data[0] - want_loss).abs() < 1e-5);
+    }
+
+    #[test]
+    fn embed_scatter_adds() {
+        let mut rng = Rng::new(6);
+        let table = Tensor::randn(&mut rng, &[8, 4], 1.0);
+        let pos = Tensor::randn(&mut rng, &[5, 4], 1.0);
+        let mut tape = Tape::new();
+        let tv = tape.leaf(table.clone());
+        let pv = tape.leaf(pos.clone());
+        let y = tape.embed(tv, Some(pv), &[2, 2, 7, 0, 2]);
+        // forward: row 0 = table[2] + pos[0]
+        for j in 0..4 {
+            assert!(
+                (tape.value(y).at2(0, j) - (table.at2(2, j) + pos.at2(0, j))).abs()
+                    < 1e-6
+            );
+        }
+        // backward with an all-ones cotangent
+        let ones = Tensor::from_vec(
+            &tape.value(y).shape.clone(),
+            vec![1.0; tape.value(y).numel()],
+        );
+        let sum = tape.weighted_sum(y, &ones);
+        let grads = tape.backward(sum);
+        let dt = grads.get(tv).unwrap();
+        // token 2 appears 3 times -> each column accumulates 3
+        for j in 0..4 {
+            assert!((dt.at2(2, j) - 3.0).abs() < 1e-6);
+            assert!((dt.at2(7, j) - 1.0).abs() < 1e-6);
+            assert!((dt.at2(1, j) - 0.0).abs() < 1e-6);
+        }
+        let dp = grads.get(pv).unwrap();
+        assert!((dp.at2(4, 0) - 1.0).abs() < 1e-6);
+    }
+}

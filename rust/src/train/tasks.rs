@@ -1,0 +1,375 @@
+//! Byte-tokenized token-manipulation synthetics (DESIGN.md §12), following
+//! the associative-recall methodology of H3 (Dao et al., 2022) and the
+//! operator-ablation style of Hyena Hierarchy / MAD (Poli et al., 2023/24):
+//!
+//! * **in-context recall** — key/value pairs in context, then every key is
+//!   queried again *in pair order*; the model must emit each bound value.
+//!   Offsets are fixed but content is random, so every operator family can
+//!   master it (the `sh2 train-tasks` >90% gate) — what differs is how
+//!   fast, and that the recalled bytes come from context, not weights.
+//! * **multi-token recall** — the binding structure with multi-byte values
+//!   and *random-order* queries: genuinely content-addressed lookup, the
+//!   probe where position-invariant short convolutions hit their
+//!   architectural ceiling and the attention / input-dependent-recurrence
+//!   families pull ahead (the paper's Fig. 2 complementarity axis).
+//! * **selective copy** — payload bytes scattered through noise must be
+//!   replayed in order after a separator (order-preserving long-range
+//!   routing).
+//! * **compression** — sequences drawn from a fixed motif codebook; the
+//!   model must compress the codebook into weights and complete each motif
+//!   from its prefix. Local grammar: the convolution-favoring probe.
+//!
+//! Every case is `(tokens, targets, mask)`: `targets[t] = tokens[t+1]`.
+//! Payload-predicting positions carry weight 1.0 — they are the scored
+//! positions for both the training loss and held-out accuracy (accuracy
+//! counts `mask >= 1`). The recall/copy tasks additionally put a small
+//! auxiliary weight ([`BG_WEIGHT`]) on every other position: next-byte
+//! prediction of the background teaches the copy/position structure
+//! without drowning the payload signal.
+
+use crate::util::rng::Rng;
+
+/// Key alphabet (8 symbols).
+pub const KEYS: &[u8] = b"ABCDEFGH";
+/// Value alphabet (8 symbols).
+pub const VALS: &[u8] = b"01234567";
+/// Background byte.
+pub const NOISE: u8 = b'.';
+/// Selective-copy separator.
+pub const SEP: u8 = b'|';
+/// Auxiliary loss weight on non-payload positions of the recall/copy
+/// tasks. Positions with `mask >= 1.0` are the scored payload.
+pub const BG_WEIGHT: f32 = 0.1;
+
+/// One training/eval case.
+#[derive(Clone, Debug)]
+pub struct TaskCase {
+    pub tokens: Vec<u8>,
+    /// `targets[t] = tokens[t+1]` (last target is NOISE).
+    pub targets: Vec<u8>,
+    /// Loss/eval weight per predicting position.
+    pub mask: Vec<f32>,
+}
+
+/// The §12 task set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    InContextRecall,
+    MultiTokenRecall,
+    SelectiveCopy,
+    Compression,
+}
+
+impl Task {
+    pub fn all() -> [Task; 4] {
+        [
+            Task::InContextRecall,
+            Task::MultiTokenRecall,
+            Task::SelectiveCopy,
+            Task::Compression,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::InContextRecall => "incontext_recall",
+            Task::MultiTokenRecall => "multitoken_recall",
+            Task::SelectiveCopy => "selective_copy",
+            Task::Compression => "compression",
+        }
+    }
+
+    /// Smallest sequence length this task's default geometry fits in —
+    /// validated by the CLI before any generator can underflow.
+    pub fn min_seq_len(&self) -> usize {
+        match self {
+            // 2 * n_pairs * (1 + val_len)
+            Task::InContextRecall => 12,
+            Task::MultiTokenRecall => 24,
+            // payload field + SEP + payload replay
+            Task::SelectiveCopy => 14,
+            Task::Compression => 8,
+        }
+    }
+
+    /// Parse a CLI name (aliases included).
+    pub fn parse(name: &str) -> Option<Task> {
+        Some(match name {
+            "incontext_recall" | "recall" | "mqar" => Task::InContextRecall,
+            "multitoken_recall" | "multi_token_recall" => Task::MultiTokenRecall,
+            "selective_copy" | "copy" => Task::SelectiveCopy,
+            "compression" | "compress" => Task::Compression,
+            _ => return None,
+        })
+    }
+}
+
+/// Case generator: a task plus its sampling geometry.
+#[derive(Clone, Debug)]
+pub struct TaskGen {
+    pub task: Task,
+    pub seq_len: usize,
+    /// Recall tasks: number of key/value pairs.
+    pub n_pairs: usize,
+    /// Recall tasks: value bytes per key.
+    pub val_len: usize,
+    /// Recall tasks: query keys in pair order (true) or shuffled (false).
+    pub ordered_queries: bool,
+    /// Selective copy: payload length.
+    pub payload: usize,
+    /// Compression: the fixed motif codebook.
+    motifs: Vec<Vec<u8>>,
+}
+
+impl TaskGen {
+    /// Default geometry per task at the given sequence length (the tuned
+    /// `sh2 train-tasks` defaults).
+    pub fn new(task: Task, seq_len: usize) -> TaskGen {
+        let (n_pairs, val_len, ordered_queries) = match task {
+            Task::MultiTokenRecall => (3, 3, false),
+            _ => (3, 1, true),
+        };
+        // Fixed codebook so train and held-out eval share the grammar.
+        let mut motif_rng = Rng::new(0x5EED_C0DE);
+        let motifs = (0..8)
+            .map(|_| {
+                (0..6)
+                    .map(|_| b'a' + motif_rng.below(26) as u8)
+                    .collect::<Vec<u8>>()
+            })
+            .collect();
+        TaskGen {
+            task,
+            seq_len,
+            n_pairs,
+            val_len,
+            ordered_queries,
+            payload: 6,
+            motifs,
+        }
+    }
+
+    /// Sample one case.
+    pub fn sample(&self, rng: &mut Rng) -> TaskCase {
+        match self.task {
+            Task::InContextRecall | Task::MultiTokenRecall => self.sample_recall(rng),
+            Task::SelectiveCopy => self.sample_copy(rng),
+            Task::Compression => self.sample_compression(rng),
+        }
+    }
+
+    /// noise | k v.. pairs | k v.. queries (queries in random order).
+    fn sample_recall(&self, rng: &mut Rng) -> TaskCase {
+        let l = self.seq_len;
+        let unit = 1 + self.val_len;
+        let plen = self.n_pairs * unit;
+        assert!(
+            2 * plen <= l,
+            "seq_len {l} too short for {} pairs of unit {unit}",
+            self.n_pairs
+        );
+        // distinct keys
+        let mut key_idx: Vec<usize> = (0..KEYS.len()).collect();
+        shuffle(rng, &mut key_idx);
+        key_idx.truncate(self.n_pairs);
+        let vals: Vec<Vec<u8>> = (0..self.n_pairs)
+            .map(|_| {
+                (0..self.val_len)
+                    .map(|_| VALS[rng.below(VALS.len())])
+                    .collect()
+            })
+            .collect();
+        let mut tokens = vec![NOISE; l];
+        let mut mask = vec![BG_WEIGHT; l];
+        let mut pos = l - 2 * plen;
+        for (i, &ki) in key_idx.iter().enumerate() {
+            tokens[pos] = KEYS[ki];
+            pos += 1;
+            for j in 0..self.val_len {
+                tokens[pos] = vals[i][j];
+                pos += 1;
+            }
+        }
+        let mut order: Vec<usize> = (0..self.n_pairs).collect();
+        if !self.ordered_queries {
+            shuffle(rng, &mut order);
+        }
+        for &i in &order {
+            tokens[pos] = KEYS[key_idx[i]];
+            for j in 0..self.val_len {
+                tokens[pos + 1 + j] = vals[i][j];
+                // scored at the *predicting* position (one to the left)
+                mask[pos + j] = 1.0;
+            }
+            pos += unit;
+        }
+        finish(tokens, mask)
+    }
+
+    /// payload scattered in noise | SEP | payload replayed in order.
+    fn sample_copy(&self, rng: &mut Rng) -> TaskCase {
+        let l = self.seq_len;
+        let m = self.payload;
+        assert!(
+            l >= 2 * m + 2,
+            "seq_len {l} too short for a {m}-byte selective-copy payload"
+        );
+        let field = l - m - 2;
+        let payload: Vec<u8> = (0..m).map(|_| VALS[rng.below(VALS.len())]).collect();
+        // m distinct positions in the field, ascending
+        let mut slots: Vec<usize> = (0..field).collect();
+        shuffle(rng, &mut slots);
+        slots.truncate(m);
+        slots.sort_unstable();
+        let mut tokens = vec![NOISE; l];
+        let mut mask = vec![BG_WEIGHT; l];
+        for (i, &s) in slots.iter().enumerate() {
+            tokens[s] = payload[i];
+        }
+        tokens[field] = SEP;
+        for (i, &b) in payload.iter().enumerate() {
+            tokens[field + 1 + i] = b;
+            mask[field + i] = 1.0; // predicting position of payload byte i
+        }
+        finish(tokens, mask)
+    }
+
+    /// Concatenated motifs from the fixed codebook; every within-motif
+    /// continuation byte is scored.
+    fn sample_compression(&self, rng: &mut Rng) -> TaskCase {
+        let l = self.seq_len;
+        let mut tokens = Vec::with_capacity(l + 8);
+        let mut mask = Vec::with_capacity(l + 8);
+        while tokens.len() < l {
+            let m = &self.motifs[rng.below(self.motifs.len())];
+            for (j, &b) in m.iter().enumerate() {
+                tokens.push(b);
+                // the byte at in-motif index j>0 is predictable from the
+                // prefix: score the position predicting it
+                mask.push(if j > 0 { 1.0 } else { 0.0 });
+            }
+        }
+        tokens.truncate(l);
+        mask.truncate(l);
+        // mask currently marks "this token is predictable"; shift left so it
+        // marks the predicting position
+        mask.rotate_left(1);
+        mask[l - 1] = 0.0;
+        finish(tokens, mask)
+    }
+}
+
+fn finish(tokens: Vec<u8>, mut mask: Vec<f32>) -> TaskCase {
+    let l = tokens.len();
+    let mut targets = vec![NOISE; l];
+    targets[..l - 1].copy_from_slice(&tokens[1..]);
+    // the final position predicts past the sequence; never train on it
+    mask[l - 1] = 0.0;
+    TaskCase {
+        tokens,
+        targets,
+        mask,
+    }
+}
+
+fn shuffle<T>(rng: &mut Rng, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        xs.swap(i, rng.below(i + 1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recall_case_is_consistent() {
+        let g = TaskGen::new(Task::InContextRecall, 32);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let c = g.sample(&mut rng);
+            assert_eq!(c.tokens.len(), 32);
+            assert_eq!(c.targets.len(), 32);
+            // every payload position's target is a value byte, and the
+            // token right of it equals the target
+            let scored: Vec<usize> = (0..32).filter(|&t| c.mask[t] >= 1.0).collect();
+            assert_eq!(scored.len(), g.n_pairs * g.val_len);
+            for &t in &scored {
+                assert!(VALS.contains(&c.targets[t]), "target not a value byte");
+                assert_eq!(c.targets[t], c.tokens[t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn recall_queries_recall_the_bound_value() {
+        let g = TaskGen::new(Task::InContextRecall, 32);
+        let mut rng = Rng::new(2);
+        let c = g.sample(&mut rng);
+        // For every scored query position, find its key (the byte at the
+        // predicting position) and check the value matches the pair region.
+        for t in 0..32 {
+            if c.mask[t] < 1.0 {
+                continue;
+            }
+            let key = c.tokens[t];
+            assert!(KEYS.contains(&key));
+            // first occurrence of key is the binding site
+            let bind = c.tokens.iter().position(|&b| b == key).unwrap();
+            assert_eq!(c.tokens[bind + 1], c.targets[t]);
+        }
+    }
+
+    #[test]
+    fn multitoken_scores_whole_values() {
+        let g = TaskGen::new(Task::MultiTokenRecall, 32);
+        assert_eq!(g.val_len, 3);
+        let mut rng = Rng::new(3);
+        let c = g.sample(&mut rng);
+        assert_eq!(
+            c.mask.iter().filter(|&&m| m >= 1.0).count(),
+            g.n_pairs * g.val_len
+        );
+    }
+
+    #[test]
+    fn selective_copy_replays_payload() {
+        let g = TaskGen::new(Task::SelectiveCopy, 32);
+        let mut rng = Rng::new(4);
+        let c = g.sample(&mut rng);
+        let sep = c.tokens.iter().position(|&b| b == SEP).unwrap();
+        let in_field: Vec<u8> = c.tokens[..sep]
+            .iter()
+            .copied()
+            .filter(|&b| b != NOISE)
+            .collect();
+        assert_eq!(in_field.len(), g.payload);
+        assert_eq!(&c.tokens[sep + 1..sep + 1 + g.payload], &in_field[..]);
+        assert_eq!(c.mask.iter().filter(|&&m| m >= 1.0).count(), g.payload);
+    }
+
+    #[test]
+    fn compression_scores_motif_continuations() {
+        let g = TaskGen::new(Task::Compression, 32);
+        let mut rng = Rng::new(5);
+        let c = g.sample(&mut rng);
+        assert!(c.mask.iter().any(|&m| m > 0.0));
+        // all bytes are lowercase motif bytes
+        assert!(c.tokens.iter().all(|&b| b.is_ascii_lowercase()));
+        // the codebook is fixed: two generators agree
+        let g2 = TaskGen::new(Task::Compression, 32);
+        let mut rng2 = Rng::new(5);
+        let c2 = g2.sample(&mut rng2);
+        assert_eq!(c.tokens, c2.tokens);
+    }
+
+    #[test]
+    fn parse_accepts_aliases() {
+        assert_eq!(Task::parse("mqar"), Some(Task::InContextRecall));
+        assert_eq!(Task::parse("compress"), Some(Task::Compression));
+        assert_eq!(Task::parse("nope"), None);
+        for t in Task::all() {
+            assert_eq!(Task::parse(t.name()), Some(t));
+        }
+    }
+}

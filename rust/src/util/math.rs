@@ -1,0 +1,136 @@
+//! Shared numerically-stable softmax / cross-entropy helpers.
+//!
+//! One implementation serves both consumers: the serving sampler's top-k
+//! distribution (`serve::sampler`) and the training loss (`train::loss`).
+//! Both shift by the max before exponentiating, so large logits never
+//! overflow and the two paths cannot drift apart.
+
+/// In-place stable softmax: `xs <- exp(xs - max) / Σ exp(xs - max)`.
+///
+/// An empty slice is a no-op. All-equal inputs produce the uniform
+/// distribution exactly.
+pub fn softmax_in_place(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let maxv = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut total = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - maxv).exp();
+        total += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= total;
+    }
+}
+
+/// log softmax(xs)[i] = xs[i] - max - ln Σ exp(xs - max), returned as a new
+/// vector. The stable form of `softmax(..).map(ln)`.
+pub fn log_softmax(xs: &[f32]) -> Vec<f32> {
+    let maxv = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse: f32 = xs.iter().map(|&x| (x - maxv).exp()).sum::<f32>().ln();
+    xs.iter().map(|&x| x - maxv - lse).collect()
+}
+
+/// Negative log-likelihood of `target` under `softmax(logits)`.
+pub fn cross_entropy_row(logits: &[f32], target: usize) -> f32 {
+    debug_assert!(target < logits.len());
+    -log_softmax(logits)[target]
+}
+
+/// RMSNorm variance epsilon, shared by the serving forward and the training
+/// backward so the two paths compute the identical function.
+pub const RMS_EPS: f32 = 1e-6;
+
+/// RMSNorm of one row: y_j = g_j * x_j / sqrt(mean(x^2) + eps).
+pub fn rmsnorm_row(x: &[f32], g: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), g.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + RMS_EPS).sqrt();
+    x.iter().zip(g).map(|(&xv, &gv)| gv * xv * inv).collect()
+}
+
+/// x * sigmoid(x) — the MLP activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// d/dx silu(x) = sigmoid(x) * (1 + x * (1 - sigmoid(x))).
+#[inline]
+pub fn dsilu(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Overflow-safe ln(1 + e^x).
+#[inline]
+pub fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut xs = vec![1.0f32, 3.0, 2.0];
+        softmax_in_place(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[1] > xs[2] && xs[2] > xs[0]);
+    }
+
+    #[test]
+    fn softmax_survives_huge_logits() {
+        let mut xs = vec![1000.0f32, 999.0];
+        softmax_in_place(&mut xs);
+        assert!(xs.iter().all(|x| x.is_finite()));
+        assert!(xs[0] > xs[1]);
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax_log() {
+        let xs = vec![0.3f32, -1.2, 2.0, 0.0];
+        let mut p = xs.clone();
+        softmax_in_place(&mut p);
+        let lp = log_softmax(&xs);
+        for (a, b) in p.iter().zip(&lp) {
+            assert!((a.ln() - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_uniform_is_ln_n() {
+        let logits = vec![0.5f32; 8];
+        let nll = cross_entropy_row(&logits, 3);
+        assert!((nll - (8.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain_has_unit_rms() {
+        let x = vec![3.0f32, -1.0, 2.0, 0.5];
+        let g = vec![1.0f32; 4];
+        let y = rmsnorm_row(&x, &g);
+        let rms = (y.iter().map(|v| v * v).sum::<f32>() / 4.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-3, "rms {rms}");
+    }
+
+    #[test]
+    fn silu_and_softplus_shapes() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!(silu(5.0) > 4.9);
+        assert!((softplus(-30.0)).abs() < 1e-6);
+        assert!((softplus(30.0) - 30.0).abs() < 1e-6);
+        assert!((dsilu(0.0) - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,248 @@
+//! Integration tests for the pure-Rust training subsystem (DESIGN.md §12):
+//! finite-difference gradient checks through every operator's full layer,
+//! a loss-decreases smoke test per token-manipulation task, tape-vs-model
+//! forward parity for every layout code, and the checkpoint handoff from
+//! `train` into the `generate` decode path.
+
+use sh2::serve::{model::LAYOUT_CODES, HybridLm, LmConfig};
+use sh2::train::model::{lm_logits, ParamVars};
+use sh2::train::tape::Tape;
+use sh2::train::tasks::{Task, TaskGen};
+use sh2::train::{checkpoint, Trainer};
+use sh2::tensor::Tensor;
+use sh2::util::rng::Rng;
+
+/// Relative finite-difference error with a floor that absorbs f32 forward
+/// noise on near-zero gradients. The same derivations check at ~1e-7 rel
+/// in the f64 reference; the f32 substrate is held to 2e-2 here.
+fn rel_err(num: f64, ana: f64) -> f64 {
+    (num - ana).abs() / num.abs().max(ana.abs()).max(1e-2)
+}
+
+/// Gradient-check one operator code: loss = Σ logits ⊙ w for a fixed random
+/// cotangent, fd vs tape gradient on sampled coordinates of every parameter.
+fn grad_check_code(code: &str) {
+    let mut rng = Rng::new(11);
+    let cfg = LmConfig::trainable(16, 2, &[code], 12);
+    let model = HybridLm::with_config(&mut rng, &cfg).unwrap();
+    let tokens = b"ACGTACGTACGT";
+    let w = {
+        let mut wr = Rng::new(23);
+        Tensor::randn(&mut wr, &[tokens.len(), sh2::serve::model::VOCAB], 1.0)
+    };
+
+    // analytic gradients per parameter name
+    let mut tape = Tape::new();
+    let pv = ParamVars::insert(&mut tape, &model);
+    let logits = lm_logits(&mut tape, &cfg, &pv, tokens);
+    let loss = tape.weighted_sum(logits, &w);
+    let grads = tape.backward(loss);
+    let by_name = pv.collect_grads(&grads);
+
+    let loss_of = |m: &HybridLm| -> f64 {
+        let mut t = Tape::new();
+        let pv = ParamVars::insert(&mut t, m);
+        let lg = lm_logits(&mut t, &cfg, &pv, tokens);
+        t.value(lg)
+            .data
+            .iter()
+            .zip(&w.data)
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum()
+    };
+
+    let names: Vec<String> = model.named_params().iter().map(|(n, _)| n.clone()).collect();
+    let mut coord_rng = Rng::new(31);
+    for name in &names {
+        let g = by_name
+            .get(name)
+            .unwrap_or_else(|| panic!("{code}: no gradient for {name}"));
+        let numel = g.numel();
+        let checks = numel.min(4);
+        for _ in 0..checks {
+            let i = coord_rng.below(numel);
+            let eps = 1e-2f32;
+            let perturbed = |delta: f32| -> f64 {
+                let mut m2 = HybridLm::with_config(&mut Rng::new(11), &cfg).unwrap();
+                // same seed -> identical weights; nudge one coordinate
+                for (n2, t2) in m2.named_params_mut() {
+                    if &n2 == name {
+                        t2.data[i] += delta;
+                    }
+                }
+                loss_of(&m2)
+            };
+            let num = (perturbed(eps) - perturbed(-eps)) / (2.0 * eps as f64);
+            let ana = g.data[i] as f64;
+            let re = rel_err(num, ana);
+            assert!(
+                re < 2e-2,
+                "{code} {name}[{i}]: numeric {num} vs analytic {ana} (rel {re})"
+            );
+        }
+    }
+}
+
+#[test]
+fn grad_check_hyena_se() {
+    grad_check_code("SE");
+}
+
+#[test]
+fn grad_check_hyena_mr() {
+    grad_check_code("MR");
+}
+
+#[test]
+fn grad_check_hyena_li() {
+    grad_check_code("LI");
+}
+
+#[test]
+fn grad_check_mha() {
+    grad_check_code("MHA");
+}
+
+#[test]
+fn grad_check_linear_attn() {
+    grad_check_code("LA");
+}
+
+#[test]
+fn grad_check_ssd() {
+    grad_check_code("SSD");
+}
+
+#[test]
+fn grad_check_deltanet() {
+    grad_check_code("DN");
+}
+
+#[test]
+fn grad_check_mlstm() {
+    grad_check_code("MLSTM");
+}
+
+#[test]
+fn tape_forward_matches_model_for_every_code() {
+    let mut rng = Rng::new(3);
+    for code in LAYOUT_CODES {
+        let cfg = LmConfig::trainable(16, 2, &[code], 16);
+        let model = HybridLm::with_config(&mut rng, &cfg).unwrap();
+        let tokens = b"ACGTGGCATACGTAAC";
+        let want = model.logits(tokens);
+        let mut tape = Tape::new();
+        let pv = ParamVars::insert(&mut tape, &model);
+        let got = lm_logits(&mut tape, &cfg, &pv, tokens);
+        let diff = tape.value(got).max_abs_diff(&want);
+        assert!(diff < 1e-3, "{code}: tape/model divergence {diff}");
+    }
+}
+
+/// Loss must drop on every task with a short burst of training.
+fn loss_decreases_on(task: Task, code: &str) {
+    let cfg = LmConfig::trainable(16, 2, &[code, code], 32);
+    let model = HybridLm::with_config(&mut Rng::new(5), &cfg).unwrap();
+    let mut trainer = Trainer::new(model, 3e-3, 25);
+    let gen = TaskGen::new(task, 32);
+    let mut data_rng = Rng::new(6);
+    let probe: Vec<_> = (0..8).map(|_| gen.sample(&mut data_rng)).collect();
+    let first = trainer.loss_of(&probe);
+    for _ in 0..25 {
+        let cases: Vec<_> = (0..4).map(|_| gen.sample(&mut data_rng)).collect();
+        trainer.train_step(&cases);
+    }
+    let last = trainer.loss_of(&probe);
+    assert!(
+        last < first,
+        "{}/{code}: loss did not decrease ({first} -> {last})",
+        task.name()
+    );
+}
+
+#[test]
+fn loss_decreases_incontext_recall() {
+    loss_decreases_on(Task::InContextRecall, "MHA");
+}
+
+#[test]
+fn loss_decreases_multitoken_recall() {
+    loss_decreases_on(Task::MultiTokenRecall, "MR");
+}
+
+#[test]
+fn loss_decreases_selective_copy() {
+    loss_decreases_on(Task::SelectiveCopy, "LA");
+}
+
+#[test]
+fn loss_decreases_compression() {
+    loss_decreases_on(Task::Compression, "SE");
+}
+
+#[test]
+fn trained_checkpoint_drives_decode_path() {
+    // Train a tiny hybrid briefly, save, reload, and check that (a) logits
+    // round-trip exactly and (b) the serving prefill+step path agrees with
+    // the batch forward on the loaded model — the `sh2 train` -> `sh2
+    // generate --load` handoff.
+    let cfg = LmConfig::trainable(16, 2, &["SE", "MHA"], 32);
+    let model = HybridLm::with_config(&mut Rng::new(9), &cfg).unwrap();
+    let mut trainer = Trainer::new(model, 3e-3, 10);
+    let gen = TaskGen::new(Task::Compression, 32);
+    let mut data_rng = Rng::new(10);
+    for _ in 0..10 {
+        let cases: Vec<_> = (0..4).map(|_| gen.sample(&mut data_rng)).collect();
+        trainer.train_step(&cases);
+    }
+    let path = std::env::temp_dir().join("sh2_train_handoff.bin");
+    checkpoint::save_lm(&path, &trainer.model, trainer.step as u64).unwrap();
+    let (loaded, step) = checkpoint::load_lm(&path).unwrap();
+    assert_eq!(step, 10);
+
+    let prompt = b"abcdefabcdef";
+    let want = trainer.model.logits(prompt);
+    let got = loaded.logits(prompt);
+    assert!(
+        got.allclose(&want, 1e-6),
+        "loaded logits diverge: {}",
+        got.max_abs_diff(&want)
+    );
+
+    // decode path: prefill + steps reproduce the batch forward's last row
+    let mut st = loaded.state();
+    let mut logits = loaded.prefill(&mut st, &prompt[..8]);
+    for &t in &prompt[8..] {
+        logits = loaded.step(&mut st, t);
+    }
+    let diff = logits
+        .iter()
+        .zip(want.row(prompt.len() - 1))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff < 1e-3, "decode path diverges from batch forward: {diff}");
+}
+
+#[test]
+fn training_moves_heldout_accuracy_above_chance() {
+    // End-to-end sanity on the easiest task: a small burst of compression
+    // training must beat the 1/26 motif-alphabet chance rate by a wide
+    // margin (the full >90% acceptance runs live in `sh2 train-tasks`).
+    let cfg = LmConfig::trainable(32, 2, &["SE", "SE"], 32);
+    let model = HybridLm::with_config(&mut Rng::new(12), &cfg).unwrap();
+    let mut trainer = Trainer::new(model, 3e-3, 60);
+    let gen = TaskGen::new(Task::Compression, 32);
+    let mut data_rng = Rng::new(13);
+    for _ in 0..60 {
+        let cases: Vec<_> = (0..8).map(|_| gen.sample(&mut data_rng)).collect();
+        trainer.train_step(&cases);
+    }
+    let mut eval_rng = Rng::new(0xE7A1);
+    let eval_cases: Vec<_> = (0..32).map(|_| gen.sample(&mut eval_rng)).collect();
+    let ev = trainer.eval(&eval_cases);
+    assert!(
+        ev.accuracy > 0.3,
+        "compression accuracy after 60 steps only {:.3}",
+        ev.accuracy
+    );
+}
