@@ -152,10 +152,20 @@ impl FirTail {
     /// ascending-lag order (bit-identical to the direct convolution). The
     /// input row is pushed into the window afterwards.
     pub fn step(&mut self, h: &GroupedFilter, x_t: &[f32]) -> Vec<f32> {
-        assert_eq!(x_t.len(), self.d);
-        assert_eq!(h.channels(), self.d);
         let mut y = vec![0.0f32; self.d];
-        for (c, yv) in y.iter_mut().enumerate() {
+        self.step_into(h, x_t, &mut y);
+        y
+    }
+
+    /// Allocation-free [`FirTail::step`]: writes the output row into
+    /// `out` (length d). This is the batched-decode hot path — the hyena
+    /// `step_batch` kernel advances every stream's tails into shared
+    /// [B, d] buffers without per-stream `Vec`s.
+    pub fn step_into(&mut self, h: &GroupedFilter, x_t: &[f32], out: &mut [f32]) {
+        assert_eq!(x_t.len(), self.d);
+        assert_eq!(out.len(), self.d);
+        assert_eq!(h.channels(), self.d);
+        for (c, yv) in out.iter_mut().enumerate() {
             let taps = h.for_channel(c);
             let mut acc = taps[0] * x_t[c];
             for (k, &tap) in taps.iter().enumerate().skip(1) {
@@ -167,7 +177,6 @@ impl FirTail {
             *yv = acc;
         }
         self.push(x_t);
-        y
     }
 }
 

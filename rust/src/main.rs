@@ -90,6 +90,9 @@ const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|tu
   serve:  --streams N --prompt-len L --max-new N --max-active A --budget-kb KB
           --width D --heads H --layout ... --top-k K --temp T --seed S
           --load CKPT --plan-cache PATH
+          (decodes batch-first: one step_batch per tick over all active
+          streams; prints an sh2-serve-v1 JSON summary line with tokens/s,
+          mean batch occupancy, decode_steps, preemptions)
   tune:   --out PATH (default: plan_cache.json) --widths D1,D2 --quick
   bench-gate: --current PATH --baseline PATH --tolerance R (default: 2.0)
   cost-model: --scale 7b|40b
@@ -177,6 +180,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use sh2::util::json::Json;
+
     load_plan_cache(args);
     let seed = args.get_usize("seed", 0) as u64;
     let mut rng = Rng::new(seed);
@@ -219,15 +224,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     t.print();
     let s = sched.stats;
     println!(
-        "decoded {} tokens in {:.2}s ({:.1} tok/s) | prefilled {} tokens | \
+        "decoded {} tokens in {:.2}s ({:.1} tok/s overall, {:.1} tok/s in \
+         batched decode) | mean batch occupancy {:.2} | prefilled {} tokens | \
          peak concurrency {} | preemptions {}",
         s.decode_steps,
         secs,
         s.decode_steps as f64 / secs.max(1e-9),
+        s.decode_tok_per_s(),
+        s.mean_batch_occupancy(),
         s.prefill_tokens,
         s.max_concurrent,
         s.preemptions
     );
+    // Machine-readable summary (one line) for harnesses and CI scrapers.
+    let summary = Json::obj(vec![
+        ("schema", Json::str("sh2-serve-v1")),
+        ("streams", Json::num(n_streams as f64)),
+        ("max_active", Json::num(max_active as f64)),
+        ("decode_steps", Json::num(s.decode_steps as f64)),
+        ("decode_ticks", Json::num(s.decode_ticks as f64)),
+        ("decode_tok_per_s", Json::num(s.decode_tok_per_s())),
+        ("mean_batch_occupancy", Json::num(s.mean_batch_occupancy())),
+        ("prefill_tokens", Json::num(s.prefill_tokens as f64)),
+        ("preemptions", Json::num(s.preemptions as f64)),
+        ("elapsed_s", Json::num(secs)),
+    ]);
+    println!("{summary}");
     Ok(())
 }
 

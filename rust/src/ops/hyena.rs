@@ -81,10 +81,17 @@ impl HyenaOp {
     /// One decode step of the LI modal IIR: s <- λ s + kv, y = Σ R s, the
     /// constant-memory form of the length-l FFT convolution.
     fn modal_step(&self, modal: &mut [f32], kv: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.d];
+        self.modal_step_into(modal, kv, &mut y);
+        y
+    }
+
+    /// Allocation-free [`HyenaOp::modal_step`]: writes into `out` (length
+    /// d) — the batched-decode hot path.
+    fn modal_step_into(&self, modal: &mut [f32], kv: &[f32], out: &mut [f32]) {
         let order = self.li_order();
         let gsz = self.d / self.num_groups;
-        let mut y = vec![0.0f32; self.d];
-        for (c, yv) in y.iter_mut().enumerate() {
+        for (c, yv) in out.iter_mut().enumerate() {
             let gi = c / gsz;
             let mut acc = 0.0f32;
             for o in 0..order {
@@ -94,7 +101,6 @@ impl HyenaOp {
             }
             *yv = acc;
         }
-        y
     }
 
     fn featurizer(rng: &mut Rng, d: usize) -> GroupedFilter {
@@ -331,6 +337,56 @@ impl SeqMixer for HyenaOp {
         let gated: Vec<f32> = q.iter().zip(&inner).map(|(a, b)| a * b).collect();
         st.pos += 1;
         vecmat(&gated, &self.m)
+    }
+
+    /// Batched decode: the four dense projections become [B, d] x [d, d]
+    /// GEMMs; every stream's three featurizer FIR tails, its inner tail
+    /// (SE/MR) or modal IIR (LI), and the gating then advance row-by-row
+    /// into shared [B, d] buffers — allocation-free batched FIR dots via
+    /// [`crate::conv::FirTail::step_into`]. Rows are bit-identical to
+    /// serial [`SeqMixer::step`].
+    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+        let bsz = states.len();
+        assert_eq!(
+            bsz,
+            xs.rows(),
+            "step_batch: {} states vs {} input rows",
+            bsz,
+            xs.rows()
+        );
+        let d = self.d;
+        let xw = matmul(xs, &self.w);
+        let xu = matmul(xs, &self.u);
+        let xp = matmul(xs, &self.p);
+        let mut q = Tensor::zeros(&[bsz, d]);
+        let mut k = Tensor::zeros(&[bsz, d]);
+        let mut v = Tensor::zeros(&[bsz, d]);
+        let mut inner = Tensor::zeros(&[bsz, d]);
+        let mut kv = vec![0.0f32; d];
+        for (b, st) in states.iter_mut().enumerate() {
+            let DecodeState::Hyena(s) = &mut **st else {
+                panic!("Hyena step_batch: wrong decode state variant")
+            };
+            s.w_tail.step_into(&self.hq, xw.row(b), q.row_mut(b));
+            s.u_tail.step_into(&self.hk, xu.row(b), k.row_mut(b));
+            s.p_tail.step_into(&self.hv, xp.row(b), v.row_mut(b));
+            {
+                let (kr, vr) = (k.row(b), v.row(b));
+                for (i, o) in kv.iter_mut().enumerate() {
+                    *o = kr[i] * vr[i];
+                }
+            }
+            match self.kind {
+                HyenaKind::Se | HyenaKind::Mr => {
+                    s.inner_tail.step_into(&self.inner, &kv, inner.row_mut(b))
+                }
+                HyenaKind::Li => {
+                    self.modal_step_into(&mut s.modal, &kv, inner.row_mut(b))
+                }
+            }
+            s.pos += 1;
+        }
+        matmul(&q.hadamard(&inner), &self.m)
     }
 
     /// Blocked prefill (DESIGN.md §Streaming-Decode): featurizers and the

@@ -1,7 +1,7 @@
 //! Linear attention (Katharopoulos et al., 2020): softmax replaced by a
 //! positive feature map; causal form is a running outer-product state.
 
-use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer};
+use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer, StateBatch};
 use crate::tensor::matmul::{matmul, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -197,6 +197,85 @@ impl SeqMixer for LinearAttnOp {
         }
         st.pos += 1;
         vecmat(&y, &self.wo)
+    }
+
+    /// Batched decode: one [B, d] x [d, 3d] GEMM for the QKV projection
+    /// and one [B, d] x [d, d] GEMM for the output projection replace 2B
+    /// batch-1 `vecmat`s; the per-head (S, z) accumulators are gathered
+    /// into SoA [`StateBatch`] rows for the update. Rows are bit-identical
+    /// to serial [`SeqMixer::step`].
+    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+        let bsz = states.len();
+        assert_eq!(
+            bsz,
+            xs.rows(),
+            "step_batch: {} states vs {} input rows",
+            bsz,
+            xs.rows()
+        );
+        let d = self.d;
+        let dh = d / self.n_heads;
+        let qkv = matmul(xs, &self.wqkv); // [B, 3d]
+        let mut sb = StateBatch::new(bsz, self.n_heads * dh * dh);
+        let mut zb = StateBatch::new(bsz, self.n_heads * dh);
+        for (b, st) in states.iter().enumerate() {
+            let DecodeState::LinearAttn(s) = &**st else {
+                panic!("LinearAttn step_batch: wrong decode state variant")
+            };
+            sb.load(b, &s.s);
+            zb.load(b, &s.z);
+        }
+        let mut ymid = Tensor::zeros(&[bsz, d]);
+        let mut fk = vec![0.0f32; dh];
+        let mut fq = vec![0.0f32; dh];
+        for b in 0..bsz {
+            let qkv_r = qkv.row(b);
+            let s_all = sb.row_mut(b);
+            let z_all = zb.row_mut(b);
+            let y_r = ymid.row_mut(b);
+            for h in 0..self.n_heads {
+                let off = h * dh;
+                for i in 0..dh {
+                    fq[i] = elu1(qkv_r[off + i]);
+                    fk[i] = elu1(qkv_r[d + off + i]);
+                }
+                let vrow = &qkv_r[2 * d + off..2 * d + off + dh];
+                let s = &mut s_all[h * dh * dh..(h + 1) * dh * dh];
+                let z = &mut z_all[off..off + dh];
+                for i in 0..dh {
+                    let fki = fk[i];
+                    z[i] += fki;
+                    let srow = &mut s[i * dh..(i + 1) * dh];
+                    for (sv, &vv) in srow.iter_mut().zip(vrow) {
+                        *sv += fki * vv;
+                    }
+                }
+                let mut denom = 1e-6f32;
+                for i in 0..dh {
+                    denom += fq[i] * z[i];
+                }
+                let orow = &mut y_r[off..off + dh];
+                for i in 0..dh {
+                    let fqi = fq[i];
+                    let srow = &s[i * dh..(i + 1) * dh];
+                    for (o, &sv) in orow.iter_mut().zip(srow) {
+                        *o += fqi * sv;
+                    }
+                }
+                for o in orow.iter_mut() {
+                    *o /= denom;
+                }
+            }
+        }
+        for (b, st) in states.iter_mut().enumerate() {
+            let DecodeState::LinearAttn(s) = &mut **st else {
+                panic!("LinearAttn step_batch: wrong decode state variant")
+            };
+            sb.store(b, &mut s.s);
+            zb.store(b, &mut s.z);
+            s.pos += 1;
+        }
+        matmul(&ymid, &self.wo)
     }
 
     /// Blocked prefill: GEMM projections + per-head scan continuing from

@@ -171,6 +171,37 @@ impl SeqMixer for MhaOp {
         vecmat(&y, &self.wo)
     }
 
+    /// Batched decode: the QKV and output projections become [B, d] x
+    /// [d, ·] GEMMs; the KV caches stay AoS per stream (variable length,
+    /// append-only — see DESIGN.md §13), so each stream appends its new
+    /// K/V row and attends against its own history. Rows are bit-identical
+    /// to serial [`SeqMixer::step`].
+    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+        let bsz = states.len();
+        assert_eq!(
+            bsz,
+            xs.rows(),
+            "step_batch: {} states vs {} input rows",
+            bsz,
+            xs.rows()
+        );
+        let d = self.d;
+        let qkv = matmul(xs, &self.wqkv); // [B, 3d]
+        let mut ymid = Tensor::zeros(&[bsz, d]);
+        for (b, st) in states.iter_mut().enumerate() {
+            let DecodeState::Mha(s) = &mut **st else {
+                panic!("MHA step_batch: wrong decode state variant")
+            };
+            let qkv_r = qkv.row(b);
+            s.k.extend_from_slice(&qkv_r[d..2 * d]);
+            s.v.extend_from_slice(&qkv_r[2 * d..3 * d]);
+            s.pos += 1;
+            let y = self.attend_cached(s, &qkv_r[..d]);
+            ymid.row_mut(b).copy_from_slice(&y);
+        }
+        matmul(&ymid, &self.wo)
+    }
+
     /// Blocked prefill: from an empty state this runs the same GEMM +
     /// streaming-softmax path as `forward` while recording the KV cache;
     /// with prior context it falls back to stepping (the cache is the

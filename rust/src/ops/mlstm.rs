@@ -1,7 +1,7 @@
 //! xLSTM-style mLSTM operator (Beck et al., 2024): matrix memory with
 //! scalar input/forget gates and a normalizer state.
 
-use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer};
+use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer, StateBatch};
 use crate::tensor::matmul::{matmul, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -199,6 +199,83 @@ impl SeqMixer for MlstmOp {
         }
         st.pos += 1;
         vecmat(&y, &self.wo)
+    }
+
+    /// Batched decode: the QKV, gate and output projections become
+    /// [B, d] x [d, ·] GEMMs; the per-head (C, n) memories are gathered
+    /// into SoA [`StateBatch`] rows for the gated update. Rows are
+    /// bit-identical to serial [`SeqMixer::step`].
+    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+        let bsz = states.len();
+        assert_eq!(
+            bsz,
+            xs.rows(),
+            "step_batch: {} states vs {} input rows",
+            bsz,
+            xs.rows()
+        );
+        let d = self.d;
+        let dh = d / self.n_heads;
+        let qkv = matmul(xs, &self.wqkv); // [B, 3d]
+        let gates = matmul(xs, &self.wif); // [B, 2H]
+        let sig = |x: f32| 1.0 / (1.0 + (-x).exp());
+        let mut cb = StateBatch::new(bsz, self.n_heads * dh * dh);
+        let mut nb = StateBatch::new(bsz, self.n_heads * dh);
+        for (b, st) in states.iter().enumerate() {
+            let DecodeState::Mlstm(s) = &**st else {
+                panic!("mLSTM step_batch: wrong decode state variant")
+            };
+            cb.load(b, &s.c);
+            nb.load(b, &s.n);
+        }
+        let mut ymid = Tensor::zeros(&[bsz, d]);
+        for b in 0..bsz {
+            let qkv_r = qkv.row(b);
+            let gates_r = gates.row(b);
+            let c_all = cb.row_mut(b);
+            let n_all = nb.row_mut(b);
+            let y_r = ymid.row_mut(b);
+            for h in 0..self.n_heads {
+                let off = h * dh;
+                let (i_t, f_t) = (sig(gates_r[2 * h]), sig(gates_r[2 * h + 1]));
+                let kr = &qkv_r[d + off..d + off + dh];
+                let vr = &qkv_r[2 * d + off..2 * d + off + dh];
+                let c = &mut c_all[h * dh * dh..(h + 1) * dh * dh];
+                let n = &mut n_all[off..off + dh];
+                for a in 0..dh {
+                    let iv = i_t * vr[a];
+                    let crow = &mut c[a * dh..(a + 1) * dh];
+                    for (cv, &kv_) in crow.iter_mut().zip(kr) {
+                        *cv = f_t * *cv + iv * kv_;
+                    }
+                }
+                for (nv, &kv_) in n.iter_mut().zip(kr) {
+                    *nv = f_t * *nv + i_t * kv_;
+                }
+                let qr = &qkv_r[off..off + dh];
+                let denom = n
+                    .iter()
+                    .zip(qr)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+                    .abs()
+                    .max(1.0);
+                let yr = &mut y_r[off..off + dh];
+                for a in 0..dh {
+                    let crow = &c[a * dh..(a + 1) * dh];
+                    yr[a] = crow.iter().zip(qr).map(|(x, z)| x * z).sum::<f32>() / denom;
+                }
+            }
+        }
+        for (b, st) in states.iter_mut().enumerate() {
+            let DecodeState::Mlstm(s) = &mut **st else {
+                panic!("mLSTM step_batch: wrong decode state variant")
+            };
+            cb.store(b, &mut s.c);
+            nb.store(b, &mut s.n);
+            s.pos += 1;
+        }
+        matmul(&ymid, &self.wo)
     }
 
     /// Blocked prefill: GEMM projections + per-head recurrence continuing

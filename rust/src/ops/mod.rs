@@ -152,6 +152,91 @@ pub trait SeqMixer {
         }
         y
     }
+
+    /// Decode one token for B streams at once: `states[b]` advances by one
+    /// position on input row b of `xs` ([B, d]), and row b of the returned
+    /// [B, d] tensor is that stream's output row.
+    ///
+    /// Semantically this is exactly B independent [`SeqMixer::step`] calls
+    /// — the default implementation does just that, which keeps the trait
+    /// object-safe and gives new operators drop-in parity — but every
+    /// operator in the zoo overrides it with a GEMM-shaped kernel: each
+    /// projection becomes one [B, d] x [d, ·] `matmul` instead of B
+    /// batch-1 `vecmat`s (bit-identical per row — `vecmat` shares the
+    /// GEMM's ascending k-order), the fixed-size recurrent states are
+    /// gathered into SoA [`StateBatch`] rows for the update, and only
+    /// MHA's growing KV cache stays per-stream (AoS). This is the paper's
+    /// throughput mechanism — reshape serving work into tensor-core-sized
+    /// GEMMs — applied to decode (DESIGN.md §13).
+    ///
+    /// Streams are independent: rows may sit at different positions and
+    /// the batch composition may change from call to call (continuous
+    /// batching). Panics if `states.len() != xs.rows()` or on a state
+    /// produced by a different operator family.
+    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+        assert_eq!(
+            states.len(),
+            xs.rows(),
+            "step_batch: {} states vs {} input rows",
+            states.len(),
+            xs.rows()
+        );
+        let mut y = Tensor::zeros(&[xs.rows(), xs.cols()]);
+        for (b, st) in states.iter_mut().enumerate() {
+            let row = self.step(&mut **st, xs.row(b));
+            y.row_mut(b).copy_from_slice(&row);
+        }
+        y
+    }
+}
+
+/// SoA packing of one fixed-size state component across a batch of decode
+/// streams (DESIGN.md §13).
+///
+/// Per-stream `DecodeState`s live in separate heap allocations because the
+/// scheduler admits, evicts and retires them independently. The batched
+/// decode kernels `load` each component (linear-attn S, SSD h, DeltaNet
+/// fast weights, mLSTM C/n, …) into one contiguous [B, n] matrix, run the
+/// state update as row ops over that matrix, and `store` the rows back.
+/// The gather/scatter copies are O(B·n) with n the *fixed* per-stream
+/// state size — small next to the [B, d] x [d, d] projection GEMMs the
+/// packing sits between — while MHA's KV cache deliberately stays AoS per
+/// stream (variable length, append-only, never reshaped).
+pub struct StateBatch {
+    data: Vec<f32>,
+    n: usize,
+}
+
+impl StateBatch {
+    /// B zeroed rows of length n, to be filled via [`StateBatch::load`].
+    pub fn new(bsz: usize, n: usize) -> StateBatch {
+        StateBatch { data: vec![0.0; bsz * n], n }
+    }
+
+    /// Per-stream component length (row width).
+    pub fn width(&self) -> usize {
+        self.n
+    }
+
+    /// Gather stream b's component into row b.
+    pub fn load(&mut self, b: usize, src: &[f32]) {
+        assert_eq!(src.len(), self.n, "StateBatch::load: component length");
+        self.data[b * self.n..(b + 1) * self.n].copy_from_slice(src);
+    }
+
+    /// Scatter row b back into stream b's component.
+    pub fn store(&self, b: usize, dst: &mut [f32]) {
+        assert_eq!(dst.len(), self.n, "StateBatch::store: component length");
+        dst.copy_from_slice(&self.data[b * self.n..(b + 1) * self.n]);
+    }
+
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.data[b * self.n..(b + 1) * self.n]
+    }
+
+    pub fn row_mut(&mut self, b: usize) -> &mut [f32] {
+        &mut self.data[b * self.n..(b + 1) * self.n]
+    }
 }
 
 /// Construct every operator in the Fig 3.2 line-up at width d.
@@ -243,6 +328,53 @@ mod tests {
         let hyena = hyena::HyenaOp::se(&mut rng, 8);
         let mut st = mha.state();
         hyena.step(&mut st, &[0.0; 8]);
+    }
+
+    #[test]
+    fn step_batch_advances_every_stream() {
+        // Smoke over the overridden batched kernels: positions advance and
+        // shapes hold for every operator with streams at mixed positions.
+        let mut rng = Rng::new(9);
+        let d = 16;
+        let ops = all_operators(&mut rng, d, 2);
+        for op in &ops {
+            let mut s0 = op.state();
+            let mut s1 = op.state();
+            op.prefill(&mut s1, &Tensor::randn(&mut rng, &[3, d], 1.0));
+            let xs = Tensor::randn(&mut rng, &[2, d], 1.0);
+            let y = {
+                let mut refs = vec![&mut s0, &mut s1];
+                op.step_batch(&mut refs, &xs)
+            };
+            assert_eq!(y.shape, vec![2, d], "{}", op.name());
+            assert!(y.data.iter().all(|v| v.is_finite()), "{}", op.name());
+            assert_eq!(s0.pos(), 1, "{}", op.name());
+            assert_eq!(s1.pos(), 4, "{}", op.name());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "step_batch")]
+    fn step_batch_rejects_mismatched_batch() {
+        let mut rng = Rng::new(10);
+        let op = linear_attn::LinearAttnOp::new(&mut rng, 8, 2);
+        let mut s0 = op.state();
+        let xs = Tensor::zeros(&[2, 8]);
+        let mut refs = vec![&mut s0];
+        op.step_batch(&mut refs, &xs);
+    }
+
+    #[test]
+    fn state_batch_roundtrips_rows() {
+        let mut sb = StateBatch::new(3, 4);
+        sb.load(1, &[1.0, 2.0, 3.0, 4.0]);
+        sb.row_mut(2).copy_from_slice(&[9.0; 4]);
+        assert_eq!(sb.width(), 4);
+        assert_eq!(sb.row(0), &[0.0; 4]);
+        assert_eq!(sb.row(1), &[1.0, 2.0, 3.0, 4.0]);
+        let mut out = [0.0f32; 4];
+        sb.store(2, &mut out);
+        assert_eq!(out, [9.0; 4]);
     }
 
     #[test]

@@ -5,8 +5,10 @@
 //! LM whose per-stream state is one `DecodeState` per layer; `sampler`
 //! provides deterministic greedy/top-k token selection; `scheduler` admits
 //! and evicts concurrent streams against a state-byte budget, prefilling
-//! prompts through the blocked batch kernels and decoding one token per
-//! stream per tick.
+//! prompts through the blocked batch kernels and decoding batch-first: each
+//! tick advances ALL active streams through one `HybridLm::step_batch`
+//! call, so every projection runs as a [B, d] GEMM instead of B batch-1
+//! matvecs (DESIGN.md §13).
 //!
 //! The prefill→decode state-handoff contract this module relies on is
 //! documented on [`crate::ops::SeqMixer::step`]: after a blocked prefill,

@@ -14,11 +14,19 @@
 //!
 //! All norm/MLP/positional components are stateless per token, so the
 //! decode-state machinery (`DecodeState` per mixer) is untouched by them.
+//!
+//! Decode is batch-first (DESIGN.md §13): [`HybridLm::step_batch`] advances
+//! B streams through one GEMM-shaped pass per tick — embedding, RMSNorm and
+//! MLP sublayers run row-batched over [B, d] with scratch reused across
+//! layers, and each mixer layer takes the whole batch through
+//! [`SeqMixer::step_batch`]. The single-stream [`HybridLm::step`] is the
+//! B = 1 special case, kept allocation-free via persistent scratch in
+//! [`LmState`] ([`HybridLm::step_into`]).
 
 use crate::ops::{self, DecodeState, SeqMixer};
-use crate::tensor::matmul::{matmul, vecmat};
+use crate::tensor::matmul::{matmul, matmul_into, vecmat};
 use crate::tensor::Tensor;
-use crate::util::math::{rmsnorm_row, silu};
+use crate::util::math::{rmsnorm_into, rmsnorm_row, silu};
 use crate::util::rng::Rng;
 
 /// Byte vocabulary — raw bytes, as in the paper's Evo-style tokenization.
@@ -123,16 +131,37 @@ pub struct HybridLm {
     layers: Vec<Block>,
 }
 
+/// Reusable per-stream workspace for the allocation-free decode hot path
+/// ([`HybridLm::step_into`]): residual row, RMSNorm output, MLP hidden and
+/// MLP output buffers, zero-filled and refilled via `matmul_into` instead
+/// of fresh `Vec`s from `vecmat` every token. Not part of the stream's
+/// logical state — it carries no information across steps — and excluded
+/// from [`LmState::bytes`] (the serving arena budgets decode *state*, not
+/// transient workspace).
+#[derive(Clone, Debug)]
+struct StepScratch {
+    /// [d] residual row.
+    x: Vec<f32>,
+    /// [d] RMSNorm output (mixer / MLP / final-norm input).
+    xn: Vec<f32>,
+    /// [mlp_mult * d] MLP hidden (empty in the bare stack).
+    h: Vec<f32>,
+    /// [d] MLP output (empty in the bare stack).
+    mlp: Vec<f32>,
+}
+
 /// Per-stream model state: one `DecodeState` per layer plus the absolute
 /// position, the unit the serving arena admits and evicts.
 #[derive(Clone, Debug)]
 pub struct LmState {
     pub pos: usize,
     pub layers: Vec<DecodeState>,
+    scratch: StepScratch,
 }
 
 impl LmState {
-    /// Total heap bytes across all layer states.
+    /// Total heap bytes across all layer states (scratch excluded — it is
+    /// workspace, not state).
     pub fn bytes(&self) -> usize {
         self.layers.iter().map(|s| s.bytes()).sum()
     }
@@ -275,9 +304,16 @@ impl HybridLm {
 
     /// Fresh per-stream state at position 0.
     pub fn state(&self) -> LmState {
+        let hidden = if self.cfg.blocks { self.cfg.mlp_mult * self.d } else { 0 };
         LmState {
             pos: 0,
             layers: self.layers.iter().map(|b| b.mixer.state()).collect(),
+            scratch: StepScratch {
+                x: vec![0.0; self.d],
+                xn: vec![0.0; self.d],
+                h: vec![0.0; hidden],
+                mlp: vec![0.0; if self.cfg.blocks { self.d } else { 0 }],
+            },
         }
     }
 
@@ -332,34 +368,147 @@ impl HybridLm {
     }
 
     /// Decode one token: absorb `token`, return next-token logits.
+    ///
+    /// Thin wrapper over [`HybridLm::step_into`] — the returned `Vec` is
+    /// the only per-token allocation the owned-return API forces.
     pub fn step(&self, st: &mut LmState, token: u8) -> Vec<f32> {
-        let mut x = self.embed.row(token as usize).to_vec();
-        if let Some(pr) = self.pos_row(st.pos) {
-            for (xv, pv) in x.iter_mut().zip(pr) {
+        let mut logits = vec![0.0f32; VOCAB];
+        self.step_into(st, token, &mut logits);
+        logits
+    }
+
+    /// Allocation-free decode core: absorb `token`, write next-token
+    /// logits into `logits` (length `VOCAB`). All RMSNorm/MLP/head work
+    /// runs through the persistent [`LmState`] scratch via `matmul_into`
+    /// — same ascending k-order as `vecmat`, so outputs are bit-identical
+    /// to the pre-scratch path.
+    pub fn step_into(&self, st: &mut LmState, token: u8, logits: &mut [f32]) {
+        assert_eq!(logits.len(), VOCAB, "step_into: logits buffer length");
+        let d = self.d;
+        let LmState { pos, layers, scratch } = st;
+        scratch.x.copy_from_slice(self.embed.row(token as usize));
+        if let Some(pr) = self.pos_row(*pos) {
+            for (xv, pv) in scratch.x.iter_mut().zip(pr) {
                 *xv += pv;
             }
         }
-        for (b, ls) in self.layers.iter().zip(st.layers.iter_mut()) {
-            let y = match &b.norm_g {
-                Some(g) => b.mixer.step(ls, &rmsnorm_row(&x, &g.data)),
-                None => b.mixer.step(ls, &x),
+        for (blk, ls) in self.layers.iter().zip(layers.iter_mut()) {
+            let y = match &blk.norm_g {
+                Some(g) => {
+                    rmsnorm_into(&scratch.x, &g.data, &mut scratch.xn);
+                    blk.mixer.step(ls, &scratch.xn)
+                }
+                None => blk.mixer.step(ls, &scratch.x),
             };
-            for (xv, yv) in x.iter_mut().zip(&y) {
+            for (xv, yv) in scratch.x.iter_mut().zip(&y) {
                 *xv += yv;
             }
-            if let Some(m) = &b.mlp {
-                let out = mlp_row(&x, m);
-                for (xv, ov) in x.iter_mut().zip(&out) {
+            if let Some(m) = &blk.mlp {
+                // silu(rmsnorm(x) W1) W2 through the reusable buffers.
+                let hidden = m.w1.cols();
+                rmsnorm_into(&scratch.x, &m.norm_g.data, &mut scratch.xn);
+                scratch.h.fill(0.0);
+                matmul_into(&scratch.xn, &m.w1.data, &mut scratch.h, 1, d, hidden);
+                for v in scratch.h.iter_mut() {
+                    *v = silu(*v);
+                }
+                scratch.mlp.fill(0.0);
+                matmul_into(&scratch.h, &m.w2.data, &mut scratch.mlp, 1, hidden, d);
+                for (xv, ov) in scratch.x.iter_mut().zip(&scratch.mlp) {
                     *xv += ov;
                 }
             }
         }
-        st.pos += 1;
-        let last = match &self.norm_f {
-            Some(g) => rmsnorm_row(&x, &g.data),
-            None => x,
+        *pos += 1;
+        let last: &[f32] = match &self.norm_f {
+            Some(g) => {
+                rmsnorm_into(&scratch.x, &g.data, &mut scratch.xn);
+                &scratch.xn
+            }
+            None => &scratch.x,
         };
-        vecmat(&last, &self.head)
+        logits.fill(0.0);
+        matmul_into(last, &self.head.data, logits, 1, d, VOCAB);
+    }
+
+    /// Decode one token for B streams at once: `states[b]` absorbs
+    /// `tokens[b]`, and row b of the returned [B, VOCAB] tensor is that
+    /// stream's next-token logits.
+    ///
+    /// This is the GEMM-shaped serving hot path (DESIGN.md §13): the
+    /// embedding gather, every RMSNorm, the MLP sublayers and the LM head
+    /// run row-batched over [B, d] (one `matmul_into` per projection into
+    /// scratch reused across layers), and each mixer layer advances the
+    /// whole batch through [`SeqMixer::step_batch`]. Streams may sit at
+    /// different positions and the batch composition may change per call
+    /// (continuous batching); every row is bit-identical to a serial
+    /// [`HybridLm::step`] of that stream.
+    pub fn step_batch(&self, states: &mut [LmState], tokens: &[u8]) -> Tensor {
+        let bsz = states.len();
+        assert_eq!(
+            tokens.len(),
+            bsz,
+            "step_batch: {} states vs {} tokens",
+            bsz,
+            tokens.len()
+        );
+        let d = self.d;
+        let mut x = Tensor::zeros(&[bsz, d]);
+        for (b, st) in states.iter().enumerate() {
+            let row = x.row_mut(b);
+            row.copy_from_slice(self.embed.row(tokens[b] as usize));
+            if let Some(pr) = self.pos_row(st.pos) {
+                for (xv, pv) in row.iter_mut().zip(pr) {
+                    *xv += pv;
+                }
+            }
+        }
+        // Batch-level scratch, reused across all layers of this tick.
+        let mut xn = Tensor::zeros(&[bsz, d]);
+        let hidden = if self.cfg.blocks { self.cfg.mlp_mult * d } else { 0 };
+        let mut h = Tensor::zeros(&[if hidden > 0 { bsz } else { 0 }, hidden]);
+        for (i, blk) in self.layers.iter().enumerate() {
+            let mut ls: Vec<&mut DecodeState> =
+                states.iter_mut().map(|s| &mut s.layers[i]).collect();
+            let y = match &blk.norm_g {
+                Some(g) => {
+                    for b in 0..bsz {
+                        rmsnorm_into(x.row(b), &g.data, xn.row_mut(b));
+                    }
+                    blk.mixer.step_batch(&mut ls, &xn)
+                }
+                None => blk.mixer.step_batch(&mut ls, &x),
+            };
+            x.add_assign(&y);
+            if let Some(m) = &blk.mlp {
+                for b in 0..bsz {
+                    rmsnorm_into(x.row(b), &m.norm_g.data, xn.row_mut(b));
+                }
+                h.data.fill(0.0);
+                matmul_into(&xn.data, &m.w1.data, &mut h.data, bsz, d, hidden);
+                for v in h.data.iter_mut() {
+                    *v = silu(*v);
+                }
+                // Reuse xn as the MLP output buffer (its input was consumed
+                // by the W1 GEMM above).
+                xn.data.fill(0.0);
+                matmul_into(&h.data, &m.w2.data, &mut xn.data, bsz, hidden, d);
+                x.add_assign(&xn);
+            }
+        }
+        for st in states.iter_mut() {
+            st.pos += 1;
+        }
+        let head_in: &Tensor = match &self.norm_f {
+            Some(g) => {
+                for b in 0..bsz {
+                    rmsnorm_into(x.row(b), &g.data, xn.row_mut(b));
+                }
+                &xn
+            }
+            None => &x,
+        };
+        matmul(head_in, &self.head)
     }
 
     /// Full-sequence logits [l, VOCAB] via the batch `forward` of every
@@ -476,6 +625,65 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(diff2 < 1e-3, "logits/prefill divergence {diff2}");
+    }
+
+    fn assert_step_batch_matches_step(model: &HybridLm, prompts: &[&[u8]]) {
+        // Streams at different positions; several batched ticks must match
+        // serial `step` row-for-row.
+        let mut serial: Vec<LmState> = Vec::new();
+        for p in prompts {
+            let mut st = model.state();
+            model.prefill(&mut st, p);
+            serial.push(st);
+        }
+        let mut batched: Vec<LmState> = serial.clone();
+        for toks in [b"ACG", b"TGA", b"CCT", b"GAT"] {
+            let toks: &[u8] = toks;
+            let logits = model.step_batch(&mut batched, toks);
+            assert_eq!(logits.shape, vec![prompts.len(), VOCAB]);
+            for (b, st) in serial.iter_mut().enumerate() {
+                let want = model.step(st, toks[b]);
+                let diff = want
+                    .iter()
+                    .zip(logits.row(b))
+                    .map(|(a, c)| (a - c).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(diff < 1e-5, "stream {b}: step_batch/step divergence {diff}");
+            }
+        }
+        for (a, b) in serial.iter().zip(&batched) {
+            assert_eq!(a.pos, b.pos);
+        }
+    }
+
+    #[test]
+    fn step_batch_matches_step_bare_stack() {
+        let mut rng = Rng::new(12);
+        let model =
+            HybridLm::new(&mut rng, 16, 2, &["SE", "MR", "MHA", "LI"]).unwrap();
+        assert_step_batch_matches_step(&model, &[b"ACGT", b"TTGACAAT", b"CG"]);
+    }
+
+    #[test]
+    fn step_batch_matches_step_block_stack() {
+        let mut rng = Rng::new(13);
+        let cfg = LmConfig::trainable(16, 2, &["LA", "MHA", "SSD"], 64);
+        let model = HybridLm::with_config(&mut rng, &cfg).unwrap();
+        assert_step_batch_matches_step(&model, &[b"ACGTACGT", b"T", b"GATTACA"]);
+    }
+
+    #[test]
+    fn step_into_reuses_caller_buffer() {
+        let mut rng = Rng::new(14);
+        let model = HybridLm::new(&mut rng, 16, 2, &["SE", "LA"]).unwrap();
+        let mut sa = model.state();
+        let mut sb = model.state();
+        model.prefill(&mut sa, b"ACGT");
+        model.prefill(&mut sb, b"ACGT");
+        let mut buf = vec![7.0f32; VOCAB]; // stale garbage must be overwritten
+        model.step_into(&mut sa, b'A', &mut buf);
+        let want = model.step(&mut sb, b'A');
+        assert_eq!(buf, want);
     }
 
     #[test]

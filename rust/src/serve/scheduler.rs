@@ -1,14 +1,22 @@
 //! Multi-sequence batch scheduler: admits concurrent generation streams
-//! into a bounded state arena, decodes them round-robin one token per tick,
-//! and evicts (preempts) streams back to the queue under memory pressure.
+//! into a bounded state arena, decodes them batch-first — every tick is
+//! ONE [`HybridLm::step_batch`] call over all active streams, so each
+//! projection in each layer runs as a [B, d] x [d, ·] GEMM instead of B
+//! batch-1 matvecs — and evicts (preempts) streams back to the queue under
+//! memory pressure.
 //!
 //! Continuous-batching semantics in miniature: admission prefills the
-//! prompt through the blocked kernels, each tick costs one `step` per
-//! active stream, and a preempted stream drops its state and is later
-//! re-prefilled from its full token history (prompt + generated so far) —
-//! the recompute-on-restore policy of production serving engines. Every
-//! stream owns a forked RNG, so generations are independent of scheduling
-//! interleave.
+//! prompt through the blocked kernels, streams join and leave the decode
+//! batch as they are admitted/retired, and a preempted stream drops its
+//! state and is later re-prefilled from its full token history (prompt +
+//! generated so far) — the recompute-on-restore policy of production
+//! serving engines. Every stream owns a forked RNG and batched rows are
+//! bit-identical to serial stepping, so generations are independent of
+//! scheduling interleave and batch composition.
+//!
+//! Internally the active set is split SoA-style: stream metadata
+//! (`Active`) and decode states (`Vec<LmState>`) live in parallel vectors
+//! so each tick hands the model one contiguous `&mut [LmState]`.
 
 use std::collections::VecDeque;
 
@@ -28,7 +36,9 @@ struct Pending {
     rng: Rng,
 }
 
-/// A stream currently holding decode state in the arena.
+/// A stream currently active in the decode batch. Its decode state lives
+/// in the scheduler's parallel `states` vector (same index), so one
+/// contiguous `&mut [LmState]` can be handed to `step_batch` per tick.
 struct Active {
     id: usize,
     prompt_len: usize,
@@ -36,7 +46,6 @@ struct Active {
     generated: usize,
     max_new: usize,
     rng: Rng,
-    state: LmState,
 }
 
 /// A completed generation.
@@ -53,12 +62,34 @@ pub struct FinishedStream {
 pub struct ServeStats {
     /// Highest number of simultaneously active streams observed.
     pub max_concurrent: usize,
-    /// Total decode steps across all streams.
+    /// Total decode steps (tokens advanced) across all streams.
     pub decode_steps: usize,
     /// Total tokens pushed through blocked prefill (admissions + restores).
     pub prefill_tokens: usize,
     /// Streams evicted under state-memory pressure.
     pub preemptions: usize,
+    /// Batched decode ticks — one `HybridLm::step_batch` call each.
+    pub decode_ticks: usize,
+    /// Wall-clock seconds spent in batched decode (stepping + sampling).
+    pub decode_secs: f64,
+}
+
+impl ServeStats {
+    /// Decoded tokens per second of batched decode time (0 before any
+    /// tick has run).
+    pub fn decode_tok_per_s(&self) -> f64 {
+        self.decode_steps as f64 / self.decode_secs.max(1e-9)
+    }
+
+    /// Mean number of streams advanced per decode tick — the GEMM batch
+    /// occupancy of the serving hot path (0 before any tick has run).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.decode_ticks == 0 {
+            0.0
+        } else {
+            self.decode_steps as f64 / self.decode_ticks as f64
+        }
+    }
 }
 
 /// The scheduler itself. `budget_bytes` bounds the summed `LmState` heap
@@ -72,7 +103,10 @@ pub struct BatchScheduler<'m> {
     next_id: usize,
     seed: u64,
     queue: VecDeque<Pending>,
+    /// Active-stream metadata; `states[i]` is the decode state of
+    /// `active[i]` (parallel vectors — see the module docs).
     active: Vec<Active>,
+    states: Vec<LmState>,
     finished: Vec<FinishedStream>,
     /// Set on preemption, cleared on retirement: blocks non-forced
     /// admission so an evicted stream waits for capacity instead of
@@ -99,6 +133,7 @@ impl<'m> BatchScheduler<'m> {
             seed,
             queue: VecDeque::new(),
             active: Vec::new(),
+            states: Vec::new(),
             finished: Vec::new(),
             admit_blocked: false,
             stats: ServeStats::default(),
@@ -124,7 +159,7 @@ impl<'m> BatchScheduler<'m> {
     }
 
     fn state_bytes(&self) -> usize {
-        self.active.iter().map(|a| a.state.bytes()).sum()
+        self.states.iter().map(|s| s.bytes()).sum()
     }
 
     /// Admit the stream at the head of the queue: prefill its full token
@@ -156,7 +191,6 @@ impl<'m> BatchScheduler<'m> {
             generated: p.generated,
             max_new: p.max_new,
             rng: p.rng,
-            state,
         };
         if a.generated < a.max_new {
             let next = self.sampler.sample(&logits, &mut a.rng) as u8;
@@ -164,6 +198,7 @@ impl<'m> BatchScheduler<'m> {
             a.generated += 1;
         }
         self.active.push(a);
+        self.states.push(state);
         self.stats.max_concurrent = self.stats.max_concurrent.max(self.active.len());
         true
     }
@@ -172,6 +207,7 @@ impl<'m> BatchScheduler<'m> {
     /// its decode state (it will be re-prefilled from its token history).
     fn preempt_newest(&mut self) {
         if let Some(a) = self.active.pop() {
+            self.states.pop();
             self.stats.preemptions += 1;
             self.admit_blocked = true;
             self.queue.push_back(Pending {
@@ -185,25 +221,14 @@ impl<'m> BatchScheduler<'m> {
         }
     }
 
-    /// One round-robin decode tick: each active stream advances one token;
-    /// finished streams retire; over-budget arenas evict newest-first.
-    fn tick(&mut self) {
-        for a in self.active.iter_mut() {
-            if a.generated >= a.max_new {
-                continue;
-            }
-            let last = *a.tokens.last().unwrap();
-            let logits = self.model.step(&mut a.state, last);
-            self.stats.decode_steps += 1;
-            let next = self.sampler.sample(&logits, &mut a.rng) as u8;
-            a.tokens.push(next);
-            a.generated += 1;
-        }
-        // Retire completed streams in admission order.
+    /// Retire completed streams in admission order, keeping the metadata
+    /// and state vectors in lockstep.
+    fn retire_finished(&mut self) {
         let mut i = 0;
         while i < self.active.len() {
             if self.active[i].generated >= self.active[i].max_new {
                 let a = self.active.remove(i);
+                self.states.remove(i);
                 self.admit_blocked = false;
                 self.finished.push(FinishedStream {
                     id: a.id,
@@ -218,20 +243,57 @@ impl<'m> BatchScheduler<'m> {
                 i += 1;
             }
         }
-        while self.state_bytes() > self.budget_bytes && self.active.len() > 1 {
-            self.preempt_newest();
+    }
+
+    /// One batched decode tick: ALL active streams advance one token
+    /// through a single [`HybridLm::step_batch`] call (the GEMM-shaped
+    /// hot path), then each stream samples from its logits row with its
+    /// own RNG. Callers guarantee every active stream still wants tokens
+    /// (finished streams are retired before ticking).
+    fn tick(&mut self) {
+        let bsz = self.active.len();
+        if bsz == 0 {
+            return;
         }
+        debug_assert!(self.active.iter().all(|a| a.generated < a.max_new));
+        let t0 = std::time::Instant::now();
+        let tokens: Vec<u8> =
+            self.active.iter().map(|a| *a.tokens.last().unwrap()).collect();
+        let logits = self.model.step_batch(&mut self.states, &tokens);
+        for (b, a) in self.active.iter_mut().enumerate() {
+            let next = self.sampler.sample(logits.row(b), &mut a.rng) as u8;
+            a.tokens.push(next);
+            a.generated += 1;
+        }
+        self.stats.decode_secs += t0.elapsed().as_secs_f64();
+        self.stats.decode_steps += bsz;
+        self.stats.decode_ticks += 1;
     }
 
     /// Drive everything to completion; returns finished streams sorted by
-    /// id. Deterministic for a given (model, sampler, seed, submissions).
+    /// id. Deterministic for a given (model, sampler, seed, submissions):
+    /// batched rows are bit-identical to serial stepping, so outputs do
+    /// not depend on batch composition. Absent preemption, they do not
+    /// depend on `max_active` either; under budget pressure, different
+    /// `max_active` values preempt at different points, and a restored
+    /// stream replays through blocked prefill — bit-exact for the
+    /// scan/MHA families, within kernel rounding for hyena (DESIGN.md §6)
+    /// — so near-tie sampling could in principle diverge there.
     pub fn run(&mut self) -> Vec<FinishedStream> {
         while !self.queue.is_empty() || !self.active.is_empty() {
             if self.active.is_empty() {
                 self.admit_one(true);
             }
             while self.admit_one(false) {}
+            // Admissions with max_new = 0 are already complete; retire
+            // them so the tick's batch is exactly the streams that still
+            // want tokens.
+            self.retire_finished();
             self.tick();
+            self.retire_finished();
+            while self.state_bytes() > self.budget_bytes && self.active.len() > 1 {
+                self.preempt_newest();
+            }
         }
         let mut out = std::mem::take(&mut self.finished);
         out.sort_by_key(|f| f.id);
@@ -277,6 +339,51 @@ mod tests {
             assert_eq!(a.output, b.output);
             assert_eq!(a.output.len(), 12);
         }
+    }
+
+    #[test]
+    fn batched_join_leave_matches_serial() {
+        // Mixed prompt lengths AND mixed max_new: streams join the decode
+        // batch as capacity frees up and leave mid-generation at different
+        // ticks. The batched run must reproduce the strictly serial
+        // (max_active = 1) outputs token-for-token, and its stats must
+        // show genuine multi-stream GEMM occupancy.
+        let mut rng = Rng::new(9);
+        let m = model(&mut rng);
+        let prompts: Vec<(Vec<u8>, usize)> = vec![
+            (b"A".to_vec(), 20),
+            (b"ACGTACGTACGTACGT".to_vec(), 3),
+            (b"TTGACA".to_vec(), 11),
+            (b"CCGG".to_vec(), 7),
+        ];
+        let run = |max_active: usize| {
+            let mut s = BatchScheduler::new(
+                &m,
+                Sampler::TopK { k: 4, temperature: 0.8 },
+                max_active,
+                usize::MAX,
+                13,
+            );
+            for (p, n) in &prompts {
+                s.submit(p.clone(), *n);
+            }
+            (s.run(), s.stats)
+        };
+        let (serial, serial_stats) = run(1);
+        let (batched, batched_stats) = run(3);
+        assert_eq!(serial.len(), 4);
+        for ((a, b), (_, n)) in serial.iter().zip(&batched).zip(&prompts) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output, "stream {}", a.id);
+            assert_eq!(a.output.len(), *n);
+        }
+        // Same total work, fewer (bigger) ticks.
+        assert_eq!(batched_stats.decode_steps, serial_stats.decode_steps);
+        assert!(batched_stats.decode_ticks < serial_stats.decode_ticks);
+        assert!((serial_stats.mean_batch_occupancy() - 1.0).abs() < 1e-9);
+        assert!(batched_stats.mean_batch_occupancy() > 1.0);
+        assert!(batched_stats.decode_tok_per_s() > 0.0);
+        assert_eq!(batched_stats.max_concurrent, 3);
     }
 
     #[test]

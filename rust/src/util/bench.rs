@@ -18,6 +18,10 @@ pub struct BenchResult {
     /// Seconds per iteration.
     pub secs: Summary,
     pub iters: usize,
+    /// Decode batch size for batched-decode records; emitted as a `batch`
+    /// field in the sh2-bench-v1 record when set (the gate keys records by
+    /// name only, so consumers that predate the field ignore it).
+    pub batch: Option<usize>,
 }
 
 impl BenchResult {
@@ -27,13 +31,17 @@ impl BenchResult {
 
     /// One `sh2-bench-v1` record: timings in integral nanoseconds.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(&self.name)),
             ("iters", Json::num(self.iters as f64)),
             ("mean_ns", Json::num((self.secs.mean * 1e9).round())),
             ("p50_ns", Json::num((self.secs.p50 * 1e9).round())),
             ("p90_ns", Json::num((self.secs.p90 * 1e9).round())),
-        ])
+        ];
+        if let Some(b) = self.batch {
+            fields.push(("batch", Json::num(b as f64)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -153,7 +161,7 @@ impl Bencher {
             }
             samples.push(t.elapsed().as_secs_f64() / iters as f64);
         }
-        BenchResult { name: name.to_string(), secs: Summary::of(&samples), iters }
+        BenchResult { name: name.to_string(), secs: Summary::of(&samples), iters, batch: None }
     }
 }
 
@@ -270,17 +278,24 @@ mod tests {
         let mut log = BenchLog::new();
         log.push(&r);
         log.push_as("unit/x/renamed", &r);
-        assert_eq!(log.len(), 2);
+        let mut rb = r.clone();
+        rb.name = "unit/x/B4".to_string();
+        rb.batch = Some(4);
+        log.push(&rb);
+        assert_eq!(log.len(), 3);
         let j = Json::parse(&log.to_json().to_string()).expect("self-parse");
         assert_eq!(j.get("schema").and_then(Json::as_str), Some("sh2-bench-v1"));
         assert!(j.get("git_sha").and_then(Json::as_str).is_some());
         let recs = j.get("records").and_then(Json::as_array).unwrap();
-        assert_eq!(recs.len(), 2);
+        assert_eq!(recs.len(), 3);
         assert_eq!(recs[0].get("name").and_then(Json::as_str), Some("unit/x"));
         assert_eq!(
             recs[1].get("name").and_then(Json::as_str),
             Some("unit/x/renamed")
         );
+        // Records without a batch size omit the field; batched ones emit it.
+        assert!(recs[0].get("batch").is_none());
+        assert_eq!(recs[2].get("batch").and_then(Json::as_usize), Some(4));
         for r in recs {
             assert!(r.get("p50_ns").and_then(Json::as_f64).unwrap() > 0.0);
             assert!(

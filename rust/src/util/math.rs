@@ -44,10 +44,22 @@ pub const RMS_EPS: f32 = 1e-6;
 
 /// RMSNorm of one row: y_j = g_j * x_j / sqrt(mean(x^2) + eps).
 pub fn rmsnorm_row(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    rmsnorm_into(x, g, &mut out);
+    out
+}
+
+/// Allocation-free [`rmsnorm_row`] into a caller-owned buffer — the decode
+/// hot path (`serve::model` scratch). Identical arithmetic, so the two
+/// cannot drift apart.
+pub fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), out.len());
     let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
     let inv = 1.0 / (ms + RMS_EPS).sqrt();
-    x.iter().zip(g).map(|(&xv, &gv)| gv * xv * inv).collect()
+    for ((o, &xv), &gv) in out.iter_mut().zip(x).zip(g) {
+        *o = gv * xv * inv;
+    }
 }
 
 /// x * sigmoid(x) — the MLP activation.
