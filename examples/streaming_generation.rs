@@ -1,15 +1,20 @@
-//! Streaming generation demo (DESIGN.md §Serving, §13): build a byte-level
-//! multi-hybrid LM, prefill a prompt through the blocked kernels, then
-//! decode token by token through the per-operator state API; drive the
-//! batch-first `HybridLm::step_batch` API directly over several prompts at
-//! once (every projection a [B, d] GEMM); and show the same thing running
-//! as a batch of concurrent streams under the scheduler.
+//! Streaming generation demo (DESIGN.md §Serving, §13, §14): build a
+//! byte-level multi-hybrid LM, prefill a prompt through the blocked
+//! kernels, then decode token by token through the per-operator state API;
+//! drive the batch-first `HybridLm::step_batch` API directly over several
+//! prompts at once (every projection a [B, d] GEMM); and run the
+//! continuous-batching scheduler as an *event loop* — tokens are consumed
+//! from `StreamEvent::Token` as they are produced (true streaming output),
+//! a long prompt prefills chunk by chunk while the other streams keep
+//! decoding, and one request is cancelled mid-generation via its handle.
 //!
 //! ```bash
 //! cargo run --release --example streaming_generation
 //! ```
 
-use sh2::serve::{BatchScheduler, HybridLm, LmState, Sampler};
+use sh2::serve::{
+    BatchScheduler, HybridLm, LmState, Sampler, ServeRequest, StreamEvent, TickConfig,
+};
 use sh2::util::cli::Args;
 use sh2::util::rng::Rng;
 
@@ -99,32 +104,85 @@ fn main() {
         bprompts.len()
     );
 
-    // --- the same model serving four concurrent streams ---
-    let mut sched = BatchScheduler::new(&model, sampler, 4, 1 << 22, seed);
-    for p in ["ACGTACGTACGT", "TTTTGGGGCCCC", "GATTACAGATTA", "CGCGCGATATAT"] {
-        sched.submit(p.as_bytes().to_vec(), max_new);
+    // --- the same model as an event-driven continuous-batching server ---
+    // Chunked, token-budgeted prefill: the 96-byte prompt is absorbed in
+    // 16-token chunks while the short streams keep decoding (their Token
+    // events interleave with its PrefillProgress events), tokens stream
+    // out the moment they are sampled, and one stream is cancelled
+    // mid-generation through its RequestHandle.
+    let cfg = TickConfig { prefill_chunk: 16, tick_budget: 24 };
+    let mut sched =
+        BatchScheduler::with_config(&model, sampler, 4, 1 << 22, seed, cfg);
+    let long_prompt = "ACGTGGCC".repeat(12);
+    let mut handles = Vec::new();
+    for p in ["ACGTACGTACGT", "TTTTGGGGCCCC", long_prompt.as_str(), "CGCGCGATATAT"] {
+        handles.push(sched.submit(ServeRequest::new(p.as_bytes().to_vec(), max_new)));
     }
+    let victim = &handles[3];
+    println!(
+        "\nevent-driven serving ({} streams, prefill_chunk={}, tick_budget={}):",
+        handles.len(),
+        cfg.prefill_chunk,
+        cfg.tick_budget
+    );
     let t2 = std::time::Instant::now();
-    let done = sched.run();
-    let batch = t2.elapsed();
-    println!("\nbatched serving ({} streams):", done.len());
-    for f in &done {
-        println!(
-            "  #{} {} -> {}",
-            f.id,
-            String::from_utf8_lossy(&f.prompt),
-            String::from_utf8_lossy(&f.output)
-        );
+    let mut tick_no = 0usize;
+    // Raw bytes per stream (the model samples from a 256-byte vocab, so
+    // lossy-UTF-8 rendering happens only at print time and `len()` counts
+    // tokens, not encoded bytes).
+    let mut outs: Vec<Vec<u8>> = vec![Vec::new(); handles.len()];
+    while !sched.is_idle() {
+        tick_no += 1;
+        if tick_no == 8 {
+            // Cancellation is a handle-side flag; the scheduler observes
+            // it on its next tick, wherever the stream currently is.
+            victim.cancel();
+        }
+        for event in sched.tick() {
+            match event {
+                StreamEvent::Token { id, token, .. } => {
+                    // True streaming: the byte is available here, before
+                    // the stream (or the batch) has finished.
+                    outs[id].push(token);
+                }
+                StreamEvent::PrefillProgress { id, done, total } => {
+                    println!("  [tick {tick_no}] #{id} prefill {done}/{total}")
+                }
+                StreamEvent::Admitted { id, .. } => {
+                    println!("  [tick {tick_no}] #{id} admitted")
+                }
+                StreamEvent::Finished { id, .. } => println!(
+                    "  [tick {tick_no}] #{id} finished: {}",
+                    String::from_utf8_lossy(&outs[id])
+                ),
+                StreamEvent::Cancelled { id } => println!(
+                    "  [tick {tick_no}] #{id} cancelled after {} tokens: {}",
+                    outs[id].len(),
+                    String::from_utf8_lossy(&outs[id])
+                ),
+                StreamEvent::Preempted { id } => {
+                    println!("  [tick {tick_no}] #{id} preempted")
+                }
+            }
+        }
     }
+    let batch = t2.elapsed();
+    let done = sched.take_finished();
     let s = sched.stats;
     println!(
         "decoded {} tok in {:.2?} ({:.0} tok/s, mean batch occupancy {:.2}), \
-         peak concurrency {}, preemptions {}",
+         peak concurrency {}, cancelled {}, TTFT p50 {:.2}ms",
         s.decode_steps,
         batch,
         s.decode_steps as f64 / batch.as_secs_f64().max(1e-9),
         s.mean_batch_occupancy(),
         s.max_concurrent,
-        s.preemptions
+        s.cancelled,
+        {
+            let mut ttft: Vec<f64> =
+                done.iter().filter_map(|f| f.ttft_secs).collect();
+            ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            1e3 * ttft.get(ttft.len() / 2).copied().unwrap_or(0.0)
+        }
     );
 }

@@ -1,0 +1,115 @@
+//! Serve latency under an arrival mix (DESIGN.md §14): short interactive
+//! prompts sharing the scheduler with long prompts, batch-synchronous
+//! (whole-prompt prefill at admission) vs continuous batching (chunked,
+//! token-budgeted prefill). Reported per config:
+//!
+//! * `serve/<cfg>/ttft` — time-to-first-token across all streams of the
+//!   mix (the p50/p90 spread is the point: chunked prefill keeps short
+//!   prompts' TTFT low even while a long prompt is being absorbed);
+//! * `serve/<cfg>/tok` — batched-decode seconds per generated token.
+//!
+//! The claim shape to reproduce: `chunked` p90 TTFT well below
+//! `unchunked` p90 TTFT (short streams no longer queue behind the long
+//! prompt's full prefill), at a comparable per-token decode cost.
+//!
+//! Quick mode (`BENCH_QUICK=1`) is the CI smoke configuration;
+//! `SH2_BENCH_JSON=path` writes `sh2-bench-v1` records for the regression
+//! gate (seeded baseline: `bench/baseline/BENCH_serve.json`).
+
+use sh2::serve::{BatchScheduler, HybridLm, Sampler, ServeRequest, TickConfig};
+use sh2::util::bench::{fmt_secs, quick_requested, BenchLog, BenchResult, Table};
+use sh2::util::rng::Rng;
+use sh2::util::stats::Summary;
+
+fn main() {
+    let quick = quick_requested();
+    let mut rng = Rng::new(0);
+    let d = 64; // paper: 4096 (H100); scaled for the CPU testbed
+    let heads = 4;
+    let model = HybridLm::new(&mut rng, d, heads, &["SE", "MR", "MHA", "LI"])
+        .expect("layout");
+    // Arrival mix: mostly short interactive prompts plus a couple of long
+    // ones — the head-of-line-blocking regime chunked prefill exists for.
+    let short_len = 32;
+    let long_len = if quick { 512 } else { 2048 };
+    let max_new = 24;
+    let reps = if quick { 3 } else { 5 };
+    let chunk = 64;
+    let configs: [(&str, TickConfig); 2] = [
+        ("unchunked", TickConfig::default()),
+        ("chunked", TickConfig { prefill_chunk: chunk, tick_budget: chunk + 16 }),
+    ];
+
+    let mut log = BenchLog::new();
+    let mut t = Table::new(
+        &format!(
+            "serve latency, arrival mix (d={d}, 6x{short_len}+2x{long_len} \
+             prompt tokens, {max_new} new each, {reps} reps)"
+        ),
+        &["config", "ttft p50", "ttft p90", "per-token decode", "ticks"],
+    );
+    for (name, cfg) in configs {
+        let mut ttft_samples: Vec<f64> = Vec::new();
+        let mut tok_samples: Vec<f64> = Vec::new();
+        let mut ticks = 0usize;
+        for rep in 0..reps {
+            let mut sched = BatchScheduler::with_config(
+                &model,
+                Sampler::Greedy,
+                8,
+                usize::MAX,
+                rep as u64,
+                cfg,
+            );
+            // Long prompts arrive FIRST: batch-synchronous scheduling makes
+            // every short stream wait out their whole prefill.
+            let mut gen = Rng::new(100 + rep as u64);
+            let mut prompt =
+                |len: usize| -> Vec<u8> { (0..len).map(|_| b"ACGT"[gen.below(4)]).collect() };
+            for _ in 0..2 {
+                sched.submit(ServeRequest::new(prompt(long_len), max_new));
+            }
+            for _ in 0..6 {
+                sched.submit(ServeRequest::new(prompt(short_len), max_new));
+            }
+            while !sched.is_idle() {
+                sched.tick();
+                ticks += 1;
+            }
+            let done = sched.take_finished();
+            ttft_samples.extend(done.iter().filter_map(|f| f.ttft_secs));
+            let s = sched.stats;
+            tok_samples.push(s.decode_secs / (s.decode_steps as f64).max(1.0));
+        }
+        let ttft = Summary::of(&ttft_samples);
+        let tok = Summary::of(&tok_samples);
+        t.row(vec![
+            name.to_string(),
+            fmt_secs(ttft.p50),
+            fmt_secs(ttft.p90),
+            fmt_secs(tok.p50),
+            format!("{}", ticks / reps),
+        ]);
+        log.push(&BenchResult {
+            name: format!("serve/{name}/ttft"),
+            secs: ttft,
+            iters: reps,
+            batch: None,
+        });
+        log.push(&BenchResult {
+            name: format!("serve/{name}/tok"),
+            secs: tok,
+            iters: reps,
+            batch: None,
+        });
+    }
+    t.print();
+    println!(
+        "claim shape: chunked p90 TTFT should sit well below unchunked p90 \
+         (short prompts stop queueing behind the {long_len}-token prefills) \
+         at comparable per-token decode cost."
+    );
+    if let Some(path) = log.write_env() {
+        println!("bench records ({}) -> {path}", log.len());
+    }
+}

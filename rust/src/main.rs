@@ -35,7 +35,9 @@ use sh2::costmodel::{iteration_time, ArchSpec, ClusterConfig, Efficiency};
 #[cfg(feature = "pjrt")]
 use sh2::runtime::Engine;
 use sh2::runtime::ModelMeta;
-use sh2::serve::{BatchScheduler, HybridLm, LmConfig, Sampler};
+use sh2::serve::{
+    BatchScheduler, HybridLm, LmConfig, Sampler, ServeRequest, StreamEvent, TickConfig,
+};
 use sh2::train::checkpoint::{load_lm, save_lm};
 use sh2::train::tasks::TaskCase;
 use sh2::train::{HarnessCfg, Task, Trainer};
@@ -88,11 +90,14 @@ const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|tu
             --top-k K --temp T --seed S --load CKPT (sh2-lm-ckpt-v1)
             --plan-cache PATH (default: plan_cache.json, loaded if present)
   serve:  --streams N --prompt-len L --max-new N --max-active A --budget-kb KB
+          --prefill-chunk C --tick-budget T (0 = unlimited: whole-prompt
+          prefill at admission) --events (print the lifecycle event stream)
           --width D --heads H --layout ... --top-k K --temp T --seed S
           --load CKPT --plan-cache PATH
-          (decodes batch-first: one step_batch per tick over all active
-          streams; prints an sh2-serve-v1 JSON summary line with tokens/s,
-          mean batch occupancy, decode_steps, preemptions)
+          (continuous batching: each tick decodes all active streams in one
+          step_batch call and spends the remaining token budget on prefill
+          chunks; prints an sh2-serve-v1 JSON summary line with tokens/s,
+          mean batch occupancy, TTFT p50/p90, prefill/restore token split)
   tune:   --out PATH (default: plan_cache.json) --widths D1,D2 --quick
   bench-gate: --current PATH --baseline PATH --tolerance R (default: 2.0)
   cost-model: --scale 7b|40b
@@ -181,6 +186,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use sh2::util::json::Json;
+    use sh2::util::stats::Summary;
 
     load_plan_cache(args);
     let seed = args.get_usize("seed", 0) as u64;
@@ -188,20 +194,64 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model = build_lm(args, &mut rng)?;
     let n_streams = args.get_usize("streams", 8);
     let prompt_len = args.get_usize("prompt-len", 64);
-    model.warm_plans(&[prompt_len.max(1)]);
     let max_new = args.get_usize("max-new", 32);
     let max_active = args.get_usize("max-active", 4);
     let budget = args.get_usize("budget-kb", 4096) * 1024;
+    // 0 = unlimited: whole-prompt chunks / unbounded tick budget, i.e. the
+    // batch-synchronous behavior. Finite values turn on continuous
+    // batching proper (DESIGN.md §14).
+    let unlimited = |v: usize| if v == 0 { usize::MAX } else { v };
+    let cfg = TickConfig {
+        prefill_chunk: unlimited(args.get_usize("prefill-chunk", 0)),
+        tick_budget: unlimited(args.get_usize("tick-budget", 0)),
+    };
+    let show_events = args.has_flag("events");
     let sampler = sampler_from(args);
+    model.warm_plans(&[prompt_len.max(1), cfg.prefill_chunk.min(prompt_len.max(1))]);
 
-    let mut sched = BatchScheduler::new(&model, sampler, max_active, budget, seed);
+    let mut sched =
+        BatchScheduler::with_config(&model, sampler, max_active, budget, seed, cfg);
     let mut gen = GenomeGenerator::new(seed ^ 0x5EED, GenomeConfig::default());
     for _ in 0..n_streams {
-        sched.submit(gen.generate(prompt_len), max_new);
+        sched.submit(ServeRequest::new(gen.generate(prompt_len), max_new));
     }
     let t0 = std::time::Instant::now();
-    let done = sched.run();
+    let mut n_ticks = 0usize;
+    while !sched.is_idle() {
+        let events = sched.tick();
+        n_ticks += 1;
+        if show_events {
+            for e in &events {
+                match e {
+                    StreamEvent::Admitted { id, restored } => println!(
+                        "[tick {n_ticks}] #{id} admitted{}",
+                        if *restored { " (restored)" } else { "" }
+                    ),
+                    StreamEvent::PrefillProgress { id, done, total } => {
+                        println!("[tick {n_ticks}] #{id} prefill {done}/{total}")
+                    }
+                    StreamEvent::Token { id, token, index } => println!(
+                        "[tick {n_ticks}] #{id} token[{index}] = {:?}",
+                        *token as char
+                    ),
+                    StreamEvent::Finished { id, .. } => {
+                        println!("[tick {n_ticks}] #{id} finished")
+                    }
+                    StreamEvent::Preempted { id } => {
+                        println!("[tick {n_ticks}] #{id} preempted")
+                    }
+                    StreamEvent::Cancelled { id } => {
+                        println!("[tick {n_ticks}] #{id} cancelled")
+                    }
+                }
+            }
+        }
+    }
+    let mut done = sched.take_finished();
+    done.sort_by_key(|f| f.id);
     let secs = t0.elapsed().as_secs_f64();
+    let ttft: Vec<f64> = done.iter().filter_map(|f| f.ttft_secs).collect();
+    let ttft_summary = if ttft.is_empty() { None } else { Some(Summary::of(&ttft)) };
 
     let mut t = Table::new(
         &format!(
@@ -225,28 +275,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let s = sched.stats;
     println!(
         "decoded {} tokens in {:.2}s ({:.1} tok/s overall, {:.1} tok/s in \
-         batched decode) | mean batch occupancy {:.2} | prefilled {} tokens | \
-         peak concurrency {} | preemptions {}",
+         batched decode) | mean batch occupancy {:.2} | prefilled {} tokens \
+         (+{} restored) | peak concurrency {} | preemptions {} | TTFT p50 {} \
+         p90 {}",
         s.decode_steps,
         secs,
         s.decode_steps as f64 / secs.max(1e-9),
         s.decode_tok_per_s(),
         s.mean_batch_occupancy(),
         s.prefill_tokens,
+        s.restored_prefill_tokens,
         s.max_concurrent,
-        s.preemptions
+        s.preemptions,
+        ttft_summary
+            .as_ref()
+            .map_or("n/a".to_string(), |t| format!("{:.1}ms", t.p50 * 1e3)),
+        ttft_summary
+            .as_ref()
+            .map_or("n/a".to_string(), |t| format!("{:.1}ms", t.p90 * 1e3)),
     );
     // Machine-readable summary (one line) for harnesses and CI scrapers.
     let summary = Json::obj(vec![
         ("schema", Json::str("sh2-serve-v1")),
         ("streams", Json::num(n_streams as f64)),
         ("max_active", Json::num(max_active as f64)),
+        ("prefill_chunk", Json::num(cfg.prefill_chunk.min(prompt_len) as f64)),
+        ("ticks", Json::num(n_ticks as f64)),
         ("decode_steps", Json::num(s.decode_steps as f64)),
         ("decode_ticks", Json::num(s.decode_ticks as f64)),
         ("decode_tok_per_s", Json::num(s.decode_tok_per_s())),
         ("mean_batch_occupancy", Json::num(s.mean_batch_occupancy())),
         ("prefill_tokens", Json::num(s.prefill_tokens as f64)),
+        ("restored_prefill_tokens", Json::num(s.restored_prefill_tokens as f64)),
         ("preemptions", Json::num(s.preemptions as f64)),
+        ("ttft_p50_ms", Json::num(ttft_summary.as_ref().map_or(0.0, |t| t.p50 * 1e3))),
+        ("ttft_p90_ms", Json::num(ttft_summary.as_ref().map_or(0.0, |t| t.p90 * 1e3))),
         ("elapsed_s", Json::num(secs)),
     ]);
     println!("{summary}");

@@ -155,6 +155,12 @@ impl SeqMixer for DeltaNetOp {
         })
     }
 
+    /// The fast-weight matrices are allocated in full up front.
+    fn state_bytes_at(&self, _pos: usize) -> usize {
+        let dh = self.d / self.n_heads;
+        self.n_heads * dh * dh * std::mem::size_of::<f32>()
+    }
+
     fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
         let DecodeState::DeltaNet(st) = state else {
             panic!("DeltaNet step: wrong decode state variant")

@@ -301,6 +301,20 @@ impl SeqMixer for HyenaOp {
         ]
     }
 
+    /// FIR tail windows fill up to their capacity (`filter_len - 1` rows)
+    /// and then stay flat; the LI modal IIR is allocated in full up front.
+    fn state_bytes_at(&self, pos: usize) -> usize {
+        let feat_cap = FEATURIZER_LEN - 1;
+        let (inner_cap, modal) = match self.kind {
+            HyenaKind::Se | HyenaKind::Mr => {
+                (self.inner.filter_len().saturating_sub(1), 0)
+            }
+            HyenaKind::Li => (0, self.d * self.li_order()),
+        };
+        (3 * pos.min(feat_cap) * self.d + pos.min(inner_cap) * self.d + modal)
+            * std::mem::size_of::<f32>()
+    }
+
     fn state(&self) -> DecodeState {
         let inner_len = match self.kind {
             HyenaKind::Se | HyenaKind::Mr => self.inner.filter_len(),

@@ -158,6 +158,12 @@ impl SeqMixer for MhaOp {
         DecodeState::Mha(MhaState { pos: 0, k: Vec::new(), v: Vec::new() })
     }
 
+    /// KV cache: one post-projection key row and value row per absorbed
+    /// token, so the footprint grows linearly with position.
+    fn state_bytes_at(&self, pos: usize) -> usize {
+        2 * pos * self.d * std::mem::size_of::<f32>()
+    }
+
     fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
         let DecodeState::Mha(st) = state else {
             panic!("MHA step: wrong decode state variant")

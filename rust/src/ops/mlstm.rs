@@ -156,6 +156,12 @@ impl SeqMixer for MlstmOp {
         })
     }
 
+    /// (C, n) are allocated in full up front and never grow.
+    fn state_bytes_at(&self, _pos: usize) -> usize {
+        let dh = self.d / self.n_heads;
+        (self.n_heads * dh * dh + self.n_heads * dh) * std::mem::size_of::<f32>()
+    }
+
     fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
         let DecodeState::Mlstm(st) = state else {
             panic!("mLSTM step: wrong decode state variant")

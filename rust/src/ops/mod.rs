@@ -82,6 +82,27 @@ pub trait SeqMixer {
         Vec::new()
     }
 
+    /// Projected heap bytes of this operator's decode state after absorbing
+    /// `pos` tokens — the serving arena's *admission-time* capacity
+    /// estimate: the scheduler charges a stream's projected footprint
+    /// before spending any prefill work on it, so a burst of arrivals
+    /// cannot flood the arena and thrash through admit→prefill→evict
+    /// cycles. Exact by contract: equals `state().bytes()` after `pos`
+    /// rows have been prefilled/stepped (enforced for every operator by
+    /// `tests/integration_decode.rs`).
+    ///
+    /// The default constructs a fresh state and reports its bytes —
+    /// correct for any operator whose state is fully allocated up front,
+    /// but it allocates, and the admission gate calls this per active
+    /// stream per tick. Every in-tree operator therefore overrides it
+    /// with an allocation-free closed form: constants for the fixed-size
+    /// scan family (linear attn / SSD / DeltaNet / mLSTM), linear growth
+    /// for MHA's KV cache, saturating growth for hyena's FIR tails.
+    fn state_bytes_at(&self, pos: usize) -> usize {
+        let _ = pos;
+        self.state().bytes()
+    }
+
     /// Named learnable parameters of this operator in a stable, documented
     /// order. The names are the contract shared by the training subsystem
     /// (`train::model` builds its tape forward from them), the checkpoint

@@ -165,6 +165,12 @@ impl SeqMixer for SsdOp {
         })
     }
 
+    /// The recurrent matrices h are allocated in full up front.
+    fn state_bytes_at(&self, _pos: usize) -> usize {
+        let dh = self.d / self.n_heads;
+        self.n_heads * STATE_DIM * dh * std::mem::size_of::<f32>()
+    }
+
     fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
         let DecodeState::Ssd(st) = state else {
             panic!("SSD step: wrong decode state variant")

@@ -1,32 +1,46 @@
-//! Streaming inference engine (DESIGN.md §Serving): multi-sequence batch
-//! scheduling over the per-operator decode states of `crate::ops`.
+//! Streaming inference engine (DESIGN.md §Serving, §14): continuous
+//! batching over the per-operator decode states of `crate::ops`.
 //!
 //! Layering: `model` stacks `SeqMixer` layers into a byte-level multi-hybrid
 //! LM whose per-stream state is one `DecodeState` per layer; `sampler`
-//! provides deterministic greedy/top-k token selection; `scheduler` admits
-//! and evicts concurrent streams against a state-byte budget, prefilling
-//! prompts through the blocked batch kernels and decoding batch-first: each
-//! tick advances ALL active streams through one `HybridLm::step_batch`
-//! call, so every projection runs as a [B, d] GEMM instead of B batch-1
-//! matvecs (DESIGN.md §13).
+//! provides deterministic greedy/top-k token selection; `scheduler` exposes
+//! the request lifecycle — [`BatchScheduler::submit`] takes a
+//! [`ServeRequest`] and returns a [`RequestHandle`] (cancellable), each
+//! [`BatchScheduler::tick`] emits [`StreamEvent`]s as streams are admitted,
+//! prefilled chunk by chunk under a token budget ([`TickConfig`]), decoded
+//! batch-first (ONE `HybridLm::step_batch_refs` call per tick, every
+//! projection a [B, d] GEMM — DESIGN.md §13), preempted under a state-byte
+//! budget, and finished. [`BatchScheduler::run_to_completion`] is the
+//! batch-synchronous convenience over the same loop.
 //!
 //! The prefill→decode state-handoff contract this module relies on is
 //! documented on [`crate::ops::SeqMixer::step`]: after a blocked prefill,
 //! stepping continues the stream as if every prompt token had been stepped
-//! individually, which is what makes admission O(prompt) and each decoded
-//! token O(state) instead of O(sequence).
+//! individually — and the same contract holds across *chunk* boundaries,
+//! which is what lets a long prompt amortize over many ticks
+//! ([`HybridLm::prefill_chunk`]) instead of stalling the decode batch.
 //!
 //! ```
-//! use sh2::serve::{BatchScheduler, HybridLm, Sampler};
+//! use sh2::serve::{BatchScheduler, HybridLm, Sampler, ServeRequest, StreamEvent, TickConfig};
 //! use sh2::util::rng::Rng;
 //!
 //! let mut rng = Rng::new(0);
 //! let model = HybridLm::new(&mut rng, 16, 2, &["SE", "LA"]).unwrap();
-//! let mut sched = BatchScheduler::new(&model, Sampler::Greedy, 4, 1 << 20, 7);
-//! let id = sched.submit(b"ACGT".to_vec(), 8);
-//! let done = sched.run();
-//! assert_eq!(done[0].id, id);
-//! assert_eq!(done[0].output.len(), 8);
+//! let cfg = TickConfig { prefill_chunk: 4, tick_budget: 8 };
+//! let mut sched = BatchScheduler::with_config(&model, Sampler::Greedy, 4, 1 << 20, 7, cfg);
+//! let handle = sched.submit(ServeRequest::new(b"ACGTACGT".to_vec(), 8));
+//! let mut tokens = Vec::new();
+//! while !sched.is_idle() {
+//!     for event in sched.tick() {
+//!         if let StreamEvent::Token { token, .. } = event {
+//!             tokens.push(token); // streamed out as they are produced
+//!         }
+//!     }
+//! }
+//! let done = sched.take_finished();
+//! assert_eq!(done[0].id, handle.id());
+//! assert_eq!(done[0].output, tokens);
+//! assert_eq!(tokens.len(), 8);
 //! ```
 
 pub mod model;
@@ -35,4 +49,7 @@ pub mod scheduler;
 
 pub use model::{HybridLm, LmConfig, LmState};
 pub use sampler::Sampler;
-pub use scheduler::{BatchScheduler, FinishedStream, ServeStats};
+pub use scheduler::{
+    AdmitOutcome, BatchScheduler, FinishReason, FinishedStream, RequestHandle,
+    ServeRequest, ServeStats, StreamEvent, TickConfig,
+};

@@ -367,6 +367,45 @@ impl HybridLm {
         vecmat(&last, &self.head)
     }
 
+    /// Chunked-prefill entry for continuous batching (DESIGN.md §14): absorb
+    /// the next `chunk.min(remaining)` tokens of `tokens` — the stream's
+    /// *full* token history — using `st.pos` as the progress cursor, and
+    /// return the logits at the last absorbed position together with the new
+    /// cursor. Equivalent to one [`HybridLm::prefill`] call on that slice;
+    /// splitting a prompt into chunks leaves the state exactly as a single
+    /// blocked prefill would (the per-operator chunk-boundary contract:
+    /// halo-corrected blocked kernels for hyena SE/MR, scan continuation for
+    /// the linear-attention family, step fallback for mid-stream MHA/LI).
+    ///
+    /// Progress accounting: `st.pos == tokens.len()` means the history is
+    /// fully absorbed and the returned logits are the next-token
+    /// distribution; the scheduler samples the handoff token from them.
+    pub fn prefill_chunk(
+        &self,
+        st: &mut LmState,
+        tokens: &[u8],
+        chunk: usize,
+    ) -> (Vec<f32>, usize) {
+        assert!(chunk > 0, "prefill_chunk: zero chunk size");
+        let done = st.pos;
+        assert!(
+            done < tokens.len(),
+            "prefill_chunk: history already absorbed ({done} >= {})",
+            tokens.len()
+        );
+        let take = chunk.min(tokens.len() - done);
+        let logits = self.prefill(st, &tokens[done..done + take]);
+        (logits, done + take)
+    }
+
+    /// Projected [`LmState::bytes`] after absorbing `pos` tokens — the sum
+    /// of every layer's [`SeqMixer::state_bytes_at`]. The serving scheduler
+    /// uses this at admission time to charge a stream's footprint *before*
+    /// spending prefill work on it.
+    pub fn state_bytes_at(&self, pos: usize) -> usize {
+        self.layers.iter().map(|b| b.mixer.state_bytes_at(pos)).sum()
+    }
+
     /// Decode one token: absorb `token`, return next-token logits.
     ///
     /// Thin wrapper over [`HybridLm::step_into`] — the returned `Vec` is
@@ -444,6 +483,16 @@ impl HybridLm {
     /// (continuous batching); every row is bit-identical to a serial
     /// [`HybridLm::step`] of that stream.
     pub fn step_batch(&self, states: &mut [LmState], tokens: &[u8]) -> Tensor {
+        let mut refs: Vec<&mut LmState> = states.iter_mut().collect();
+        self.step_batch_refs(&mut refs, tokens)
+    }
+
+    /// [`HybridLm::step_batch`] over a set of state *references* — the form
+    /// the continuous-batching scheduler uses: decode-phase streams are a
+    /// (possibly non-contiguous) subset of its stream arena, so it gathers
+    /// `&mut` references to exactly those states instead of reshuffling
+    /// them into a contiguous slice. Identical numerics to `step_batch`.
+    pub fn step_batch_refs(&self, states: &mut [&mut LmState], tokens: &[u8]) -> Tensor {
         let bsz = states.len();
         assert_eq!(
             tokens.len(),
@@ -749,5 +798,85 @@ mod tests {
         let b8 = st.bytes();
         model.step(&mut st, b'A');
         assert!(st.bytes() > b8, "KV cache must grow per decoded token");
+    }
+
+    #[test]
+    fn state_bytes_at_projects_actual_footprint() {
+        // The admission-time estimate must equal the realized state bytes
+        // at every position, across all operator families (growing KV,
+        // saturating FIR tails, fixed scans).
+        let mut rng = Rng::new(8);
+        let model = HybridLm::new(
+            &mut rng,
+            16,
+            2,
+            &["SE", "MR", "LI", "MHA", "LA", "SSD", "DN", "MLSTM"],
+        )
+        .unwrap();
+        let mut st = model.state();
+        assert_eq!(model.state_bytes_at(0), st.bytes());
+        let mut pos = 0;
+        for take in [1usize, 3, 8, 130] {
+            let toks: Vec<u8> = (0..take).map(|i| b'A' + (i % 4) as u8).collect();
+            model.prefill(&mut st, &toks);
+            pos += take;
+            assert_eq!(
+                model.state_bytes_at(pos),
+                st.bytes(),
+                "projection drift at pos {pos}"
+            );
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_matches_single_prefill() {
+        // Driving a prompt through prefill_chunk in fixed-size chunks must
+        // land on the same final logits (and cursor) as one blocked
+        // prefill — the chunk-boundary contract the scheduler relies on.
+        let mut rng = Rng::new(9);
+        let model = HybridLm::new(&mut rng, 16, 2, &["SE", "MHA", "LA"]).unwrap();
+        let tokens = b"ACGTGGCCAATTACGTACGTGGCC";
+        let mut sa = model.state();
+        let la = model.prefill(&mut sa, tokens);
+        let mut sb = model.state();
+        let mut lb = Vec::new();
+        let mut done = 0;
+        let mut chunks = 0;
+        while done < tokens.len() {
+            let (logits, d) = model.prefill_chunk(&mut sb, tokens, 7);
+            assert_eq!(d, (done + 7).min(tokens.len()));
+            done = d;
+            lb = logits;
+            chunks += 1;
+        }
+        assert_eq!(chunks, 4);
+        assert_eq!(sb.pos, tokens.len());
+        assert_eq!(sa.pos, sb.pos);
+        let diff = la
+            .iter()
+            .zip(&lb)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-4, "chunked/blocked prefill divergence {diff}");
+    }
+
+    #[test]
+    fn step_batch_refs_matches_step_batch() {
+        let mut rng = Rng::new(15);
+        let model = HybridLm::new(&mut rng, 16, 2, &["SE", "LA"]).unwrap();
+        let mut a: Vec<LmState> = Vec::new();
+        for p in [b"ACGT".as_slice(), b"TTGACAAT", b"CG"] {
+            let mut st = model.state();
+            model.prefill(&mut st, p);
+            a.push(st);
+        }
+        let mut b = a.clone();
+        let toks = [b'A', b'C', b'G'];
+        let la = model.step_batch(&mut a, &toks);
+        let lb = {
+            let mut refs: Vec<&mut LmState> = b.iter_mut().collect();
+            model.step_batch_refs(&mut refs, &toks)
+        };
+        assert_eq!(la, lb);
     }
 }

@@ -1,60 +1,215 @@
-//! Multi-sequence batch scheduler: admits concurrent generation streams
-//! into a bounded state arena, decodes them batch-first — every tick is
-//! ONE [`HybridLm::step_batch`] call over all active streams, so each
-//! projection in each layer runs as a [B, d] x [d, ·] GEMM instead of B
-//! batch-1 matvecs — and evicts (preempts) streams back to the queue under
-//! memory pressure.
+//! Continuous-batching scheduler (DESIGN.md §14): an explicit request
+//! lifecycle — `submit(ServeRequest) -> RequestHandle`, `tick() ->
+//! Vec<StreamEvent>`, `handle.cancel()` — over a bounded state arena, with
+//! *chunked, token-budgeted prefill* integrated into the tick loop so a
+//! long prompt amortizes over many ticks instead of stalling every active
+//! decode stream.
 //!
-//! Continuous-batching semantics in miniature: admission prefills the
-//! prompt through the blocked kernels, streams join and leave the decode
-//! batch as they are admitted/retired, and a preempted stream drops its
-//! state and is later re-prefilled from its full token history (prompt +
-//! generated so far) — the recompute-on-restore policy of production
-//! serving engines. Every stream owns a forked RNG and batched rows are
+//! Per-stream phase state machine:
+//!
+//! ```text
+//!   submit ─► Queued ─admit─► Prefill ─chunks─► Decode ─max_new─► Finished
+//!               ▲                │                 │
+//!               └────────────── Preempted ◄────────┘      (cancel: any
+//!                 (requeued, replays history)               state ─► Cancelled)
+//! ```
+//!
+//! Each tick spends a configurable token budget ([`TickConfig`]): the
+//! decode batch reserves one token per decode-phase stream (ONE
+//! [`HybridLm::step_batch_refs`] call — every projection a [B, d] GEMM),
+//! and the remainder admits prefill chunks, handed round-robin across
+//! prefill-phase streams through [`HybridLm::prefill_chunk`] (the blocked
+//! `two_stage_prefill` + `FirTail` handoff path). Preemption-restore
+//! replays go through the same chunked path.
+//!
+//! Determinism: every stream owns a forked RNG, chunk boundaries are a
+//! pure function of (history length, `prefill_chunk`) — never of the
+//! budget split or batch composition — and batched decode rows are
 //! bit-identical to serial stepping, so generations are independent of
-//! scheduling interleave and batch composition.
+//! scheduling interleave. [`BatchScheduler::run_to_completion`] with the
+//! default [`TickConfig`] (unbounded budget, whole-prompt chunks)
+//! reproduces the pre-lifecycle batch-synchronous scheduler byte for byte
+//! absent byte-budget pressure; under a finite budget the admission gate
+//! is now prospective (committed bytes, not realized), so preemption
+//! points — and therefore hyena-layout restores, which replay within
+//! kernel rounding — can shift relative to the old scheduler.
 //!
 //! Internally the active set is split SoA-style: stream metadata
-//! (`Active`) and decode states (`Vec<LmState>`) live in parallel vectors
-//! so each tick hands the model one contiguous `&mut [LmState]`.
+//! (`Stream`) and decode states (`Vec<LmState>`) live in parallel
+//! vectors so each tick hands the model references into one arena.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 use super::model::{HybridLm, LmState};
 use super::sampler::Sampler;
 use crate::util::rng::Rng;
 
-/// A stream waiting for admission (fresh, or preempted with history).
+/// A generation request: prompt bytes plus the number of tokens to
+/// generate. Constructed by the caller and handed to
+/// [`BatchScheduler::submit`], which returns the [`RequestHandle`] used to
+/// identify and cancel the stream.
 #[derive(Clone, Debug)]
-struct Pending {
+pub struct ServeRequest {
+    pub prompt: Vec<u8>,
+    pub max_new: usize,
+}
+
+impl ServeRequest {
+    pub fn new(prompt: impl Into<Vec<u8>>, max_new: usize) -> ServeRequest {
+        ServeRequest { prompt: prompt.into(), max_new }
+    }
+}
+
+/// Caller-side handle to a submitted stream. Cheap to clone; cancellation
+/// is a flag the scheduler observes at the start of its next tick, so it
+/// takes effect wherever the stream currently is (queued, mid-prefill, or
+/// mid-decode).
+#[derive(Clone, Debug)]
+pub struct RequestHandle {
+    id: usize,
+    cancelled: Arc<AtomicBool>,
+}
+
+impl RequestHandle {
+    /// Stream id — matches the `id` carried by every [`StreamEvent`] and
+    /// [`FinishedStream`] for this request.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Request cancellation. Idempotent; observed at the next tick. The
+    /// stream terminates with a [`StreamEvent::Cancelled`] event and a
+    /// [`FinishedStream`] carrying whatever it generated so far.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+}
+
+/// Why a stream left the scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full `max_new` tokens.
+    MaxNew,
+    /// Cancelled via its [`RequestHandle`].
+    Cancelled,
+}
+
+/// Lifecycle events emitted by [`BatchScheduler::tick`], in the order they
+/// happened within the tick.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// Entered the active arena (fresh admission, or `restored` after a
+    /// preemption — a restore replays its token history through chunked
+    /// prefill before decoding resumes).
+    Admitted { id: usize, restored: bool },
+    /// A prefill chunk was absorbed; `done`/`total` count history tokens
+    /// (for a restore, `total` includes previously generated tokens).
+    PrefillProgress { id: usize, done: usize, total: usize },
+    /// One generated token; `index` is its position in the output
+    /// (0-based). Replayed tokens of a restored stream are NOT re-emitted.
+    Token { id: usize, token: u8, index: usize },
+    /// Natural completion; the stream's [`FinishedStream`] is available.
+    Finished { id: usize, reason: FinishReason },
+    /// Evicted under state-memory pressure and requeued; its state is
+    /// dropped and will be recomputed from history on re-admission.
+    Preempted { id: usize },
+    /// Terminated by [`RequestHandle::cancel`]; partial output is kept.
+    Cancelled { id: usize },
+}
+
+/// Typed admission verdict, so the scheduler (and tests) see *why* the
+/// queue head stayed queued instead of inferring it from a bool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitOutcome {
+    /// Queue head moved into the arena (prefill phase).
+    Admitted { id: usize, restored: bool },
+    /// Nothing waiting.
+    QueueEmpty,
+    /// A preemption this epoch blocks non-forced admission until a stream
+    /// retires (prevents admit→prefill→evict thrash).
+    Blocked,
+    /// The arena already holds `max_active` streams.
+    AtMaxActive,
+    /// The arena's committed bytes (realized state bytes, or the
+    /// still-unrealized projection of a mid-prefill stream, whichever is
+    /// larger per stream) plus the candidate's projected footprint
+    /// ([`HybridLm::state_bytes_at`] at its history length) exceed the
+    /// byte budget.
+    OverStateBudget,
+}
+
+/// Per-tick work-budget knobs. The default (`usize::MAX` everywhere)
+/// reproduces batch-synchronous behavior: a prompt prefills whole at
+/// admission. Finite values turn on continuous batching proper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TickConfig {
+    /// Largest prompt slice absorbed per [`HybridLm::prefill_chunk`] call.
+    /// Chunk boundaries are a pure function of history length and this
+    /// value, so generations stay schedule-independent.
+    pub prefill_chunk: usize,
+    /// Target model-work tokens per tick. The decode batch reserves one
+    /// token per decode-phase stream; the remainder admits prefill chunks
+    /// (each chunk charges its full length; the last chunk may overshoot —
+    /// the budget gates *starting* a chunk, never truncates one).
+    pub tick_budget: usize,
+}
+
+impl Default for TickConfig {
+    fn default() -> TickConfig {
+        TickConfig { prefill_chunk: usize::MAX, tick_budget: usize::MAX }
+    }
+}
+
+/// Where an active stream is in its lifecycle. Queued streams live in the
+/// queue itself; `Finished`/`Cancelled` are terminal (the stream leaves
+/// the arena), so only the two in-arena phases are represented.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Absorbing token history through chunked prefill; the parallel
+    /// `LmState::pos` is the progress cursor.
+    Prefill,
+    /// History absorbed; advances one token per decode tick.
+    Decode,
+}
+
+/// One stream's metadata, carried unchanged between the queue and the
+/// active arena (its `LmState` exists only while active).
+#[derive(Clone, Debug)]
+struct Stream {
     id: usize,
     prompt_len: usize,
-    /// Prompt plus everything generated so far.
+    /// Prompt plus everything generated so far (the replay history).
     tokens: Vec<u8>,
     generated: usize,
     max_new: usize,
     rng: Rng,
+    /// True once preempted: its next admission is a restore.
+    restored: bool,
+    cancelled: Arc<AtomicBool>,
+    submitted: Instant,
+    /// Wall-clock seconds from submit to first generated token.
+    ttft_secs: Option<f64>,
+    phase: Phase,
 }
 
-/// A stream currently active in the decode batch. Its decode state lives
-/// in the scheduler's parallel `states` vector (same index), so one
-/// contiguous `&mut [LmState]` can be handed to `step_batch` per tick.
-struct Active {
-    id: usize,
-    prompt_len: usize,
-    tokens: Vec<u8>,
-    generated: usize,
-    max_new: usize,
-    rng: Rng,
-}
-
-/// A completed generation.
+/// A completed (or cancelled) generation.
 #[derive(Clone, Debug)]
 pub struct FinishedStream {
     pub id: usize,
     pub prompt: Vec<u8>,
-    /// Generated continuation (length `max_new`).
+    /// Generated continuation (`max_new` tokens, fewer if cancelled).
     pub output: Vec<u8>,
+    pub reason: FinishReason,
+    /// Time to first token: wall-clock seconds from submit to the first
+    /// generated token (None if cancelled before producing one).
+    pub ttft_secs: Option<f64>,
 }
 
 /// Aggregate counters for a scheduler run.
@@ -64,11 +219,16 @@ pub struct ServeStats {
     pub max_concurrent: usize,
     /// Total decode steps (tokens advanced) across all streams.
     pub decode_steps: usize,
-    /// Total tokens pushed through blocked prefill (admissions + restores).
+    /// Prompt tokens pushed through blocked prefill on *first* admission.
     pub prefill_tokens: usize,
+    /// History tokens replayed through prefill by preemption restores
+    /// (kept separate so restores don't inflate `prefill_tokens`).
+    pub restored_prefill_tokens: usize,
     /// Streams evicted under state-memory pressure.
     pub preemptions: usize,
-    /// Batched decode ticks — one `HybridLm::step_batch` call each.
+    /// Streams terminated by cancellation.
+    pub cancelled: usize,
+    /// Batched decode ticks — one `step_batch` call each.
     pub decode_ticks: usize,
     /// Wall-clock seconds spent in batched decode (stepping + sampling).
     pub decode_secs: f64,
@@ -100,12 +260,13 @@ pub struct BatchScheduler<'m> {
     sampler: Sampler,
     max_active: usize,
     budget_bytes: usize,
+    cfg: TickConfig,
     next_id: usize,
     seed: u64,
-    queue: VecDeque<Pending>,
+    queue: VecDeque<Stream>,
     /// Active-stream metadata; `states[i]` is the decode state of
     /// `active[i]` (parallel vectors — see the module docs).
-    active: Vec<Active>,
+    active: Vec<Stream>,
     states: Vec<LmState>,
     finished: Vec<FinishedStream>,
     /// Set on preemption, cleared on retirement: blocks non-forced
@@ -116,6 +277,8 @@ pub struct BatchScheduler<'m> {
 }
 
 impl<'m> BatchScheduler<'m> {
+    /// Batch-synchronous defaults: whole-prompt prefill at admission,
+    /// unbounded tick budget (see [`TickConfig::default`]).
     pub fn new(
         model: &'m HybridLm,
         sampler: Sampler,
@@ -123,12 +286,27 @@ impl<'m> BatchScheduler<'m> {
         budget_bytes: usize,
         seed: u64,
     ) -> BatchScheduler<'m> {
+        Self::with_config(model, sampler, max_active, budget_bytes, seed, TickConfig::default())
+    }
+
+    /// Full constructor: `cfg` turns on chunked, token-budgeted prefill.
+    pub fn with_config(
+        model: &'m HybridLm,
+        sampler: Sampler,
+        max_active: usize,
+        budget_bytes: usize,
+        seed: u64,
+        cfg: TickConfig,
+    ) -> BatchScheduler<'m> {
         assert!(max_active > 0);
+        assert!(cfg.prefill_chunk > 0, "prefill_chunk must be positive");
+        assert!(cfg.tick_budget > 0, "tick_budget must be positive");
         BatchScheduler {
             model,
             sampler,
             max_active,
             budget_bytes,
+            cfg,
             next_id: 0,
             seed,
             queue: VecDeque::new(),
@@ -140,162 +318,363 @@ impl<'m> BatchScheduler<'m> {
         }
     }
 
-    /// Enqueue a generation request; returns its stream id. The stream's
-    /// RNG is derived from (scheduler seed, id), independent of scheduling.
-    pub fn submit(&mut self, prompt: Vec<u8>, max_new: usize) -> usize {
-        assert!(!prompt.is_empty(), "empty prompt");
+    pub fn config(&self) -> TickConfig {
+        self.cfg
+    }
+
+    /// Enqueue a request; returns its handle. The stream's RNG is derived
+    /// from (scheduler seed, id), independent of scheduling.
+    pub fn submit(&mut self, req: ServeRequest) -> RequestHandle {
+        assert!(!req.prompt.is_empty(), "empty prompt");
         let id = self.next_id;
         self.next_id += 1;
         let rng = Rng::new(self.seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15));
-        self.queue.push_back(Pending {
+        let cancelled = Arc::new(AtomicBool::new(false));
+        self.queue.push_back(Stream {
             id,
-            prompt_len: prompt.len(),
-            tokens: prompt,
+            prompt_len: req.prompt.len(),
+            tokens: req.prompt,
             generated: 0,
-            max_new,
+            max_new: req.max_new,
             rng,
+            restored: false,
+            cancelled: Arc::clone(&cancelled),
+            submitted: Instant::now(),
+            ttft_secs: None,
+            phase: Phase::Prefill,
         });
-        id
+        RequestHandle { id, cancelled }
+    }
+
+    /// True when no stream is queued or active. Note a freshly cancelled
+    /// stream still counts until the next tick sweeps it out.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// Streams waiting for admission (including preempted ones).
+    pub fn queued_streams(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Streams currently in the arena (prefill or decode phase).
+    pub fn active_streams(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Drain completed/cancelled streams accumulated so far, in completion
+    /// order. Event-driven callers use this between ticks;
+    /// [`BatchScheduler::run_to_completion`] drains once at the end.
+    pub fn take_finished(&mut self) -> Vec<FinishedStream> {
+        std::mem::take(&mut self.finished)
     }
 
     fn state_bytes(&self) -> usize {
         self.states.iter().map(|s| s.bytes()).sum()
     }
 
-    /// Admit the stream at the head of the queue: prefill its full token
-    /// history, sample the token for the next position, activate it.
-    /// With `force`, capacity and budget checks are skipped (used to
-    /// guarantee progress when the arena is empty).
-    fn admit_one(&mut self, force: bool) -> bool {
-        if self.queue.is_empty() {
-            return false;
-        }
-        if !force
-            && (self.admit_blocked
-                || self.active.len() >= self.max_active
-                || self.state_bytes() >= self.budget_bytes)
-        {
-            return false;
-        }
-        if force {
+    /// Bytes the arena is committed to: per active stream, the larger of
+    /// its realized state bytes and its projected footprint at its current
+    /// history length. Realized bytes alone would under-count streams
+    /// admitted this tick (their states stay near-empty until prefill
+    /// chunks run), letting an arrival burst flood the arena; the
+    /// projection acts as a reservation until prefill realizes it.
+    fn committed_bytes(&self) -> usize {
+        self.active
+            .iter()
+            .zip(&self.states)
+            .map(|(s, st)| st.bytes().max(self.model.state_bytes_at(s.tokens.len())))
+            .sum()
+    }
+
+    /// Admit the queue head into the arena (prefill phase; no model work
+    /// happens here — chunks are spent by `tick`). With `force`, capacity
+    /// and budget checks are skipped (used to guarantee progress when the
+    /// arena is empty).
+    fn admit_one(&mut self, force: bool) -> AdmitOutcome {
+        let Some(head) = self.queue.front() else {
+            return AdmitOutcome::QueueEmpty;
+        };
+        if !force {
+            if self.admit_blocked {
+                return AdmitOutcome::Blocked;
+            }
+            if self.active.len() >= self.max_active {
+                return AdmitOutcome::AtMaxActive;
+            }
+            // Prospective accounting: charge the candidate's projected
+            // state footprint at its full history length against the
+            // arena's *committed* bytes (which reserve the projections of
+            // streams admitted earlier this tick, not just their realized
+            // near-empty states), so a burst of arrivals can't flood the
+            // arena and thrash through admit→prefill→evict cycles.
+            let projected = self.model.state_bytes_at(head.tokens.len());
+            if self.committed_bytes().saturating_add(projected) > self.budget_bytes {
+                return AdmitOutcome::OverStateBudget;
+            }
+        } else {
             self.admit_blocked = false;
         }
-        let mut p = self.queue.pop_front().unwrap();
-        let mut state = self.model.state();
-        let logits = self.model.prefill(&mut state, &p.tokens);
-        self.stats.prefill_tokens += p.tokens.len();
-        let mut a = Active {
-            id: p.id,
-            prompt_len: p.prompt_len,
-            tokens: std::mem::take(&mut p.tokens),
-            generated: p.generated,
-            max_new: p.max_new,
-            rng: p.rng,
-        };
-        if a.generated < a.max_new {
-            let next = self.sampler.sample(&logits, &mut a.rng) as u8;
-            a.tokens.push(next);
-            a.generated += 1;
-        }
-        self.active.push(a);
-        self.states.push(state);
+        let mut s = self.queue.pop_front().expect("head checked above");
+        s.phase = Phase::Prefill;
+        let (id, restored) = (s.id, s.restored);
+        self.active.push(s);
+        self.states.push(self.model.state());
         self.stats.max_concurrent = self.stats.max_concurrent.max(self.active.len());
-        true
+        AdmitOutcome::Admitted { id, restored }
     }
 
-    /// Evict the most recently admitted stream back to the queue, dropping
-    /// its decode state (it will be re-prefilled from its token history).
-    fn preempt_newest(&mut self) {
-        if let Some(a) = self.active.pop() {
-            self.states.pop();
-            self.stats.preemptions += 1;
-            self.admit_blocked = true;
-            self.queue.push_back(Pending {
-                id: a.id,
-                prompt_len: a.prompt_len,
-                tokens: a.tokens,
-                generated: a.generated,
-                max_new: a.max_new,
-                rng: a.rng,
-            });
+    /// Remove cancelled streams wherever they are (queue or arena),
+    /// recording their partial output.
+    fn sweep_cancelled(&mut self, events: &mut Vec<StreamEvent>) {
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].cancelled.load(Ordering::Relaxed) {
+                let s = self.queue.remove(i).expect("index checked");
+                self.finish_stream(s, FinishReason::Cancelled, events);
+            } else {
+                i += 1;
+            }
         }
-    }
-
-    /// Retire completed streams in admission order, keeping the metadata
-    /// and state vectors in lockstep.
-    fn retire_finished(&mut self) {
         let mut i = 0;
         while i < self.active.len() {
-            if self.active[i].generated >= self.active[i].max_new {
-                let a = self.active.remove(i);
+            if self.active[i].cancelled.load(Ordering::Relaxed) {
+                let s = self.active.remove(i);
                 self.states.remove(i);
-                self.admit_blocked = false;
-                self.finished.push(FinishedStream {
-                    id: a.id,
-                    output: a.tokens[a.prompt_len..].to_vec(),
-                    prompt: {
-                        let mut t = a.tokens;
-                        t.truncate(a.prompt_len);
-                        t
-                    },
-                });
+                self.admit_blocked = false; // capacity freed
+                self.finish_stream(s, FinishReason::Cancelled, events);
             } else {
                 i += 1;
             }
         }
     }
 
-    /// One batched decode tick: ALL active streams advance one token
-    /// through a single [`HybridLm::step_batch`] call (the GEMM-shaped
-    /// hot path), then each stream samples from its logits row with its
-    /// own RNG. Callers guarantee every active stream still wants tokens
-    /// (finished streams are retired before ticking).
-    fn tick(&mut self) {
-        let bsz = self.active.len();
+    /// Move a stream to the finished list, emitting its terminal event.
+    fn finish_stream(
+        &mut self,
+        s: Stream,
+        reason: FinishReason,
+        events: &mut Vec<StreamEvent>,
+    ) {
+        events.push(match reason {
+            FinishReason::MaxNew => StreamEvent::Finished { id: s.id, reason },
+            FinishReason::Cancelled => StreamEvent::Cancelled { id: s.id },
+        });
+        if reason == FinishReason::Cancelled {
+            self.stats.cancelled += 1;
+        }
+        let mut tokens = s.tokens;
+        let output = tokens.split_off(s.prompt_len);
+        self.finished.push(FinishedStream {
+            id: s.id,
+            prompt: tokens,
+            output,
+            reason,
+            ttft_secs: s.ttft_secs,
+        });
+    }
+
+    /// Spend `budget` history tokens on prefill chunks, round-robin across
+    /// prefill-phase streams in admission order (so a long prompt cannot
+    /// starve later arrivals of their chunks). A stream whose history
+    /// completes samples its handoff token from the final chunk's logits
+    /// and flips to the decode phase.
+    fn prefill_phase(&mut self, mut budget: usize, events: &mut Vec<StreamEvent>) {
+        loop {
+            let mut progressed = false;
+            for i in 0..self.active.len() {
+                if budget == 0 {
+                    return;
+                }
+                if self.active[i].phase != Phase::Prefill {
+                    continue;
+                }
+                let restored = self.active[i].restored;
+                let (logits, take, done, total) = {
+                    let s = &self.active[i];
+                    let st = &mut self.states[i];
+                    let before = st.pos;
+                    let (logits, done) =
+                        self.model.prefill_chunk(st, &s.tokens, self.cfg.prefill_chunk);
+                    (logits, done - before, done, s.tokens.len())
+                };
+                budget = budget.saturating_sub(take);
+                if restored {
+                    self.stats.restored_prefill_tokens += take;
+                } else {
+                    self.stats.prefill_tokens += take;
+                }
+                progressed = true;
+                let s = &mut self.active[i];
+                events.push(StreamEvent::PrefillProgress { id: s.id, done, total });
+                if done == total {
+                    s.phase = Phase::Decode;
+                    if s.generated < s.max_new {
+                        let tok = self.sampler.sample(&logits, &mut s.rng) as u8;
+                        s.tokens.push(tok);
+                        s.generated += 1;
+                        if s.ttft_secs.is_none() {
+                            s.ttft_secs = Some(s.submitted.elapsed().as_secs_f64());
+                        }
+                        events.push(StreamEvent::Token {
+                            id: s.id,
+                            token: tok,
+                            index: s.generated - 1,
+                        });
+                    }
+                }
+            }
+            if !progressed {
+                return;
+            }
+        }
+    }
+
+    /// One batched decode pass: every decode-phase stream advances one
+    /// token through a single [`HybridLm::step_batch_refs`] call (the
+    /// GEMM-shaped hot path), then each samples from its logits row with
+    /// its own RNG. Callers retire finished streams first, so every
+    /// decode-phase stream still wants tokens.
+    fn decode_phase(&mut self, events: &mut Vec<StreamEvent>) {
+        let in_decode: Vec<bool> =
+            self.active.iter().map(|s| s.phase == Phase::Decode).collect();
+        let bsz = in_decode.iter().filter(|&&d| d).count();
         if bsz == 0 {
             return;
         }
-        debug_assert!(self.active.iter().all(|a| a.generated < a.max_new));
-        let t0 = std::time::Instant::now();
-        let tokens: Vec<u8> =
-            self.active.iter().map(|a| *a.tokens.last().unwrap()).collect();
-        let logits = self.model.step_batch(&mut self.states, &tokens);
-        for (b, a) in self.active.iter_mut().enumerate() {
-            let next = self.sampler.sample(logits.row(b), &mut a.rng) as u8;
-            a.tokens.push(next);
-            a.generated += 1;
+        debug_assert!(self
+            .active
+            .iter()
+            .zip(&in_decode)
+            .all(|(s, &d)| !d || s.generated < s.max_new));
+        let t0 = Instant::now();
+        let tokens: Vec<u8> = self
+            .active
+            .iter()
+            .zip(&in_decode)
+            .filter(|(_, &d)| d)
+            .map(|(s, _)| *s.tokens.last().expect("non-empty history"))
+            .collect();
+        let logits = {
+            let mut sel: Vec<&mut LmState> = self
+                .states
+                .iter_mut()
+                .zip(&in_decode)
+                .filter(|(_, &d)| d)
+                .map(|(st, _)| st)
+                .collect();
+            self.model.step_batch_refs(&mut sel, &tokens)
+        };
+        let mut row = 0;
+        for (s, &d) in self.active.iter_mut().zip(&in_decode) {
+            if !d {
+                continue;
+            }
+            let tok = self.sampler.sample(logits.row(row), &mut s.rng) as u8;
+            s.tokens.push(tok);
+            s.generated += 1;
+            if s.ttft_secs.is_none() {
+                s.ttft_secs = Some(s.submitted.elapsed().as_secs_f64());
+            }
+            events.push(StreamEvent::Token { id: s.id, token: tok, index: s.generated - 1 });
+            row += 1;
         }
         self.stats.decode_secs += t0.elapsed().as_secs_f64();
         self.stats.decode_steps += bsz;
         self.stats.decode_ticks += 1;
     }
 
-    /// Drive everything to completion; returns finished streams sorted by
-    /// id. Deterministic for a given (model, sampler, seed, submissions):
-    /// batched rows are bit-identical to serial stepping, so outputs do
-    /// not depend on batch composition. Absent preemption, they do not
-    /// depend on `max_active` either; under budget pressure, different
-    /// `max_active` values preempt at different points, and a restored
-    /// stream replays through blocked prefill — bit-exact for the
-    /// scan/MHA families, within kernel rounding for hyena (DESIGN.md §6)
-    /// — so near-tie sampling could in principle diverge there.
-    pub fn run(&mut self) -> Vec<FinishedStream> {
-        while !self.queue.is_empty() || !self.active.is_empty() {
-            if self.active.is_empty() {
-                self.admit_one(true);
-            }
-            while self.admit_one(false) {}
-            // Admissions with max_new = 0 are already complete; retire
-            // them so the tick's batch is exactly the streams that still
-            // want tokens.
-            self.retire_finished();
-            self.tick();
-            self.retire_finished();
-            while self.state_bytes() > self.budget_bytes && self.active.len() > 1 {
-                self.preempt_newest();
+    /// Retire streams that generated their full `max_new`, keeping the
+    /// metadata and state vectors in lockstep.
+    fn retire_finished(&mut self, events: &mut Vec<StreamEvent>) {
+        let mut i = 0;
+        while i < self.active.len() {
+            let done = self.active[i].phase == Phase::Decode
+                && self.active[i].generated >= self.active[i].max_new;
+            if done {
+                let s = self.active.remove(i);
+                self.states.remove(i);
+                self.admit_blocked = false;
+                self.finish_stream(s, FinishReason::MaxNew, events);
+            } else {
+                i += 1;
             }
         }
-        let mut out = std::mem::take(&mut self.finished);
+    }
+
+    /// Evict the most recently admitted stream back to the queue, dropping
+    /// its decode state (its history replays through chunked prefill on
+    /// re-admission).
+    fn preempt_newest(&mut self, events: &mut Vec<StreamEvent>) {
+        if let Some(mut s) = self.active.pop() {
+            self.states.pop();
+            self.stats.preemptions += 1;
+            self.admit_blocked = true;
+            events.push(StreamEvent::Preempted { id: s.id });
+            s.restored = true;
+            s.phase = Phase::Prefill;
+            self.queue.push_back(s);
+        }
+    }
+
+    /// One scheduler tick. Order: sweep cancellations → admissions →
+    /// prefill chunks (budget minus the decode batch's reservation) →
+    /// retire → one batched decode pass → retire → preempt while over the
+    /// byte budget. Returns every lifecycle event in the order it
+    /// happened. Progress is guaranteed for every phase: an empty arena
+    /// force-admits the queue head, decode-phase streams always step, and
+    /// prefill-phase streams get at least one chunk per tick even when
+    /// the decode batch consumes the whole budget.
+    pub fn tick(&mut self) -> Vec<StreamEvent> {
+        let mut events = Vec::new();
+        self.sweep_cancelled(&mut events);
+        if self.active.is_empty() && !self.queue.is_empty() {
+            if let AdmitOutcome::Admitted { id, restored } = self.admit_one(true) {
+                events.push(StreamEvent::Admitted { id, restored });
+            }
+        }
+        while let AdmitOutcome::Admitted { id, restored } = self.admit_one(false) {
+            events.push(StreamEvent::Admitted { id, restored });
+        }
+        // Budget split: the decode batch reserves one token per stream
+        // already in the decode phase; prefill gets the remainder — but a
+        // mid-prefill stream always gets at least one chunk per tick,
+        // otherwise a decode batch as large as the whole budget would
+        // starve prefill-phase streams indefinitely while they hold arena
+        // slots (TTFT unbounded until a decode stream retires).
+        let n_decode = self.active.iter().filter(|s| s.phase == Phase::Decode).count();
+        let mut prefill_budget = self.cfg.tick_budget.saturating_sub(n_decode);
+        if prefill_budget == 0
+            && self.active.iter().any(|s| s.phase == Phase::Prefill)
+        {
+            prefill_budget = 1;
+        }
+        self.prefill_phase(prefill_budget, &mut events);
+        self.retire_finished(&mut events);
+        self.decode_phase(&mut events);
+        self.retire_finished(&mut events);
+        while self.state_bytes() > self.budget_bytes && self.active.len() > 1 {
+            self.preempt_newest(&mut events);
+        }
+        events
+    }
+
+    /// Drive everything to completion, discarding events; returns finished
+    /// streams sorted by id — the batch-synchronous convenience over the
+    /// event API. Deterministic for a given (model, sampler, seed, config,
+    /// submissions): batched rows are bit-identical to serial stepping and
+    /// chunk boundaries don't depend on scheduling, so outputs do not
+    /// depend on batch composition. Absent preemption they do not depend
+    /// on `max_active` either; under budget pressure, different
+    /// `max_active` values preempt at different points, and a restored
+    /// stream replays through blocked prefill — bit-exact for the scan/MHA
+    /// families, within kernel rounding for hyena (DESIGN.md §6) — so
+    /// near-tie sampling could in principle diverge there.
+    pub fn run_to_completion(&mut self) -> Vec<FinishedStream> {
+        while !self.is_idle() {
+            self.tick();
+        }
+        let mut out = self.take_finished();
         out.sort_by_key(|f| f.id);
         out
     }
@@ -310,14 +689,27 @@ mod tests {
         HybridLm::new(rng, 16, 2, &["SE", "LA"]).unwrap()
     }
 
+    fn submit_all(
+        s: &mut BatchScheduler,
+        prompts: &[(Vec<u8>, usize)],
+    ) -> Vec<RequestHandle> {
+        prompts
+            .iter()
+            .map(|(p, n)| s.submit(ServeRequest::new(p.clone(), *n)))
+            .collect()
+    }
+
     #[test]
     fn generations_are_schedule_independent() {
         // The same submissions produce identical outputs whether streams
         // run serially (max_active = 1) or fully batched.
         let mut rng = Rng::new(0);
         let m = model(&mut rng);
-        let prompts: Vec<Vec<u8>> =
-            vec![b"ACGTACGT".to_vec(), b"TTTTCCCC".to_vec(), b"GATTACA!".to_vec()];
+        let prompts: Vec<(Vec<u8>, usize)> = vec![
+            (b"ACGTACGT".to_vec(), 12),
+            (b"TTTTCCCC".to_vec(), 12),
+            (b"GATTACA!".to_vec(), 12),
+        ];
         let run = |max_active: usize| {
             let mut s = BatchScheduler::new(
                 &m,
@@ -326,10 +718,8 @@ mod tests {
                 usize::MAX,
                 42,
             );
-            for p in &prompts {
-                s.submit(p.clone(), 12);
-            }
-            s.run()
+            submit_all(&mut s, &prompts);
+            s.run_to_completion()
         };
         let serial = run(1);
         let batched = run(4);
@@ -338,6 +728,43 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.output, b.output);
             assert_eq!(a.output.len(), 12);
+            assert_eq!(a.reason, FinishReason::MaxNew);
+            assert!(a.ttft_secs.is_some());
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_is_schedule_independent() {
+        // Chunk boundaries are a function of history length only, so even
+        // under a tight tick budget the serial and batched runs produce
+        // identical bytes — for a hyena layout, whose chunked kernels are
+        // the rounding-sensitive ones.
+        let mut rng = Rng::new(31);
+        let m = model(&mut rng);
+        let prompts: Vec<(Vec<u8>, usize)> = vec![
+            (b"ACGTACGTACGTACGTACGTACG".to_vec(), 9),
+            (b"TT".to_vec(), 6),
+            (b"GATTACAGATTACA".to_vec(), 4),
+        ];
+        let cfg = TickConfig { prefill_chunk: 5, tick_budget: 8 };
+        let run = |max_active: usize| {
+            let mut s = BatchScheduler::with_config(
+                &m,
+                Sampler::TopK { k: 8, temperature: 0.9 },
+                max_active,
+                usize::MAX,
+                77,
+                cfg,
+            );
+            submit_all(&mut s, &prompts);
+            s.run_to_completion()
+        };
+        let serial = run(1);
+        let batched = run(3);
+        for ((a, b), (_, n)) in serial.iter().zip(&batched).zip(&prompts) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output, "stream {}", a.id);
+            assert_eq!(a.output.len(), *n);
         }
     }
 
@@ -364,10 +791,8 @@ mod tests {
                 usize::MAX,
                 13,
             );
-            for (p, n) in &prompts {
-                s.submit(p.clone(), *n);
-            }
-            (s.run(), s.stats)
+            submit_all(&mut s, &prompts);
+            (s.run_to_completion(), s.stats)
         };
         let (serial, serial_stats) = run(1);
         let (batched, batched_stats) = run(3);
@@ -392,12 +817,81 @@ mod tests {
         let m = model(&mut rng);
         let mut s = BatchScheduler::new(&m, Sampler::Greedy, 8, 1, 7);
         for _ in 0..3 {
-            s.submit(b"ACGT".to_vec(), 4);
+            s.submit(ServeRequest::new(b"ACGT".to_vec(), 4));
         }
-        let done = s.run();
+        let done = s.run_to_completion();
         assert_eq!(done.len(), 3);
-        // A 1-byte budget forces strictly serial execution.
+        // A 1-byte budget forces strictly serial execution: the projected
+        // footprint blocks every non-forced admission.
         assert_eq!(s.stats.max_concurrent, 1);
+    }
+
+    #[test]
+    fn prefill_gets_a_chunk_even_when_decode_eats_the_budget() {
+        // tick_budget = 1 with one stream decoding: the decode reservation
+        // alone exhausts the budget, but a later arrival must still
+        // receive its anti-starvation chunk each tick — its first token
+        // has to arrive while the decode-heavy stream is still running,
+        // not after it retires.
+        let mut rng = Rng::new(17);
+        let m = model(&mut rng);
+        let cfg = TickConfig { prefill_chunk: 4, tick_budget: 1 };
+        let mut s =
+            BatchScheduler::with_config(&m, Sampler::Greedy, 4, usize::MAX, 29, cfg);
+        let h_decode = s.submit(ServeRequest::new(b"AC".to_vec(), 30));
+        let h_late = s.submit(ServeRequest::new(b"ACGTACGTACGT".to_vec(), 2));
+        let mut first_token_seen = false;
+        let mut decode_finished = false;
+        while !s.is_idle() {
+            for e in s.tick() {
+                match e {
+                    StreamEvent::Token { id, .. } if id == h_late.id() => {
+                        if !first_token_seen {
+                            assert!(
+                                !decode_finished,
+                                "late stream starved until the decode stream retired"
+                            );
+                            first_token_seen = true;
+                        }
+                    }
+                    StreamEvent::Finished { id, .. } if id == h_decode.id() => {
+                        decode_finished = true;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        assert!(first_token_seen);
+        let done = s.take_finished();
+        assert_eq!(done.len(), 2);
+    }
+
+    #[test]
+    fn burst_admission_respects_projected_budget() {
+        // Admission charges *committed* bytes (projection reserved until
+        // prefill realizes it), not realized bytes: a burst of arrivals
+        // whose states are still empty must not flood the arena. MHA-only
+        // layout (d = 16): projected footprint at a 6-token prompt is
+        // 2*6*16*4 = 768 bytes/stream, so a 2100-byte budget fits two
+        // streams (1536) but not three (2304) — and with max_new = 2 the
+        // realized KV never exceeds the budget either, so a correct gate
+        // produces zero preemptions.
+        let mut rng = Rng::new(11);
+        let m = HybridLm::new(&mut rng, 16, 2, &["MHA"]).unwrap();
+        let mut s = BatchScheduler::new(&m, Sampler::Greedy, 8, 2100, 3);
+        for _ in 0..4 {
+            s.submit(ServeRequest::new(b"ACGTAC".to_vec(), 2));
+        }
+        let done = s.run_to_completion();
+        assert_eq!(done.len(), 4);
+        assert_eq!(
+            s.stats.max_concurrent, 2,
+            "burst flooded the arena past the byte budget"
+        );
+        assert_eq!(s.stats.preemptions, 0, "admit->prefill->evict thrash");
+        for f in &done {
+            assert_eq!(f.output.len(), 2);
+        }
     }
 
     #[test]
@@ -416,14 +910,21 @@ mod tests {
         let run = |budget: usize| {
             let mut s = BatchScheduler::new(&m, Sampler::Greedy, 4, budget, 3);
             for p in [b"ACGTAC".to_vec(), b"CCGGTT".to_vec(), b"TACGTA".to_vec()] {
-                s.submit(p, 8);
+                s.submit(ServeRequest::new(p, 8));
             }
-            (s.run(), s.stats)
+            (s.run_to_completion(), s.stats)
         };
         let (free, free_stats) = run(usize::MAX);
         let (tight, tight_stats) = run(4000);
         assert_eq!(free_stats.preemptions, 0);
+        assert_eq!(free_stats.restored_prefill_tokens, 0);
         assert!(tight_stats.preemptions > 0, "budget never forced eviction");
+        // Stats split: first-admission prefill counts exactly the three
+        // prompts in both runs; replayed history lands in the restored
+        // counter instead of inflating prefill_tokens.
+        assert_eq!(free_stats.prefill_tokens, 18);
+        assert_eq!(tight_stats.prefill_tokens, 18);
+        assert!(tight_stats.restored_prefill_tokens > 0);
         assert_eq!(free.len(), 3);
         assert_eq!(tight.len(), 3);
         for (a, b) in free.iter().zip(&tight) {
@@ -437,10 +938,181 @@ mod tests {
         let mut rng = Rng::new(3);
         let m = model(&mut rng);
         let mut s = BatchScheduler::new(&m, Sampler::Greedy, 2, usize::MAX, 0);
-        s.submit(b"ACGT".to_vec(), 0);
-        let done = s.run();
+        s.submit(ServeRequest::new(b"ACGT".to_vec(), 0));
+        let done = s.run_to_completion();
         assert_eq!(done.len(), 1);
         assert!(done[0].output.is_empty());
         assert_eq!(done[0].prompt, b"ACGT".to_vec());
+        assert_eq!(done[0].reason, FinishReason::MaxNew);
+        assert!(done[0].ttft_secs.is_none(), "no token was ever produced");
+    }
+
+    #[test]
+    fn event_stream_follows_the_lifecycle() {
+        // Single stream, chunked: Admitted, then PrefillProgress chunks
+        // with a monotone cursor, then exactly max_new Tokens, then
+        // Finished — in that order.
+        let mut rng = Rng::new(4);
+        let m = model(&mut rng);
+        let cfg = TickConfig { prefill_chunk: 3, tick_budget: 64 };
+        let mut s =
+            BatchScheduler::with_config(&m, Sampler::Greedy, 2, usize::MAX, 5, cfg);
+        let h = s.submit(ServeRequest::new(b"ACGTACGTAC".to_vec(), 4));
+        let mut events = Vec::new();
+        while !s.is_idle() {
+            events.extend(s.tick());
+        }
+        assert_eq!(events[0], StreamEvent::Admitted { id: h.id(), restored: false });
+        let progress: Vec<(usize, usize)> = events
+            .iter()
+            .filter_map(|e| match e {
+                StreamEvent::PrefillProgress { done, total, .. } => Some((*done, *total)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(progress, vec![(3, 10), (6, 10), (9, 10), (10, 10)]);
+        let tokens: Vec<usize> = events
+            .iter()
+            .filter_map(|e| match e {
+                StreamEvent::Token { index, .. } => Some(*index),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tokens, vec![0, 1, 2, 3]);
+        assert_eq!(
+            events.last(),
+            Some(&StreamEvent::Finished { id: h.id(), reason: FinishReason::MaxNew })
+        );
+        let done = s.take_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].output.len(), 4);
+    }
+
+    #[test]
+    fn run_to_completion_matches_manual_tick_loop() {
+        let mut rng = Rng::new(6);
+        let m = model(&mut rng);
+        let prompts: Vec<(Vec<u8>, usize)> =
+            vec![(b"ACGTACGT".to_vec(), 6), (b"TTGACA".to_vec(), 9)];
+        let cfg = TickConfig { prefill_chunk: 4, tick_budget: 6 };
+        let auto = {
+            let mut s = BatchScheduler::with_config(
+                &m,
+                Sampler::TopK { k: 8, temperature: 1.0 },
+                2,
+                usize::MAX,
+                19,
+                cfg,
+            );
+            submit_all(&mut s, &prompts);
+            s.run_to_completion()
+        };
+        let manual = {
+            let mut s = BatchScheduler::with_config(
+                &m,
+                Sampler::TopK { k: 8, temperature: 1.0 },
+                2,
+                usize::MAX,
+                19,
+                cfg,
+            );
+            submit_all(&mut s, &prompts);
+            while !s.is_idle() {
+                s.tick();
+            }
+            let mut out = s.take_finished();
+            out.sort_by_key(|f| f.id);
+            out
+        };
+        assert_eq!(auto.len(), manual.len());
+        for (a, b) in auto.iter().zip(&manual) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output);
+        }
+    }
+
+    #[test]
+    fn cancel_takes_effect_in_every_phase() {
+        let mut rng = Rng::new(7);
+        let m = model(&mut rng);
+        let cfg = TickConfig { prefill_chunk: 4, tick_budget: 5 };
+        let mut s =
+            BatchScheduler::with_config(&m, Sampler::Greedy, 3, usize::MAX, 23, cfg);
+        // Stream 0: long prompt, cancelled mid-prefill (prompt 32 = 8
+        // chunks of 4; the tick budget admits ~1 chunk per tick once
+        // decodes join).
+        let h_prefill = s.submit(ServeRequest::new(vec![b'A'; 32], 5));
+        // Stream 1: short prompt, cancelled mid-decode.
+        let h_decode = s.submit(ServeRequest::new(b"ACGT".to_vec(), 50));
+        // Stream 2: never admitted (max_active = 3 admits it, so use a
+        // separate scheduler-level check: cancel before its first tick).
+        let h_queued = s.submit(ServeRequest::new(b"TTGA".to_vec(), 5));
+        h_queued.cancel();
+        let ev1 = s.tick();
+        assert!(ev1.contains(&StreamEvent::Cancelled { id: h_queued.id() }));
+        // Let stream 1 produce a few tokens while stream 0 is still
+        // prefilling, then cancel both. Count every token stream 1 emitted
+        // (including any from the first tick) so the partial-output check
+        // below is exact.
+        let mut decode_tokens = 0;
+        let count = |evs: &[StreamEvent], id: usize| {
+            evs.iter()
+                .filter(|e| matches!(e, StreamEvent::Token { id: tid, .. } if *tid == id))
+                .count()
+        };
+        decode_tokens += count(&ev1, h_decode.id());
+        for _ in 0..6 {
+            decode_tokens += count(&s.tick(), h_decode.id());
+        }
+        assert!(decode_tokens > 0, "short stream never decoded");
+        assert!(
+            !h_prefill.is_cancelled() && s.active_streams() == 2,
+            "both streams should still be active"
+        );
+        h_prefill.cancel();
+        h_decode.cancel();
+        let ev = s.tick();
+        assert!(ev.contains(&StreamEvent::Cancelled { id: h_prefill.id() }));
+        assert!(ev.contains(&StreamEvent::Cancelled { id: h_decode.id() }));
+        assert!(s.is_idle());
+        let mut done = s.take_finished();
+        done.sort_by_key(|f| f.id);
+        assert_eq!(done.len(), 3);
+        assert_eq!(s.stats.cancelled, 3);
+        // Mid-prefill cancel: no output, no TTFT.
+        assert_eq!(done[0].reason, FinishReason::Cancelled);
+        assert!(done[0].output.is_empty());
+        assert!(done[0].ttft_secs.is_none());
+        // Mid-decode cancel: partial output survives.
+        assert_eq!(done[1].reason, FinishReason::Cancelled);
+        assert_eq!(done[1].output.len(), decode_tokens);
+        assert!(done[1].ttft_secs.is_some());
+        // Queued cancel: nothing was ever computed.
+        assert!(done[2].output.is_empty());
+    }
+
+    #[test]
+    fn admit_outcome_reports_reason() {
+        let mut rng = Rng::new(10);
+        let m = model(&mut rng);
+        let mut s = BatchScheduler::new(&m, Sampler::Greedy, 1, usize::MAX, 1);
+        assert_eq!(s.admit_one(false), AdmitOutcome::QueueEmpty);
+        s.submit(ServeRequest::new(b"ACGT".to_vec(), 2));
+        s.submit(ServeRequest::new(b"TTGA".to_vec(), 2));
+        assert_eq!(
+            s.admit_one(false),
+            AdmitOutcome::Admitted { id: 0, restored: false }
+        );
+        assert_eq!(s.admit_one(false), AdmitOutcome::AtMaxActive);
+        // Preemption blocks non-forced admission even after capacity frees.
+        s.preempt_newest(&mut Vec::new());
+        assert_eq!(s.admit_one(false), AdmitOutcome::Blocked);
+        assert_eq!(s.stats.preemptions, 1);
+        // A byte budget of zero can never fit a projected footprint.
+        let mut t = BatchScheduler::new(&m, Sampler::Greedy, 4, 0, 1);
+        t.submit(ServeRequest::new(b"ACGT".to_vec(), 2));
+        assert_eq!(t.admit_one(false), AdmitOutcome::OverStateBudget);
+        // Force admission overrides every gate.
+        assert!(matches!(t.admit_one(true), AdmitOutcome::Admitted { .. }));
     }
 }

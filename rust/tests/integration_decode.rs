@@ -6,7 +6,9 @@
 //! correctness backbone of the serving engine.
 
 use sh2::ops::{all_operators, DecodeState, SeqMixer};
-use sh2::serve::{BatchScheduler, HybridLm, Sampler};
+use sh2::serve::{
+    BatchScheduler, HybridLm, Sampler, ServeRequest, StreamEvent, TickConfig,
+};
 use sh2::tensor::Tensor;
 use sh2::util::rng::Rng;
 
@@ -192,9 +194,9 @@ fn batched_scheduler_run_matches_serial_run_end_to_end() {
             11,
         );
         for (p, n) in &prompts {
-            s.submit(p.clone(), *n);
+            s.submit(ServeRequest::new(p.clone(), *n));
         }
-        (s.run(), s.stats)
+        (s.run_to_completion(), s.stats)
     };
     let (serial, _) = run(1);
     let (batched, stats) = run(4);
@@ -231,6 +233,151 @@ fn fixed_state_operators_stay_constant_size() {
 }
 
 #[test]
+fn long_prompt_prefills_across_ticks_while_others_decode() {
+    // The acceptance shape of continuous batching (DESIGN.md §14): a long
+    // prompt (>= 8x the chunk size) must amortize its prefill over many
+    // ticks while already-admitted streams keep decoding — i.e. the long
+    // stream's PrefillProgress events interleave, tick by tick, with the
+    // short streams' Token events instead of stalling them.
+    let mut rng = Rng::new(33);
+    let m = HybridLm::new(&mut rng, D, HEADS, &["SE", "MR", "MHA", "LI"]).unwrap();
+    let chunk = 8;
+    let long_prompt = vec![b'A'; 8 * chunk + 3]; // 67 tokens, 9 chunks
+    let cfg = TickConfig { prefill_chunk: chunk, tick_budget: chunk + 4 };
+    let mut s = BatchScheduler::with_config(
+        &m,
+        Sampler::TopK { k: 8, temperature: 0.9 },
+        4,
+        usize::MAX,
+        21,
+        cfg,
+    );
+    // Two short streams first (they reach the decode phase immediately),
+    // then the long prompt.
+    let h_short_a = s.submit(ServeRequest::new(b"ACGT".to_vec(), 40));
+    let h_short_b = s.submit(ServeRequest::new(b"TTGACA".to_vec(), 40));
+    let h_long = s.submit(ServeRequest::new(long_prompt, 4));
+    // Tick-stamped event log.
+    let mut log: Vec<(usize, StreamEvent)> = Vec::new();
+    let mut tick_no = 0;
+    while !s.is_idle() {
+        tick_no += 1;
+        for e in s.tick() {
+            log.push((tick_no, e));
+        }
+    }
+    let long_prefill_ticks: Vec<usize> = log
+        .iter()
+        .filter_map(|(t, e)| match e {
+            StreamEvent::PrefillProgress { id, .. } if *id == h_long.id() => Some(*t),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        long_prefill_ticks.len() >= 8,
+        "long prompt should take >= 8 chunks, took {}",
+        long_prefill_ticks.len()
+    );
+    assert!(
+        long_prefill_ticks.last().unwrap() > long_prefill_ticks.first().unwrap(),
+        "prefill must span multiple ticks"
+    );
+    // Interleave: while the long stream was mid-prefill, the short streams
+    // produced tokens in those same ticks.
+    let span: std::ops::RangeInclusive<usize> =
+        *long_prefill_ticks.first().unwrap()..=*long_prefill_ticks.last().unwrap();
+    let short_tokens_during = log
+        .iter()
+        .filter(|(t, e)| {
+            span.contains(t)
+                && matches!(e, StreamEvent::Token { id, .. }
+                    if *id == h_short_a.id() || *id == h_short_b.id())
+        })
+        .count();
+    assert!(
+        short_tokens_during >= 8,
+        "short streams decoded only {short_tokens_during} tokens while the \
+         long prompt prefilled — head-of-line blocking is back"
+    );
+    // And everyone still finishes with the right lengths.
+    let done = s.take_finished();
+    assert_eq!(done.len(), 3);
+    for f in &done {
+        let want = if f.id == h_long.id() { 4 } else { 40 };
+        assert_eq!(f.output.len(), want, "stream {}", f.id);
+    }
+}
+
+#[test]
+fn chunk_size_never_changes_scan_family_outputs() {
+    // For MHA + linear-attention layouts every chunked-prefill boundary is
+    // bit-exact (scan continuation / step fallback), so the SAME
+    // submissions must produce byte-identical outputs under wildly mixed
+    // chunk configurations — including whole-prompt chunks.
+    let mut rng = Rng::new(34);
+    let m = HybridLm::new(&mut rng, D, HEADS, &["MHA", "LA", "SSD"]).unwrap();
+    let prompts: Vec<(Vec<u8>, usize)> = vec![
+        (b"ACGTGGCCAATTACGTACGTGGCCAATTACGT".to_vec(), 10),
+        (b"TT".to_vec(), 6),
+        (b"GATTACAGATTACA".to_vec(), 8),
+    ];
+    let run = |cfg: TickConfig| {
+        let mut s = BatchScheduler::with_config(
+            &m,
+            Sampler::TopK { k: 16, temperature: 0.9 },
+            3,
+            usize::MAX,
+            55,
+            cfg,
+        );
+        for (p, n) in &prompts {
+            s.submit(ServeRequest::new(p.clone(), *n));
+        }
+        s.run_to_completion()
+    };
+    let configs = [
+        TickConfig::default(),
+        TickConfig { prefill_chunk: 3, tick_budget: 5 },
+        TickConfig { prefill_chunk: 7, tick_budget: 64 },
+        TickConfig { prefill_chunk: 1, tick_budget: 2 },
+    ];
+    let reference = run(configs[0]);
+    assert_eq!(reference.len(), prompts.len());
+    for cfg in &configs[1..] {
+        let got = run(*cfg);
+        for (a, b) in reference.iter().zip(&got) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output, "stream {} under {cfg:?}", a.id);
+        }
+    }
+}
+
+#[test]
+fn state_bytes_at_is_exact_for_every_operator() {
+    // The scheduler's admission gate charges projected footprints; the
+    // projection must equal the realized bytes at every position for all
+    // 8 operators (growing KV, saturating FIR windows, fixed scans).
+    let mut rng = Rng::new(35);
+    let ops = all_operators(&mut rng, D, HEADS);
+    for op in &ops {
+        let mut st = op.state();
+        assert_eq!(op.state_bytes_at(0), st.bytes(), "{} at 0", op.name());
+        let mut pos = 0;
+        for take in [1usize, 2, 5, 25, 150] {
+            let x = Tensor::randn(&mut rng, &[take, D], 1.0);
+            op.prefill(&mut st, &x);
+            pos += take;
+            assert_eq!(
+                op.state_bytes_at(pos),
+                st.bytes(),
+                "{} at pos {pos}",
+                op.name()
+            );
+        }
+    }
+}
+
+#[test]
 fn served_generation_is_reproducible_end_to_end() {
     // Full stack: model + sampler + scheduler, twice, same bytes out.
     let build = || {
@@ -240,9 +387,9 @@ fn served_generation_is_reproducible_end_to_end() {
     let run = |m: &HybridLm| {
         let mut s =
             BatchScheduler::new(m, Sampler::TopK { k: 16, temperature: 0.9 }, 2, 1 << 20, 11);
-        s.submit(b"ACGTGGCCAATT".to_vec(), 16);
-        s.submit(b"TTGACA".to_vec(), 16);
-        s.run()
+        s.submit(ServeRequest::new(b"ACGTGGCCAATT".to_vec(), 16));
+        s.submit(ServeRequest::new(b"TTGACA".to_vec(), 16));
+        s.run_to_completion()
     };
     let (ma, mb) = (build(), build());
     let (a, b) = (run(&ma), run(&mb));
