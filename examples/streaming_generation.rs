@@ -163,6 +163,9 @@ fn main() {
                 StreamEvent::Preempted { id } => {
                     println!("  [tick {tick_no}] #{id} preempted")
                 }
+                StreamEvent::Rejected { id } => {
+                    println!("  [tick {tick_no}] #{id} rejected")
+                }
             }
         }
     }

@@ -9,6 +9,8 @@
 //!   recall      needle-in-a-haystack recall evaluation (Fig B.2, pjrt)
 //!   generate    stream tokens from a multi-hybrid via the decode-state API
 //!   serve       multi-stream batch-scheduled generation demo
+//!   replay      generate or load an sh2-trace-v1 workload and replay it
+//!               through the scheduler under one or all policies
 //!   tune        calibrate the conv autotuner and write the plan cache
 //!   bench-gate  compare a bench JSON against a baseline (CI regression gate)
 //!   cost-model  Fig 2.2 / B.3 iteration-time + MFU estimates at 7B/40B
@@ -36,7 +38,8 @@ use sh2::costmodel::{iteration_time, ArchSpec, ClusterConfig, Efficiency};
 use sh2::runtime::Engine;
 use sh2::runtime::ModelMeta;
 use sh2::serve::{
-    BatchScheduler, HybridLm, LmConfig, Sampler, ServeRequest, StreamEvent, TickConfig,
+    BatchScheduler, HybridLm, LmConfig, PolicyKind, Sampler, ServeRequest, StreamEvent,
+    TickConfig,
 };
 use sh2::train::checkpoint::{load_lm, save_lm};
 use sh2::train::tasks::TaskCase;
@@ -55,6 +58,7 @@ fn main() {
         Some("recall") => cmd_recall(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("replay") => cmd_replay(&args),
         Some("tune") => cmd_tune(&args),
         Some("bench-gate") => cmd_bench_gate(&args),
         Some("cost-model") => cmd_cost_model(&args),
@@ -72,7 +76,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|tune|bench-gate|cost-model|cp-demo|data-gen|inspect> [--options]
+const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|replay|tune|bench-gate|cost-model|cp-demo|data-gen|inspect> [--options]
   common: --artifacts DIR (default: artifacts) --config NAME (default: tiny)
   train:  --steps N --width D --heads H --layout SE-MR-MHA-LI --seq-len L --batch B
           --lr F --seed S --log-every K --eval-every K --save PATH --metrics PATH
@@ -92,12 +96,26 @@ const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|tu
   serve:  --streams N --prompt-len L --max-new N --max-active A --budget-kb KB
           --prefill-chunk C --tick-budget T (0 = unlimited: whole-prompt
           prefill at admission) --events (print the lifecycle event stream)
+          --policy lru|priority|deadline (admission/eviction policy)
           --width D --heads H --layout ... --top-k K --temp T --seed S
           --load CKPT --plan-cache PATH
           (continuous batching: each tick decodes all active streams in one
           step_batch call and spends the remaining token budget on prefill
           chunks; prints an sh2-serve-v1 JSON summary line with tokens/s,
           mean batch occupancy, TTFT p50/p90, prefill/restore token split)
+  replay: --trace PATH (sh2-trace-v1) or generate one with
+          --gen poisson|bursty --requests N --seed S --mean-gap F --burst B
+          --alpha 1|2 --prompt-lo L --prompt-hi H --max-new-lo L --max-new-hi H
+          --prefix-groups G --prefix-len L --prefix-frac F
+          --storm-tick T --storm-frac F (0 = no cancel storm)
+          --tiers N --deadline-frac F --slack F --save-trace PATH
+          --policy lru|priority|deadline|all (default: all)
+          --max-active A --budget-kb KB (0 = unlimited) --prefill-chunk C
+          --tick-budget T --sched-seed S --width D --heads H --layout ...
+          --top-k K --temp T --load CKPT --plan-cache PATH
+          (tick-based deterministic replay: per-policy TTFT/TBT percentiles,
+          goodput, preemptions, and an event-stream hash; one sh2-replay-v1
+          JSON line per policy)
   tune:   --out PATH (default: plan_cache.json) --widths D1,D2 --quick
   bench-gate: --current PATH --baseline PATH --tolerance R (default: 2.0)
   cost-model: --scale 7b|40b
@@ -207,10 +225,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let show_events = args.has_flag("events");
     let sampler = sampler_from(args);
+    let policy = parse_policy(args.get_or("policy", "lru"))?;
     model.warm_plans(&[prompt_len.max(1), cfg.prefill_chunk.min(prompt_len.max(1))]);
 
-    let mut sched =
-        BatchScheduler::with_config(&model, sampler, max_active, budget, seed, cfg);
+    let mut sched = BatchScheduler::with_policy(
+        &model,
+        sampler,
+        max_active,
+        budget,
+        seed,
+        cfg,
+        policy.build(),
+    );
     let mut gen = GenomeGenerator::new(seed ^ 0x5EED, GenomeConfig::default());
     for _ in 0..n_streams {
         sched.submit(ServeRequest::new(gen.generate(prompt_len), max_new));
@@ -243,6 +269,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     StreamEvent::Cancelled { id } => {
                         println!("[tick {n_ticks}] #{id} cancelled")
                     }
+                    StreamEvent::Rejected { id } => {
+                        println!("[tick {n_ticks}] #{id} rejected")
+                    }
                 }
             }
         }
@@ -256,9 +285,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut t = Table::new(
         &format!(
             "serve: {} streams x ({prompt_len} prompt + {max_new} new), \
-             max_active={max_active}, budget={} KB, layout {}",
+             max_active={max_active}, budget={} KB, policy {}, layout {}",
             n_streams,
             budget / 1024,
+            sched.policy_name(),
             model.layout_string()
         ),
         &["stream", "prompt tail", "output"],
@@ -298,6 +328,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let summary = Json::obj(vec![
         ("schema", Json::str("sh2-serve-v1")),
         ("streams", Json::num(n_streams as f64)),
+        ("policy", Json::str(policy.name())),
         ("max_active", Json::num(max_active as f64)),
         ("prefill_chunk", Json::num(cfg.prefill_chunk.min(prompt_len) as f64)),
         ("ticks", Json::num(n_ticks as f64)),
@@ -313,6 +344,144 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("elapsed_s", Json::num(secs)),
     ]);
     println!("{summary}");
+    Ok(())
+}
+
+fn parse_policy(s: &str) -> Result<PolicyKind> {
+    PolicyKind::parse(s)
+        .ok_or_else(|| anyhow!("unknown --policy '{s}' (lru|priority|deadline)"))
+}
+
+/// Trace replay: load or generate an `sh2-trace-v1` workload and drive it
+/// through the continuous-batching scheduler under one or all policies,
+/// reporting deterministic tick-based latency/goodput records.
+fn cmd_replay(args: &Args) -> Result<()> {
+    use sh2::serve::workload::{
+        self, Arrival, CancelStormCfg, LenDist, ReplayCfg, SharedPrefixCfg, SloCfg,
+        Trace, WorkloadCfg,
+    };
+
+    load_plan_cache(args);
+    let trace = match args.get("trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("read {path}: {e}"))?;
+            Trace::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?
+        }
+        None => {
+            let kind = args.get_or("gen", "poisson").to_string();
+            let seed = args.get_usize("seed", 0) as u64;
+            let requests = args.get_usize("requests", 32);
+            let mean_gap = args.get_f64("mean-gap", 2.0);
+            let arrival = match kind.as_str() {
+                "poisson" => Arrival::Poisson { mean_gap },
+                "bursty" => {
+                    Arrival::Bursty { burst: args.get_usize("burst", 4), mean_gap }
+                }
+                other => bail!("unknown --gen '{other}' (poisson|bursty)"),
+            };
+            let alpha = args.get_f64("alpha", 2.0);
+            if alpha != 1.0 && alpha != 2.0 {
+                bail!("--alpha must be 1 or 2 (reproducible bounded-Pareto tails)");
+            }
+            let prefix_frac = args.get_f64("prefix-frac", 0.5);
+            let storm_tick = args.get_usize("storm-tick", 0);
+            let cfg = WorkloadCfg {
+                name: format!("{kind}-{requests}x{seed}"),
+                seed,
+                requests,
+                arrival,
+                prompt_len: LenDist::Pareto {
+                    alpha,
+                    lo: args.get_usize("prompt-lo", 8),
+                    hi: args.get_usize("prompt-hi", 96),
+                },
+                max_new: LenDist::Pareto {
+                    alpha,
+                    lo: args.get_usize("max-new-lo", 4),
+                    hi: args.get_usize("max-new-hi", 48),
+                },
+                shared_prefix: if prefix_frac > 0.0 {
+                    Some(SharedPrefixCfg {
+                        groups: args.get_usize("prefix-groups", 4),
+                        prefix_len: args.get_usize("prefix-len", 24),
+                        frac: prefix_frac,
+                    })
+                } else {
+                    None
+                },
+                cancel_storm: if storm_tick > 0 {
+                    Some(CancelStormCfg {
+                        at_tick: storm_tick,
+                        frac: args.get_f64("storm-frac", 0.3),
+                    })
+                } else {
+                    None
+                },
+                slo: Some(SloCfg {
+                    tiers: args.get_usize("tiers", 3) as u8,
+                    deadline_frac: args.get_f64("deadline-frac", 0.5),
+                    slack: args.get_f64("slack", 3.0),
+                }),
+            };
+            workload::generate(&cfg)
+        }
+    };
+    if let Some(path) = args.get("save-trace") {
+        std::fs::write(path, format!("{}\n", trace.to_json()))?;
+        println!("trace -> {path}");
+    }
+
+    let policies: Vec<PolicyKind> = match args.get_or("policy", "all") {
+        "all" => PolicyKind::ALL.to_vec(),
+        s => vec![parse_policy(s)?],
+    };
+    let mut rng = Rng::new(args.get_usize("seed", 0) as u64 ^ 0xC0FFEE);
+    let model = build_lm(args, &mut rng)?;
+    let unlimited = |v: usize| if v == 0 { usize::MAX } else { v };
+    let rcfg = ReplayCfg {
+        max_active: args.get_usize("max-active", 4),
+        budget_bytes: unlimited(args.get_usize("budget-kb", 0).saturating_mul(1024)),
+        tick: TickConfig {
+            prefill_chunk: unlimited(args.get_usize("prefill-chunk", 16)),
+            tick_budget: unlimited(args.get_usize("tick-budget", 32)),
+        },
+        seed: args.get_usize("sched-seed", 7) as u64,
+    };
+    let sampler = sampler_from(args);
+    let longest = trace.requests.iter().map(|r| r.prompt.len()).max().unwrap_or(1);
+    model.warm_plans(&[rcfg.tick.prefill_chunk.min(longest.max(1))]);
+
+    let mut t = Table::new(
+        &format!(
+            "replay {}: {} requests, {} cancels, max_active={}, layout {}",
+            trace.name,
+            trace.requests.len(),
+            trace.cancels.len(),
+            rcfg.max_active,
+            model.layout_string()
+        ),
+        &["policy", "ticks", "ttft p50/p90", "tbt p50", "goodput", "fin/cxl/rej", "preempt"],
+    );
+    let mut lines = Vec::new();
+    for kind in policies {
+        let r = workload::replay(&model, &trace, sampler, kind, &rcfg);
+        t.row(vec![
+            r.policy.to_string(),
+            format!("{}", r.total_ticks),
+            format!("{:.0}/{:.0}", r.ttft_ticks.p50, r.ttft_ticks.p90),
+            format!("{:.2}", r.tbt_ticks.p50),
+            format!("{:.3} tok/tick", r.goodput),
+            format!("{}/{}/{}", r.finished, r.cancelled, r.rejected),
+            format!("{}", r.preemptions),
+        ]);
+        lines.push(r.to_json().to_string());
+    }
+    t.print();
+    // One machine-readable sh2-replay-v1 line per policy, for CI scrapers.
+    for line in lines {
+        println!("{line}");
+    }
     Ok(())
 }
 

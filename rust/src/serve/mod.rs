@@ -44,12 +44,22 @@
 //! ```
 
 pub mod model;
+pub mod policy;
 pub mod sampler;
 pub mod scheduler;
+pub mod workload;
 
 pub use model::{HybridLm, LmConfig, LmState};
+pub use policy::{
+    AdmitDecision, Candidate, DeadlinePolicy, LruPolicy, PolicyKind, PriorityPolicy,
+    SchedCtx, SchedPolicy, StreamView,
+};
 pub use sampler::Sampler;
 pub use scheduler::{
     AdmitOutcome, BatchScheduler, FinishReason, FinishedStream, RequestHandle,
     ServeRequest, ServeStats, StreamEvent, TickConfig,
+};
+pub use workload::{
+    Arrival, CancelStormCfg, LenDist, ReplayCfg, ReplayReport, SharedPrefixCfg, SloCfg,
+    Trace, TraceCancel, TraceRequest, WorkloadCfg,
 };

@@ -1,0 +1,392 @@
+//! Pluggable scheduling policies (DESIGN.md §15): the admission and
+//! eviction decisions of [`crate::serve::BatchScheduler`] behind a
+//! [`SchedPolicy`] trait, so the same continuous-batching engine can be
+//! replayed under different service disciplines and measured on the same
+//! traces (`benches/serve_trace.rs`).
+//!
+//! The scheduler keeps its *mechanism* — capacity gates, committed-byte
+//! accounting, chunked prefill, the preemption loop — and delegates three
+//! *decisions* to the policy:
+//!
+//! 1. [`SchedPolicy::select_queued`]: which queued stream to consider next
+//!    (FIFO, priority tiers, earliest-deadline-first);
+//! 2. [`SchedPolicy::admit`]: admit it, or reject it outright (terminal
+//!    [`crate::serve::FinishReason::Rejected`]) — the SLO-aware gate lives
+//!    here, using the byte projections ([`Candidate::projected_bytes_done`],
+//!    from `HybridLm::state_bytes_at`) and the tick token budget to estimate
+//!    whether the request can finish before its deadline at all;
+//! 3. [`SchedPolicy::evict_victim`]: which active stream to preempt when
+//!    the arena is over its byte budget.
+//!
+//! Policies see immutable [`StreamView`] snapshots, never the scheduler's
+//! internals, and must be *deterministic pure functions* of their inputs:
+//! trace replay (DESIGN.md §15) relies on the same (trace, policy, seed)
+//! triple producing byte-identical event streams run after run.
+
+use super::scheduler::TickConfig;
+
+/// Immutable snapshot of one stream's scheduling-relevant metadata, as
+/// seen by a policy (queued or active).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamView {
+    pub id: usize,
+    /// Higher wins for [`PriorityPolicy`] (admission first, eviction last).
+    pub priority: u8,
+    /// Absolute tick this request must *finish* by, if it carries an SLO.
+    pub deadline: Option<usize>,
+    /// Prompt plus everything generated so far (the replay length a
+    /// restore would have to prefill).
+    pub history_len: usize,
+    pub prompt_len: usize,
+    pub generated: usize,
+    pub max_new: usize,
+    /// True once preempted: its next admission replays history.
+    pub restored: bool,
+    /// Tick counter value when the request was submitted.
+    pub submit_tick: usize,
+}
+
+impl StreamView {
+    /// Tokens still to generate.
+    pub fn remaining_new(&self) -> usize {
+        self.max_new.saturating_sub(self.generated)
+    }
+}
+
+/// The admission candidate: its view plus the model's state-byte
+/// projections (precomputed by the scheduler so the trait stays
+/// model-independent and object-safe).
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub view: StreamView,
+    /// `state_bytes_at(history_len)` — the footprint admission reserves.
+    pub projected_bytes_now: usize,
+    /// `state_bytes_at(history_len + remaining_new)` — the footprint at
+    /// natural completion (what the stream will grow to if never evicted).
+    pub projected_bytes_done: usize,
+}
+
+/// Scheduler-side context handed to every policy decision.
+pub struct SchedCtx<'a> {
+    /// Current tick number (ticks are 1-based; 0 = before the first tick).
+    pub tick: usize,
+    /// Arena bytes currently committed (max of realized and projected per
+    /// active stream — see `BatchScheduler::committed_state_bytes`).
+    pub committed_bytes: usize,
+    pub budget_bytes: usize,
+    /// Active streams, in admission order (newest last).
+    pub active: &'a [StreamView],
+    pub cfg: TickConfig,
+}
+
+/// Verdict on an admission candidate. `Reject` is terminal: the request
+/// leaves the scheduler with [`crate::serve::FinishReason::Rejected`] and
+/// never consumes model work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitDecision {
+    Admit,
+    Reject,
+}
+
+/// Admission/eviction policy. Default methods reproduce the pre-policy
+/// scheduler exactly: FIFO admission, nothing rejected, newest-admitted
+/// evicted first (the LRU-style discipline [`LruPolicy`] names).
+pub trait SchedPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Index (into `queue`, front first) of the stream to consider for
+    /// admission next. Must return a valid index for a non-empty queue.
+    fn select_queued(&self, _queue: &[StreamView], _ctx: &SchedCtx) -> usize {
+        0
+    }
+
+    /// Admit or reject the selected candidate. Called before the
+    /// scheduler's own capacity gates, and also on forced admissions (an
+    /// empty arena), so a policy's rejections are unconditional.
+    fn admit(&self, _cand: &Candidate, _ctx: &SchedCtx) -> AdmitDecision {
+        AdmitDecision::Admit
+    }
+
+    /// Index (into `active`, admission order) of the stream to evict when
+    /// the arena is over its byte budget. Must return a valid index for a
+    /// non-empty slice.
+    fn evict_victim(&self, active: &[StreamView], _ctx: &SchedCtx) -> usize {
+        active.len() - 1
+    }
+}
+
+/// The default discipline: FIFO admission, no rejection, evict the most
+/// recently admitted stream (it has the least sunk prefill work).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LruPolicy;
+
+impl SchedPolicy for LruPolicy {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+}
+
+/// Priority tiers: the highest-priority queued stream is admitted first
+/// (FIFO within a tier), and under memory pressure the lowest-priority
+/// active stream is evicted (newest within a tier, to preserve the most
+/// sunk prefill work).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PriorityPolicy;
+
+impl SchedPolicy for PriorityPolicy {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn select_queued(&self, queue: &[StreamView], _ctx: &SchedCtx) -> usize {
+        let mut best = 0;
+        for (i, v) in queue.iter().enumerate().skip(1) {
+            if v.priority > queue[best].priority {
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn evict_victim(&self, active: &[StreamView], _ctx: &SchedCtx) -> usize {
+        let mut victim = active.len() - 1;
+        // Strict `<` while scanning back-to-front keeps the NEWEST stream
+        // of the lowest tier as the victim.
+        for (i, v) in active.iter().enumerate().rev().skip(1) {
+            if v.priority < active[victim].priority {
+                victim = i;
+            }
+        }
+        victim
+    }
+}
+
+/// Deadline/SLO-aware discipline: earliest-deadline-first admission order,
+/// rejection of requests that cannot meet their deadline (or can never fit
+/// the arena), and eviction of the stream with the most slack.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeadlinePolicy;
+
+/// Earliest projected tick at which a stream with `history_len` tokens to
+/// (re)prefill and `remaining_new` tokens to generate can finish, starting
+/// from tick `now`, under `cfg`'s token budget. Optimistic: assumes the
+/// stream is admitted immediately on an otherwise idle engine, where one
+/// tick absorbs up to `tick_budget + prefill_chunk - 1` history tokens
+/// (the budget gates *starting* a chunk, so the last chunk of a tick may
+/// overshoot) plus one decode token per tick — so only requests that
+/// would blow their deadline even under ideal service are rejected on it.
+pub fn projected_completion_tick(
+    now: usize,
+    history_len: usize,
+    remaining_new: usize,
+    cfg: &TickConfig,
+) -> usize {
+    let per_tick = cfg
+        .tick_budget
+        .saturating_add(cfg.prefill_chunk.saturating_sub(1))
+        .max(1);
+    let prefill_ticks = history_len.div_ceil(per_tick);
+    // The handoff token arrives with the final prefill chunk, so a stream
+    // that prefills only needs `remaining_new - 1` further decode ticks.
+    let decode_ticks = if remaining_new == 0 {
+        0
+    } else if prefill_ticks > 0 {
+        remaining_new - 1
+    } else {
+        remaining_new
+    };
+    now + prefill_ticks + decode_ticks
+}
+
+impl SchedPolicy for DeadlinePolicy {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn select_queued(&self, queue: &[StreamView], _ctx: &SchedCtx) -> usize {
+        let key = |v: &StreamView| v.deadline.unwrap_or(usize::MAX);
+        let mut best = 0;
+        for (i, v) in queue.iter().enumerate().skip(1) {
+            if key(v) < key(&queue[best]) {
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn admit(&self, cand: &Candidate, ctx: &SchedCtx) -> AdmitDecision {
+        // A request whose completed state can never fit the arena budget
+        // would preempt-thrash forever; shed it up front.
+        if cand.projected_bytes_done > ctx.budget_bytes {
+            return AdmitDecision::Reject;
+        }
+        if let Some(d) = cand.view.deadline {
+            let eta = projected_completion_tick(
+                ctx.tick,
+                cand.view.history_len,
+                cand.view.remaining_new(),
+                &ctx.cfg,
+            );
+            if eta > d {
+                return AdmitDecision::Reject;
+            }
+        }
+        AdmitDecision::Admit
+    }
+
+    fn evict_victim(&self, active: &[StreamView], _ctx: &SchedCtx) -> usize {
+        // Most slack loses its slot; no-deadline streams have infinite
+        // slack. Newest wins ties (least sunk work).
+        let key = |v: &StreamView| v.deadline.unwrap_or(usize::MAX);
+        let mut victim = active.len() - 1;
+        for (i, v) in active.iter().enumerate().rev().skip(1) {
+            if key(v) > key(&active[victim]) {
+                victim = i;
+            }
+        }
+        victim
+    }
+}
+
+/// Named policy selector for `sh2 serve --policy` / `sh2 replay --policy`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Lru,
+    Priority,
+    Deadline,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 3] =
+        [PolicyKind::Lru, PolicyKind::Priority, PolicyKind::Deadline];
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "lru" => Some(PolicyKind::Lru),
+            "priority" => Some(PolicyKind::Priority),
+            "deadline" => Some(PolicyKind::Deadline),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Lru => "lru",
+            PolicyKind::Priority => "priority",
+            PolicyKind::Deadline => "deadline",
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn SchedPolicy> {
+        match self {
+            PolicyKind::Lru => Box::new(LruPolicy),
+            PolicyKind::Priority => Box::new(PriorityPolicy),
+            PolicyKind::Deadline => Box::new(DeadlinePolicy),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(id: usize, priority: u8, deadline: Option<usize>) -> StreamView {
+        StreamView {
+            id,
+            priority,
+            deadline,
+            history_len: 8,
+            prompt_len: 8,
+            generated: 0,
+            max_new: 4,
+            restored: false,
+            submit_tick: 0,
+        }
+    }
+
+    fn ctx(cfg: TickConfig) -> SchedCtx<'static> {
+        SchedCtx {
+            tick: 0,
+            committed_bytes: 0,
+            budget_bytes: usize::MAX,
+            active: &[],
+            cfg,
+        }
+    }
+
+    #[test]
+    fn lru_defaults_are_fifo_and_newest_victim() {
+        let p = LruPolicy;
+        let c = ctx(TickConfig::default());
+        let q = [view(0, 0, None), view(1, 3, None)];
+        assert_eq!(p.select_queued(&q, &c), 0);
+        assert_eq!(p.evict_victim(&q, &c), 1);
+    }
+
+    #[test]
+    fn priority_admits_high_first_and_evicts_low_newest() {
+        let p = PriorityPolicy;
+        let c = ctx(TickConfig::default());
+        let q = [view(0, 1, None), view(1, 3, None), view(2, 3, None)];
+        // Highest tier wins; FIFO within the tier (id 1 before id 2).
+        assert_eq!(p.select_queued(&q, &c), 1);
+        let a = [view(0, 2, None), view(1, 0, None), view(2, 0, None), view(3, 2, None)];
+        // Lowest tier loses its slot; newest within the tier (id 2, not 1).
+        assert_eq!(p.evict_victim(&a, &c), 2);
+    }
+
+    #[test]
+    fn deadline_selects_edf_and_evicts_most_slack() {
+        let p = DeadlinePolicy;
+        let c = ctx(TickConfig::default());
+        let q = [view(0, 0, None), view(1, 0, Some(90)), view(2, 0, Some(40))];
+        assert_eq!(p.select_queued(&q, &c), 2);
+        let a = [view(0, 0, Some(10)), view(1, 0, None), view(2, 0, Some(99))];
+        assert_eq!(p.evict_victim(&a, &c), 1, "no-deadline stream has most slack");
+    }
+
+    #[test]
+    fn deadline_rejects_impossible_requests() {
+        let p = DeadlinePolicy;
+        let cfg = TickConfig { prefill_chunk: 8, tick_budget: 8 };
+        let c = SchedCtx {
+            tick: 100,
+            committed_bytes: 0,
+            budget_bytes: 1000,
+            active: &[],
+            cfg,
+        };
+        let mut v = view(0, 0, Some(104));
+        v.history_len = 16; // 2 prefill ticks + 3 more decode ticks > 4 slack
+        let cand =
+            Candidate { view: v, projected_bytes_now: 10, projected_bytes_done: 20 };
+        assert_eq!(p.admit(&cand, &c), AdmitDecision::Reject);
+        // Plenty of slack: admitted.
+        let mut ok = v;
+        ok.deadline = Some(200);
+        let cand = Candidate { view: ok, ..cand };
+        assert_eq!(p.admit(&cand, &c), AdmitDecision::Admit);
+        // Fits the deadline but can never fit the arena: rejected.
+        let cand = Candidate { view: ok, projected_bytes_now: 10, projected_bytes_done: 2000 };
+        assert_eq!(p.admit(&cand, &c), AdmitDecision::Reject);
+    }
+
+    #[test]
+    fn projected_completion_is_optimistic_and_monotone() {
+        let cfg = TickConfig { prefill_chunk: 8, tick_budget: 32 };
+        // 16 history tokens fit one tick's optimistic bandwidth (39); the
+        // handoff token rides the last chunk, 3 decode ticks follow.
+        assert_eq!(projected_completion_tick(10, 16, 4, &cfg), 10 + 1 + 3);
+        // Deep history spills into multiple prefill ticks.
+        assert_eq!(projected_completion_tick(0, 100, 1, &cfg), 3);
+        // Unbounded config: whole prompt in one tick.
+        let free = TickConfig::default();
+        assert_eq!(projected_completion_tick(0, 500, 1, &free), 1);
+        // Zero work finishes now.
+        assert_eq!(projected_completion_tick(7, 0, 0, &cfg), 7);
+        // More history can only push completion later.
+        let a = projected_completion_tick(0, 64, 8, &cfg);
+        let b = projected_completion_tick(0, 256, 8, &cfg);
+        assert!(b >= a);
+    }
+}

@@ -44,22 +44,46 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::model::{HybridLm, LmState};
+use super::policy::{AdmitDecision, Candidate, LruPolicy, SchedCtx, SchedPolicy, StreamView};
 use super::sampler::Sampler;
 use crate::util::rng::Rng;
 
 /// A generation request: prompt bytes plus the number of tokens to
-/// generate. Constructed by the caller and handed to
-/// [`BatchScheduler::submit`], which returns the [`RequestHandle`] used to
-/// identify and cancel the stream.
+/// generate, optionally carrying a priority tier and an SLO deadline for
+/// the pluggable policies (DESIGN.md §15). Constructed by the caller and
+/// handed to [`BatchScheduler::submit`], which returns the
+/// [`RequestHandle`] used to identify and cancel the stream.
 #[derive(Clone, Debug)]
 pub struct ServeRequest {
     pub prompt: Vec<u8>,
     pub max_new: usize,
+    /// Priority tier (higher wins) for [`super::policy::PriorityPolicy`];
+    /// 0 (the default) under the default policy changes nothing.
+    pub priority: u8,
+    /// Deadline in ticks *relative to submission* by which the request
+    /// must finish; [`super::policy::DeadlinePolicy`] rejects requests
+    /// that cannot make it. `None` = no SLO.
+    pub deadline_ticks: Option<usize>,
 }
 
 impl ServeRequest {
     pub fn new(prompt: impl Into<Vec<u8>>, max_new: usize) -> ServeRequest {
-        ServeRequest { prompt: prompt.into(), max_new }
+        ServeRequest {
+            prompt: prompt.into(),
+            max_new,
+            priority: 0,
+            deadline_ticks: None,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> ServeRequest {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline_ticks: usize) -> ServeRequest {
+        self.deadline_ticks = Some(deadline_ticks);
+        self
     }
 }
 
@@ -99,6 +123,9 @@ pub enum FinishReason {
     MaxNew,
     /// Cancelled via its [`RequestHandle`].
     Cancelled,
+    /// Shed by the scheduling policy at admission (e.g. the SLO-aware
+    /// policy projecting a blown deadline); never consumed model work.
+    Rejected,
 }
 
 /// Lifecycle events emitted by [`BatchScheduler::tick`], in the order they
@@ -122,6 +149,9 @@ pub enum StreamEvent {
     Preempted { id: usize },
     /// Terminated by [`RequestHandle::cancel`]; partial output is kept.
     Cancelled { id: usize },
+    /// Shed by the policy at admission ([`FinishReason::Rejected`]); its
+    /// [`FinishedStream`] carries no output.
+    Rejected { id: usize },
 }
 
 /// Typed admission verdict, so the scheduler (and tests) see *why* the
@@ -143,6 +173,10 @@ pub enum AdmitOutcome {
     /// ([`HybridLm::state_bytes_at`] at its history length) exceed the
     /// byte budget.
     OverStateBudget,
+    /// The policy shed the selected candidate (terminal
+    /// [`FinishReason::Rejected`]); admission may continue with the rest
+    /// of the queue.
+    Rejected { id: usize },
 }
 
 /// Per-tick work-budget knobs. The default (`usize::MAX` everywhere)
@@ -189,17 +223,40 @@ struct Stream {
     tokens: Vec<u8>,
     generated: usize,
     max_new: usize,
+    priority: u8,
+    /// Absolute tick deadline (relative request deadline + submit tick).
+    deadline: Option<usize>,
     rng: Rng,
     /// True once preempted: its next admission is a restore.
     restored: bool,
     cancelled: Arc<AtomicBool>,
     submitted: Instant,
+    /// Tick counter at submission (tick-based latency accounting).
+    submit_tick: usize,
+    /// Tick that produced the first generated token.
+    first_token_tick: Option<usize>,
     /// Wall-clock seconds from submit to first generated token.
     ttft_secs: Option<f64>,
     phase: Phase,
 }
 
-/// A completed (or cancelled) generation.
+impl Stream {
+    fn view(&self) -> StreamView {
+        StreamView {
+            id: self.id,
+            priority: self.priority,
+            deadline: self.deadline,
+            history_len: self.tokens.len(),
+            prompt_len: self.prompt_len,
+            generated: self.generated,
+            max_new: self.max_new,
+            restored: self.restored,
+            submit_tick: self.submit_tick,
+        }
+    }
+}
+
+/// A completed (cancelled, or rejected) generation.
 #[derive(Clone, Debug)]
 pub struct FinishedStream {
     pub id: usize,
@@ -208,8 +265,42 @@ pub struct FinishedStream {
     pub output: Vec<u8>,
     pub reason: FinishReason,
     /// Time to first token: wall-clock seconds from submit to the first
-    /// generated token (None if cancelled before producing one).
+    /// generated token (None if terminated before producing one).
     pub ttft_secs: Option<f64>,
+    pub priority: u8,
+    /// Absolute tick deadline, if the request carried an SLO.
+    pub deadline: Option<usize>,
+    pub submit_tick: usize,
+    /// Tick that produced the first generated token (deterministic TTFT).
+    pub first_token_tick: Option<usize>,
+    /// Tick the stream left the scheduler.
+    pub finish_tick: usize,
+}
+
+impl FinishedStream {
+    /// Deterministic time-to-first-token in ticks (None if no token was
+    /// ever produced).
+    pub fn ttft_ticks(&self) -> Option<usize> {
+        self.first_token_tick.map(|t| t - self.submit_tick)
+    }
+
+    /// Mean ticks between generated tokens (None below 2 tokens).
+    /// Preemption-restore churn shows up here: a restored stream's replay
+    /// ticks land between its tokens.
+    pub fn tbt_ticks(&self) -> Option<f64> {
+        let first = self.first_token_tick?;
+        if self.output.len() < 2 {
+            return None;
+        }
+        Some((self.finish_tick - first) as f64 / (self.output.len() - 1) as f64)
+    }
+
+    /// True when the request finished naturally and (if it carried a
+    /// deadline) within it — the goodput numerator of trace replay.
+    pub fn deadline_met(&self) -> bool {
+        self.reason == FinishReason::MaxNew
+            && self.deadline.map_or(true, |d| self.finish_tick <= d)
+    }
 }
 
 /// Aggregate counters for a scheduler run.
@@ -228,6 +319,8 @@ pub struct ServeStats {
     pub preemptions: usize,
     /// Streams terminated by cancellation.
     pub cancelled: usize,
+    /// Streams shed by the policy at admission (never ran).
+    pub rejected: usize,
     /// Batched decode ticks — one `step_batch` call each.
     pub decode_ticks: usize,
     /// Wall-clock seconds spent in batched decode (stepping + sampling).
@@ -261,8 +354,13 @@ pub struct BatchScheduler<'m> {
     max_active: usize,
     budget_bytes: usize,
     cfg: TickConfig,
+    /// Admission/eviction discipline (DESIGN.md §15); [`LruPolicy`]
+    /// reproduces the pre-policy scheduler decision-for-decision.
+    policy: Box<dyn SchedPolicy>,
     next_id: usize,
     seed: u64,
+    /// Tick counter (1-based during a tick; 0 before the first).
+    tick_no: usize,
     queue: VecDeque<Stream>,
     /// Active-stream metadata; `states[i]` is the decode state of
     /// `active[i]` (parallel vectors — see the module docs).
@@ -289,7 +387,8 @@ impl<'m> BatchScheduler<'m> {
         Self::with_config(model, sampler, max_active, budget_bytes, seed, TickConfig::default())
     }
 
-    /// Full constructor: `cfg` turns on chunked, token-budgeted prefill.
+    /// Constructor with `cfg` turning on chunked, token-budgeted prefill;
+    /// keeps the default [`LruPolicy`] discipline.
     pub fn with_config(
         model: &'m HybridLm,
         sampler: Sampler,
@@ -297,6 +396,27 @@ impl<'m> BatchScheduler<'m> {
         budget_bytes: usize,
         seed: u64,
         cfg: TickConfig,
+    ) -> BatchScheduler<'m> {
+        Self::with_policy(
+            model,
+            sampler,
+            max_active,
+            budget_bytes,
+            seed,
+            cfg,
+            Box::new(LruPolicy),
+        )
+    }
+
+    /// Full constructor: pluggable admission/eviction `policy`.
+    pub fn with_policy(
+        model: &'m HybridLm,
+        sampler: Sampler,
+        max_active: usize,
+        budget_bytes: usize,
+        seed: u64,
+        cfg: TickConfig,
+        policy: Box<dyn SchedPolicy>,
     ) -> BatchScheduler<'m> {
         assert!(max_active > 0);
         assert!(cfg.prefill_chunk > 0, "prefill_chunk must be positive");
@@ -307,8 +427,10 @@ impl<'m> BatchScheduler<'m> {
             max_active,
             budget_bytes,
             cfg,
+            policy,
             next_id: 0,
             seed,
+            tick_no: 0,
             queue: VecDeque::new(),
             active: Vec::new(),
             states: Vec::new(),
@@ -322,8 +444,20 @@ impl<'m> BatchScheduler<'m> {
         self.cfg
     }
 
+    /// Name of the active scheduling policy.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Ticks run so far (the clock of all tick-based latency metrics).
+    pub fn current_tick(&self) -> usize {
+        self.tick_no
+    }
+
     /// Enqueue a request; returns its handle. The stream's RNG is derived
-    /// from (scheduler seed, id), independent of scheduling.
+    /// from (scheduler seed, id), independent of scheduling. A relative
+    /// `deadline_ticks` is pinned to an absolute tick here (submission
+    /// tick + relative deadline).
     pub fn submit(&mut self, req: ServeRequest) -> RequestHandle {
         assert!(!req.prompt.is_empty(), "empty prompt");
         let id = self.next_id;
@@ -336,10 +470,14 @@ impl<'m> BatchScheduler<'m> {
             tokens: req.prompt,
             generated: 0,
             max_new: req.max_new,
+            priority: req.priority,
+            deadline: req.deadline_ticks.map(|d| self.tick_no + d),
             rng,
             restored: false,
             cancelled: Arc::clone(&cancelled),
             submitted: Instant::now(),
+            submit_tick: self.tick_no,
+            first_token_tick: None,
             ttft_secs: None,
             phase: Phase::Prefill,
         });
@@ -373,6 +511,19 @@ impl<'m> BatchScheduler<'m> {
         self.states.iter().map(|s| s.bytes()).sum()
     }
 
+    /// Realized heap bytes of all active decode states — the quantity the
+    /// post-tick eviction loop compares against the budget. Exposed for
+    /// the invariant tests (tests/integration_decode.rs).
+    pub fn arena_state_bytes(&self) -> usize {
+        self.state_bytes()
+    }
+
+    /// Committed arena bytes (per stream, the larger of realized and
+    /// projected-at-history) — the quantity admission charges.
+    pub fn committed_state_bytes(&self) -> usize {
+        self.committed_bytes()
+    }
+
     /// Bytes the arena is committed to: per active stream, the larger of
     /// its realized state bytes and its projected footprint at its current
     /// history length. Realized bytes alone would under-count streams
@@ -387,14 +538,17 @@ impl<'m> BatchScheduler<'m> {
             .sum()
     }
 
-    /// Admit the queue head into the arena (prefill phase; no model work
-    /// happens here — chunks are spent by `tick`). With `force`, capacity
-    /// and budget checks are skipped (used to guarantee progress when the
-    /// arena is empty).
-    fn admit_one(&mut self, force: bool) -> AdmitOutcome {
-        let Some(head) = self.queue.front() else {
+    /// Admit the policy-selected queued stream into the arena (prefill
+    /// phase; no model work happens here — chunks are spent by `tick`).
+    /// The policy picks the candidate ([`SchedPolicy::select_queued`]) and
+    /// may shed it outright ([`SchedPolicy::admit`] → `Reject`, terminal
+    /// even under `force`). With `force`, the scheduler's own capacity and
+    /// budget gates are skipped (used to guarantee progress when the arena
+    /// is empty).
+    fn admit_one(&mut self, force: bool, events: &mut Vec<StreamEvent>) -> AdmitOutcome {
+        if self.queue.is_empty() {
             return AdmitOutcome::QueueEmpty;
-        };
+        }
         if !force {
             if self.admit_blocked {
                 return AdmitOutcome::Blocked;
@@ -402,20 +556,52 @@ impl<'m> BatchScheduler<'m> {
             if self.active.len() >= self.max_active {
                 return AdmitOutcome::AtMaxActive;
             }
+        }
+        let committed = self.committed_bytes();
+        let (qi, projected) = {
+            let active_views: Vec<StreamView> =
+                self.active.iter().map(|s| s.view()).collect();
+            let ctx = SchedCtx {
+                tick: self.tick_no,
+                committed_bytes: committed,
+                budget_bytes: self.budget_bytes,
+                active: &active_views,
+                cfg: self.cfg,
+            };
+            let queue_views: Vec<StreamView> =
+                self.queue.iter().map(|s| s.view()).collect();
+            let qi = self.policy.select_queued(&queue_views, &ctx);
+            let view = queue_views[qi];
+            let projected = self.model.state_bytes_at(view.history_len);
+            let cand = Candidate {
+                view,
+                projected_bytes_now: projected,
+                projected_bytes_done: self
+                    .model
+                    .state_bytes_at(view.history_len + view.remaining_new()),
+            };
+            if self.policy.admit(&cand, &ctx) == AdmitDecision::Reject {
+                let s = self.queue.remove(qi).expect("policy index in bounds");
+                let id = s.id;
+                self.finish_stream(s, FinishReason::Rejected, events);
+                return AdmitOutcome::Rejected { id };
+            }
+            (qi, projected)
+        };
+        if !force {
             // Prospective accounting: charge the candidate's projected
             // state footprint at its full history length against the
             // arena's *committed* bytes (which reserve the projections of
             // streams admitted earlier this tick, not just their realized
             // near-empty states), so a burst of arrivals can't flood the
             // arena and thrash through admit→prefill→evict cycles.
-            let projected = self.model.state_bytes_at(head.tokens.len());
-            if self.committed_bytes().saturating_add(projected) > self.budget_bytes {
+            if committed.saturating_add(projected) > self.budget_bytes {
                 return AdmitOutcome::OverStateBudget;
             }
         } else {
             self.admit_blocked = false;
         }
-        let mut s = self.queue.pop_front().expect("head checked above");
+        let mut s = self.queue.remove(qi).expect("policy index in bounds");
         s.phase = Phase::Prefill;
         let (id, restored) = (s.id, s.restored);
         self.active.push(s);
@@ -459,9 +645,12 @@ impl<'m> BatchScheduler<'m> {
         events.push(match reason {
             FinishReason::MaxNew => StreamEvent::Finished { id: s.id, reason },
             FinishReason::Cancelled => StreamEvent::Cancelled { id: s.id },
+            FinishReason::Rejected => StreamEvent::Rejected { id: s.id },
         });
-        if reason == FinishReason::Cancelled {
-            self.stats.cancelled += 1;
+        match reason {
+            FinishReason::Cancelled => self.stats.cancelled += 1,
+            FinishReason::Rejected => self.stats.rejected += 1,
+            FinishReason::MaxNew => {}
         }
         let mut tokens = s.tokens;
         let output = tokens.split_off(s.prompt_len);
@@ -471,6 +660,11 @@ impl<'m> BatchScheduler<'m> {
             output,
             reason,
             ttft_secs: s.ttft_secs,
+            priority: s.priority,
+            deadline: s.deadline,
+            submit_tick: s.submit_tick,
+            first_token_tick: s.first_token_tick,
+            finish_tick: self.tick_no,
         });
     }
 
@@ -515,6 +709,9 @@ impl<'m> BatchScheduler<'m> {
                         s.generated += 1;
                         if s.ttft_secs.is_none() {
                             s.ttft_secs = Some(s.submitted.elapsed().as_secs_f64());
+                        }
+                        if s.first_token_tick.is_none() {
+                            s.first_token_tick = Some(self.tick_no);
                         }
                         events.push(StreamEvent::Token {
                             id: s.id,
@@ -576,6 +773,9 @@ impl<'m> BatchScheduler<'m> {
             if s.ttft_secs.is_none() {
                 s.ttft_secs = Some(s.submitted.elapsed().as_secs_f64());
             }
+            if s.first_token_tick.is_none() {
+                s.first_token_tick = Some(self.tick_no);
+            }
             events.push(StreamEvent::Token { id: s.id, token: tok, index: s.generated - 1 });
             row += 1;
         }
@@ -602,19 +802,35 @@ impl<'m> BatchScheduler<'m> {
         }
     }
 
-    /// Evict the most recently admitted stream back to the queue, dropping
-    /// its decode state (its history replays through chunked prefill on
-    /// re-admission).
-    fn preempt_newest(&mut self, events: &mut Vec<StreamEvent>) {
-        if let Some(mut s) = self.active.pop() {
-            self.states.pop();
-            self.stats.preemptions += 1;
-            self.admit_blocked = true;
-            events.push(StreamEvent::Preempted { id: s.id });
-            s.restored = true;
-            s.phase = Phase::Prefill;
-            self.queue.push_back(s);
+    /// Evict the policy-selected victim back to the queue, dropping its
+    /// decode state (its history replays through chunked prefill on
+    /// re-admission). The default [`LruPolicy`] picks the most recently
+    /// admitted stream (least sunk prefill work).
+    fn preempt_victim(&mut self, events: &mut Vec<StreamEvent>) {
+        if self.active.is_empty() {
+            return;
         }
+        let vi = {
+            let active_views: Vec<StreamView> =
+                self.active.iter().map(|s| s.view()).collect();
+            let ctx = SchedCtx {
+                tick: self.tick_no,
+                committed_bytes: self.committed_bytes(),
+                budget_bytes: self.budget_bytes,
+                active: &active_views,
+                cfg: self.cfg,
+            };
+            self.policy.evict_victim(&active_views, &ctx)
+        };
+        assert!(vi < self.active.len(), "policy victim index out of bounds");
+        let mut s = self.active.remove(vi);
+        self.states.remove(vi);
+        self.stats.preemptions += 1;
+        self.admit_blocked = true;
+        events.push(StreamEvent::Preempted { id: s.id });
+        s.restored = true;
+        s.phase = Phase::Prefill;
+        self.queue.push_back(s);
     }
 
     /// One scheduler tick. Order: sweep cancellations → admissions →
@@ -622,19 +838,35 @@ impl<'m> BatchScheduler<'m> {
     /// retire → one batched decode pass → retire → preempt while over the
     /// byte budget. Returns every lifecycle event in the order it
     /// happened. Progress is guaranteed for every phase: an empty arena
-    /// force-admits the queue head, decode-phase streams always step, and
-    /// prefill-phase streams get at least one chunk per tick even when
-    /// the decode batch consumes the whole budget.
+    /// force-admits the policy's pick (shedding past any rejections),
+    /// decode-phase streams always step, and prefill-phase streams get at
+    /// least one chunk per tick even when the decode batch consumes the
+    /// whole budget.
     pub fn tick(&mut self) -> Vec<StreamEvent> {
+        self.tick_no += 1;
         let mut events = Vec::new();
         self.sweep_cancelled(&mut events);
-        if self.active.is_empty() && !self.queue.is_empty() {
-            if let AdmitOutcome::Admitted { id, restored } = self.admit_one(true) {
-                events.push(StreamEvent::Admitted { id, restored });
+        // Guaranteed progress: an empty arena force-admits until one
+        // stream sticks. Policy rejections are terminal sheds — skip past
+        // them to the next candidate instead of stalling the tick.
+        while self.active.is_empty() && !self.queue.is_empty() {
+            match self.admit_one(true, &mut events) {
+                AdmitOutcome::Admitted { id, restored } => {
+                    events.push(StreamEvent::Admitted { id, restored });
+                    break;
+                }
+                AdmitOutcome::Rejected { .. } => continue,
+                _ => break,
             }
         }
-        while let AdmitOutcome::Admitted { id, restored } = self.admit_one(false) {
-            events.push(StreamEvent::Admitted { id, restored });
+        loop {
+            match self.admit_one(false, &mut events) {
+                AdmitOutcome::Admitted { id, restored } => {
+                    events.push(StreamEvent::Admitted { id, restored });
+                }
+                AdmitOutcome::Rejected { .. } => continue,
+                _ => break,
+            }
         }
         // Budget split: the decode batch reserves one token per stream
         // already in the decode phase; prefill gets the remainder — but a
@@ -654,7 +886,7 @@ impl<'m> BatchScheduler<'m> {
         self.decode_phase(&mut events);
         self.retire_finished(&mut events);
         while self.state_bytes() > self.budget_bytes && self.active.len() > 1 {
-            self.preempt_newest(&mut events);
+            self.preempt_victim(&mut events);
         }
         events
     }
@@ -684,6 +916,7 @@ impl<'m> BatchScheduler<'m> {
 mod tests {
     use super::*;
     use crate::serve::model::HybridLm;
+    use crate::serve::policy::PolicyKind;
 
     fn model(rng: &mut Rng) -> HybridLm {
         HybridLm::new(rng, 16, 2, &["SE", "LA"]).unwrap()
@@ -1095,24 +1328,192 @@ mod tests {
     fn admit_outcome_reports_reason() {
         let mut rng = Rng::new(10);
         let m = model(&mut rng);
+        let mut ev = Vec::new();
         let mut s = BatchScheduler::new(&m, Sampler::Greedy, 1, usize::MAX, 1);
-        assert_eq!(s.admit_one(false), AdmitOutcome::QueueEmpty);
+        assert_eq!(s.admit_one(false, &mut ev), AdmitOutcome::QueueEmpty);
         s.submit(ServeRequest::new(b"ACGT".to_vec(), 2));
         s.submit(ServeRequest::new(b"TTGA".to_vec(), 2));
         assert_eq!(
-            s.admit_one(false),
+            s.admit_one(false, &mut ev),
             AdmitOutcome::Admitted { id: 0, restored: false }
         );
-        assert_eq!(s.admit_one(false), AdmitOutcome::AtMaxActive);
+        assert_eq!(s.admit_one(false, &mut ev), AdmitOutcome::AtMaxActive);
         // Preemption blocks non-forced admission even after capacity frees.
-        s.preempt_newest(&mut Vec::new());
-        assert_eq!(s.admit_one(false), AdmitOutcome::Blocked);
+        s.preempt_victim(&mut ev);
+        assert_eq!(s.admit_one(false, &mut ev), AdmitOutcome::Blocked);
         assert_eq!(s.stats.preemptions, 1);
         // A byte budget of zero can never fit a projected footprint.
         let mut t = BatchScheduler::new(&m, Sampler::Greedy, 4, 0, 1);
         t.submit(ServeRequest::new(b"ACGT".to_vec(), 2));
-        assert_eq!(t.admit_one(false), AdmitOutcome::OverStateBudget);
-        // Force admission overrides every gate.
-        assert!(matches!(t.admit_one(true), AdmitOutcome::Admitted { .. }));
+        assert_eq!(t.admit_one(false, &mut ev), AdmitOutcome::OverStateBudget);
+        // Force admission overrides every scheduler gate (not the policy).
+        assert!(matches!(t.admit_one(true, &mut ev), AdmitOutcome::Admitted { .. }));
+    }
+
+    #[test]
+    fn cancel_twice_is_idempotent() {
+        // Double-cancel while queued/active must produce exactly one
+        // Cancelled event and one FinishedStream.
+        let mut rng = Rng::new(21);
+        let m = model(&mut rng);
+        let mut s = BatchScheduler::new(&m, Sampler::Greedy, 2, usize::MAX, 8);
+        let h = s.submit(ServeRequest::new(b"ACGTACGT".to_vec(), 50));
+        s.tick(); // admitted, prefilled, first tokens
+        h.cancel();
+        h.cancel(); // second cancel is a no-op
+        assert!(h.is_cancelled());
+        let ev = s.tick();
+        let cancels = ev
+            .iter()
+            .filter(|e| matches!(e, StreamEvent::Cancelled { .. }))
+            .count();
+        assert_eq!(cancels, 1);
+        assert!(s.is_idle());
+        // Further ticks (and further cancels) emit nothing for this id.
+        h.cancel();
+        assert!(s.tick().is_empty());
+        let done = s.take_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::Cancelled);
+        assert_eq!(s.stats.cancelled, 1);
+    }
+
+    #[test]
+    fn cancel_after_finished_is_inert() {
+        // A cancel that lands after natural completion must not emit a
+        // spurious Cancelled event or flip the recorded reason.
+        let mut rng = Rng::new(22);
+        let m = model(&mut rng);
+        let mut s = BatchScheduler::new(&m, Sampler::Greedy, 2, usize::MAX, 9);
+        let h = s.submit(ServeRequest::new(b"ACGT".to_vec(), 3));
+        let mut events = Vec::new();
+        while !s.is_idle() {
+            events.extend(s.tick());
+        }
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, StreamEvent::Finished { reason: FinishReason::MaxNew, .. })));
+        h.cancel(); // too late: the stream already left the scheduler
+        assert!(s.tick().is_empty());
+        let done = s.take_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::MaxNew);
+        assert_eq!(done[0].output.len(), 3);
+        assert_eq!(s.stats.cancelled, 0, "spurious cancel recorded");
+    }
+
+    #[test]
+    fn mean_batch_occupancy_guards_zero_ticks() {
+        // An all-cancelled-before-decode run has decode_ticks == 0; the
+        // occupancy must read 0.0, not NaN (replay summaries divide by it).
+        let stats = ServeStats::default();
+        assert_eq!(stats.decode_ticks, 0);
+        let occ = stats.mean_batch_occupancy();
+        assert!(!occ.is_nan());
+        assert_eq!(occ, 0.0);
+        // End-to-end: cancel before the first tick ever decodes.
+        let mut rng = Rng::new(23);
+        let m = model(&mut rng);
+        let mut s = BatchScheduler::new(&m, Sampler::Greedy, 2, usize::MAX, 10);
+        let h = s.submit(ServeRequest::new(b"ACGT".to_vec(), 4));
+        h.cancel();
+        s.tick();
+        assert!(s.is_idle());
+        assert!(!s.stats.mean_batch_occupancy().is_nan());
+        assert_eq!(s.stats.mean_batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn deadline_policy_rejects_and_records() {
+        // An impossible deadline is shed at admission: terminal Rejected
+        // event, FinishedStream with no output, stats.rejected bumped —
+        // and the engine keeps serving the feasible request.
+        let mut rng = Rng::new(24);
+        let m = model(&mut rng);
+        let cfg = TickConfig { prefill_chunk: 4, tick_budget: 8 };
+        let mut s = BatchScheduler::with_policy(
+            &m,
+            Sampler::Greedy,
+            2,
+            usize::MAX,
+            11,
+            cfg,
+            PolicyKind::Deadline.build(),
+        );
+        assert_eq!(s.policy_name(), "deadline");
+        let h_bad = s.submit(ServeRequest::new(vec![b'A'; 16], 8).with_deadline(2));
+        let h_ok = s.submit(ServeRequest::new(b"ACGT".to_vec(), 4).with_deadline(100));
+        let mut events = Vec::new();
+        while !s.is_idle() {
+            events.extend(s.tick());
+        }
+        assert!(events.contains(&StreamEvent::Rejected { id: h_bad.id() }));
+        let mut done = s.take_finished();
+        done.sort_by_key(|f| f.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].reason, FinishReason::Rejected);
+        assert!(done[0].output.is_empty());
+        assert!(!done[0].deadline_met());
+        assert_eq!(done[1].id, h_ok.id());
+        assert_eq!(done[1].reason, FinishReason::MaxNew);
+        assert_eq!(done[1].output.len(), 4);
+        assert!(done[1].deadline_met());
+        assert_eq!(s.stats.rejected, 1);
+        assert_eq!(s.stats.cancelled, 0);
+    }
+
+    #[test]
+    fn priority_policy_admits_tiers_first() {
+        // One arena slot, three tiers submitted lowest-first: admission
+        // (including the forced first one) must follow tier order, not
+        // submission order.
+        let mut rng = Rng::new(25);
+        let m = model(&mut rng);
+        let mut s = BatchScheduler::with_policy(
+            &m,
+            Sampler::Greedy,
+            1,
+            usize::MAX,
+            12,
+            TickConfig::default(),
+            PolicyKind::Priority.build(),
+        );
+        let h0 = s.submit(ServeRequest::new(b"ACGT".to_vec(), 2).with_priority(0));
+        let h_low = s.submit(ServeRequest::new(b"TTGA".to_vec(), 2).with_priority(1));
+        let h_high = s.submit(ServeRequest::new(b"GGCC".to_vec(), 2).with_priority(7));
+        let mut order = Vec::new();
+        while !s.is_idle() {
+            for e in s.tick() {
+                if let StreamEvent::Admitted { id, .. } = e {
+                    order.push(id);
+                }
+            }
+        }
+        assert_eq!(order, vec![h_high.id(), h_low.id(), h0.id()]);
+        assert_eq!(s.take_finished().len(), 3);
+    }
+
+    #[test]
+    fn tick_metrics_are_deterministic() {
+        // submit→first-token→finish tick bookkeeping: TTFT in ticks is
+        // exact and identical across reruns (unlike wall-clock ttft_secs).
+        let mut rng = Rng::new(26);
+        let m = model(&mut rng);
+        let cfg = TickConfig { prefill_chunk: 4, tick_budget: 8 };
+        let run = || {
+            let mut s =
+                BatchScheduler::with_config(&m, Sampler::Greedy, 2, usize::MAX, 13, cfg);
+            s.submit(ServeRequest::new(vec![b'C'; 10], 5));
+            let done = s.run_to_completion();
+            (done[0].ttft_ticks(), done[0].tbt_ticks(), done[0].finish_tick)
+        };
+        let (ttft, tbt, fin) = run();
+        assert_eq!((ttft, tbt, fin), run());
+        // Budget 8 absorbs two 4-chunks in tick 1; tick 2 finishes the
+        // prompt, samples the handoff token AND takes the first decode
+        // step; ticks 3-5 decode the remaining three tokens.
+        assert_eq!(ttft, Some(2));
+        assert_eq!(fin, 5);
+        assert_eq!(tbt, Some(0.75));
     }
 }

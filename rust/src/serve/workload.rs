@@ -1,0 +1,783 @@
+//! Trace-driven workload harness (DESIGN.md §15): a seeded, deterministic
+//! workload *generator* emitting replayable `sh2-trace-v1` JSON traces, and
+//! a *replay driver* that feeds a trace through the continuous-batching
+//! scheduler tick-by-tick under a chosen [`PolicyKind`], collecting
+//! per-request TTFT/TBT and goodput in deterministic tick units.
+//!
+//! Methodology follows the synthetic-workload style of the associative-
+//! recall literature: simulate-then-verify against generators whose every
+//! sample is a pure function of the seed. The generator covers the regimes
+//! the paper's serving claims live in — Poisson and bursty arrivals,
+//! heavy-tailed (bounded-Pareto) prompt/output lengths as in byte-level
+//! genomic serving, shared-prefix request populations, and cancel storms —
+//! while staying exactly reproducible:
+//!
+//! * all randomness flows through forked [`Rng`] streams (one per knob, so
+//!   e.g. toggling the SLO config cannot perturb arrival times);
+//! * inter-arrival gaps are geometric, sampled by repeated Bernoulli
+//!   trials (no transcendental functions);
+//! * bounded-Pareto lengths are restricted to tail indices α ∈ {1, 2},
+//!   where the inverse CDF needs only division and square root — exactly
+//!   rounded IEEE ops, so an external reimplementation (e.g. the Python
+//!   script that seeds the bench baseline) reproduces traces bit-for-bit.
+//!
+//! Replay metrics are tick-based, not wall-clock: the same (trace, policy,
+//! seed) triple produces a byte-identical event stream — fingerprinted by
+//! an FNV-1a hash in [`ReplayReport::event_hash`] — and identical
+//! percentile records on every run, which is what lets the serve-trace
+//! bench live under the CI ratio gate without flaking.
+
+use std::collections::BTreeMap;
+
+use super::model::HybridLm;
+use super::policy::PolicyKind;
+use super::sampler::Sampler;
+use super::scheduler::{
+    BatchScheduler, FinishReason, FinishedStream, RequestHandle, ServeRequest,
+    StreamEvent, TickConfig,
+};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Request-length distribution (prompt bytes or output tokens).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LenDist {
+    Fixed(usize),
+    /// Uniform over `lo..=hi`.
+    Uniform { lo: usize, hi: usize },
+    /// Bounded Pareto over `[lo, hi]` with tail index `alpha`, which must
+    /// be exactly `1.0` or `2.0` (see the module docs: those tails invert
+    /// with division/sqrt only, keeping traces reproducible across
+    /// language reimplementations).
+    Pareto { alpha: f64, lo: usize, hi: usize },
+}
+
+impl LenDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform { lo, hi } => {
+                assert!(hi >= lo, "Uniform: hi < lo");
+                lo + rng.below(hi - lo + 1)
+            }
+            LenDist::Pareto { alpha, lo, hi } => {
+                assert!(lo >= 1 && hi >= lo, "Pareto: need 1 <= lo <= hi");
+                let u = rng.f64();
+                let (l, h) = (lo as f64, hi as f64);
+                let x = if alpha == 1.0 {
+                    l / (1.0 - u * (1.0 - l / h))
+                } else if alpha == 2.0 {
+                    let r = l / h;
+                    l / (1.0 - u * (1.0 - r * r)).sqrt()
+                } else {
+                    panic!("Pareto: alpha must be exactly 1.0 or 2.0, got {alpha}");
+                };
+                (x as usize).clamp(lo, hi)
+            }
+        }
+    }
+}
+
+/// Arrival process, in scheduler ticks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Independent geometric inter-arrival gaps with the given mean — the
+    /// discrete-tick analogue of a Poisson process (gap 0 = same tick).
+    Poisson { mean_gap: f64 },
+    /// `burst` simultaneous arrivals, then a geometric gap (≥ 1 tick) with
+    /// the given mean before the next burst.
+    Bursty { burst: usize, mean_gap: f64 },
+}
+
+/// Shared-prefix population: a pool of `groups` common prefixes of
+/// `prefix_len` bytes; each request independently reuses one with
+/// probability `frac` (modelling the repeated-context traffic that makes
+/// prefix-aware scheduling worthwhile).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SharedPrefixCfg {
+    pub groups: usize,
+    pub prefix_len: usize,
+    pub frac: f64,
+}
+
+/// Mid-run cancel storm: at tick `at_tick`, every request that arrived
+/// strictly earlier is cancelled independently with probability `frac`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CancelStormCfg {
+    pub at_tick: usize,
+    pub frac: f64,
+}
+
+/// SLO annotations: requests draw a uniform priority tier from
+/// `0..tiers`, and with probability `deadline_frac` carry a relative
+/// deadline of `ceil(slack * ideal)` ticks, where `ideal` is an idealized
+/// service time (`ceil(prompt/16)` prefill ticks plus one tick per output
+/// token). `slack` near 1 makes deadlines tight; large values make them
+/// loose.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloCfg {
+    pub tiers: u8,
+    pub deadline_frac: f64,
+    pub slack: f64,
+}
+
+/// Full generator configuration for [`generate`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadCfg {
+    pub name: String,
+    pub seed: u64,
+    pub requests: usize,
+    pub arrival: Arrival,
+    pub prompt_len: LenDist,
+    pub max_new: LenDist,
+    pub shared_prefix: Option<SharedPrefixCfg>,
+    pub cancel_storm: Option<CancelStormCfg>,
+    pub slo: Option<SloCfg>,
+}
+
+/// One trace request. `at` is the arrival tick: the request becomes
+/// visible to the scheduler before the tick *after* `at`. `deadline` is
+/// relative to submission (the scheduler pins it absolute).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceRequest {
+    pub id: usize,
+    pub at: usize,
+    pub prompt: Vec<u8>,
+    pub max_new: usize,
+    pub priority: u8,
+    pub deadline: Option<usize>,
+}
+
+/// A scheduled cancellation of request `id` at tick `at`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCancel {
+    pub id: usize,
+    pub at: usize,
+}
+
+/// A replayable workload: the `sh2-trace-v1` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    pub seed: u64,
+    /// Sorted by (`at`, `id`); ids are dense 0..n in arrival order, so
+    /// scheduler stream ids coincide with trace ids on replay.
+    pub requests: Vec<TraceRequest>,
+    pub cancels: Vec<TraceCancel>,
+}
+
+fn dna(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|_| b"ACGT"[rng.below(4)]).collect()
+}
+
+/// Geometric gap (number of failures before a success) with the given
+/// mean, via repeated Bernoulli trials — transcendental-free on purpose.
+fn geometric_gap(rng: &mut Rng, mean_gap: f64) -> usize {
+    let p = 1.0 / (1.0 + mean_gap.max(0.0));
+    let mut gap = 0;
+    while !rng.chance(p) {
+        gap += 1;
+    }
+    gap
+}
+
+/// Generate a trace from `cfg`. Pure function of the config (see the
+/// module docs for the determinism contract).
+pub fn generate(cfg: &WorkloadCfg) -> Trace {
+    assert!(cfg.requests > 0, "empty workload");
+    let mut root = Rng::new(cfg.seed);
+    // One forked stream per knob: toggling any single feature leaves the
+    // draws of every other feature untouched.
+    let mut arr_rng = root.fork(1);
+    let mut len_rng = root.fork(2);
+    let mut tok_rng = root.fork(3);
+    let mut slo_rng = root.fork(4);
+    let mut cxl_rng = root.fork(5);
+    let prefixes: Vec<Vec<u8>> = match &cfg.shared_prefix {
+        Some(sp) => (0..sp.groups).map(|_| dna(&mut tok_rng, sp.prefix_len)).collect(),
+        None => Vec::new(),
+    };
+    let mut at = 0usize;
+    let mut in_burst = 0usize;
+    let mut requests = Vec::with_capacity(cfg.requests);
+    for id in 0..cfg.requests {
+        match cfg.arrival {
+            Arrival::Poisson { mean_gap } => {
+                if id > 0 {
+                    at += geometric_gap(&mut arr_rng, mean_gap);
+                }
+            }
+            Arrival::Bursty { burst, mean_gap } => {
+                if id > 0 && in_burst == 0 {
+                    at += 1 + geometric_gap(&mut arr_rng, mean_gap);
+                }
+                in_burst = (in_burst + 1) % burst.max(1);
+            }
+        }
+        let prompt_len = cfg.prompt_len.sample(&mut len_rng).max(1);
+        let max_new = cfg.max_new.sample(&mut len_rng);
+        let prompt = match &cfg.shared_prefix {
+            Some(sp) if !prefixes.is_empty() && tok_rng.chance(sp.frac) => {
+                let pre = &prefixes[tok_rng.below(prefixes.len())];
+                let mut p: Vec<u8> = pre.iter().copied().take(prompt_len).collect();
+                let fill = prompt_len - p.len();
+                if fill > 0 {
+                    p.extend(dna(&mut tok_rng, fill));
+                }
+                p
+            }
+            _ => dna(&mut tok_rng, prompt_len),
+        };
+        let (priority, deadline) = match &cfg.slo {
+            Some(slo) => {
+                let pr =
+                    if slo.tiers > 1 { slo_rng.below(slo.tiers as usize) as u8 } else { 0 };
+                let dl = if slo_rng.chance(slo.deadline_frac) {
+                    let ideal = prompt_len.div_ceil(16) + max_new.max(1);
+                    Some((ideal as f64 * slo.slack).ceil() as usize)
+                } else {
+                    None
+                };
+                (pr, dl)
+            }
+            None => (0, None),
+        };
+        requests.push(TraceRequest { id, at, prompt, max_new, priority, deadline });
+    }
+    let mut cancels = Vec::new();
+    if let Some(storm) = &cfg.cancel_storm {
+        for r in &requests {
+            if r.at < storm.at_tick && cxl_rng.chance(storm.frac) {
+                cancels.push(TraceCancel { id: r.id, at: storm.at_tick });
+            }
+        }
+    }
+    Trace { name: cfg.name.clone(), seed: cfg.seed, requests, cancels }
+}
+
+impl Trace {
+    /// Serialize as an `sh2-trace-v1` document. Prompts are ACGT strings;
+    /// the seed is a decimal string (u64 does not survive a f64 number).
+    pub fn to_json(&self) -> Json {
+        let requests = self.requests.iter().map(|r| {
+            let mut pairs = vec![
+                ("id", Json::num(r.id as f64)),
+                ("at", Json::num(r.at as f64)),
+                (
+                    "prompt",
+                    Json::str(std::str::from_utf8(&r.prompt).expect("ACGT prompt")),
+                ),
+                ("max_new", Json::num(r.max_new as f64)),
+                ("priority", Json::num(r.priority as f64)),
+            ];
+            if let Some(d) = r.deadline {
+                pairs.push(("deadline", Json::num(d as f64)));
+            }
+            Json::obj(pairs)
+        });
+        let cancels = self.cancels.iter().map(|c| {
+            Json::obj(vec![
+                ("id", Json::num(c.id as f64)),
+                ("at", Json::num(c.at as f64)),
+            ])
+        });
+        Json::obj(vec![
+            ("format", Json::str("sh2-trace-v1")),
+            ("name", Json::str(&self.name)),
+            ("seed", Json::str(&self.seed.to_string())),
+            ("requests", Json::arr(requests)),
+            ("cancels", Json::arr(cancels)),
+        ])
+    }
+
+    /// Parse an `sh2-trace-v1` document.
+    pub fn parse(s: &str) -> Result<Trace, String> {
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        if j.get("format").and_then(Json::as_str) != Some("sh2-trace-v1") {
+            return Err("not an sh2-trace-v1 document".to_string());
+        }
+        let name = j.get("name").and_then(Json::as_str).ok_or("missing name")?.to_string();
+        let seed = j
+            .get("seed")
+            .and_then(Json::as_str)
+            .ok_or("missing seed")?
+            .parse::<u64>()
+            .map_err(|e| format!("bad seed: {e}"))?;
+        let mut requests = Vec::new();
+        for r in j.get("requests").and_then(Json::as_array).ok_or("missing requests")? {
+            let id = r.get("id").and_then(Json::as_usize).ok_or("request missing id")?;
+            let prompt = r
+                .get("prompt")
+                .and_then(Json::as_str)
+                .ok_or("request missing prompt")?
+                .as_bytes()
+                .to_vec();
+            if prompt.is_empty() {
+                return Err(format!("request {id}: empty prompt"));
+            }
+            requests.push(TraceRequest {
+                id,
+                at: r.get("at").and_then(Json::as_usize).ok_or("request missing at")?,
+                prompt,
+                max_new: r
+                    .get("max_new")
+                    .and_then(Json::as_usize)
+                    .ok_or("request missing max_new")?,
+                priority: r.get("priority").and_then(Json::as_usize).unwrap_or(0) as u8,
+                deadline: r.get("deadline").and_then(Json::as_usize),
+            });
+        }
+        let mut cancels = Vec::new();
+        if let Some(arr) = j.get("cancels").and_then(Json::as_array) {
+            for c in arr {
+                cancels.push(TraceCancel {
+                    id: c.get("id").and_then(Json::as_usize).ok_or("cancel missing id")?,
+                    at: c.get("at").and_then(Json::as_usize).ok_or("cancel missing at")?,
+                });
+            }
+        }
+        Ok(Trace { name, seed, requests, cancels })
+    }
+
+    /// Total model-work upper bound (prompt + output tokens), used to cap
+    /// runaway replays (here and in the chaos test tier).
+    pub fn work_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.prompt.len() + r.max_new).sum()
+    }
+}
+
+/// Scheduler knobs for [`replay`].
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayCfg {
+    pub max_active: usize,
+    pub budget_bytes: usize,
+    pub tick: TickConfig,
+    /// Scheduler sampling seed (per-stream RNGs fork from it), independent
+    /// of the trace's generator seed.
+    pub seed: u64,
+}
+
+impl Default for ReplayCfg {
+    fn default() -> ReplayCfg {
+        ReplayCfg {
+            max_active: 4,
+            budget_bytes: usize::MAX,
+            tick: TickConfig { prefill_chunk: 16, tick_budget: 32 },
+            seed: 0,
+        }
+    }
+}
+
+/// Aggregated outcome of one trace replay under one policy. All latency
+/// metrics are in deterministic tick units (see the module docs).
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub trace: String,
+    pub policy: &'static str,
+    pub total_ticks: usize,
+    /// Per-request time-to-first-token, ticks ([`Summary::default`] —
+    /// n = 0 — when no request ever produced a token).
+    pub ttft_ticks: Summary,
+    /// Per-request mean ticks-between-tokens (requests with ≥ 2 tokens).
+    pub tbt_ticks: Summary,
+    /// Deadline-respecting delivered tokens per tick: tokens from streams
+    /// that finished naturally within their deadline, over total ticks.
+    pub goodput: f64,
+    pub delivered_tokens: usize,
+    pub finished: usize,
+    pub cancelled: usize,
+    pub rejected: usize,
+    pub preemptions: usize,
+    pub max_concurrent: usize,
+    pub mean_occupancy: f64,
+    /// FNV-1a fingerprint of the full event stream (with tick boundaries):
+    /// byte-identical replays ⇔ equal hashes.
+    pub event_hash: u64,
+    /// Per-request terminal records, sorted by id.
+    pub outcomes: Vec<FinishedStream>,
+}
+
+impl ReplayReport {
+    /// One `sh2-replay-v1` JSON line.
+    pub fn to_json(&self) -> Json {
+        let summary = |s: &Summary| {
+            Json::obj(vec![
+                ("n", Json::num(s.n as f64)),
+                ("mean", Json::num(s.mean)),
+                ("p50", Json::num(s.p50)),
+                ("p90", Json::num(s.p90)),
+                ("max", Json::num(s.max)),
+            ])
+        };
+        Json::obj(vec![
+            ("format", Json::str("sh2-replay-v1")),
+            ("trace", Json::str(&self.trace)),
+            ("policy", Json::str(self.policy)),
+            ("total_ticks", Json::num(self.total_ticks as f64)),
+            ("ttft_ticks", summary(&self.ttft_ticks)),
+            ("tbt_ticks", summary(&self.tbt_ticks)),
+            ("goodput", Json::num(self.goodput)),
+            ("delivered_tokens", Json::num(self.delivered_tokens as f64)),
+            ("finished", Json::num(self.finished as f64)),
+            ("cancelled", Json::num(self.cancelled as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("max_concurrent", Json::num(self.max_concurrent as f64)),
+            ("mean_occupancy", Json::num(self.mean_occupancy)),
+            ("event_hash", Json::str(&format!("{:016x}", self.event_hash))),
+        ])
+    }
+}
+
+/// FNV-1a 64-bit, the event-stream fingerprint.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+    }
+
+    fn word(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+}
+
+fn hash_event(h: &mut Fnv, e: &StreamEvent) {
+    match e {
+        StreamEvent::Admitted { id, restored } => {
+            h.byte(1);
+            h.word(*id as u64);
+            h.byte(*restored as u8);
+        }
+        StreamEvent::PrefillProgress { id, done, total } => {
+            h.byte(2);
+            h.word(*id as u64);
+            h.word(*done as u64);
+            h.word(*total as u64);
+        }
+        StreamEvent::Token { id, token, index } => {
+            h.byte(3);
+            h.word(*id as u64);
+            h.byte(*token);
+            h.word(*index as u64);
+        }
+        StreamEvent::Finished { id, .. } => {
+            h.byte(4);
+            h.word(*id as u64);
+        }
+        StreamEvent::Preempted { id } => {
+            h.byte(5);
+            h.word(*id as u64);
+        }
+        StreamEvent::Cancelled { id } => {
+            h.byte(6);
+            h.word(*id as u64);
+        }
+        StreamEvent::Rejected { id } => {
+            h.byte(7);
+            h.word(*id as u64);
+        }
+    }
+}
+
+fn summary_or_empty(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        Summary::default()
+    } else {
+        Summary::of(xs)
+    }
+}
+
+/// Replay `trace` through a fresh scheduler under `policy`. Requests are
+/// submitted before the tick after their arrival tick; cancels fire the
+/// same way. Deterministic: identical inputs produce an identical
+/// [`ReplayReport`] including the event hash.
+pub fn replay(
+    model: &HybridLm,
+    trace: &Trace,
+    sampler: Sampler,
+    policy: PolicyKind,
+    cfg: &ReplayCfg,
+) -> ReplayReport {
+    let mut sched = BatchScheduler::with_policy(
+        model,
+        sampler,
+        cfg.max_active,
+        cfg.budget_bytes,
+        cfg.seed,
+        cfg.tick,
+        policy.build(),
+    );
+    let mut requests: Vec<&TraceRequest> = trace.requests.iter().collect();
+    requests.sort_by_key(|r| (r.at, r.id));
+    let mut cancels: Vec<&TraceCancel> = trace.cancels.iter().collect();
+    cancels.sort_by_key(|c| (c.at, c.id));
+    let mut handles: BTreeMap<usize, RequestHandle> = BTreeMap::new();
+    let (mut next_req, mut next_cxl) = (0usize, 0usize);
+    let mut fnv = Fnv::new();
+    // Generous runaway cap: arrival horizon plus every token at worst-case
+    // service, with headroom for preempt-restore replays.
+    let horizon = requests.last().map(|r| r.at).unwrap_or(0);
+    let cap = horizon + 64 + 16 * trace.work_tokens().max(1);
+    while next_req < requests.len() || next_cxl < cancels.len() || !sched.is_idle() {
+        let now = sched.current_tick();
+        while next_req < requests.len() && requests[next_req].at <= now {
+            let r = requests[next_req];
+            let mut req =
+                ServeRequest::new(r.prompt.clone(), r.max_new).with_priority(r.priority);
+            if let Some(d) = r.deadline {
+                req = req.with_deadline(d);
+            }
+            handles.insert(r.id, sched.submit(req));
+            next_req += 1;
+        }
+        while next_cxl < cancels.len() && cancels[next_cxl].at <= now {
+            if let Some(h) = handles.get(&cancels[next_cxl].id) {
+                h.cancel();
+            }
+            next_cxl += 1;
+        }
+        let events = sched.tick();
+        if !events.is_empty() {
+            fnv.byte(0xF0);
+            fnv.word(sched.current_tick() as u64);
+            for e in &events {
+                hash_event(&mut fnv, e);
+            }
+        }
+        assert!(sched.current_tick() <= cap, "replay exceeded the tick safety cap");
+    }
+    let total_ticks = sched.current_tick();
+    let stats = sched.stats;
+    let mut outcomes = sched.take_finished();
+    outcomes.sort_by_key(|f| f.id);
+    let ttft: Vec<f64> = outcomes
+        .iter()
+        .filter_map(|f| f.ttft_ticks().map(|t| t as f64))
+        .collect();
+    let tbt: Vec<f64> = outcomes.iter().filter_map(|f| f.tbt_ticks()).collect();
+    let delivered: usize = outcomes
+        .iter()
+        .filter(|f| f.deadline_met())
+        .map(|f| f.output.len())
+        .sum();
+    let goodput =
+        if total_ticks == 0 { 0.0 } else { delivered as f64 / total_ticks as f64 };
+    ReplayReport {
+        trace: trace.name.clone(),
+        policy: policy.name(),
+        total_ticks,
+        ttft_ticks: summary_or_empty(&ttft),
+        tbt_ticks: summary_or_empty(&tbt),
+        goodput,
+        delivered_tokens: delivered,
+        finished: outcomes.iter().filter(|f| f.reason == FinishReason::MaxNew).count(),
+        cancelled: stats.cancelled,
+        rejected: stats.rejected,
+        preemptions: stats.preemptions,
+        max_concurrent: stats.max_concurrent,
+        mean_occupancy: stats.mean_batch_occupancy(),
+        event_hash: fnv.0,
+        outcomes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson_cfg(seed: u64) -> WorkloadCfg {
+        WorkloadCfg {
+            name: "poisson-test".to_string(),
+            seed,
+            requests: 24,
+            arrival: Arrival::Poisson { mean_gap: 2.0 },
+            prompt_len: LenDist::Pareto { alpha: 2.0, lo: 4, hi: 64 },
+            max_new: LenDist::Pareto { alpha: 1.0, lo: 2, hi: 24 },
+            shared_prefix: Some(SharedPrefixCfg { groups: 3, prefix_len: 12, frac: 0.5 }),
+            cancel_storm: Some(CancelStormCfg { at_tick: 12, frac: 0.4 }),
+            slo: Some(SloCfg { tiers: 3, deadline_frac: 0.6, slack: 4.0 }),
+        }
+    }
+
+    fn tiny_model(seed: u64) -> HybridLm {
+        let mut rng = Rng::new(seed);
+        HybridLm::new(&mut rng, 16, 2, &["SE", "LA"]).unwrap()
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sorted() {
+        let a = generate(&poisson_cfg(7));
+        let b = generate(&poisson_cfg(7));
+        assert_eq!(a, b);
+        assert_ne!(a, generate(&poisson_cfg(8)), "seed must matter");
+        // Ids dense in arrival order; arrival ticks non-decreasing.
+        for (i, r) in a.requests.iter().enumerate() {
+            assert_eq!(r.id, i);
+            if i > 0 {
+                assert!(r.at >= a.requests[i - 1].at);
+            }
+            assert!(!r.prompt.is_empty());
+            assert!(r.prompt.iter().all(|b| b"ACGT".contains(b)));
+        }
+    }
+
+    #[test]
+    fn pareto_lengths_are_bounded_and_spread() {
+        let d = LenDist::Pareto { alpha: 1.0, lo: 4, hi: 100 };
+        let mut rng = Rng::new(3);
+        let xs: Vec<usize> = (0..400).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| (4..=100).contains(&x)));
+        assert!(xs.iter().any(|&x| x == 4), "heavy tail still concentrates at lo");
+        assert!(xs.iter().any(|&x| x > 50), "no tail mass reached");
+        // α = 2 decays faster: fewer huge samples than α = 1.
+        let d2 = LenDist::Pareto { alpha: 2.0, lo: 4, hi: 100 };
+        let mut rng2 = Rng::new(3);
+        let big1 = xs.iter().filter(|&&x| x > 50).count();
+        let big2 = (0..400).filter(|_| d2.sample(&mut rng2) > 50).count();
+        assert!(big2 < big1, "alpha=2 should have a lighter tail ({big2} vs {big1})");
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster() {
+        let cfg = WorkloadCfg {
+            name: "bursty-test".to_string(),
+            seed: 5,
+            requests: 20,
+            arrival: Arrival::Bursty { burst: 4, mean_gap: 3.0 },
+            prompt_len: LenDist::Fixed(8),
+            max_new: LenDist::Fixed(4),
+            shared_prefix: None,
+            cancel_storm: None,
+            slo: None,
+        };
+        let t = generate(&cfg);
+        // Every burst of 4 shares one arrival tick; bursts are separated.
+        for chunk in t.requests.chunks(4) {
+            assert!(chunk.iter().all(|r| r.at == chunk[0].at));
+        }
+        let burst_ticks: Vec<usize> = t.requests.chunks(4).map(|c| c[0].at).collect();
+        for w in burst_ticks.windows(2) {
+            assert!(w[1] > w[0], "bursts must not merge");
+        }
+    }
+
+    #[test]
+    fn cancel_storm_targets_prior_arrivals() {
+        let t = generate(&poisson_cfg(11));
+        assert!(!t.cancels.is_empty(), "storm produced no cancels");
+        for c in &t.cancels {
+            assert_eq!(c.at, 12);
+            let r = &t.requests[c.id];
+            assert!(r.at < c.at, "cancel targets a request that arrived after the storm");
+        }
+    }
+
+    #[test]
+    fn trace_json_round_trips() {
+        let t = generate(&poisson_cfg(13));
+        let s = t.to_json().to_string();
+        let back = Trace::parse(&s).expect("parse back");
+        assert_eq!(t, back);
+        assert!(Trace::parse("{\"format\":\"nope\"}").is_err());
+    }
+
+    #[test]
+    fn replay_is_deterministic_across_runs() {
+        let m = tiny_model(1);
+        let t = generate(&poisson_cfg(17));
+        let cfg = ReplayCfg { max_active: 3, ..ReplayCfg::default() };
+        let run = || replay(&m, &t, Sampler::TopK { k: 4, temperature: 1.0 }, PolicyKind::Priority, &cfg);
+        let (a, b) = (run(), run());
+        assert_eq!(a.event_hash, b.event_hash);
+        assert_eq!(a.total_ticks, b.total_ticks);
+        assert_eq!(a.ttft_ticks.p50, b.ttft_ticks.p50);
+        assert_eq!(a.ttft_ticks.p90, b.ttft_ticks.p90);
+        assert_eq!(a.goodput, b.goodput);
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.output, y.output);
+        }
+    }
+
+    #[test]
+    fn replay_conserves_requests() {
+        // Every request terminates exactly once, whatever the policy.
+        let m = tiny_model(2);
+        let t = generate(&poisson_cfg(19));
+        for kind in PolicyKind::ALL {
+            let r = replay(&m, &t, Sampler::Greedy, kind, &ReplayCfg::default());
+            assert_eq!(
+                r.finished + r.cancelled + r.rejected,
+                t.requests.len(),
+                "policy {} lost or duplicated a terminal state",
+                kind.name()
+            );
+            assert_eq!(r.outcomes.len(), t.requests.len());
+            assert!(!r.goodput.is_nan());
+        }
+    }
+
+    #[test]
+    fn all_cancelled_replay_has_no_nan() {
+        // Storm cancels everything before any stream reaches decode: the
+        // report must come back with empty summaries and zero goodput, not
+        // NaN (the mean_batch_occupancy / empty-Summary regression).
+        let cfg = WorkloadCfg {
+            name: "storm-everything".to_string(),
+            seed: 23,
+            requests: 6,
+            arrival: Arrival::Poisson { mean_gap: 0.0 },
+            prompt_len: LenDist::Fixed(32),
+            max_new: LenDist::Fixed(8),
+            shared_prefix: None,
+            cancel_storm: Some(CancelStormCfg { at_tick: 1, frac: 1.0 }),
+            slo: None,
+        };
+        let t = generate(&cfg);
+        assert_eq!(t.cancels.len(), 6);
+        let m = tiny_model(3);
+        let rcfg = ReplayCfg {
+            max_active: 2,
+            budget_bytes: usize::MAX,
+            // Chunk 4 of a 32-byte prompt: nobody finishes prefill before
+            // the storm lands at tick 1.
+            tick: TickConfig { prefill_chunk: 4, tick_budget: 4 },
+            seed: 9,
+        };
+        let r = replay(&m, &t, Sampler::Greedy, PolicyKind::Lru, &rcfg);
+        assert_eq!(r.cancelled, 6);
+        assert_eq!(r.finished, 0);
+        assert_eq!(r.ttft_ticks.n, 0);
+        assert_eq!(r.tbt_ticks.n, 0);
+        assert_eq!(r.goodput, 0.0);
+        assert!(!r.mean_occupancy.is_nan());
+        let line = r.to_json().to_string();
+        assert!(!line.contains("NaN") && !line.contains("nan"), "{line}");
+    }
+
+    #[test]
+    fn policies_differ_on_slo_traces() {
+        // The deadline policy must actually shed infeasible requests on a
+        // tight-SLO trace where LRU serves everything late.
+        let mut cfg = poisson_cfg(29);
+        cfg.cancel_storm = None;
+        cfg.slo = Some(SloCfg { tiers: 2, deadline_frac: 1.0, slack: 1.0 });
+        let t = generate(&cfg);
+        let m = tiny_model(4);
+        let rcfg = ReplayCfg { max_active: 2, ..ReplayCfg::default() };
+        let lru = replay(&m, &t, Sampler::Greedy, PolicyKind::Lru, &rcfg);
+        let ddl = replay(&m, &t, Sampler::Greedy, PolicyKind::Deadline, &rcfg);
+        assert_eq!(lru.rejected, 0, "lru never rejects");
+        assert!(ddl.rejected > 0, "deadline policy shed nothing on a tight trace");
+        assert_ne!(lru.event_hash, ddl.event_hash);
+    }
+}

@@ -377,6 +377,465 @@ fn state_bytes_at_is_exact_for_every_operator() {
     }
 }
 
+// ===========================================================================
+// Chaos tier (DESIGN.md §15): seeded perturbation runs — mid-run cancel
+// storms, burst admission past the arena byte budget, preempt/restore
+// churn. The contract under chaos: no panics, no event-order violations,
+// every submitted request reaches exactly one terminal state, and streams
+// the perturbation did NOT touch finish byte-identical to an unperturbed
+// run. The scan-family layout (MHA + LA) makes every chunk boundary and
+// restore bit-exact, so byte identity is specified behavior here, not a
+// tolerance; Greedy sampling keeps outputs a pure function of the logits.
+// ===========================================================================
+
+use sh2::serve::workload::{self, Arrival, CancelStormCfg, LenDist, SloCfg, WorkloadCfg};
+use sh2::serve::{FinishReason, FinishedStream, PolicyKind, RequestHandle};
+use sh2::util::prop::forall;
+use std::collections::BTreeMap;
+
+/// Walk a tick-stamped event log and enforce the per-stream lifecycle
+/// contract: Admitted before any progress, monotone prefill cursors that
+/// reset on (restore) re-admission, dense 0-based token indices, exactly
+/// one terminal event per stream, nothing after a terminal, and per-tick
+/// token spend within the [`TickConfig`] budgets. Returns each stream's
+/// terminal kind so callers can check totality.
+fn validate_events(
+    log: &[(usize, StreamEvent)],
+    cfg: TickConfig,
+    max_active: usize,
+) -> Result<BTreeMap<usize, &'static str>, String> {
+    #[derive(Default)]
+    struct Life {
+        active: bool,
+        ever_active: bool,
+        preempted: bool,
+        terminal: Option<&'static str>,
+        next_token: usize,
+        prefill_done: usize,
+    }
+    let mut lives: BTreeMap<usize, Life> = BTreeMap::new();
+    // A tick's prefill spend is bounded by its starting budget plus the
+    // final chunk's overshoot; decode adds at most one token per active
+    // stream plus one prefill-handoff token each.
+    let prefill_cap = cfg.tick_budget.max(1) + cfg.prefill_chunk.saturating_sub(1);
+    let token_cap = 2 * max_active.max(1);
+    let (mut cur_tick, mut prefill_spend, mut token_spend) = (0usize, 0usize, 0usize);
+    for (tick, ev) in log {
+        if *tick != cur_tick {
+            if *tick < cur_tick {
+                return Err(format!("tick went backwards: {cur_tick} -> {tick}"));
+            }
+            cur_tick = *tick;
+            prefill_spend = 0;
+            token_spend = 0;
+        }
+        let fail = |msg: String| Err(format!("tick {cur_tick}: {msg} ({ev:?})"));
+        match ev {
+            StreamEvent::Admitted { id, restored } => {
+                let life = lives.entry(*id).or_default();
+                if life.terminal.is_some() || life.active {
+                    return fail(format!("#{id} admitted while active/terminal"));
+                }
+                if *restored != (life.ever_active && life.preempted) {
+                    return fail(format!("#{id} restored flag inconsistent"));
+                }
+                life.active = true;
+                life.ever_active = true;
+                life.preempted = false;
+                life.prefill_done = 0;
+            }
+            StreamEvent::PrefillProgress { id, done, total } => {
+                let life = lives.entry(*id).or_default();
+                if !life.active || life.terminal.is_some() {
+                    return fail(format!("#{id} prefilled while inactive"));
+                }
+                if *done <= life.prefill_done || done > total {
+                    return fail(format!(
+                        "#{id} prefill cursor not monotone: {} -> {done}/{total}",
+                        life.prefill_done
+                    ));
+                }
+                prefill_spend += done - life.prefill_done;
+                life.prefill_done = *done;
+                if prefill_spend > prefill_cap {
+                    return fail(format!("prefill spend {prefill_spend} > cap {prefill_cap}"));
+                }
+            }
+            StreamEvent::Token { id, index, .. } => {
+                let life = lives.entry(*id).or_default();
+                if !life.active || life.terminal.is_some() {
+                    return fail(format!("#{id} token while inactive"));
+                }
+                if *index != life.next_token {
+                    return fail(format!(
+                        "#{id} token index {index}, expected {}",
+                        life.next_token
+                    ));
+                }
+                life.next_token += 1;
+                token_spend += 1;
+                if token_spend > token_cap {
+                    return fail(format!("token spend {token_spend} > cap {token_cap}"));
+                }
+            }
+            StreamEvent::Finished { id, reason } => {
+                let life = lives.entry(*id).or_default();
+                if !life.active || life.terminal.is_some() || *reason != FinishReason::MaxNew {
+                    return fail(format!("#{id} bad finish"));
+                }
+                life.active = false;
+                life.terminal = Some("finished");
+            }
+            StreamEvent::Preempted { id } => {
+                let life = lives.entry(*id).or_default();
+                if !life.active || life.terminal.is_some() {
+                    return fail(format!("#{id} preempted while inactive"));
+                }
+                life.active = false;
+                life.preempted = true;
+            }
+            StreamEvent::Cancelled { id } => {
+                let life = lives.entry(*id).or_default();
+                if life.terminal.is_some() {
+                    return fail(format!("#{id} cancelled after terminal"));
+                }
+                life.active = false;
+                life.terminal = Some("cancelled");
+            }
+            StreamEvent::Rejected { id } => {
+                let life = lives.entry(*id).or_default();
+                if life.active || life.terminal.is_some() {
+                    return fail(format!("#{id} rejected while active/terminal"));
+                }
+                life.terminal = Some("rejected");
+            }
+        }
+    }
+    Ok(lives
+        .iter()
+        .filter_map(|(id, l)| l.terminal.map(|t| (*id, t)))
+        .collect())
+}
+
+#[test]
+fn chaos_cancel_storm_keeps_survivors_byte_identical() {
+    let mut rng = Rng::new(70);
+    let m = HybridLm::new(&mut rng, D, HEADS, &["MHA", "LA"]).unwrap();
+    let cfg = TickConfig { prefill_chunk: 8, tick_budget: 12 };
+    let prompts: Vec<(Vec<u8>, usize)> = (0..10)
+        .map(|i| {
+            let p: Vec<u8> = (0..4 + 7 * (i % 4)).map(|t| b"ACGT"[(i + t) % 4]).collect();
+            (p, 6 + (i * 3) % 12)
+        })
+        .collect();
+    // `storm`: cancel a seeded subset of handles at the given tick, exactly
+    // the way a client-side disconnect wave lands mid-run.
+    let run = |storm: Option<(usize, u64)>| {
+        let mut s = BatchScheduler::with_config(&m, Sampler::Greedy, 4, usize::MAX, 9, cfg);
+        let handles: Vec<_> = prompts
+            .iter()
+            .map(|(p, n)| s.submit(ServeRequest::new(p.clone(), *n)))
+            .collect();
+        let mut log = Vec::new();
+        let mut hit = Vec::new();
+        let mut tick_no = 0usize;
+        while !s.is_idle() {
+            tick_no += 1;
+            if let Some((at, seed)) = storm {
+                if tick_no == at {
+                    let mut crng = Rng::new(seed);
+                    for h in &handles {
+                        if crng.chance(0.4) {
+                            h.cancel();
+                            hit.push(h.id());
+                        }
+                    }
+                }
+            }
+            for e in s.tick() {
+                log.push((tick_no, e));
+            }
+            assert!(tick_no < 10_000, "runaway");
+        }
+        (log, s.take_finished(), hit)
+    };
+    let (base_log, base_done, _) = run(None);
+    validate_events(&base_log, cfg, 4).unwrap();
+    let (chaos_log, chaos_done, hit) = run(Some((5, 0xBAD5EED)));
+    let terminals = validate_events(&chaos_log, cfg, 4).unwrap();
+    assert!(
+        !hit.is_empty() && hit.len() < prompts.len(),
+        "storm should hit a strict subset, hit {} of {}",
+        hit.len(),
+        prompts.len()
+    );
+    assert_eq!(terminals.len(), prompts.len(), "a stream never terminated");
+    let base_out: BTreeMap<usize, Vec<u8>> =
+        base_done.iter().map(|f| (f.id, f.output.clone())).collect();
+    let mut n_cancelled = 0;
+    for f in &chaos_done {
+        // A storm victim may legitimately have crossed the finish line in
+        // the same tick the flag was raised; anything else must report
+        // Cancelled. Either way its (partial) output is a prefix of the
+        // unperturbed stream's bytes, and untouched survivors match fully.
+        let base = &base_out[&f.id];
+        assert_eq!(
+            f.output[..],
+            base[..f.output.len()],
+            "stream {} diverged from the unperturbed run",
+            f.id
+        );
+        if hit.contains(&f.id) {
+            if f.reason == FinishReason::Cancelled {
+                n_cancelled += 1;
+            } else {
+                assert_eq!(f.reason, FinishReason::MaxNew);
+                assert_eq!(f.output.len(), base.len());
+            }
+        } else {
+            assert_eq!(f.reason, FinishReason::MaxNew, "survivor {}", f.id);
+            assert_eq!(f.output.len(), base.len(), "survivor {}", f.id);
+        }
+    }
+    assert!(n_cancelled > 0, "the storm cancelled nothing in flight");
+}
+
+#[test]
+fn chaos_burst_admission_respects_arena_budget_every_tick() {
+    let mut rng = Rng::new(71);
+    let m = HybridLm::new(&mut rng, D, HEADS, &["MHA", "LA"]).unwrap();
+    let cfg = TickConfig { prefill_chunk: 8, tick_budget: 16 };
+    // Budget ~= two fully grown streams, so a same-tick burst of eight must
+    // be throttled at admission and preempted under KV growth; the byte
+    // invariant below must hold after EVERY tick, not just at the end.
+    let budget = m.state_bytes_at(40) * 2;
+    let mut s = BatchScheduler::with_config(&m, Sampler::Greedy, 4, budget, 13, cfg);
+    for i in 0..8usize {
+        let p: Vec<u8> = (0..10 + 3 * i).map(|t| b"ACGT"[t % 4]).collect();
+        s.submit(ServeRequest::new(p, 12));
+    }
+    let mut log = Vec::new();
+    let mut tick_no = 0usize;
+    while !s.is_idle() {
+        tick_no += 1;
+        for e in s.tick() {
+            log.push((tick_no, e));
+        }
+        assert!(
+            s.arena_state_bytes() <= budget || s.active_streams() <= 1,
+            "tick {tick_no}: arena {} bytes over budget {budget} with {} streams active",
+            s.arena_state_bytes(),
+            s.active_streams()
+        );
+        assert!(s.active_streams() <= 4);
+        assert!(tick_no < 10_000, "runaway");
+    }
+    let terminals = validate_events(&log, cfg, 4).unwrap();
+    assert_eq!(terminals.len(), 8, "every burst request must terminate");
+    let done = s.take_finished();
+    assert_eq!(done.len(), 8);
+    for f in &done {
+        assert_eq!(f.reason, FinishReason::MaxNew, "stream {}", f.id);
+        assert_eq!(f.output.len(), 12, "stream {}", f.id);
+    }
+    assert!(
+        s.stats.preemptions > 0,
+        "budget never forced a preemption — the test budget is too loose"
+    );
+}
+
+#[test]
+fn chaos_preempt_restore_churn_never_changes_outputs() {
+    let mut rng = Rng::new(72);
+    let m = HybridLm::new(&mut rng, D, HEADS, &["MHA", "LA"]).unwrap();
+    let cfg = TickConfig { prefill_chunk: 8, tick_budget: 16 };
+    let prompts: Vec<(Vec<u8>, usize)> = (0..6)
+        .map(|i| {
+            let p: Vec<u8> = (0..8 + 4 * i).map(|t| b"TGCA"[(i + t) % 4]).collect();
+            (p, 10)
+        })
+        .collect();
+    let run = |budget: usize| {
+        let mut s = BatchScheduler::with_config(&m, Sampler::Greedy, 3, budget, 17, cfg);
+        for (p, n) in &prompts {
+            s.submit(ServeRequest::new(p.clone(), *n));
+        }
+        let mut log = Vec::new();
+        let mut tick_no = 0usize;
+        while !s.is_idle() {
+            tick_no += 1;
+            for e in s.tick() {
+                log.push((tick_no, e));
+            }
+            assert!(tick_no < 10_000, "runaway");
+        }
+        let preemptions = s.stats.preemptions;
+        (log, s.take_finished(), preemptions)
+    };
+    let (calm_log, calm_done, calm_preempts) = run(usize::MAX);
+    validate_events(&calm_log, cfg, 3).unwrap();
+    assert_eq!(calm_preempts, 0);
+    let (churn_log, churn_done, churn_preempts) = run(m.state_bytes_at(38) * 2);
+    validate_events(&churn_log, cfg, 3).unwrap();
+    assert!(churn_preempts > 0, "tight budget produced no churn");
+    assert!(
+        churn_log
+            .iter()
+            .any(|(_, e)| matches!(e, StreamEvent::Admitted { restored: true, .. })),
+        "no preempted stream was ever restored"
+    );
+    // Preempt → drop state → replay history → resume must be invisible in
+    // the bytes: every stream finishes with exactly the calm run's output.
+    let calm_out: BTreeMap<usize, Vec<u8>> =
+        calm_done.iter().map(|f| (f.id, f.output.clone())).collect();
+    assert_eq!(churn_done.len(), prompts.len());
+    for f in &churn_done {
+        assert_eq!(f.reason, FinishReason::MaxNew, "stream {}", f.id);
+        assert_eq!(f.output, calm_out[&f.id], "stream {} changed under churn", f.id);
+    }
+}
+
+/// Drive one seeded trace through a fresh scheduler exactly the way
+/// [`workload::replay`] does, but with per-tick invariant checks; returns
+/// the tick-stamped event log for determinism comparison.
+fn run_trace_checked(
+    m: &HybridLm,
+    trace: &workload::Trace,
+    kind: PolicyKind,
+    budget: usize,
+    tcfg: TickConfig,
+    max_active: usize,
+) -> Result<(Vec<(usize, StreamEvent)>, Vec<FinishedStream>), String> {
+    let mut s = BatchScheduler::with_policy(
+        m,
+        Sampler::Greedy,
+        max_active,
+        budget,
+        5,
+        tcfg,
+        kind.build(),
+    );
+    let mut handles: BTreeMap<usize, RequestHandle> = BTreeMap::new();
+    let (mut next_req, mut next_cxl) = (0usize, 0usize);
+    let mut log = Vec::new();
+    let horizon = trace.requests.last().map(|r| r.at).unwrap_or(0);
+    let cap = horizon + 64 + 16 * trace.work_tokens().max(1);
+    while next_req < trace.requests.len() || next_cxl < trace.cancels.len() || !s.is_idle() {
+        let now = s.current_tick();
+        while next_req < trace.requests.len() && trace.requests[next_req].at <= now {
+            let r = &trace.requests[next_req];
+            let mut req =
+                ServeRequest::new(r.prompt.clone(), r.max_new).with_priority(r.priority);
+            if let Some(d) = r.deadline {
+                req = req.with_deadline(d);
+            }
+            handles.insert(r.id, s.submit(req));
+            next_req += 1;
+        }
+        while next_cxl < trace.cancels.len() && trace.cancels[next_cxl].at <= now {
+            if let Some(h) = handles.get(&trace.cancels[next_cxl].id) {
+                h.cancel();
+            }
+            next_cxl += 1;
+        }
+        let tick_no = {
+            let evs = s.tick();
+            let t = s.current_tick();
+            for e in evs {
+                log.push((t, e));
+            }
+            t
+        };
+        if !(s.arena_state_bytes() <= budget || s.active_streams() <= 1) {
+            return Err(format!(
+                "tick {tick_no}: arena {} bytes over budget {budget} with {} active",
+                s.arena_state_bytes(),
+                s.active_streams()
+            ));
+        }
+        if s.active_streams() > max_active {
+            return Err(format!("tick {tick_no}: {} active > max_active", s.active_streams()));
+        }
+        if tick_no > cap {
+            return Err(format!("exceeded tick safety cap {cap}"));
+        }
+    }
+    Ok((log, s.take_finished()))
+}
+
+#[test]
+fn trace_replay_invariants_hold_for_any_seeded_trace() {
+    // Property (DESIGN.md §15): for ANY seeded trace — arrivals, lengths,
+    // storms, SLOs, byte pressure, policy all randomized — at every tick
+    // the committed arena bytes stay within budget (or a single oversized
+    // stream runs alone), per-tick token spend stays within the TickConfig
+    // budgets (checked by validate_events), every submitted request lands
+    // in exactly one of Finished/Cancelled/Rejected, and replaying the
+    // same trace twice yields an identical tick-stamped event log.
+    let mut mrng = Rng::new(0x5EED);
+    let m = HybridLm::new(&mut mrng, D, HEADS, &["MHA", "LA"]).unwrap();
+    let tcfg = TickConfig { prefill_chunk: 4, tick_budget: 8 };
+    forall(
+        6,
+        |r| {
+            let kind = PolicyKind::ALL[r.below(PolicyKind::ALL.len())];
+            let tight = r.chance(0.5);
+            let cfg = WorkloadCfg {
+                name: "prop".to_string(),
+                seed: r.next_u64(),
+                requests: 6 + r.below(8),
+                arrival: if r.chance(0.5) {
+                    Arrival::Poisson { mean_gap: 1.0 + 3.0 * r.f64() }
+                } else {
+                    Arrival::Bursty {
+                        burst: 2 + r.below(4),
+                        mean_gap: 2.0 + 4.0 * r.f64(),
+                    }
+                },
+                prompt_len: LenDist::Pareto { alpha: 2.0, lo: 4, hi: 40 },
+                max_new: LenDist::Pareto { alpha: 1.0, lo: 2, hi: 12 },
+                shared_prefix: None,
+                cancel_storm: if r.chance(0.5) {
+                    Some(CancelStormCfg { at_tick: 3 + r.below(6), frac: 0.4 })
+                } else {
+                    None
+                },
+                slo: if r.chance(0.5) {
+                    Some(SloCfg { tiers: 3, deadline_frac: 0.5, slack: 1.0 + 2.0 * r.f64() })
+                } else {
+                    None
+                },
+            };
+            (cfg, kind, tight)
+        },
+        |(cfg, kind, tight)| {
+            let trace = workload::generate(cfg);
+            let budget = if *tight { m.state_bytes_at(24) * 2 } else { usize::MAX };
+            let (log, done) = run_trace_checked(&m, &trace, *kind, budget, tcfg, 3)?;
+            let terminals = validate_events(&log, tcfg, 3)?;
+            if terminals.len() != trace.requests.len() {
+                return Err(format!(
+                    "{} of {} requests reached a terminal state",
+                    terminals.len(),
+                    trace.requests.len()
+                ));
+            }
+            if done.len() != trace.requests.len() {
+                return Err(format!(
+                    "take_finished returned {} of {}",
+                    done.len(),
+                    trace.requests.len()
+                ));
+            }
+            let (log2, _) = run_trace_checked(&m, &trace, *kind, budget, tcfg, 3)?;
+            if log != log2 {
+                return Err("same trace, same policy, different event log".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn served_generation_is_reproducible_end_to_end() {
     // Full stack: model + sampler + scheduler, twice, same bytes out.

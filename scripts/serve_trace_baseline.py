@@ -1,0 +1,358 @@
+#!/usr/bin/env python3
+"""Seed bench/baseline/BENCH_serve_trace.json without running the Rust bench.
+
+Mirrors, bit for bit, the deterministic tick simulation behind
+benches/serve_trace.rs: util::rng::Rng (splitmix64 seeding + xoshiro256**),
+the serve::workload generator's arrival/length/SLO draws, and the
+BatchScheduler tick loop (policy-driven admission, chunked token-budgeted
+prefill, batched decode, retirement). Replay metrics are integer tick
+arithmetic -- model numerics never enter -- so this mirror reproduces the
+bench's record values exactly; a --headroom factor (default 4) is then
+applied so the seeded baseline stays conservative, matching the repo's
+baseline convention (see README: Bench regression gate).
+
+Usage:
+    python3 scripts/serve_trace_baseline.py [--headroom 4] \
+        [--out bench/baseline/BENCH_serve_trace.json]
+
+To verify the mirror against the real bench:
+    SH2_BENCH_JSON=/tmp/st.json cargo bench --bench serve_trace
+    python3 scripts/serve_trace_baseline.py --headroom 1 --out /tmp/py.json
+    # records in the two files must carry identical p50/p90 values
+"""
+
+import argparse
+import json
+import math
+
+MASK = (1 << 64) - 1
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """util::rng::Rng: xoshiro256** seeded via splitmix64."""
+
+    def __init__(self, seed):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def fork(self, tag):
+        return Rng(self.next_u64() ^ ((tag * 0x9E3779B97F4A7C15) & MASK))
+
+    def f64(self):
+        # (next_u64() >> 11) * 2^-53: both factors exact, product correctly
+        # rounded -- identical to the Rust f64() draw.
+        return (self.next_u64() >> 11) * (2.0 ** -53)
+
+    def below(self, n):
+        return self.next_u64() % n
+
+    def chance(self, p):
+        return self.f64() < p
+
+
+def pareto(rng, alpha, lo, hi):
+    """LenDist::Pareto: bounded, alpha restricted to {1, 2} so the inverse
+    CDF needs only division and sqrt (correctly-rounded IEEE ops)."""
+    u = rng.f64()
+    l, h = float(lo), float(hi)
+    if alpha == 1.0:
+        x = l / (1.0 - u * (1.0 - l / h))
+    elif alpha == 2.0:
+        r = l / h
+        x = l / math.sqrt(1.0 - u * (1.0 - r * r))
+    else:
+        raise ValueError("alpha must be 1 or 2")
+    return max(lo, min(hi, int(x)))  # `as usize` truncates toward zero
+
+
+def geometric_gap(rng, mean_gap):
+    p = 1.0 / (1.0 + max(mean_gap, 0.0))
+    gap = 0
+    while not rng.chance(p):
+        gap += 1
+    return gap
+
+
+def generate(name, seed, requests, arrival, slo):
+    """serve::workload::generate for the bench's trace shape: Pareto(2, 8,
+    96) prompts, Pareto(1, 4, 32) outputs, shared prefixes (content only --
+    never consulted by tick metrics), no cancel storm, SLO annotations.
+
+    Only the arr/len/slo forked streams feed the schedule; tok/cxl draws
+    shape prompt bytes and storms, which this mirror never needs. The forks
+    still happen in order so the stream seeds match the Rust generator.
+    """
+    root = Rng(seed)
+    arr = root.fork(1)
+    ln = root.fork(2)
+    root.fork(3)  # tok: prompt content only
+    slo_rng = root.fork(4)
+    root.fork(5)  # cxl: no storm configured
+    tiers, deadline_frac, slack = slo
+    at = 0
+    in_burst = 0
+    reqs = []
+    for rid in range(requests):
+        if arrival[0] == "poisson":
+            if rid > 0:
+                at += geometric_gap(arr, arrival[1])
+        else:  # ("bursty", burst, mean_gap)
+            if rid > 0 and in_burst == 0:
+                at += 1 + geometric_gap(arr, arrival[2])
+            in_burst = (in_burst + 1) % max(arrival[1], 1)
+        prompt_len = max(pareto(ln, 2.0, 8, 96), 1)
+        max_new = pareto(ln, 1.0, 4, 32)
+        priority = slo_rng.below(tiers) if tiers > 1 else 0
+        if slo_rng.chance(deadline_frac):
+            ideal = -(-prompt_len // 16) + max(max_new, 1)
+            deadline = math.ceil(ideal * slack)
+        else:
+            deadline = None
+        reqs.append(dict(id=rid, at=at, prompt_len=prompt_len, max_new=max_new,
+                         priority=priority, deadline=deadline))
+    return name, reqs
+
+
+INF = float("inf")
+
+
+def replay_sim(reqs, policy, max_active=4, chunk=16, tick_budget=32):
+    """BatchScheduler tick loop under unlimited byte budget: admission per
+    policy (with terminal rejection), chunked prefill with the decode
+    reservation and anti-starvation floor, handoff-token-then-decode in the
+    same tick, retirement. No preemption can occur (budget = usize::MAX),
+    so realized state bytes never enter the schedule."""
+    per_tick = tick_budget + chunk - 1  # projected_completion_tick's optimism
+    queue, active, outcomes = [], [], []
+    tick_no = 0
+
+    def select_queued():
+        best = 0
+        if policy == "priority":
+            for i in range(1, len(queue)):
+                if queue[i]["priority"] > queue[best]["priority"]:
+                    best = i
+        elif policy == "deadline":
+            def key(s):
+                return s["deadline"] if s["deadline"] is not None else INF
+            for i in range(1, len(queue)):
+                if key(queue[i]) < key(queue[best]):
+                    best = i
+        return best
+
+    def admits(s):
+        if policy != "deadline" or s["deadline"] is None:
+            return True
+        remaining = s["max_new"] - s["generated"]
+        prefill_ticks = -(-s["hist"] // per_tick)
+        decode_ticks = (0 if remaining == 0
+                        else remaining - 1 if prefill_ticks > 0 else remaining)
+        return tick_no + prefill_ticks + decode_ticks <= s["deadline"]
+
+    def admit_one(force):
+        if not queue:
+            return "stop"
+        if not force and len(active) >= max_active:
+            return "stop"
+        qi = select_queued()
+        s = queue[qi]
+        if not admits(s):
+            queue.pop(qi)
+            outcomes.append(dict(s, reason="rejected", finish_tick=tick_no))
+            return "rejected"
+        queue.pop(qi)
+        active.append(s)
+        return "admitted"
+
+    def retire():
+        i = 0
+        while i < len(active):
+            s = active[i]
+            if s["phase"] == "decode" and s["generated"] >= s["max_new"]:
+                active.pop(i)
+                outcomes.append(dict(s, reason="finished", finish_tick=tick_no))
+            else:
+                i += 1
+
+    def tick():
+        nonlocal tick_no
+        tick_no += 1
+        while not active and queue:
+            r = admit_one(True)
+            if r == "rejected":
+                continue
+            break
+        while admit_one(False) in ("admitted", "rejected"):
+            pass
+        n_decode = sum(1 for s in active if s["phase"] == "decode")
+        budget = max(tick_budget - n_decode, 0)
+        if budget == 0 and any(s["phase"] == "prefill" for s in active):
+            budget = 1
+        exhausted = False
+        while not exhausted:
+            progressed = False
+            for s in active:
+                if budget == 0:
+                    exhausted = True
+                    break
+                if s["phase"] != "prefill":
+                    continue
+                done = min(s["pos"] + chunk, s["hist"])
+                budget = max(budget - (done - s["pos"]), 0)
+                s["pos"] = done
+                progressed = True
+                if done == s["hist"]:
+                    s["phase"] = "decode"
+                    if s["generated"] < s["max_new"]:  # handoff token
+                        s["generated"] += 1
+                        s["hist"] += 1
+                        if s["first_token_tick"] is None:
+                            s["first_token_tick"] = tick_no
+            if not progressed:
+                break
+        retire()
+        for s in active:
+            if s["phase"] == "decode":
+                s["generated"] += 1
+                s["hist"] += 1
+                if s["first_token_tick"] is None:
+                    s["first_token_tick"] = tick_no
+        retire()
+
+    ordered = sorted(reqs, key=lambda r: (r["at"], r["id"]))
+    cap = (ordered[-1]["at"] if ordered else 0) + 64 + 16 * max(
+        sum(r["prompt_len"] + r["max_new"] for r in reqs), 1)
+    next_req = 0
+    while next_req < len(ordered) or queue or active:
+        now = tick_no
+        while next_req < len(ordered) and ordered[next_req]["at"] <= now:
+            r = ordered[next_req]
+            queue.append(dict(id=r["id"], hist=r["prompt_len"], generated=0,
+                              max_new=r["max_new"], priority=r["priority"],
+                              deadline=(now + r["deadline"]
+                                        if r["deadline"] is not None else None),
+                              submit_tick=now, first_token_tick=None,
+                              phase="prefill", pos=0))
+            next_req += 1
+        tick()
+        assert tick_no <= cap, "simulation exceeded the tick safety cap"
+
+    outcomes.sort(key=lambda o: o["id"])
+    ttft = [float(o["first_token_tick"] - o["submit_tick"])
+            for o in outcomes if o["first_token_tick"] is not None]
+    delivered = sum(o["generated"] for o in outcomes
+                    if o["reason"] == "finished"
+                    and (o["deadline"] is None or o["finish_tick"] <= o["deadline"]))
+    finished = sum(1 for o in outcomes if o["reason"] == "finished")
+    rejected = sum(1 for o in outcomes if o["reason"] == "rejected")
+    return dict(total_ticks=tick_no, ttft=ttft, delivered=delivered,
+                finished=finished, rejected=rejected)
+
+
+def percentile(sorted_xs, p):
+    """util::stats::percentile_sorted, linear interpolation."""
+    rank = p / 100.0 * (len(sorted_xs) - 1)
+    lo, hi = math.floor(rank), math.ceil(rank)
+    if lo == hi:
+        return sorted_xs[lo]
+    w = rank - float(lo)
+    return sorted_xs[lo] * (1.0 - w) + sorted_xs[hi] * w
+
+
+def rust_round(x):
+    return math.floor(x + 0.5)  # f64::round for non-negative x
+
+
+def record(name, ticks, headroom):
+    """One sh2-bench-v1 record, mirroring ticks_summary(): tick values
+    scaled by 1e-9 into the seconds slot so the ns fields carry ticks."""
+    scaled = [t * 1e-9 for t in ticks]
+    mean = 0.0
+    for x in scaled:
+        mean += x
+    mean /= len(scaled)
+    s = sorted(scaled)
+    return {
+        "name": name,
+        "iters": 1,
+        "mean_ns": rust_round(mean * 1e9) * headroom,
+        "p50_ns": rust_round(percentile(s, 50.0) * 1e9) * headroom,
+        "p90_ns": rust_round(percentile(s, 90.0) * 1e9) * headroom,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--headroom", type=int, default=4,
+                    help="multiply record values for a conservative seed "
+                         "baseline (1 = exact mirror of the bench)")
+    ap.add_argument("--out", default="bench/baseline/BENCH_serve_trace.json")
+    args = ap.parse_args()
+
+    slo = (3, 0.6, 1.5)
+    traces = [
+        generate("poisson", 11, 48, ("poisson", 1.0), slo),
+        generate("bursty", 13, 48, ("bursty", 8, 3.0), slo),
+    ]
+    records = []
+    for name, reqs in traces:
+        for policy in ("lru", "priority", "deadline"):
+            r = replay_sim(reqs, policy)
+            assert r["finished"] + r["rejected"] == len(reqs), \
+                f"{name}/{policy}: lost a terminal state"
+            assert r["delivered"] > 0, f"{name}/{policy}: zero goodput"
+            # Milli-ticks per delivered token, matching the Rust
+            # expression's evaluation order exactly.
+            tpt = 1e3 * r["total_ticks"] / r["delivered"]
+            records.append(record(f"serve_trace/{name}/{policy}/ttft",
+                                  r["ttft"], args.headroom))
+            records.append(record(f"serve_trace/{name}/{policy}/tpt",
+                                  [tpt], args.headroom))
+            print(f"{name:8s} {policy:9s} ticks={r['total_ticks']:4d} "
+                  f"ttft_p50={records[-2]['p50_ns'] // args.headroom:4d} "
+                  f"ttft_p90={records[-2]['p90_ns'] // args.headroom:4d} "
+                  f"mticks/tok={tpt:6.0f} fin/rej={r['finished']}/{r['rejected']}")
+
+    doc = {
+        "schema": "sh2-bench-v1",
+        "git_sha": "seeded",
+        "quick": True,
+        "seeded": True,
+        "note": f"Tick-exact simulation of benches/serve_trace.rs with "
+                f"{args.headroom}x headroom (scripts/serve_trace_baseline.py). "
+                "Values are deterministic tick counts, not wall-clock; "
+                "re-baseline by copying the bench-smoke artifact JSON here "
+                "(README: Bench regression gate).",
+        "records": records,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"{len(records)} records -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()
