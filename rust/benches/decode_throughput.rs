@@ -18,6 +18,7 @@
 //! configuration; `SH2_BENCH_JSON=path` writes `sh2-bench-v1` records for
 //! the regression gate.
 
+use sh2::exec::ExecCtx;
 use sh2::ops::{all_operators, DecodeState};
 use sh2::tensor::Tensor;
 use sh2::util::bench::{black_box, fmt_secs, quick_requested, BenchLog, Bencher, Table};
@@ -159,6 +160,70 @@ fn main() {
          (projection GEMMs amortize weight traffic across streams); B=8 batched \
          decode should beat 8 serial steps in tokens/s.",
         batches[batches.len() - 1]
+    );
+
+    // --- thread sweep: step_batch at B=8 on explicit worker pools -------
+    // (explicit ExecCtx, not the global one — the global pool size is
+    // fixed per process). One record per (operator, pool size); records
+    // share a name and are keyed apart by the `threads` field in
+    // bench-gate. Shapes fixed across quick/full so names stay stable.
+    let sweep_bsz = 8usize;
+    let threads_sweep: &[usize] = &[1, 2];
+    let mut header: Vec<String> = vec!["operator".to_string()];
+    for &th in threads_sweep {
+        header.push(format!("t={th}"));
+    }
+    header.push("t2 speedup".to_string());
+    let mut tt = Table::new(
+        &format!(
+            "batched decode thread sweep (d={d}, ctx={bctx}, B={sweep_bsz}, \
+             per-token cost, {ticks_per_sample}-tick amortized)"
+        ),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for op in &ops {
+        let x = Tensor::randn(&mut rng, &[bctx, d], 1.0);
+        let mut st = op.state();
+        op.prefill(&mut st, &x);
+        let xs_ticks: Vec<Tensor> = (0..ticks_per_sample)
+            .map(|_| Tensor::randn(&mut rng, &[sweep_bsz, d], 1.0))
+            .collect();
+        let proto: Vec<DecodeState> = (0..sweep_bsz).map(|_| st.clone()).collect();
+        let mut cells = vec![op.name().to_string()];
+        let mut per_tok_t = Vec::new();
+        for &th in threads_sweep {
+            let ctx = ExecCtx::new(th);
+            let r = b.bench(op.name(), || {
+                let mut sts = proto.clone();
+                for xs in &xs_ticks {
+                    let mut refs: Vec<&mut DecodeState> = sts.iter_mut().collect();
+                    black_box(op.step_batch_ctx(&mut refs, xs, &ctx));
+                }
+            });
+            let mut per_token = r.clone();
+            let denom = (ticks_per_sample * sweep_bsz) as f64;
+            per_token.secs.mean /= denom;
+            per_token.secs.p50 /= denom;
+            per_token.secs.p90 /= denom;
+            per_token.name = format!("decode_batch/{}/B{sweep_bsz}/sweep", op.name());
+            per_token.batch = Some(sweep_bsz);
+            per_token.threads = Some(th);
+            log.push(&per_token);
+            per_tok_t.push(per_token.secs.mean);
+            cells.push(fmt_secs(per_token.secs.mean));
+        }
+        cells.push(format!(
+            "{:.2}x",
+            per_tok_t[0] / per_tok_t[per_tok_t.len() - 1].max(1e-12)
+        ));
+        tt.row(cells);
+    }
+    tt.print();
+    println!(
+        "thread sweep: on a multi-core host per-token cost should fall from t=1 \
+         to t=2 (per-stream tasks run concurrently); on a 1-core host the two \
+         columns should be within pool overhead of each other. Outputs are \
+         byte-identical at any pool size (tests/integration_exec.rs)."
     );
     if let Some(path) = log.write_env() {
         println!("bench records ({}) -> {path}", log.len());

@@ -12,8 +12,9 @@
 //! loads a tuned plan cache into the dispatcher.
 
 use sh2::conv::direct::causal_conv_direct;
-use sh2::conv::two_stage::two_stage_conv;
+use sh2::conv::two_stage::{two_stage_conv, two_stage_conv_ctx};
 use sh2::conv::{planned_conv, CausalConv, GroupedFilter};
+use sh2::exec::ExecCtx;
 use sh2::tensor::Tensor;
 use sh2::util::bench::{black_box, fmt_secs, quick_requested, BenchLog, Bencher, Table};
 use sh2::util::rng::Rng;
@@ -60,6 +61,36 @@ fn main() {
         ]);
     }
     t.print();
+
+    // --- thread sweep: the same two-stage kernel on explicit worker
+    // pools (explicit ExecCtx, not the global one — the global pool size
+    // is fixed per process). One record per pool size, same name, keyed
+    // apart by the `threads` field in bench-gate. Fixed l so the record
+    // names (and the CI baseline) are stable across quick/full runs.
+    let lt = 2048usize;
+    let xt = Tensor::randn(&mut rng, &[lt, d], 1.0);
+    let mut st = Table::new(
+        &format!("Fig 3.1 thread sweep: two-stage conv (l={lt}, d={d})"),
+        &["threads", "p50", "speedup vs t1"],
+    );
+    let mut t1_p50 = 0.0f64;
+    for threads in [1usize, 2] {
+        let ctx = ExecCtx::new(threads);
+        let mut r = b.bench("two-stage-sweep", || {
+            black_box(two_stage_conv_ctx(&xt, &h, lb, &ctx));
+        });
+        r.threads = Some(threads);
+        log.push_as(&format!("fig31/two-stage/sweep_l{lt}"), &r);
+        if threads == 1 {
+            t1_p50 = r.secs.p50;
+        }
+        st.row(vec![
+            format!("{threads}"),
+            fmt_secs(r.secs.p50),
+            format!("{:.2}x", t1_p50 / r.secs.p50.max(1e-12)),
+        ]);
+    }
+    st.print();
     if let Some(path) = log.write_env() {
         println!("bench records ({}) -> {path}", log.len());
     }

@@ -95,12 +95,14 @@ fn main() {
             secs: ttft,
             iters: reps,
             batch: None,
+            threads: None,
         });
         log.push(&BenchResult {
             name: format!("serve/{name}/tok"),
             secs: tok,
             iters: reps,
             batch: None,
+            threads: None,
         });
     }
     t.print();

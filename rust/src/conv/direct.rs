@@ -2,26 +2,49 @@
 //! the "PyTorch conv baseline" stand-in for Fig 3.1.
 
 use super::{CausalConv, GroupedFilter};
+use crate::exec::{self, ExecCtx};
 use crate::tensor::Tensor;
 
 pub struct DirectConv;
 
-/// y[t, c] = Σ_{k} h[c, k] x[t-k, c], channel-major inner loop.
+/// Output rows per parallel task — a pure function of the shape, never of
+/// the thread count, so the split (and the bytes) are identical at any
+/// budget.
+const DIRECT_ROW_BLOCK: usize = 64;
+
+/// y[t, c] = Σ_{k} h[c, k] x[t-k, c], channel-major inner loop; runs on
+/// [`exec::global`].
 pub fn causal_conv_direct(x: &Tensor, h: &GroupedFilter) -> Tensor {
+    causal_conv_direct_ctx(x, h, exec::global())
+}
+
+/// [`causal_conv_direct`] on an explicit execution context. Parallel split:
+/// blocks of output rows (each row t only reads x rows <= t and writes its
+/// own y row, so row blocks are independent and the per-row accumulation
+/// order is exactly the serial one).
+pub fn causal_conv_direct_ctx(x: &Tensor, h: &GroupedFilter, ctx: &ExecCtx) -> Tensor {
     let (l, d) = (x.rows(), x.cols());
     assert_eq!(d, h.channels(), "input channels vs filter bank");
     let lh = h.filter_len();
     let mut y = Tensor::zeros(&[l, d]);
-    for t in 0..l {
-        let kmax = lh.min(t + 1);
-        let yrow = t * d;
-        for k in 0..kmax {
-            let xrow = (t - k) * d;
-            for c in 0..d {
-                y.data[yrow + c] += h.for_channel(c)[k] * x.data[xrow + c];
+    if l == 0 || d == 0 {
+        return y;
+    }
+    ctx.run_chunks(&mut y.data, DIRECT_ROW_BLOCK * d, |blk, y_rows| {
+        let t0 = blk * DIRECT_ROW_BLOCK;
+        let rows = y_rows.len() / d;
+        for r in 0..rows {
+            let t = t0 + r;
+            let kmax = lh.min(t + 1);
+            let yrow = r * d;
+            for k in 0..kmax {
+                let xrow = (t - k) * d;
+                for c in 0..d {
+                    y_rows[yrow + c] += h.for_channel(c)[k] * x.data[xrow + c];
+                }
             }
         }
-    }
+    });
     y
 }
 

@@ -1,26 +1,45 @@
 //! FFT-based causal depthwise convolution — the Hyena-LI path.
 
 use super::{CausalConv, GroupedFilter};
+use crate::exec::{self, ExecCtx, SharedSlice};
 use crate::tensor::fft::{fft_causal_conv_1d, fft_flops, next_pow2};
 use crate::tensor::Tensor;
 
 pub struct FftConv;
 
 /// Per-channel FFT convolution; filters may be as long as the sequence.
+/// Runs on [`exec::global`].
 pub fn fft_causal_conv(x: &Tensor, h: &GroupedFilter) -> Tensor {
+    fft_causal_conv_ctx(x, h, exec::global())
+}
+
+/// [`fft_causal_conv`] on an explicit execution context. Parallel split:
+/// one task per channel (each with its own gather buffer). A channel's
+/// scatter targets `y[t * d + c]` for fixed c — element-strided, disjoint
+/// across channels — so the write goes through [`SharedSlice::write`]
+/// rather than overlapping sub-slices.
+pub fn fft_causal_conv_ctx(x: &Tensor, h: &GroupedFilter, ctx: &ExecCtx) -> Tensor {
     let (l, d) = (x.rows(), x.cols());
     assert_eq!(d, h.channels());
     let mut y = Tensor::zeros(&[l, d]);
-    // Column-major walk: gather a channel, convolve, scatter back.
-    let mut col = vec![0.0f32; l];
-    for c in 0..d {
-        for t in 0..l {
-            col[t] = x.data[t * d + c];
-        }
-        let yc = fft_causal_conv_1d(&col, h.for_channel(c));
-        for t in 0..l {
-            y.data[t * d + c] = yc[t];
-        }
+    if l == 0 || d == 0 {
+        return y;
+    }
+    {
+        // Column-major walk: gather a channel, convolve, scatter back.
+        let ys = SharedSlice::new(&mut y.data);
+        ctx.run(d, &|c| {
+            let mut col = vec![0.0f32; l];
+            for (t, v) in col.iter_mut().enumerate() {
+                *v = x.data[t * d + c];
+            }
+            let yc = fft_causal_conv_1d(&col, h.for_channel(c));
+            for (t, &v) in yc.iter().take(l).enumerate() {
+                // SAFETY: channel c's writes hit indices t * d + c only —
+                // disjoint across the per-channel tasks.
+                unsafe { ys.write(t * d + c, v) };
+            }
+        });
     }
     y
 }

@@ -19,11 +19,12 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Mutex, OnceLock};
 
-use super::direct::causal_conv_direct;
-use super::fft_conv::fft_causal_conv;
+use super::direct::causal_conv_direct_ctx;
+use super::fft_conv::fft_causal_conv_ctx;
 use super::toeplitz::two_stage_ok;
-use super::two_stage::two_stage_conv;
+use super::two_stage::two_stage_conv_ctx;
 use super::{FirTail, GroupedFilter};
+use crate::exec::{self, ExecCtx};
 use crate::costmodel::{conv_flops_direct, conv_flops_fft, conv_flops_two_stage, ConvCostModel};
 use crate::tensor::fft::next_pow2;
 use crate::tensor::Tensor;
@@ -103,19 +104,46 @@ impl ConvAlgo {
     }
 }
 
-/// Execute one causal conv under an explicit algorithm choice.
+/// Execute one causal conv under an explicit algorithm choice, on
+/// [`exec::global`].
 pub fn execute(x: &Tensor, h: &GroupedFilter, algo: ConvAlgo) -> Tensor {
+    execute_ctx(x, h, algo, exec::global())
+}
+
+/// Execute one causal conv under an explicit algorithm choice and
+/// execution context (how a plan's `threads` dimension is applied: pass
+/// `exec::global().limit(plan.threads)`).
+pub fn execute_ctx(x: &Tensor, h: &GroupedFilter, algo: ConvAlgo, ctx: &ExecCtx) -> Tensor {
     match algo {
-        ConvAlgo::Direct => causal_conv_direct(x, h),
-        ConvAlgo::Fft => fft_causal_conv(x, h),
-        ConvAlgo::TwoStage { block } => two_stage_conv(x, h, block),
+        ConvAlgo::Direct => causal_conv_direct_ctx(x, h, ctx),
+        ConvAlgo::Fft => fft_causal_conv_ctx(x, h, ctx),
+        ConvAlgo::TwoStage { block } => two_stage_conv_ctx(x, h, block, ctx),
     }
+}
+
+/// Thread counts worth planning under a budget: 1, the powers of two below
+/// the budget, and the budget itself. A pure function of the budget (and
+/// tiny), so the planned dimension stays cheap to enumerate.
+fn thread_candidates(budget: usize) -> Vec<usize> {
+    let mut ts = vec![1usize];
+    let mut t = 2;
+    while t < budget {
+        ts.push(t);
+        t *= 2;
+    }
+    if budget > 1 {
+        ts.push(budget);
+    }
+    ts
 }
 
 /// A cached planning decision.
 #[derive(Clone, Copy, Debug)]
 pub struct ConvPlan {
     pub algo: ConvAlgo,
+    /// Worker threads the plan wants (1 = serial; never exceeds the budget
+    /// the plan was made under).
+    pub threads: usize,
     /// Predicted (analytic) or measured (calibrated) seconds per call.
     pub secs: f64,
     /// True when `secs` comes from an on-machine microbenchmark.
@@ -131,7 +159,10 @@ pub struct PlannerStats {
 }
 
 struct PlannerInner {
-    cache: BTreeMap<ConvShape, ConvPlan>,
+    /// Keyed by (bucketed shape, thread budget the plan was made under):
+    /// the same shape planned at different `--threads` budgets is a
+    /// different decision (and a different cache entry).
+    cache: BTreeMap<(ConvShape, usize), ConvPlan>,
     model: ConvCostModel,
     stats: PlannerStats,
 }
@@ -198,10 +229,19 @@ impl ConvPlanner {
         }
     }
 
-    /// The plan for a shape: forced algorithm if set, else cached decision,
-    /// else analytic argmin over candidates (cached for next time).
+    /// The plan for a shape under the process-wide thread budget
+    /// ([`exec::global`]); see [`ConvPlanner::plan_with_threads`].
     pub fn plan(&self, shape: &ConvShape) -> ConvPlan {
+        self.plan_with_threads(shape, exec::global().threads())
+    }
+
+    /// The plan for a shape under an explicit thread budget: forced
+    /// algorithm if set, else cached decision, else analytic argmin over
+    /// (algorithm, thread count) candidates — Amdahl-scaled by the model's
+    /// parallel fraction — cached for next time.
+    pub fn plan_with_threads(&self, shape: &ConvShape, max_threads: usize) -> ConvPlan {
         let key = shape.bucket();
+        let max_threads = max_threads.max(1);
         if let Some(algo) = self.force {
             // A forced two-stage block cannot cover every filter
             // (l_h <= l_b + 1 is a hard correctness condition — dispatching
@@ -214,30 +254,34 @@ impl ConvPlanner {
                 }
                 a => a,
             };
-            return ConvPlan { algo, secs: 0.0, calibrated: false };
+            return ConvPlan { algo, threads: max_threads, secs: 0.0, calibrated: false };
         }
         let mut inner = self.inner.lock().expect("planner lock");
-        if let Some(plan) = inner.cache.get(&key) {
+        if let Some(plan) = inner.cache.get(&(key, max_threads)) {
             inner.stats.hits += 1;
             return *plan;
         }
         inner.stats.misses += 1;
         let mut best: Option<ConvPlan> = None;
         for algo in Self::candidates(&key) {
-            let secs = Self::predict(&inner.model, &key, algo);
-            if best.map(|b| secs < b.secs).unwrap_or(true) {
-                best = Some(ConvPlan { algo, secs, calibrated: false });
+            let serial = Self::predict(&inner.model, &key, algo);
+            for &threads in &thread_candidates(max_threads) {
+                let secs = inner.model.parallel_time(serial, threads);
+                if best.map(|b| secs < b.secs).unwrap_or(true) {
+                    best = Some(ConvPlan { algo, threads, secs, calibrated: false });
+                }
             }
         }
         let plan = best.expect("at least direct and fft are always candidates");
-        inner.cache.insert(key, plan);
+        inner.cache.insert((key, max_threads), plan);
         plan
     }
 
-    /// Plan + execute in one call — the planner-dispatched conv.
+    /// Plan + execute in one call — the planner-dispatched conv. The
+    /// plan's thread dimension is applied by capping the global context.
     pub fn conv(&self, x: &Tensor, h: &GroupedFilter) -> Tensor {
         let plan = self.plan(&ConvShape::of(x, h));
-        execute(x, h, plan.algo)
+        execute_ctx(x, h, plan.algo, &exec::global().limit(plan.threads))
     }
 
     /// Microbenchmark candidates for a shape on this machine, cache the
@@ -246,9 +290,17 @@ impl ConvPlanner {
     /// analytic model already rules out by 30x (or that would take > 2 s
     /// per call — e.g. the quadratic direct conv at Hyena-LI lengths) are
     /// skipped rather than timed; the analytically-best candidate is always
-    /// measured. Returns the (algo, measured seconds) pairs.
-    pub fn calibrate_shape(&self, shape: &ConvShape, bencher: &Bencher) -> Vec<(ConvAlgo, f64)> {
+    /// measured. When the global thread budget exceeds 1, the serial winner
+    /// is re-measured at each candidate thread count (the planned thread
+    /// dimension), and the observed speedup refines the model's Amdahl
+    /// fraction. Returns the (algo, threads, measured seconds) triples.
+    pub fn calibrate_shape(
+        &self,
+        shape: &ConvShape,
+        bencher: &Bencher,
+    ) -> Vec<(ConvAlgo, usize, f64)> {
         let key = shape.bucket();
+        let budget = exec::global().threads();
         let mut rng = Rng::new(0x7u64 ^ (key.seq_len as u64) ^ ((key.filter_len as u64) << 20));
         let x = Tensor::randn(&mut rng, &[key.seq_len, key.channels], 1.0);
         let h = GroupedFilter::random(&mut rng, key.num_groups(), key.filter_len, key.group_size);
@@ -263,31 +315,50 @@ impl ConvPlanner {
             .min_by(|a, b| a.1.partial_cmp(b.1).expect("finite predictions"))
             .map(|(i, _)| i)
             .expect("candidates are never empty");
-        let mut measured: Vec<(ConvAlgo, f64)> = Vec::new();
+        let mut measured: Vec<(ConvAlgo, usize, f64)> = Vec::new();
+        let serial_ctx = exec::global().limit(1);
         for (i, &algo) in cands.iter().enumerate() {
             if i != best_idx && (preds[i] > 30.0 * preds[best_idx] || preds[i] > 2.0) {
                 continue;
             }
             let r = bencher.bench(algo.name(), || {
-                crate::util::bench::black_box(execute(&x, &h, algo));
+                crate::util::bench::black_box(execute_ctx(&x, &h, algo, &serial_ctx));
             });
-            measured.push((algo, r.secs.p50));
+            measured.push((algo, 1, r.secs.p50));
+        }
+        let (serial_best, serial_secs) = {
+            let &(algo, _, secs) = measured
+                .iter()
+                .min_by(|a, b| a.2.partial_cmp(&b.2).expect("finite bench times"))
+                .expect("candidates are never empty");
+            (algo, secs)
+        };
+        for &t in thread_candidates(budget).iter().filter(|&&t| t > 1) {
+            let ctx = exec::global().limit(t);
+            let r = bencher.bench(serial_best.name(), || {
+                crate::util::bench::black_box(execute_ctx(&x, &h, serial_best, &ctx));
+            });
+            measured.push((serial_best, t, r.secs.p50));
         }
         let mut inner = self.inner.lock().expect("planner lock");
-        for &(algo, secs) in &measured {
-            let flops = algo.flops(&key);
-            let rate = match algo {
-                ConvAlgo::Direct => &mut inner.model.direct_flops_per_s,
-                ConvAlgo::Fft => &mut inner.model.fft_flops_per_s,
-                ConvAlgo::TwoStage { .. } => &mut inner.model.two_stage_flops_per_s,
-            };
-            ConvCostModel::observe(rate, flops, secs);
+        for &(algo, threads, secs) in &measured {
+            if threads == 1 {
+                let flops = algo.flops(&key);
+                let rate = match algo {
+                    ConvAlgo::Direct => &mut inner.model.direct_flops_per_s,
+                    ConvAlgo::Fft => &mut inner.model.fft_flops_per_s,
+                    ConvAlgo::TwoStage { .. } => &mut inner.model.two_stage_flops_per_s,
+                };
+                ConvCostModel::observe(rate, flops, secs);
+            } else {
+                inner.model.observe_speedup(serial_secs, secs, threads);
+            }
         }
-        let &(algo, secs) = measured
+        let &(algo, threads, secs) = measured
             .iter()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite bench times"))
+            .min_by(|a, b| a.2.partial_cmp(&b.2).expect("finite bench times"))
             .expect("candidates are never empty");
-        inner.cache.insert(key, ConvPlan { algo, secs, calibrated: true });
+        inner.cache.insert((key, budget), ConvPlan { algo, threads, secs, calibrated: true });
         inner.stats.calibrations += 1;
         measured
     }
@@ -312,22 +383,24 @@ impl ConvPlanner {
         self.len() == 0
     }
 
-    /// Snapshot of every cached (shape, plan) pair, sorted by shape.
-    pub fn entries(&self) -> Vec<(ConvShape, ConvPlan)> {
+    /// Snapshot of every cached (shape, thread budget, plan) triple, sorted
+    /// by shape then budget.
+    pub fn entries(&self) -> Vec<(ConvShape, usize, ConvPlan)> {
         let inner = self.inner.lock().expect("planner lock");
-        inner.cache.iter().map(|(s, p)| (*s, *p)).collect()
+        inner.cache.iter().map(|((s, t), p)| (*s, *t, *p)).collect()
     }
 
     // -- persistence --------------------------------------------------------
 
     /// Serialize the cache + calibrated model to the plan-cache JSON format
-    /// (`sh2-plan-cache-v1`).
+    /// (`sh2-plan-cache-v2`; v1 predates the thread dimension and is no
+    /// longer written or read).
     pub fn to_json(&self) -> Json {
         let inner = self.inner.lock().expect("planner lock");
         let entries: Vec<Json> = inner
             .cache
             .iter()
-            .map(|(s, p)| {
+            .map(|((s, max_threads), p)| {
                 let block = match p.algo {
                     ConvAlgo::TwoStage { block } => block,
                     _ => 0,
@@ -338,21 +411,24 @@ impl ConvPlanner {
                     ("seq_len", Json::num(s.seq_len as f64)),
                     ("filter_len", Json::num(s.filter_len as f64)),
                     ("group_size", Json::num(s.group_size as f64)),
+                    ("max_threads", Json::num(*max_threads as f64)),
                     ("algo", Json::str(p.algo.name())),
                     ("block", Json::num(block as f64)),
+                    ("threads", Json::num(p.threads as f64)),
                     ("secs", Json::num(p.secs)),
                     ("calibrated", Json::Bool(p.calibrated)),
                 ])
             })
             .collect();
         Json::obj(vec![
-            ("schema", Json::str("sh2-plan-cache-v1")),
+            ("schema", Json::str("sh2-plan-cache-v2")),
             (
                 "model",
                 Json::obj(vec![
                     ("direct_flops_per_s", Json::num(inner.model.direct_flops_per_s)),
                     ("two_stage_flops_per_s", Json::num(inner.model.two_stage_flops_per_s)),
                     ("fft_flops_per_s", Json::num(inner.model.fft_flops_per_s)),
+                    ("parallel_efficiency", Json::num(inner.model.parallel_efficiency)),
                 ]),
             ),
             ("entries", Json::arr(entries)),
@@ -360,11 +436,19 @@ impl ConvPlanner {
     }
 
     /// Merge a plan-cache JSON document into this planner (loaded entries
-    /// overwrite same-shape analytic ones; the calibrated model replaces
-    /// the default priors).
+    /// overwrite same-key analytic ones; the calibrated model replaces the
+    /// default priors). v1 documents are rejected with a regeneration hint
+    /// — the load paths surface that as a warning, never a panic.
     pub fn merge_json(&self, j: &Json) -> Result<usize, String> {
-        if j.get("schema").and_then(Json::as_str) != Some("sh2-plan-cache-v1") {
-            return Err("not an sh2-plan-cache-v1 document".into());
+        let schema = j.get("schema").and_then(Json::as_str);
+        if schema == Some("sh2-plan-cache-v1") {
+            return Err("sh2-plan-cache-v1 plan caches predate the planned thread \
+                 dimension and are no longer supported; re-run `sh2 tune` to \
+                 regenerate a v2 cache"
+                .into());
+        }
+        if schema != Some("sh2-plan-cache-v2") {
+            return Err("not an sh2-plan-cache-v2 document".into());
         }
         let entries = j
             .get("entries")
@@ -381,6 +465,13 @@ impl ConvPlanner {
             }
             if let Some(r) = rate("fft_flops_per_s") {
                 inner.model.fft_flops_per_s = r;
+            }
+            if let Some(p) = m
+                .get("parallel_efficiency")
+                .and_then(Json::as_f64)
+                .filter(|p| (0.0..=1.0).contains(p))
+            {
+                inner.model.parallel_efficiency = p;
             }
         }
         let mut n = 0;
@@ -413,9 +504,12 @@ impl ConvPlanner {
                 }
                 other => return Err(format!("unknown algo {other:?}")),
             };
+            let max_threads = num("max_threads")?.max(1);
+            let threads = num("threads")?.clamp(1, max_threads);
             let secs = e.get("secs").and_then(Json::as_f64).unwrap_or(0.0);
             let calibrated = e.get("calibrated").and_then(Json::as_bool).unwrap_or(false);
-            inner.cache.insert(shape.bucket(), ConvPlan { algo, secs, calibrated });
+            let plan = ConvPlan { algo, threads, secs, calibrated };
+            inner.cache.insert((shape.bucket(), max_threads), plan);
             n += 1;
         }
         Ok(n)
@@ -469,7 +563,7 @@ pub fn planned_conv(x: &Tensor, h: &GroupedFilter) -> Tensor {
 /// algorithm-generic form of `two_stage::two_stage_prefill`.
 pub fn planned_prefill(x: &Tensor, h: &GroupedFilter, tail: &mut FirTail) -> Tensor {
     let plan = global().plan(&ConvShape::of(x, h));
-    let mut y = execute(x, h, plan.algo);
+    let mut y = execute_ctx(x, h, plan.algo, &exec::global().limit(plan.threads));
     super::direct::add_halo_correction(&mut y, h, &tail.as_tensor());
     tail.absorb(x);
     y
@@ -566,17 +660,67 @@ mod tests {
     fn merge_rejects_corrupt_documents() {
         let p = ConvPlanner::new();
         assert!(p.merge_json(&Json::parse(r#"{"schema":"nope"}"#).unwrap()).is_err());
-        let bad_algo = r#"{"schema":"sh2-plan-cache-v1","entries":[
+        let bad_algo = r#"{"schema":"sh2-plan-cache-v2","entries":[
             {"batch":1,"channels":8,"seq_len":64,"filter_len":5,"group_size":1,
-             "algo":"winograd","block":0}]}"#;
+             "max_threads":1,"algo":"winograd","block":0,"threads":1}]}"#;
         assert!(p.merge_json(&Json::parse(bad_algo).unwrap()).is_err());
         // A two-stage block violating l_h <= l_b + 1 must not enter the
         // cache (it would panic at dispatch time).
-        let bad_block = r#"{"schema":"sh2-plan-cache-v1","entries":[
+        let bad_block = r#"{"schema":"sh2-plan-cache-v2","entries":[
             {"batch":1,"channels":8,"seq_len":64,"filter_len":33,"group_size":1,
-             "algo":"two-stage","block":8}]}"#;
+             "max_threads":1,"algo":"two-stage","block":8,"threads":1}]}"#;
         assert!(p.merge_json(&Json::parse(bad_block).unwrap()).is_err());
         assert!(p.is_empty());
+    }
+
+    #[test]
+    fn v1_documents_are_rejected_with_a_regenerate_hint() {
+        // Pre-thread-dimension caches must be refused cleanly (the load
+        // paths log the message as a warning instead of panicking), and
+        // the message must say how to fix it.
+        let p = ConvPlanner::new();
+        let v1 = r#"{"schema":"sh2-plan-cache-v1","entries":[
+            {"batch":1,"channels":8,"seq_len":64,"filter_len":5,"group_size":1,
+             "algo":"direct","block":0,"secs":1e-6,"calibrated":true}]}"#;
+        let err = p.merge_json(&Json::parse(v1).unwrap()).unwrap_err();
+        assert!(err.contains("sh2-plan-cache-v1"), "{err}");
+        assert!(err.contains("sh2 tune"), "{err}");
+        assert!(p.is_empty(), "no v1 entry may leak into the cache");
+    }
+
+    #[test]
+    fn thread_budgets_are_distinct_plan_dimensions() {
+        let p = ConvPlanner::new();
+        let s =
+            ConvShape { batch: 1, channels: 64, seq_len: 2048, filter_len: 128, group_size: 16 };
+        let serial = p.plan_with_threads(&s, 1);
+        assert_eq!(serial.threads, 1);
+        let wide = p.plan_with_threads(&s, 4);
+        assert!(wide.threads >= 1 && wide.threads <= 4);
+        // Amdahl scaling with p > 0 always favors more workers analytically.
+        assert_eq!(wide.threads, 4);
+        assert!(wide.secs < serial.secs);
+        // Distinct budgets are distinct cache entries; repeats hit.
+        assert_eq!(p.len(), 2);
+        p.plan_with_threads(&s, 1);
+        p.plan_with_threads(&s, 4);
+        assert_eq!(p.stats().hits, 2);
+        assert_eq!(p.stats().misses, 2);
+    }
+
+    #[test]
+    fn v2_round_trips_thread_dimension() {
+        let p = ConvPlanner::new();
+        let s =
+            ConvShape { batch: 1, channels: 64, seq_len: 2048, filter_len: 128, group_size: 16 };
+        let want = p.plan_with_threads(&s, 4);
+        let q = ConvPlanner::new();
+        let n = q.merge_json(&p.to_json()).expect("v2 merges");
+        assert_eq!(n, 1);
+        let got = q.plan_with_threads(&s, 4);
+        assert_eq!(q.stats().misses, 0, "loaded (shape, budget) plans must hit");
+        assert_eq!(got.algo, want.algo);
+        assert_eq!(got.threads, want.threads);
     }
 
     #[test]
@@ -620,18 +764,18 @@ mod tests {
         let quick = Bencher { target: std::time::Duration::from_millis(8), samples: 2 };
         let measured = p.calibrate_shape(&s, &quick);
         assert!(measured.len() >= 3, "direct, fft and >=1 two-stage block");
-        assert!(measured.iter().all(|(_, secs)| *secs > 0.0));
+        assert!(measured.iter().all(|(_, _, secs)| *secs > 0.0));
         let plan = p.plan(&s);
         assert!(plan.calibrated);
         assert_eq!(p.stats().calibrations, 1);
         assert_eq!(p.stats().hits, 1, "calibrated entry serves the lookup");
-        // Calibrated winner == measured argmin.
+        // Calibrated winner == measured argmin (algorithm and threads).
         let want = measured
             .iter()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .unwrap()
-            .0;
-        assert_eq!(plan.algo, want);
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap();
+        assert_eq!(plan.algo, want.0);
+        assert_eq!(plan.threads, want.1);
     }
 
     #[test]

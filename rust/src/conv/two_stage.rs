@@ -8,7 +8,8 @@
 
 use super::toeplitz::{toeplitz_factor, two_stage_ok};
 use super::{CausalConv, FirTail, GroupedFilter};
-use crate::tensor::matmul::matmul_into;
+use crate::exec::{self, ExecCtx, SharedSlice};
+use crate::tensor::matmul::matmul_into_ctx;
 use crate::tensor::Tensor;
 
 pub struct TwoStageConv {
@@ -31,8 +32,19 @@ impl TwoStageConv {
     }
 }
 
-/// Grouped two-stage forward. x: [l, d] (d = groups * group_size).
+/// Grouped two-stage forward. x: [l, d] (d = groups * group_size). Runs on
+/// [`exec::global`].
 pub fn two_stage_conv(x: &Tensor, h: &GroupedFilter, l_b: usize) -> Tensor {
+    two_stage_conv_ctx(x, h, l_b, exec::global())
+}
+
+/// [`two_stage_conv`] on an explicit execution context. Parallel split: one
+/// task per filter group (own gather/GEMM buffers; a group scatters only
+/// into its own column block of y, so the interleaved row-major writes are
+/// disjoint contiguous ranges). Inside a parallel region the per-group
+/// GEMMs self-serialize via the exec nesting guard; at `threads = 1` they
+/// inherit this context's budget instead.
+pub fn two_stage_conv_ctx(x: &Tensor, h: &GroupedFilter, l_b: usize, ctx: &ExecCtx) -> Tensor {
     let (l, d) = (x.rows(), x.cols());
     let lh = h.filter_len();
     assert!(
@@ -60,46 +72,49 @@ pub fn two_stage_conv(x: &Tensor, h: &GroupedFilter, l_b: usize) -> Tensor {
     // is the paper's §A.1 "parallelize across chunks" variant.
     let wide = n_chunks * dg;
     let mut y = Tensor::zeros(&[n_chunks * l_b, d]);
-    let mut x_all = vec![0.0f32; l_b * wide];
-    let mut x_prev = vec![0.0f32; l_b * wide];
-    let mut y_all = vec![0.0f32; l_b * wide];
-
-    for gi in 0..g {
-        let (h0, h1) = &factors[gi];
-        // Gather: column block n holds chunk n's group slice; row i of the
-        // buffer is in-chunk sequence offset i.
-        x_all.iter_mut().for_each(|v| *v = 0.0);
-        x_prev.iter_mut().for_each(|v| *v = 0.0);
-        y_all.iter_mut().for_each(|v| *v = 0.0);
-        for n in 0..n_chunks {
-            for i in 0..l_b {
-                let r = n * l_b + i;
-                if r >= l {
-                    break;
-                }
-                let src = &x.data[r * d + gi * dg..r * d + (gi + 1) * dg];
-                x_all[i * wide + n * dg..i * wide + (n + 1) * dg].copy_from_slice(src);
-                // Previous-chunk buffer: column block n+1 of x_prev = chunk n.
-                if n + 1 < n_chunks {
-                    x_prev[i * wide + (n + 1) * dg..i * wide + (n + 2) * dg]
-                        .copy_from_slice(src);
+    {
+        let ys = SharedSlice::new(&mut y.data);
+        ctx.run(g, &|gi| {
+            let (h0, h1) = &factors[gi];
+            // Gather: column block n holds chunk n's group slice; row i of
+            // the buffer is in-chunk sequence offset i.
+            let mut x_all = vec![0.0f32; l_b * wide];
+            let mut x_prev = vec![0.0f32; l_b * wide];
+            let mut y_all = vec![0.0f32; l_b * wide];
+            for n in 0..n_chunks {
+                for i in 0..l_b {
+                    let r = n * l_b + i;
+                    if r >= l {
+                        break;
+                    }
+                    let src = &x.data[r * d + gi * dg..r * d + (gi + 1) * dg];
+                    x_all[i * wide + n * dg..i * wide + (n + 1) * dg].copy_from_slice(src);
+                    // Previous-chunk buffer: column block n+1 of x_prev =
+                    // chunk n.
+                    if n + 1 < n_chunks {
+                        x_prev[i * wide + (n + 1) * dg..i * wide + (n + 2) * dg]
+                            .copy_from_slice(src);
+                    }
                 }
             }
-        }
-        // Two wide GEMMs: block-diagonal stage + spill-over stage.
-        matmul_into(&h0.data, &x_all, &mut y_all, l_b, l_b, wide);
-        matmul_into(&h1.data, &x_prev, &mut y_all, l_b, l_b, wide);
-        // Scatter back.
-        for n in 0..n_chunks {
-            for i in 0..l_b {
-                let r = n * l_b + i;
-                if r >= l {
-                    break;
+            // Two wide GEMMs: block-diagonal stage + spill-over stage.
+            matmul_into_ctx(&h0.data, &x_all, &mut y_all, l_b, l_b, wide, ctx);
+            matmul_into_ctx(&h1.data, &x_prev, &mut y_all, l_b, l_b, wide, ctx);
+            // Scatter back.
+            for n in 0..n_chunks {
+                for i in 0..l_b {
+                    let r = n * l_b + i;
+                    if r >= l {
+                        break;
+                    }
+                    // SAFETY: group gi writes only its own column block
+                    // [gi*dg, (gi+1)*dg) of each row — ranges are disjoint
+                    // across the per-group tasks.
+                    let dst = unsafe { ys.slice_mut(r * d + gi * dg, r * d + (gi + 1) * dg) };
+                    dst.copy_from_slice(&y_all[i * wide + n * dg..i * wide + (n + 1) * dg]);
                 }
-                let dst = &mut y.data[r * d + gi * dg..r * d + (gi + 1) * dg];
-                dst.copy_from_slice(&y_all[i * wide + n * dg..i * wide + (n + 1) * dg]);
             }
-        }
+        });
     }
     y.slice_rows(0, l)
 }

@@ -49,6 +49,10 @@ pub struct ConvCostModel {
     pub fft_flops_per_s: f64,
     /// Fixed per-call overhead (dispatch, allocation) in seconds.
     pub overhead_s: f64,
+    /// Amdahl parallel fraction p ∈ [0, 1): predicted time at t threads is
+    /// `overhead + work * ((1 - p) + p / t)`. Calibration learns p from the
+    /// measured speedup of the per-shape winner at the thread budget.
+    pub parallel_efficiency: f64,
 }
 
 impl Default for ConvCostModel {
@@ -58,6 +62,10 @@ impl Default for ConvCostModel {
             two_stage_flops_per_s: 8e9,
             fft_flops_per_s: 1e9,
             overhead_s: 2e-6,
+            // Conservative prior: conv kernels here are memory-bound on the
+            // CPU testbed, so assume ~70% of the work parallelizes until
+            // calibration measures otherwise.
+            parallel_efficiency: 0.7,
         }
     }
 }
@@ -78,6 +86,18 @@ impl ConvCostModel {
         conv_flops_fft(l, d, lh) / self.fft_flops_per_s + self.overhead_s
     }
 
+    /// Scale a serial-time prediction to `threads` workers under Amdahl's
+    /// law with this model's parallel fraction. The `overhead_s` term never
+    /// shrinks (dispatch is serial), and `threads = 1` is the identity.
+    pub fn parallel_time(&self, serial_secs: f64, threads: usize) -> f64 {
+        if threads <= 1 {
+            return serial_secs;
+        }
+        let p = self.parallel_efficiency.clamp(0.0, 1.0);
+        let work = (serial_secs - self.overhead_s).max(0.0);
+        self.overhead_s + work * ((1.0 - p) + p / threads as f64)
+    }
+
     /// Fold a measurement into the model: `flops` of work by one algorithm
     /// took `secs`. EMA keeps the model stable across noisy microbenchmarks.
     pub fn observe(rate: &mut f64, flops: f64, secs: f64) {
@@ -86,6 +106,20 @@ impl ConvCostModel {
         }
         let achieved = flops / secs;
         *rate = if *rate <= 0.0 { achieved } else { 0.5 * *rate + 0.5 * achieved };
+    }
+
+    /// Fold a measured parallel speedup (`serial_secs / parallel_secs` at
+    /// `threads` workers) into the Amdahl fraction: inverting the law gives
+    /// p = (1 - 1/s) / (1 - 1/t), clamped to [0, 0.95] and EMA-smoothed
+    /// like the throughput rates.
+    pub fn observe_speedup(&mut self, serial_secs: f64, parallel_secs: f64, threads: usize) {
+        if threads <= 1 || serial_secs <= 0.0 || parallel_secs <= 0.0 {
+            return;
+        }
+        let s = serial_secs / parallel_secs;
+        let t = threads as f64;
+        let p = ((1.0 - 1.0 / s) / (1.0 - 1.0 / t)).clamp(0.0, 0.95);
+        self.parallel_efficiency = 0.5 * self.parallel_efficiency + 0.5 * p;
     }
 }
 

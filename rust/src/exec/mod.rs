@@ -1,0 +1,484 @@
+//! `exec` — shared worker-pool runtime for deterministic data parallelism.
+//!
+//! A small fixed pool of std threads (no new dependencies, `fabric`-style
+//! join discipline: every parallel region blocks until every helper has
+//! acknowledged completion, and a lost helper is a panic, not a hang) plus
+//! the [`ExecCtx`] handle that compute APIs thread through: row-split GEMM
+//! ([`crate::tensor::matmul_into_ctx`]), channel/group-split convolutions,
+//! per-stream splitting inside `step_batch`, and parallel `prefill_chunk`s
+//! across serving streams.
+//!
+//! ## Determinism contract
+//!
+//! Parallel output is **byte-identical** to serial output. The rule that
+//! makes this cheap to guarantee: task decomposition is a pure function of
+//! the *shape* of the work (rows, channels, groups, streams) — never of the
+//! thread count or of timing. Threads race only for *which task index they
+//! grab next* ([`ExecCtx::run`]'s atomic counter); every floating-point
+//! reduction happens inside a single task in the same order the serial code
+//! uses. More threads never means different split points, so `threads ∈ {1,
+//! 2, 4, …}` all write exactly the same bytes (enforced by the
+//! `integration_exec` property tests).
+//!
+//! ## Nesting
+//!
+//! Parallel regions nest dynamically (a parallel prefill calls a planned
+//! conv which calls a GEMM, all sharing one pool). Inner regions detect
+//! they are already running inside a worker (or inside the main thread's
+//! share of a region) via a thread-local guard and execute serially inline
+//! — one level of parallelism, no pool deadlock, no oversubscription.
+//!
+//! The process-wide context ([`global`]) is sized by `SH2_THREADS` / `sh2
+//! --threads N` (`0` = all hardware threads) and defaults to **1**: the
+//! serial fallback takes no locks, spawns nothing, and is bit-identical to
+//! the pre-`exec` code paths.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// True while this thread is executing tasks of some parallel region;
+    /// nested [`ExecCtx::run`] calls then go serial inline (see module doc).
+    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_parallel() -> bool {
+    IN_PARALLEL.with(|g| g.get())
+}
+
+/// One parallel region, handed to every helper worker. Helpers race on
+/// `next` for task indices until `tasks` is exhausted, then send exactly one
+/// `()` on `done`. A helper that panics drops its `done` sender without
+/// sending — the submitting thread observes the hangup and panics in turn
+/// (after all surviving helpers finished), never deadlocks.
+struct Job {
+    /// Borrowed from the submitting thread's stack; valid because
+    /// [`ExecCtx::run`] does not return (even by unwind) until every
+    /// helper acknowledged on `done`.
+    f: *const (dyn Fn(usize) + Sync),
+    next: Arc<AtomicUsize>,
+    tasks: usize,
+    done: Sender<()>,
+}
+
+// SAFETY: `f` points at a `Sync` closure kept alive by the join discipline
+// above; the remaining fields are ordinary `Send` types.
+unsafe impl Send for Job {}
+
+fn worker_loop(rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        // SAFETY: the submitting `run` blocks until our `done` send (or our
+        // death) — the closure behind `f` is still alive.
+        let f = unsafe { &*job.f };
+        IN_PARALLEL.with(|g| g.set(true));
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.tasks {
+                break;
+            }
+            f(i);
+        }
+        IN_PARALLEL.with(|g| g.set(false));
+        let _ = job.done.send(());
+    }
+}
+
+/// The shared worker pool: `threads - 1` persistent helper threads (the
+/// submitting thread is always the `threads`-th participant), each with its
+/// own job channel. Dropping the pool hangs up the channels and joins every
+/// worker.
+struct Pool {
+    senders: Vec<Sender<Job>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Pool {
+    fn new(helpers: usize) -> Pool {
+        let mut senders = Vec::with_capacity(helpers);
+        let mut handles = Vec::with_capacity(helpers);
+        for w in 0..helpers {
+            let (tx, rx) = channel::<Job>();
+            senders.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sh2-exec-{w}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn exec worker"),
+            );
+        }
+        Pool { senders, handles: Mutex::new(handles) }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.senders.clear(); // hang up -> workers exit their recv loop
+        let mut handles = match self.handles.lock() {
+            Ok(h) => h,
+            Err(p) => p.into_inner(),
+        };
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execution context: a thread budget plus (for budgets > 1) a handle to
+/// the shared worker pool. Cheap to clone; clones share the pool. The
+/// serial context (`threads == 1`) carries no pool and adds zero overhead
+/// to the code paths it guards.
+#[derive(Clone)]
+pub struct ExecCtx {
+    threads: usize,
+    pool: Option<Arc<Pool>>,
+}
+
+impl std::fmt::Debug for ExecCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecCtx").field("threads", &self.threads).finish()
+    }
+}
+
+impl Default for ExecCtx {
+    fn default() -> Self {
+        ExecCtx::serial()
+    }
+}
+
+impl ExecCtx {
+    /// Context with the given thread budget; spawns `threads - 1` pool
+    /// workers when `threads > 1`.
+    pub fn new(threads: usize) -> ExecCtx {
+        let threads = threads.max(1);
+        let pool = if threads > 1 { Some(Arc::new(Pool::new(threads - 1))) } else { None };
+        ExecCtx { threads, pool }
+    }
+
+    /// The serial context: no pool, every `run` executes inline.
+    pub fn serial() -> ExecCtx {
+        ExecCtx { threads: 1, pool: None }
+    }
+
+    /// Thread budget of this context (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// A context sharing this pool but capped at `threads` — how a planned
+    /// per-shape thread count is executed without spawning anything.
+    pub fn limit(&self, threads: usize) -> ExecCtx {
+        let t = self.threads.min(threads.max(1));
+        ExecCtx {
+            threads: t,
+            pool: if t > 1 { self.pool.clone() } else { None },
+        }
+    }
+
+    /// Execute `f(0), f(1), …, f(tasks - 1)`, possibly in parallel; returns
+    /// once every task ran. Tasks must be independent (no ordering between
+    /// them), and any two tasks must write disjoint data — [`SharedSlice`]
+    /// is the building block for handing each task its disjoint region.
+    ///
+    /// Serial fast path (inline, in index order, nothing shared) whenever
+    /// the budget is 1, there is at most one task, or this thread is
+    /// already inside a parallel region.
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        let pool = match &self.pool {
+            Some(p) if self.threads > 1 && tasks > 1 && !in_parallel() => p,
+            _ => {
+                for i in 0..tasks {
+                    f(i);
+                }
+                return;
+            }
+        };
+        let next = Arc::new(AtomicUsize::new(0));
+        let (done_tx, done_rx) = channel();
+        // Never more helpers than tasks - 1: the submitting thread takes
+        // part too, and an idle helper is pure latency.
+        let helpers = pool.senders.len().min(self.threads - 1).min(tasks - 1);
+        for tx in &pool.senders[..helpers] {
+            tx.send(Job {
+                f: f as *const (dyn Fn(usize) + Sync),
+                next: Arc::clone(&next),
+                tasks,
+                done: done_tx.clone(),
+            })
+            .expect("exec worker hung up");
+        }
+        drop(done_tx);
+        // The submitting thread joins the same index race. A panic here
+        // must still wait for the helpers (they hold borrows into our
+        // frame), so catch, join, then resume.
+        let main_res = catch_unwind(AssertUnwindSafe(|| {
+            IN_PARALLEL.with(|g| g.set(true));
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks {
+                    break;
+                }
+                f(i);
+            }
+        }));
+        IN_PARALLEL.with(|g| g.set(false));
+        // Join discipline: drain one ack per helper. A disconnect before
+        // all acks means a helper died mid-task.
+        let mut acks = 0;
+        let mut helper_panicked = false;
+        while acks < helpers {
+            match done_rx.recv() {
+                Ok(()) => acks += 1,
+                Err(_) => {
+                    helper_panicked = true;
+                    break;
+                }
+            }
+        }
+        if let Err(p) = main_res {
+            resume_unwind(p);
+        }
+        assert!(!helper_panicked, "exec worker panicked");
+    }
+
+    /// Split `data` into fixed-size chunks (`chunk` elements, last one
+    /// ragged) and run `f(chunk_index, chunk_slice)` for each — the common
+    /// "independent row blocks" pattern (GEMM row panels, batch streams).
+    /// Chunk boundaries depend only on `data.len()` and `chunk`, never on
+    /// the thread count, so output is byte-identical at any budget.
+    pub fn run_chunks<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+        &self,
+        data: &mut [T],
+        chunk: usize,
+        f: F,
+    ) {
+        assert!(chunk > 0, "run_chunks: chunk must be positive");
+        let n = data.len();
+        let tasks = n.div_ceil(chunk);
+        if tasks <= 1 {
+            if n > 0 {
+                f(0, data);
+            }
+            return;
+        }
+        let shared = SharedSlice::new(data);
+        self.run(tasks, &|t| {
+            let lo = t * chunk;
+            let hi = (lo + chunk).min(n);
+            // SAFETY: chunk ranges [lo, hi) are pairwise disjoint across
+            // task indices.
+            let s = unsafe { shared.slice_mut(lo, hi) };
+            f(t, s);
+        });
+    }
+}
+
+/// A `&mut [T]` made shareable across the tasks of one parallel region, so
+/// each task can carve out its own **disjoint** part. The two access paths:
+///
+/// * [`SharedSlice::slice_mut`] — a contiguous sub-slice (row panels,
+///   per-stream cells);
+/// * [`SharedSlice::write`] — a single element, for strided/interleaved
+///   writes (e.g. the FFT conv scattering channel `c` into `y[t * d + c]`)
+///   where handing out overlapping `&mut [T]` sub-slices would be UB even
+///   though the *elements* written are disjoint.
+///
+/// All safety obligations are on the caller: concurrent tasks must never
+/// touch the same index through either path.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is caller-partitioned per task (see type doc); with
+// disjoint regions this is exactly `chunks_mut` semantics, minus the
+// compiler being able to check the partition.
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(data: &'a mut [T]) -> SharedSlice<'a, T> {
+        SharedSlice {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reborrow `[lo, hi)` mutably.
+    ///
+    /// # Safety
+    ///
+    /// Within one parallel region, ranges handed to concurrent tasks must
+    /// be pairwise disjoint, and no range may also be touched through
+    /// [`SharedSlice::write`].
+    #[allow(clippy::mut_from_ref)] // the unchecked partition is the point
+    pub unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &'a mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+
+    /// Overwrite one element (no drop of the old value — use with `Copy`
+    /// payloads like `f32`).
+    ///
+    /// # Safety
+    ///
+    /// Within one parallel region, no two concurrent tasks may write the
+    /// same index, and written indices must not overlap any range handed
+    /// out via [`SharedSlice::slice_mut`].
+    pub unsafe fn write(&self, idx: usize, v: T) {
+        debug_assert!(idx < self.len);
+        self.ptr.add(idx).write(v);
+    }
+}
+
+static GLOBAL: OnceLock<ExecCtx> = OnceLock::new();
+
+fn resolve_threads(n: usize) -> usize {
+    if n == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        n
+    }
+}
+
+/// Fix the process-wide thread budget (the `sh2 --threads N` path; `0` =
+/// all hardware threads). Must run before the first [`global`] use; a later
+/// call logs a warning and keeps the established context.
+pub fn set_global_threads(n: usize) {
+    let ctx = ExecCtx::new(resolve_threads(n));
+    if GLOBAL.set(ctx).is_err() {
+        log::warn!("exec: global thread budget already fixed; ignoring");
+    }
+}
+
+/// Process-wide context, initialized on first use from `SH2_THREADS`
+/// (unset or unparsable -> 1, i.e. the bit-identical serial fallback; `0`
+/// -> all hardware threads).
+pub fn global() -> &'static ExecCtx {
+    GLOBAL.get_or_init(|| {
+        let n = match std::env::var("SH2_THREADS") {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) => resolve_threads(n),
+                Err(_) => {
+                    log::warn!("SH2_THREADS ignored: {v:?} is not a number");
+                    1
+                }
+            },
+            Err(_) => 1,
+        };
+        ExecCtx::new(n)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_ctx_runs_every_task_in_order() {
+        let ctx = ExecCtx::serial();
+        let seen = std::sync::Mutex::new(Vec::new());
+        ctx.run(5, &|i| seen.lock().unwrap().push(i));
+        assert_eq!(seen.into_inner().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_ctx_runs_every_task_exactly_once() {
+        let ctx = ExecCtx::new(4);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        ctx.run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn run_chunks_partitions_without_overlap() {
+        let ctx = ExecCtx::new(3);
+        let mut data = vec![0u32; 103];
+        ctx.run_chunks(&mut data, 10, |t, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1 + t as u32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, 1 + (i / 10) as u32, "element {i}");
+        }
+    }
+
+    #[test]
+    fn nested_runs_fall_back_to_serial_and_terminate() {
+        // Inner regions inside a worker must not re-enter the pool (that
+        // would deadlock a 1-helper pool against itself).
+        let ctx = ExecCtx::new(2);
+        let total = AtomicUsize::new(0);
+        ctx.run(4, &|_| {
+            ctx.run(4, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn limit_caps_but_never_raises_the_budget() {
+        let ctx = ExecCtx::new(4);
+        assert_eq!(ctx.limit(2).threads(), 2);
+        assert_eq!(ctx.limit(64).threads(), 4);
+        assert_eq!(ctx.limit(0).threads(), 1);
+        assert_eq!(ExecCtx::serial().limit(8).threads(), 1);
+    }
+
+    #[test]
+    fn parallel_output_is_byte_identical_to_serial() {
+        // The core determinism contract on the primitive itself: same
+        // split, same bytes, regardless of budget.
+        let work = |ctx: &ExecCtx| -> Vec<f32> {
+            let mut out = vec![0.0f32; 1000];
+            ctx.run_chunks(&mut out, 32, |t, chunk| {
+                let mut acc = 0.1f32 * (t as f32 + 1.0);
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    acc = acc * 1.000_1 + j as f32 * 0.01;
+                    *v = acc;
+                }
+            });
+            out
+        };
+        let serial = work(&ExecCtx::serial());
+        for t in [2usize, 4] {
+            let par = work(&ExecCtx::new(t));
+            assert!(
+                serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={t} diverged from serial"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exec worker panicked")]
+    fn helper_panic_propagates_to_the_submitter() {
+        let ctx = ExecCtx::new(2);
+        let barrier = std::sync::Barrier::new(2);
+        ctx.run(2, &|_| {
+            // Both participants arrive, then both panic — whichever is the
+            // helper drops its ack; the submitter must notice either way.
+            barrier.wait();
+            panic!("exec worker panicked");
+        });
+    }
+}

@@ -19,6 +19,7 @@ pub mod conv;
 pub mod coordinator;
 pub mod costmodel;
 pub mod cp;
+pub mod exec;
 pub mod fabric;
 pub mod ops;
 pub mod runtime;

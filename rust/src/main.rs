@@ -51,6 +51,18 @@ use sh2::util::rng::Rng;
 fn main() {
     sh2::util::logging::init();
     let args = Args::from_env();
+    // Size the shared exec worker pool before any subcommand touches it
+    // (the pool is created lazily on first use and then fixed). The flag
+    // overrides the SH2_THREADS environment variable; 0 = all cores.
+    if let Some(t) = args.get("threads") {
+        match t.parse::<usize>() {
+            Ok(n) => sh2::exec::set_global_threads(n),
+            Err(e) => {
+                eprintln!("--threads: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("train-tasks") => cmd_train_tasks(&args),
@@ -78,6 +90,8 @@ fn main() {
 
 const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|replay|tune|bench-gate|cost-model|cp-demo|data-gen|inspect> [--options]
   common: --artifacts DIR (default: artifacts) --config NAME (default: tiny)
+          --threads N (exec worker pool size; 0 = all cores; overrides
+          SH2_THREADS; default 1 = serial, bit-identical reference path)
   train:  --steps N --width D --heads H --layout SE-MR-MHA-LI --seq-len L --batch B
           --lr F --seed S --log-every K --eval-every K --save PATH --metrics PATH
           --backend native|xla (default: native; xla needs --features pjrt and
@@ -525,15 +539,18 @@ fn cmd_tune(args: &Args) -> Result<()> {
                     group_size: gsz,
                 };
                 let measured = tuner.calibrate_shape(&shape, &bencher);
-                let (best_algo, best) = *measured
+                let (best_algo, best_threads, best) = *measured
                     .iter()
-                    .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite"))
+                    .min_by(|a, b| a.2.partial_cmp(&b.2).expect("finite"))
                     .expect("calibration measures at least one candidate");
-                let worst = measured.iter().map(|m| m.1).fold(best, f64::max);
-                let plan_name = match best_algo {
+                let worst = measured.iter().map(|m| m.2).fold(best, f64::max);
+                let mut plan_name = match best_algo {
                     planner::ConvAlgo::TwoStage { block } => format!("two-stage(l_b={block})"),
                     other => other.name().to_string(),
                 };
+                if best_threads > 1 {
+                    plan_name.push_str(&format!(" x{best_threads}t"));
+                }
                 t.row(vec![
                     format!("{l}"),
                     format!("{d}"),
@@ -595,7 +612,13 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
                 .get("p50_ns")
                 .and_then(Json::as_f64)
                 .ok_or_else(|| anyhow!("{path}: record '{name}' missing 'p50_ns'"))?;
-            m.insert(name.to_string(), p50);
+            // Records that differ only in worker-pool size are distinct
+            // regression keys: a t2 slowdown must not hide behind t1.
+            let key = match r.get("threads").and_then(Json::as_f64) {
+                Some(t) => format!("{name}#t{}", t as usize),
+                None => name.to_string(),
+            };
+            m.insert(key, p50);
         }
         Ok(m)
     };

@@ -3,7 +3,8 @@
 //! accumulated: S_t = S_{t-1} + β_t (v_t - S_{t-1} k_t) k_tᵀ.
 
 use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer, StateBatch};
-use crate::tensor::matmul::{matmul, vecmat};
+use crate::exec::{ExecCtx, SharedSlice};
+use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -207,8 +208,14 @@ impl SeqMixer for DeltaNetOp {
     /// Batched decode: the QKV, beta and output projections become
     /// [B, d] x [d, ·] GEMMs; the per-head fast-weight matrices S are
     /// gathered into SoA [`StateBatch`] rows for the delta-rule update.
-    /// Rows are bit-identical to serial [`SeqMixer::step`].
-    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+    /// Rows are bit-identical to serial [`SeqMixer::step`]; the delta-rule
+    /// update runs one [`crate::exec`] task per stream.
+    fn step_batch_ctx(
+        &self,
+        states: &mut [&mut DecodeState],
+        xs: &Tensor,
+        ctx: &ExecCtx,
+    ) -> Tensor {
         let bsz = states.len();
         assert_eq!(
             bsz,
@@ -219,8 +226,8 @@ impl SeqMixer for DeltaNetOp {
         );
         let d = self.d;
         let dh = d / self.n_heads;
-        let qkv = matmul(xs, &self.wqkv); // [B, 3d]
-        let beta_raw = matmul(xs, &self.wbeta); // [B, H]
+        let qkv = matmul_ctx(xs, &self.wqkv, ctx); // [B, 3d]
+        let beta_raw = matmul_ctx(xs, &self.wbeta, ctx); // [B, H]
         let mut sb = StateBatch::new(bsz, self.n_heads * dh * dh);
         for (b, st) in states.iter().enumerate() {
             let DecodeState::DeltaNet(s) = &**st else {
@@ -229,41 +236,47 @@ impl SeqMixer for DeltaNetOp {
             sb.load(b, &s.s);
         }
         let mut ymid = Tensor::zeros(&[bsz, d]);
-        let mut kn = vec![0.0f32; dh];
-        let mut pred = vec![0.0f32; dh];
-        for b in 0..bsz {
-            let qkv_r = qkv.row(b);
-            let beta_r = beta_raw.row(b);
-            let s_all = sb.row_mut(b);
-            let y_r = ymid.row_mut(b);
-            for h in 0..self.n_heads {
-                let off = h * dh;
-                let bt = 1.0 / (1.0 + (-beta_r[h]).exp());
-                let kr = &qkv_r[d + off..d + off + dh];
-                let norm = (kr.iter().map(|x| x * x).sum::<f32>()).sqrt().max(1e-6);
-                for (o, &x) in kn.iter_mut().zip(kr) {
-                    *o = x / norm;
-                }
-                let s = &mut s_all[h * dh * dh..(h + 1) * dh * dh];
-                for i in 0..dh {
-                    let srow = &s[i * dh..(i + 1) * dh];
-                    pred[i] = srow.iter().zip(&kn).map(|(a, b)| a * b).sum();
-                }
-                let vr = &qkv_r[2 * d + off..2 * d + off + dh];
-                for i in 0..dh {
-                    let err = bt * (vr[i] - pred[i]);
-                    let srow = &mut s[i * dh..(i + 1) * dh];
-                    for (sv, &kv_) in srow.iter_mut().zip(&kn) {
-                        *sv += err * kv_;
+        {
+            let sw = sb.width();
+            let ss = SharedSlice::new(sb.raw_mut());
+            let ys = SharedSlice::new(&mut ymid.data);
+            ctx.run(bsz, &|b| {
+                // SAFETY: task b touches only row b of each buffer.
+                let s_all = unsafe { ss.slice_mut(b * sw, (b + 1) * sw) };
+                let y_r = unsafe { ys.slice_mut(b * d, (b + 1) * d) };
+                let qkv_r = qkv.row(b);
+                let beta_r = beta_raw.row(b);
+                let mut kn = vec![0.0f32; dh];
+                let mut pred = vec![0.0f32; dh];
+                for h in 0..self.n_heads {
+                    let off = h * dh;
+                    let bt = 1.0 / (1.0 + (-beta_r[h]).exp());
+                    let kr = &qkv_r[d + off..d + off + dh];
+                    let norm = (kr.iter().map(|x| x * x).sum::<f32>()).sqrt().max(1e-6);
+                    for (o, &x) in kn.iter_mut().zip(kr) {
+                        *o = x / norm;
+                    }
+                    let s = &mut s_all[h * dh * dh..(h + 1) * dh * dh];
+                    for i in 0..dh {
+                        let srow = &s[i * dh..(i + 1) * dh];
+                        pred[i] = srow.iter().zip(&kn).map(|(a, b)| a * b).sum();
+                    }
+                    let vr = &qkv_r[2 * d + off..2 * d + off + dh];
+                    for i in 0..dh {
+                        let err = bt * (vr[i] - pred[i]);
+                        let srow = &mut s[i * dh..(i + 1) * dh];
+                        for (sv, &kv_) in srow.iter_mut().zip(&kn) {
+                            *sv += err * kv_;
+                        }
+                    }
+                    let qr = &qkv_r[off..off + dh];
+                    let yr = &mut y_r[off..off + dh];
+                    for i in 0..dh {
+                        let srow = &s[i * dh..(i + 1) * dh];
+                        yr[i] = srow.iter().zip(qr).map(|(a, b)| a * b).sum();
                     }
                 }
-                let qr = &qkv_r[off..off + dh];
-                let yr = &mut y_r[off..off + dh];
-                for i in 0..dh {
-                    let srow = &s[i * dh..(i + 1) * dh];
-                    yr[i] = srow.iter().zip(qr).map(|(a, b)| a * b).sum();
-                }
-            }
+            });
         }
         for (b, st) in states.iter_mut().enumerate() {
             let DecodeState::DeltaNet(s) = &mut **st else {
@@ -272,7 +285,7 @@ impl SeqMixer for DeltaNetOp {
             sb.store(b, &mut s.s);
             s.pos += 1;
         }
-        matmul(&ymid, &self.wo)
+        matmul_ctx(&ymid, &self.wo, ctx)
     }
 
     /// Blocked prefill: GEMM projections + per-head delta-rule scan

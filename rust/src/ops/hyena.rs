@@ -14,8 +14,9 @@
 use super::{proj, DecodeState, SeqMixer};
 use crate::conv::fft_conv::modal_filter;
 use crate::conv::{planned_conv, planned_prefill, ConvShape, FirTail, GroupedFilter};
+use crate::exec::{ExecCtx, SharedSlice};
 use crate::tensor::fft::{fft_flops, next_pow2};
-use crate::tensor::matmul::{matmul, vecmat};
+use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -358,8 +359,14 @@ impl SeqMixer for HyenaOp {
     /// (SE/MR) or modal IIR (LI), and the gating then advance row-by-row
     /// into shared [B, d] buffers — allocation-free batched FIR dots via
     /// [`crate::conv::FirTail::step_into`]. Rows are bit-identical to
-    /// serial [`SeqMixer::step`].
-    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+    /// serial [`SeqMixer::step`]; tails and gating advance one
+    /// [`crate::exec`] task per stream.
+    fn step_batch_ctx(
+        &self,
+        states: &mut [&mut DecodeState],
+        xs: &Tensor,
+        ctx: &ExecCtx,
+    ) -> Tensor {
         let bsz = states.len();
         assert_eq!(
             bsz,
@@ -369,38 +376,43 @@ impl SeqMixer for HyenaOp {
             xs.rows()
         );
         let d = self.d;
-        let xw = matmul(xs, &self.w);
-        let xu = matmul(xs, &self.u);
-        let xp = matmul(xs, &self.p);
+        let xw = matmul_ctx(xs, &self.w, ctx);
+        let xu = matmul_ctx(xs, &self.u, ctx);
+        let xp = matmul_ctx(xs, &self.p, ctx);
         let mut q = Tensor::zeros(&[bsz, d]);
-        let mut k = Tensor::zeros(&[bsz, d]);
-        let mut v = Tensor::zeros(&[bsz, d]);
         let mut inner = Tensor::zeros(&[bsz, d]);
-        let mut kv = vec![0.0f32; d];
-        for (b, st) in states.iter_mut().enumerate() {
-            let DecodeState::Hyena(s) = &mut **st else {
-                panic!("Hyena step_batch: wrong decode state variant")
-            };
-            s.w_tail.step_into(&self.hq, xw.row(b), q.row_mut(b));
-            s.u_tail.step_into(&self.hk, xu.row(b), k.row_mut(b));
-            s.p_tail.step_into(&self.hv, xp.row(b), v.row_mut(b));
-            {
-                let (kr, vr) = (k.row(b), v.row(b));
+        {
+            let sts = SharedSlice::new(states);
+            let qs = SharedSlice::new(&mut q.data);
+            let is = SharedSlice::new(&mut inner.data);
+            ctx.run(bsz, &|b| {
+                // SAFETY: task b touches only stream b and row b of each
+                // output buffer.
+                let stream = unsafe { sts.slice_mut(b, b + 1) };
+                let q_r = unsafe { qs.slice_mut(b * d, (b + 1) * d) };
+                let inner_r = unsafe { is.slice_mut(b * d, (b + 1) * d) };
+                let DecodeState::Hyena(s) = &mut *stream[0] else {
+                    panic!("Hyena step_batch: wrong decode state variant")
+                };
+                let mut k_r = vec![0.0f32; d];
+                let mut v_r = vec![0.0f32; d];
+                let mut kv = vec![0.0f32; d];
+                s.w_tail.step_into(&self.hq, xw.row(b), q_r);
+                s.u_tail.step_into(&self.hk, xu.row(b), &mut k_r);
+                s.p_tail.step_into(&self.hv, xp.row(b), &mut v_r);
                 for (i, o) in kv.iter_mut().enumerate() {
-                    *o = kr[i] * vr[i];
+                    *o = k_r[i] * v_r[i];
                 }
-            }
-            match self.kind {
-                HyenaKind::Se | HyenaKind::Mr => {
-                    s.inner_tail.step_into(&self.inner, &kv, inner.row_mut(b))
+                match self.kind {
+                    HyenaKind::Se | HyenaKind::Mr => {
+                        s.inner_tail.step_into(&self.inner, &kv, inner_r)
+                    }
+                    HyenaKind::Li => self.modal_step_into(&mut s.modal, &kv, inner_r),
                 }
-                HyenaKind::Li => {
-                    self.modal_step_into(&mut s.modal, &kv, inner.row_mut(b))
-                }
-            }
-            s.pos += 1;
+                s.pos += 1;
+            });
         }
-        matmul(&q.hadamard(&inner), &self.m)
+        matmul_ctx(&q.hadamard(&inner), &self.m, ctx)
     }
 
     /// Blocked prefill (DESIGN.md §Streaming-Decode): featurizers and the

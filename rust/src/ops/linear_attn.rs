@@ -2,7 +2,8 @@
 //! positive feature map; causal form is a running outer-product state.
 
 use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer, StateBatch};
-use crate::tensor::matmul::{matmul, vecmat};
+use crate::exec::{ExecCtx, SharedSlice};
+use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -209,8 +210,15 @@ impl SeqMixer for LinearAttnOp {
     /// and one [B, d] x [d, d] GEMM for the output projection replace 2B
     /// batch-1 `vecmat`s; the per-head (S, z) accumulators are gathered
     /// into SoA [`StateBatch`] rows for the update. Rows are bit-identical
-    /// to serial [`SeqMixer::step`].
-    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+    /// to serial [`SeqMixer::step`]. The per-stream state update runs one
+    /// [`crate::exec`] task per stream (each touching only its own
+    /// [`StateBatch`] and output rows).
+    fn step_batch_ctx(
+        &self,
+        states: &mut [&mut DecodeState],
+        xs: &Tensor,
+        ctx: &ExecCtx,
+    ) -> Tensor {
         let bsz = states.len();
         assert_eq!(
             bsz,
@@ -221,7 +229,7 @@ impl SeqMixer for LinearAttnOp {
         );
         let d = self.d;
         let dh = d / self.n_heads;
-        let qkv = matmul(xs, &self.wqkv); // [B, 3d]
+        let qkv = matmul_ctx(xs, &self.wqkv, ctx); // [B, 3d]
         let mut sb = StateBatch::new(bsz, self.n_heads * dh * dh);
         let mut zb = StateBatch::new(bsz, self.n_heads * dh);
         for (b, st) in states.iter().enumerate() {
@@ -232,46 +240,53 @@ impl SeqMixer for LinearAttnOp {
             zb.load(b, &s.z);
         }
         let mut ymid = Tensor::zeros(&[bsz, d]);
-        let mut fk = vec![0.0f32; dh];
-        let mut fq = vec![0.0f32; dh];
-        for b in 0..bsz {
-            let qkv_r = qkv.row(b);
-            let s_all = sb.row_mut(b);
-            let z_all = zb.row_mut(b);
-            let y_r = ymid.row_mut(b);
-            for h in 0..self.n_heads {
-                let off = h * dh;
-                for i in 0..dh {
-                    fq[i] = elu1(qkv_r[off + i]);
-                    fk[i] = elu1(qkv_r[d + off + i]);
-                }
-                let vrow = &qkv_r[2 * d + off..2 * d + off + dh];
-                let s = &mut s_all[h * dh * dh..(h + 1) * dh * dh];
-                let z = &mut z_all[off..off + dh];
-                for i in 0..dh {
-                    let fki = fk[i];
-                    z[i] += fki;
-                    let srow = &mut s[i * dh..(i + 1) * dh];
-                    for (sv, &vv) in srow.iter_mut().zip(vrow) {
-                        *sv += fki * vv;
+        {
+            let (sw, zw) = (sb.width(), zb.width());
+            let ss = SharedSlice::new(sb.raw_mut());
+            let zs = SharedSlice::new(zb.raw_mut());
+            let ys = SharedSlice::new(&mut ymid.data);
+            ctx.run(bsz, &|b| {
+                // SAFETY: task b touches only row b of each buffer.
+                let s_all = unsafe { ss.slice_mut(b * sw, (b + 1) * sw) };
+                let z_all = unsafe { zs.slice_mut(b * zw, (b + 1) * zw) };
+                let y_r = unsafe { ys.slice_mut(b * d, (b + 1) * d) };
+                let qkv_r = qkv.row(b);
+                let mut fk = vec![0.0f32; dh];
+                let mut fq = vec![0.0f32; dh];
+                for h in 0..self.n_heads {
+                    let off = h * dh;
+                    for i in 0..dh {
+                        fq[i] = elu1(qkv_r[off + i]);
+                        fk[i] = elu1(qkv_r[d + off + i]);
+                    }
+                    let vrow = &qkv_r[2 * d + off..2 * d + off + dh];
+                    let s = &mut s_all[h * dh * dh..(h + 1) * dh * dh];
+                    let z = &mut z_all[off..off + dh];
+                    for i in 0..dh {
+                        let fki = fk[i];
+                        z[i] += fki;
+                        let srow = &mut s[i * dh..(i + 1) * dh];
+                        for (sv, &vv) in srow.iter_mut().zip(vrow) {
+                            *sv += fki * vv;
+                        }
+                    }
+                    let mut denom = 1e-6f32;
+                    for i in 0..dh {
+                        denom += fq[i] * z[i];
+                    }
+                    let orow = &mut y_r[off..off + dh];
+                    for i in 0..dh {
+                        let fqi = fq[i];
+                        let srow = &s[i * dh..(i + 1) * dh];
+                        for (o, &sv) in orow.iter_mut().zip(srow) {
+                            *o += fqi * sv;
+                        }
+                    }
+                    for o in orow.iter_mut() {
+                        *o /= denom;
                     }
                 }
-                let mut denom = 1e-6f32;
-                for i in 0..dh {
-                    denom += fq[i] * z[i];
-                }
-                let orow = &mut y_r[off..off + dh];
-                for i in 0..dh {
-                    let fqi = fq[i];
-                    let srow = &s[i * dh..(i + 1) * dh];
-                    for (o, &sv) in orow.iter_mut().zip(srow) {
-                        *o += fqi * sv;
-                    }
-                }
-                for o in orow.iter_mut() {
-                    *o /= denom;
-                }
-            }
+            });
         }
         for (b, st) in states.iter_mut().enumerate() {
             let DecodeState::LinearAttn(s) = &mut **st else {
@@ -281,7 +296,7 @@ impl SeqMixer for LinearAttnOp {
             zb.store(b, &mut s.z);
             s.pos += 1;
         }
-        matmul(&ymid, &self.wo)
+        matmul_ctx(&ymid, &self.wo, ctx)
     }
 
     /// Blocked prefill: GEMM projections + per-head scan continuing from

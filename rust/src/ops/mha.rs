@@ -2,7 +2,8 @@
 //! [l, l] score matrix is ever materialized — the FlashAttention dataflow).
 
 use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer};
-use crate::tensor::matmul::{matmul, vecmat};
+use crate::exec::{ExecCtx, SharedSlice};
+use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -181,8 +182,14 @@ impl SeqMixer for MhaOp {
     /// [d, ·] GEMMs; the KV caches stay AoS per stream (variable length,
     /// append-only — see DESIGN.md §13), so each stream appends its new
     /// K/V row and attends against its own history. Rows are bit-identical
-    /// to serial [`SeqMixer::step`].
-    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+    /// to serial [`SeqMixer::step`]; cache append + attention run one
+    /// [`crate::exec`] task per stream (each owning its own cache).
+    fn step_batch_ctx(
+        &self,
+        states: &mut [&mut DecodeState],
+        xs: &Tensor,
+        ctx: &ExecCtx,
+    ) -> Tensor {
         let bsz = states.len();
         assert_eq!(
             bsz,
@@ -192,20 +199,27 @@ impl SeqMixer for MhaOp {
             xs.rows()
         );
         let d = self.d;
-        let qkv = matmul(xs, &self.wqkv); // [B, 3d]
+        let qkv = matmul_ctx(xs, &self.wqkv, ctx); // [B, 3d]
         let mut ymid = Tensor::zeros(&[bsz, d]);
-        for (b, st) in states.iter_mut().enumerate() {
-            let DecodeState::Mha(s) = &mut **st else {
-                panic!("MHA step_batch: wrong decode state variant")
-            };
-            let qkv_r = qkv.row(b);
-            s.k.extend_from_slice(&qkv_r[d..2 * d]);
-            s.v.extend_from_slice(&qkv_r[2 * d..3 * d]);
-            s.pos += 1;
-            let y = self.attend_cached(s, &qkv_r[..d]);
-            ymid.row_mut(b).copy_from_slice(&y);
+        {
+            let sts = SharedSlice::new(states);
+            let ys = SharedSlice::new(&mut ymid.data);
+            ctx.run(bsz, &|b| {
+                // SAFETY: task b touches only stream b and output row b.
+                let stream = unsafe { sts.slice_mut(b, b + 1) };
+                let y_r = unsafe { ys.slice_mut(b * d, (b + 1) * d) };
+                let DecodeState::Mha(s) = &mut *stream[0] else {
+                    panic!("MHA step_batch: wrong decode state variant")
+                };
+                let qkv_r = qkv.row(b);
+                s.k.extend_from_slice(&qkv_r[d..2 * d]);
+                s.v.extend_from_slice(&qkv_r[2 * d..3 * d]);
+                s.pos += 1;
+                let y = self.attend_cached(s, &qkv_r[..d]);
+                y_r.copy_from_slice(&y);
+            });
         }
-        matmul(&ymid, &self.wo)
+        matmul_ctx(&ymid, &self.wo, ctx)
     }
 
     /// Blocked prefill: from an empty state this runs the same GEMM +

@@ -2,7 +2,8 @@
 //! scalar input/forget gates and a normalizer state.
 
 use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer, StateBatch};
-use crate::tensor::matmul::{matmul, vecmat};
+use crate::exec::{ExecCtx, SharedSlice};
+use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -210,8 +211,14 @@ impl SeqMixer for MlstmOp {
     /// Batched decode: the QKV, gate and output projections become
     /// [B, d] x [d, ·] GEMMs; the per-head (C, n) memories are gathered
     /// into SoA [`StateBatch`] rows for the gated update. Rows are
-    /// bit-identical to serial [`SeqMixer::step`].
-    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+    /// bit-identical to serial [`SeqMixer::step`]; the gated update runs
+    /// one [`crate::exec`] task per stream.
+    fn step_batch_ctx(
+        &self,
+        states: &mut [&mut DecodeState],
+        xs: &Tensor,
+        ctx: &ExecCtx,
+    ) -> Tensor {
         let bsz = states.len();
         assert_eq!(
             bsz,
@@ -222,8 +229,8 @@ impl SeqMixer for MlstmOp {
         );
         let d = self.d;
         let dh = d / self.n_heads;
-        let qkv = matmul(xs, &self.wqkv); // [B, 3d]
-        let gates = matmul(xs, &self.wif); // [B, 2H]
+        let qkv = matmul_ctx(xs, &self.wqkv, ctx); // [B, 3d]
+        let gates = matmul_ctx(xs, &self.wif, ctx); // [B, 2H]
         let sig = |x: f32| 1.0 / (1.0 + (-x).exp());
         let mut cb = StateBatch::new(bsz, self.n_heads * dh * dh);
         let mut nb = StateBatch::new(bsz, self.n_heads * dh);
@@ -235,43 +242,50 @@ impl SeqMixer for MlstmOp {
             nb.load(b, &s.n);
         }
         let mut ymid = Tensor::zeros(&[bsz, d]);
-        for b in 0..bsz {
-            let qkv_r = qkv.row(b);
-            let gates_r = gates.row(b);
-            let c_all = cb.row_mut(b);
-            let n_all = nb.row_mut(b);
-            let y_r = ymid.row_mut(b);
-            for h in 0..self.n_heads {
-                let off = h * dh;
-                let (i_t, f_t) = (sig(gates_r[2 * h]), sig(gates_r[2 * h + 1]));
-                let kr = &qkv_r[d + off..d + off + dh];
-                let vr = &qkv_r[2 * d + off..2 * d + off + dh];
-                let c = &mut c_all[h * dh * dh..(h + 1) * dh * dh];
-                let n = &mut n_all[off..off + dh];
-                for a in 0..dh {
-                    let iv = i_t * vr[a];
-                    let crow = &mut c[a * dh..(a + 1) * dh];
-                    for (cv, &kv_) in crow.iter_mut().zip(kr) {
-                        *cv = f_t * *cv + iv * kv_;
+        {
+            let (cw, nw) = (cb.width(), nb.width());
+            let cs = SharedSlice::new(cb.raw_mut());
+            let ns = SharedSlice::new(nb.raw_mut());
+            let ys = SharedSlice::new(&mut ymid.data);
+            ctx.run(bsz, &|b| {
+                // SAFETY: task b touches only row b of each buffer.
+                let c_all = unsafe { cs.slice_mut(b * cw, (b + 1) * cw) };
+                let n_all = unsafe { ns.slice_mut(b * nw, (b + 1) * nw) };
+                let y_r = unsafe { ys.slice_mut(b * d, (b + 1) * d) };
+                let qkv_r = qkv.row(b);
+                let gates_r = gates.row(b);
+                for h in 0..self.n_heads {
+                    let off = h * dh;
+                    let (i_t, f_t) = (sig(gates_r[2 * h]), sig(gates_r[2 * h + 1]));
+                    let kr = &qkv_r[d + off..d + off + dh];
+                    let vr = &qkv_r[2 * d + off..2 * d + off + dh];
+                    let c = &mut c_all[h * dh * dh..(h + 1) * dh * dh];
+                    let n = &mut n_all[off..off + dh];
+                    for a in 0..dh {
+                        let iv = i_t * vr[a];
+                        let crow = &mut c[a * dh..(a + 1) * dh];
+                        for (cv, &kv_) in crow.iter_mut().zip(kr) {
+                            *cv = f_t * *cv + iv * kv_;
+                        }
+                    }
+                    for (nv, &kv_) in n.iter_mut().zip(kr) {
+                        *nv = f_t * *nv + i_t * kv_;
+                    }
+                    let qr = &qkv_r[off..off + dh];
+                    let denom = n
+                        .iter()
+                        .zip(qr)
+                        .map(|(a, b)| a * b)
+                        .sum::<f32>()
+                        .abs()
+                        .max(1.0);
+                    let yr = &mut y_r[off..off + dh];
+                    for a in 0..dh {
+                        let crow = &c[a * dh..(a + 1) * dh];
+                        yr[a] = crow.iter().zip(qr).map(|(x, z)| x * z).sum::<f32>() / denom;
                     }
                 }
-                for (nv, &kv_) in n.iter_mut().zip(kr) {
-                    *nv = f_t * *nv + i_t * kv_;
-                }
-                let qr = &qkv_r[off..off + dh];
-                let denom = n
-                    .iter()
-                    .zip(qr)
-                    .map(|(a, b)| a * b)
-                    .sum::<f32>()
-                    .abs()
-                    .max(1.0);
-                let yr = &mut y_r[off..off + dh];
-                for a in 0..dh {
-                    let crow = &c[a * dh..(a + 1) * dh];
-                    yr[a] = crow.iter().zip(qr).map(|(x, z)| x * z).sum::<f32>() / denom;
-                }
-            }
+            });
         }
         for (b, st) in states.iter_mut().enumerate() {
             let DecodeState::Mlstm(s) = &mut **st else {
@@ -281,7 +295,7 @@ impl SeqMixer for MlstmOp {
             nb.store(b, &mut s.n);
             s.pos += 1;
         }
-        matmul(&ymid, &self.wo)
+        matmul_ctx(&ymid, &self.wo, ctx)
     }
 
     /// Blocked prefill: GEMM projections + per-head recurrence continuing

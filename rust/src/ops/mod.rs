@@ -16,6 +16,7 @@ pub mod mha;
 pub mod mlstm;
 pub mod ssd;
 
+use crate::exec::{self, ExecCtx};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -66,7 +67,10 @@ impl DecodeState {
 
 /// A sequence mixer: [l, d] -> [l, d] at batch 1, plus the streaming decode
 /// API used by the `serve` engine.
-pub trait SeqMixer {
+///
+/// `Send + Sync` is a supertrait so mixers (and the models that own them as
+/// trait objects) can be shared with the [`crate::exec`] worker pool.
+pub trait SeqMixer: Send + Sync {
     fn forward(&self, x: &Tensor) -> Tensor;
     fn name(&self) -> &'static str;
     /// Forward FLOPs at sequence length l (for TFLOPS-style reporting).
@@ -194,7 +198,23 @@ pub trait SeqMixer {
     /// the batch composition may change from call to call (continuous
     /// batching). Panics if `states.len() != xs.rows()` or on a state
     /// produced by a different operator family.
+    ///
+    /// Runs on [`exec::global`]; this is a thin wrapper over
+    /// [`SeqMixer::step_batch_ctx`], which is the override point.
     fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+        self.step_batch_ctx(states, xs, exec::global())
+    }
+
+    /// [`SeqMixer::step_batch`] on an explicit execution context. Every
+    /// in-tree operator overrides this; the default loops [`SeqMixer::step`]
+    /// serially (correct at any budget — B batch-1 steps need no split).
+    fn step_batch_ctx(
+        &self,
+        states: &mut [&mut DecodeState],
+        xs: &Tensor,
+        ctx: &ExecCtx,
+    ) -> Tensor {
+        let _ = ctx;
         assert_eq!(
             states.len(),
             xs.rows(),
@@ -257,6 +277,13 @@ impl StateBatch {
 
     pub fn row_mut(&mut self, b: usize) -> &mut [f32] {
         &mut self.data[b * self.n..(b + 1) * self.n]
+    }
+
+    /// The whole [B, n] backing buffer, row-major — used by the batched
+    /// decode kernels to split per-stream rows across [`crate::exec`]
+    /// tasks (each task touches only its own row range).
+    pub fn raw_mut(&mut self) -> &mut [f32] {
+        &mut self.data
     }
 }
 

@@ -3,7 +3,8 @@
 //! y_t = h_tᵀ c_t (Dao & Gu, 2024 — simplified scalar-A form).
 
 use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer, StateBatch};
-use crate::tensor::matmul::{matmul, vecmat};
+use crate::exec::{ExecCtx, SharedSlice};
+use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -212,8 +213,14 @@ impl SeqMixer for SsdOp {
     /// Batched decode: the four input projections and the output
     /// projection become [B, d] x [d, ·] GEMMs; the per-head recurrent
     /// matrices h are gathered into SoA [`StateBatch`] rows for the scan
-    /// update. Rows are bit-identical to serial [`SeqMixer::step`].
-    fn step_batch(&self, states: &mut [&mut DecodeState], xs: &Tensor) -> Tensor {
+    /// update. Rows are bit-identical to serial [`SeqMixer::step`]; the
+    /// scan runs one [`crate::exec`] task per stream.
+    fn step_batch_ctx(
+        &self,
+        states: &mut [&mut DecodeState],
+        xs: &Tensor,
+        ctx: &ExecCtx,
+    ) -> Tensor {
         let bsz = states.len();
         assert_eq!(
             bsz,
@@ -225,10 +232,10 @@ impl SeqMixer for SsdOp {
         let d = self.d;
         let dh = d / self.n_heads;
         let n = STATE_DIM;
-        let xv = matmul(xs, &self.wx); // [B, d]
-        let bm = matmul(xs, &self.wb); // [B, H*n]
-        let cm = matmul(xs, &self.wc); // [B, H*n]
-        let dt = matmul(xs, &self.wdt); // [B, H]
+        let xv = matmul_ctx(xs, &self.wx, ctx); // [B, d]
+        let bm = matmul_ctx(xs, &self.wb, ctx); // [B, H*n]
+        let cm = matmul_ctx(xs, &self.wc, ctx); // [B, H*n]
+        let dt = matmul_ctx(xs, &self.wdt, ctx); // [B, H]
         let mut hb = StateBatch::new(bsz, self.n_heads * n * dh);
         for (b, st) in states.iter().enumerate() {
             let DecodeState::Ssd(s) = &**st else {
@@ -237,35 +244,41 @@ impl SeqMixer for SsdOp {
             hb.load(b, &s.h);
         }
         let mut ymid = Tensor::zeros(&[bsz, d]);
-        for b in 0..bsz {
-            let h_all = hb.row_mut(b);
-            let y_r = ymid.row_mut(b);
-            let x_all = xv.row(b);
-            let b_all = bm.row(b);
-            let c_all = cm.row(b);
-            let dt_r = dt.row(b);
-            for hd in 0..self.n_heads {
-                let a = (-softplus(dt_r[hd])).exp();
-                let xr = &x_all[hd * dh..(hd + 1) * dh];
-                let br = &b_all[hd * n..(hd + 1) * n];
-                let cr = &c_all[hd * n..(hd + 1) * n];
-                let hst = &mut h_all[hd * n * dh..(hd + 1) * n * dh];
-                for i in 0..n {
-                    let bi = br[i];
-                    let hrow = &mut hst[i * dh..(i + 1) * dh];
-                    for (hv, &xvv) in hrow.iter_mut().zip(xr) {
-                        *hv = a * *hv + bi * xvv;
+        {
+            let hw = hb.width();
+            let hs = SharedSlice::new(hb.raw_mut());
+            let ys = SharedSlice::new(&mut ymid.data);
+            ctx.run(bsz, &|b| {
+                // SAFETY: task b touches only row b of each buffer.
+                let h_all = unsafe { hs.slice_mut(b * hw, (b + 1) * hw) };
+                let y_r = unsafe { ys.slice_mut(b * d, (b + 1) * d) };
+                let x_all = xv.row(b);
+                let b_all = bm.row(b);
+                let c_all = cm.row(b);
+                let dt_r = dt.row(b);
+                for hd in 0..self.n_heads {
+                    let a = (-softplus(dt_r[hd])).exp();
+                    let xr = &x_all[hd * dh..(hd + 1) * dh];
+                    let br = &b_all[hd * n..(hd + 1) * n];
+                    let cr = &c_all[hd * n..(hd + 1) * n];
+                    let hst = &mut h_all[hd * n * dh..(hd + 1) * n * dh];
+                    for i in 0..n {
+                        let bi = br[i];
+                        let hrow = &mut hst[i * dh..(i + 1) * dh];
+                        for (hv, &xvv) in hrow.iter_mut().zip(xr) {
+                            *hv = a * *hv + bi * xvv;
+                        }
+                    }
+                    let yr = &mut y_r[hd * dh..(hd + 1) * dh];
+                    for i in 0..n {
+                        let ci = cr[i];
+                        let hrow = &hst[i * dh..(i + 1) * dh];
+                        for (yv, &hv) in yr.iter_mut().zip(hrow) {
+                            *yv += ci * hv;
+                        }
                     }
                 }
-                let yr = &mut y_r[hd * dh..(hd + 1) * dh];
-                for i in 0..n {
-                    let ci = cr[i];
-                    let hrow = &hst[i * dh..(i + 1) * dh];
-                    for (yv, &hv) in yr.iter_mut().zip(hrow) {
-                        *yv += ci * hv;
-                    }
-                }
-            }
+            });
         }
         for (b, st) in states.iter_mut().enumerate() {
             let DecodeState::Ssd(s) = &mut **st else {
@@ -274,7 +287,7 @@ impl SeqMixer for SsdOp {
             hb.store(b, &mut s.h);
             s.pos += 1;
         }
-        matmul(&ymid, &self.wo)
+        matmul_ctx(&ymid, &self.wo, ctx)
     }
 
     /// Blocked prefill: GEMM projections + per-head selective scan

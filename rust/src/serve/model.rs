@@ -23,8 +23,9 @@
 //! B = 1 special case, kept allocation-free via persistent scratch in
 //! [`LmState`] ([`HybridLm::step_into`]).
 
+use crate::exec::{self, ExecCtx};
 use crate::ops::{self, DecodeState, SeqMixer};
-use crate::tensor::matmul::{matmul, matmul_into, vecmat};
+use crate::tensor::matmul::{matmul, matmul_ctx, matmul_into, matmul_into_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::math::{rmsnorm_into, rmsnorm_row, silu};
 use crate::util::rng::Rng;
@@ -482,9 +483,11 @@ impl HybridLm {
     /// different positions and the batch composition may change per call
     /// (continuous batching); every row is bit-identical to a serial
     /// [`HybridLm::step`] of that stream.
+    ///
+    /// Thin wrapper over [`HybridLm::step_batch_ctx`], the canonical entry.
     pub fn step_batch(&self, states: &mut [LmState], tokens: &[u8]) -> Tensor {
         let mut refs: Vec<&mut LmState> = states.iter_mut().collect();
-        self.step_batch_refs(&mut refs, tokens)
+        self.step_batch_ctx(&mut refs, tokens, None)
     }
 
     /// [`HybridLm::step_batch`] over a set of state *references* — the form
@@ -492,7 +495,26 @@ impl HybridLm {
     /// (possibly non-contiguous) subset of its stream arena, so it gathers
     /// `&mut` references to exactly those states instead of reshuffling
     /// them into a contiguous slice. Identical numerics to `step_batch`.
+    ///
+    /// Thin wrapper over [`HybridLm::step_batch_ctx`], the canonical entry.
     pub fn step_batch_refs(&self, states: &mut [&mut LmState], tokens: &[u8]) -> Tensor {
+        self.step_batch_ctx(states, tokens, None)
+    }
+
+    /// Canonical batched-decode entry: advance B streams one token on an
+    /// explicit execution context (`None` means [`exec::global`]). All
+    /// GEMMs — embedding-free here, but RMSNorm feeds per-layer mixer
+    /// [`SeqMixer::step_batch_ctx`] calls, the MLP projections and the LM
+    /// head — run on that context; split points depend only on shapes, so
+    /// every row stays bit-identical to serial [`HybridLm::step`] at any
+    /// thread budget.
+    pub fn step_batch_ctx(
+        &self,
+        states: &mut [&mut LmState],
+        tokens: &[u8],
+        ctx: Option<&ExecCtx>,
+    ) -> Tensor {
+        let ctx = ctx.unwrap_or_else(exec::global);
         let bsz = states.len();
         assert_eq!(
             tokens.len(),
@@ -524,9 +546,9 @@ impl HybridLm {
                     for b in 0..bsz {
                         rmsnorm_into(x.row(b), &g.data, xn.row_mut(b));
                     }
-                    blk.mixer.step_batch(&mut ls, &xn)
+                    blk.mixer.step_batch_ctx(&mut ls, &xn, ctx)
                 }
-                None => blk.mixer.step_batch(&mut ls, &x),
+                None => blk.mixer.step_batch_ctx(&mut ls, &x, ctx),
             };
             x.add_assign(&y);
             if let Some(m) = &blk.mlp {
@@ -534,14 +556,14 @@ impl HybridLm {
                     rmsnorm_into(x.row(b), &m.norm_g.data, xn.row_mut(b));
                 }
                 h.data.fill(0.0);
-                matmul_into(&xn.data, &m.w1.data, &mut h.data, bsz, d, hidden);
+                matmul_into_ctx(&xn.data, &m.w1.data, &mut h.data, bsz, d, hidden, ctx);
                 for v in h.data.iter_mut() {
                     *v = silu(*v);
                 }
                 // Reuse xn as the MLP output buffer (its input was consumed
                 // by the W1 GEMM above).
                 xn.data.fill(0.0);
-                matmul_into(&h.data, &m.w2.data, &mut xn.data, bsz, hidden, d);
+                matmul_into_ctx(&h.data, &m.w2.data, &mut xn.data, bsz, hidden, d, ctx);
                 x.add_assign(&xn);
             }
         }
@@ -557,7 +579,7 @@ impl HybridLm {
             }
             None => &x,
         };
-        matmul(head_in, &self.head)
+        matmul_ctx(head_in, &self.head, ctx)
     }
 
     /// Full-sequence logits [l, VOCAB] via the batch `forward` of every

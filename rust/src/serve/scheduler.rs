@@ -46,6 +46,7 @@ use std::time::Instant;
 use super::model::{HybridLm, LmState};
 use super::policy::{AdmitDecision, Candidate, LruPolicy, SchedCtx, SchedPolicy, StreamView};
 use super::sampler::Sampler;
+use crate::exec::{self, SharedSlice};
 use crate::util::rng::Rng;
 
 /// A generation request: prompt bytes plus the number of tokens to
@@ -673,32 +674,63 @@ impl<'m> BatchScheduler<'m> {
     /// starve later arrivals of their chunks). A stream whose history
     /// completes samples its handoff token from the final chunk's logits
     /// and flips to the decode phase.
+    ///
+    /// Within a round the selected streams' chunks run in parallel on
+    /// [`exec::global`] (one task per stream — each advances its own
+    /// disjoint [`LmState`]). Selection is a *serial* pass first: which
+    /// streams get a chunk, and how many tokens each absorbs, is a pure
+    /// function of stream state and the remaining budget — never of thread
+    /// count or completion order — and stats, progress events and decode
+    /// handoffs are applied serially in admission order afterwards, so the
+    /// event log and every sampled token match the serial schedule exactly.
     fn prefill_phase(&mut self, mut budget: usize, events: &mut Vec<StreamEvent>) {
         loop {
-            let mut progressed = false;
+            if budget == 0 {
+                return;
+            }
+            // Serial selection: (stream index, tokens it will absorb).
+            let mut sel: Vec<(usize, usize)> = Vec::new();
             for i in 0..self.active.len() {
                 if budget == 0 {
-                    return;
+                    break;
                 }
                 if self.active[i].phase != Phase::Prefill {
                     continue;
                 }
-                let restored = self.active[i].restored;
-                let (logits, take, done, total) = {
-                    let s = &self.active[i];
-                    let st = &mut self.states[i];
-                    let before = st.pos;
-                    let (logits, done) =
-                        self.model.prefill_chunk(st, &s.tokens, self.cfg.prefill_chunk);
-                    (logits, done - before, done, s.tokens.len())
-                };
+                let take =
+                    self.cfg.prefill_chunk.min(self.active[i].tokens.len() - self.states[i].pos);
                 budget = budget.saturating_sub(take);
-                if restored {
+                sel.push((i, take));
+            }
+            if sel.is_empty() {
+                return;
+            }
+            // Parallel execute: one prefill_chunk per selected stream.
+            let mut results: Vec<(Vec<f32>, usize)> = vec![(Vec::new(), 0); sel.len()];
+            {
+                let model = &self.model;
+                let active = &self.active;
+                let chunk = self.cfg.prefill_chunk;
+                let sel = &sel;
+                let sts = SharedSlice::new(self.states.as_mut_slice());
+                let res = SharedSlice::new(results.as_mut_slice());
+                exec::global().run(sel.len(), &|j| {
+                    let (i, _) = sel[j];
+                    // SAFETY: selected stream indices are distinct, so task
+                    // j touches only stream i's state and result slot j.
+                    let st = &mut unsafe { sts.slice_mut(i, i + 1) }[0];
+                    let out = unsafe { res.slice_mut(j, j + 1) };
+                    out[0] = model.prefill_chunk(st, &active[i].tokens, chunk);
+                });
+            }
+            // Serial apply, in admission order: stats, events, handoff.
+            for (&(i, take), (logits, done)) in sel.iter().zip(results) {
+                if self.active[i].restored {
                     self.stats.restored_prefill_tokens += take;
                 } else {
                     self.stats.prefill_tokens += take;
                 }
-                progressed = true;
+                let total = self.active[i].tokens.len();
                 let s = &mut self.active[i];
                 events.push(StreamEvent::PrefillProgress { id: s.id, done, total });
                 if done == total {
@@ -720,9 +752,6 @@ impl<'m> BatchScheduler<'m> {
                         });
                     }
                 }
-            }
-            if !progressed {
-                return;
             }
         }
     }

@@ -3,46 +3,79 @@
 //! bottom out here, so relative operator timings reflect GEMM-bound cost.
 
 use super::Tensor;
+use crate::exec::{self, ExecCtx};
 
 /// Micro-kernel tile sizes (tuned in the perf pass; see EXPERIMENTS.md §Perf).
 const BLOCK_I: usize = 32;
 const BLOCK_J: usize = 128;
 const BLOCK_K: usize = 64;
 
-/// C = A @ B for row-major A [m, k], B [k, n].
+/// C = A @ B for row-major A [m, k], B [k, n]; runs on [`exec::global`].
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_ctx(a, b, exec::global())
+}
+
+/// C = A @ B on an explicit execution context.
+pub fn matmul_ctx(a: &Tensor, b: &Tensor, ctx: &ExecCtx) -> Tensor {
     let (m, ka) = (a.rows(), a.cols());
     let (kb, n) = (b.rows(), b.cols());
     assert_eq!(ka, kb, "matmul inner dims {ka} != {kb}");
     let mut c = Tensor::zeros(&[m, n]);
-    matmul_into(&a.data, &b.data, &mut c.data, m, ka, n);
+    matmul_into_ctx(&a.data, &b.data, &mut c.data, m, ka, n, ctx);
     c
 }
 
 /// Blocked i-k-j loop with the innermost loop over contiguous B/C rows so it
-/// auto-vectorizes.
+/// auto-vectorizes; runs on [`exec::global`].
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_into_ctx(a, b, c, m, k, n, exec::global());
+}
+
+/// [`matmul_into`] on an explicit execution context. Parallel split: C row
+/// panels of `BLOCK_I` rows, one task each — panel boundaries depend only
+/// on `m`, and each row keeps the serial kernel's ascending-k accumulation
+/// order, so output is byte-identical at any thread count (including to
+/// `vecmat`, the decode-path contract).
+pub fn matmul_into_ctx(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ctx: &ExecCtx,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    for ii in (0..m).step_by(BLOCK_I) {
-        let i_end = (ii + BLOCK_I).min(m);
-        for kk in (0..k).step_by(BLOCK_K) {
-            let k_end = (kk + BLOCK_K).min(k);
-            for jj in (0..n).step_by(BLOCK_J) {
-                let j_end = (jj + BLOCK_J).min(n);
-                for i in ii..i_end {
-                    let arow = &a[i * k..(i + 1) * k];
-                    let crow = &mut c[i * n + jj..i * n + j_end];
-                    for kx in kk..k_end {
-                        let av = arow[kx];
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &b[kx * n + jj..kx * n + j_end];
-                        for (cv, bv) in crow.iter_mut().zip(brow) {
-                            *cv += av * bv;
-                        }
+    if m == 0 || n == 0 {
+        return;
+    }
+    ctx.run_chunks(c, BLOCK_I * n, |t, c_panel| {
+        matmul_panel(a, b, c_panel, t * BLOCK_I, k, n);
+    });
+}
+
+/// Serial kernel for one C row panel starting at absolute row `row0`
+/// (`c_panel.len() / n` rows). Same loop nest as the original whole-matrix
+/// kernel restricted to the panel.
+fn matmul_panel(a: &[f32], b: &[f32], c_panel: &mut [f32], row0: usize, k: usize, n: usize) {
+    let rows = c_panel.len() / n;
+    for kk in (0..k).step_by(BLOCK_K) {
+        let k_end = (kk + BLOCK_K).min(k);
+        for jj in (0..n).step_by(BLOCK_J) {
+            let j_end = (jj + BLOCK_J).min(n);
+            for i in 0..rows {
+                let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+                let crow = &mut c_panel[i * n + jj..i * n + j_end];
+                for kx in kk..k_end {
+                    let av = arow[kx];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kx * n + jj..kx * n + j_end];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
                     }
                 }
             }
@@ -184,6 +217,18 @@ mod tests {
         for t in 0..5 {
             let row = vecmat(x.row(t), &w);
             assert_eq!(row.as_slice(), full.row(t), "row {t}");
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_is_byte_identical_to_serial() {
+        let mut rng = Rng::new(7);
+        let a = Tensor::randn(&mut rng, &[70, 50], 1.0);
+        let b = Tensor::randn(&mut rng, &[50, 30], 1.0);
+        let serial = matmul_ctx(&a, &b, &ExecCtx::serial());
+        for t in [2usize, 4] {
+            let par = matmul_ctx(&a, &b, &ExecCtx::new(t));
+            assert_eq!(serial.data, par.data, "threads={t}");
         }
     }
 

@@ -22,6 +22,11 @@ pub struct BenchResult {
     /// field in the sh2-bench-v1 record when set (the gate keys records by
     /// name only, so consumers that predate the field ignore it).
     pub batch: Option<usize>,
+    /// Worker-pool size for thread-sweep records; emitted as a `threads`
+    /// field when set. Unlike `batch`, the bench gate folds it into the
+    /// comparison key (`name#tN`), so a regression at one pool size cannot
+    /// hide behind another.
+    pub threads: Option<usize>,
 }
 
 impl BenchResult {
@@ -40,6 +45,9 @@ impl BenchResult {
         ];
         if let Some(b) = self.batch {
             fields.push(("batch", Json::num(b as f64)));
+        }
+        if let Some(t) = self.threads {
+            fields.push(("threads", Json::num(t as f64)));
         }
         Json::obj(fields)
     }
@@ -161,7 +169,13 @@ impl Bencher {
             }
             samples.push(t.elapsed().as_secs_f64() / iters as f64);
         }
-        BenchResult { name: name.to_string(), secs: Summary::of(&samples), iters, batch: None }
+        BenchResult {
+            name: name.to_string(),
+            secs: Summary::of(&samples),
+            iters,
+            batch: None,
+            threads: None,
+        }
     }
 }
 
@@ -282,12 +296,16 @@ mod tests {
         rb.name = "unit/x/B4".to_string();
         rb.batch = Some(4);
         log.push(&rb);
-        assert_eq!(log.len(), 3);
+        let mut rt = r.clone();
+        rt.name = "unit/x/sweep".to_string();
+        rt.threads = Some(2);
+        log.push(&rt);
+        assert_eq!(log.len(), 4);
         let j = Json::parse(&log.to_json().to_string()).expect("self-parse");
         assert_eq!(j.get("schema").and_then(Json::as_str), Some("sh2-bench-v1"));
         assert!(j.get("git_sha").and_then(Json::as_str).is_some());
         let recs = j.get("records").and_then(Json::as_array).unwrap();
-        assert_eq!(recs.len(), 3);
+        assert_eq!(recs.len(), 4);
         assert_eq!(recs[0].get("name").and_then(Json::as_str), Some("unit/x"));
         assert_eq!(
             recs[1].get("name").and_then(Json::as_str),
@@ -296,6 +314,9 @@ mod tests {
         // Records without a batch size omit the field; batched ones emit it.
         assert!(recs[0].get("batch").is_none());
         assert_eq!(recs[2].get("batch").and_then(Json::as_usize), Some(4));
+        // Same for the thread-sweep field.
+        assert!(recs[0].get("threads").is_none());
+        assert_eq!(recs[3].get("threads").and_then(Json::as_usize), Some(2));
         for r in recs {
             assert!(r.get("p50_ns").and_then(Json::as_f64).unwrap() > 0.0);
             assert!(

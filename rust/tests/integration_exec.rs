@@ -1,0 +1,158 @@
+//! Determinism contract of the exec worker pool (DESIGN.md §16): for every
+//! parallelized kernel — GEMM, the three conv algorithms, batched decode
+//! across all 8 operators, and the full serving model — the output under
+//! `threads ∈ {1, 2, 4}` must be BYTE-identical to the serial reference,
+//! and repeated parallel runs must be byte-identical to each other. Split
+//! points depend only on shape, and no split changes any accumulation
+//! order, so this is exact bit equality, not a tolerance.
+
+use sh2::conv::direct::causal_conv_direct_ctx;
+use sh2::conv::fft_conv::fft_causal_conv_ctx;
+use sh2::conv::two_stage::two_stage_conv_ctx;
+use sh2::conv::GroupedFilter;
+use sh2::exec::ExecCtx;
+use sh2::ops::{all_operators, DecodeState, SeqMixer};
+use sh2::serve::{HybridLm, LmState};
+use sh2::tensor::matmul::matmul_ctx;
+use sh2::tensor::Tensor;
+use sh2::util::rng::Rng;
+
+/// The sweep every kernel is checked under: the serial reference, a small
+/// pool, and a pool wider than the (deliberately odd) task counts below.
+fn ctx_sweep() -> Vec<ExecCtx> {
+    vec![ExecCtx::serial(), ExecCtx::new(2), ExecCtx::new(4)]
+}
+
+/// Bit-exact comparison: `==` on f32 would conflate 0.0 and -0.0 and is
+/// not what the determinism contract promises.
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: bit divergence at flat index {i}: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn matmul_is_byte_identical_across_thread_counts_and_runs() {
+    let mut rng = Rng::new(0);
+    // 67 rows: not a multiple of the 32-row panel, so the tail panel and
+    // the task-count > threads path are both exercised.
+    let a = Tensor::randn(&mut rng, &[67, 48], 1.0);
+    let b = Tensor::randn(&mut rng, &[48, 33], 1.0);
+    let want = matmul_ctx(&a, &b, &ExecCtx::serial());
+    for ctx in ctx_sweep() {
+        let got = matmul_ctx(&a, &b, &ctx);
+        assert_bits_eq(&got.data, &want.data, &format!("matmul t{}", ctx.threads()));
+        let again = matmul_ctx(&a, &b, &ctx);
+        assert_bits_eq(&again.data, &want.data, "matmul repeat");
+    }
+}
+
+#[test]
+fn conv_kernels_are_byte_identical_across_thread_counts() {
+    let mut rng = Rng::new(1);
+    // 3 groups: fewer tasks than the widest pool for the per-group split;
+    // 150 rows: a ragged tail for the 64-row direct block split.
+    let (l, g, dg, lh) = (150usize, 3usize, 5usize, 9usize);
+    let x = Tensor::randn(&mut rng, &[l, g * dg], 1.0);
+    let h = GroupedFilter::random(&mut rng, g, lh, dg);
+    let check = |name: &str, run: &dyn Fn(&ExecCtx) -> Tensor| {
+        let want = run(&ExecCtx::serial());
+        for ctx in ctx_sweep() {
+            let got = run(&ctx);
+            assert_bits_eq(&got.data, &want.data, &format!("{name} t{}", ctx.threads()));
+            let again = run(&ctx);
+            assert_bits_eq(&again.data, &want.data, &format!("{name} repeat"));
+        }
+    };
+    check("direct", &|c| causal_conv_direct_ctx(&x, &h, c));
+    check("fft", &|c| fft_causal_conv_ctx(&x, &h, c));
+    check("two-stage", &|c| two_stage_conv_ctx(&x, &h, 16, c));
+}
+
+#[test]
+fn step_batch_is_byte_identical_across_thread_counts_for_every_operator() {
+    let (d, heads, bsz, ticks) = (16usize, 2usize, 3usize, 4usize);
+    let mut rng = Rng::new(2);
+    let ops = all_operators(&mut rng, d, heads);
+    for op in &ops {
+        // Streams at mixed positions, exactly as the scheduler batches them.
+        let mut base: Vec<DecodeState> = Vec::new();
+        for pl in [4usize, 11, 19] {
+            let x = Tensor::randn(&mut rng, &[pl, d], 1.0);
+            let mut st = op.state();
+            op.prefill(&mut st, &x);
+            base.push(st);
+        }
+        let xs: Vec<Tensor> =
+            (0..ticks).map(|_| Tensor::randn(&mut rng, &[bsz, d], 1.0)).collect();
+        let run = |ctx: &ExecCtx| {
+            let mut states = base.clone();
+            let mut outs: Vec<Tensor> = Vec::new();
+            for x in &xs {
+                let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
+                outs.push(op.step_batch_ctx(&mut refs, x, ctx));
+            }
+            (outs, states)
+        };
+        let (want, want_states) = run(&ExecCtx::serial());
+        for ctx in ctx_sweep() {
+            let (got, got_states) = run(&ctx);
+            for (tick, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_bits_eq(
+                    &g.data,
+                    &w.data,
+                    &format!("{} t{} tick {tick}", op.name(), ctx.threads()),
+                );
+            }
+            for (b, (g, w)) in got_states.iter().zip(&want_states).enumerate() {
+                assert_eq!(g.pos(), w.pos(), "{} stream {b}: state drift", op.name());
+            }
+            let (again, _) = run(&ctx);
+            for (g, w) in again.iter().zip(&want) {
+                assert_bits_eq(&g.data, &w.data, &format!("{} repeat", op.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn lm_step_batch_is_byte_identical_across_thread_counts() {
+    // Full serving model (mixers + MLP GEMMs + head) through the explicit-
+    // context entry point, decode continuing from a prefilled prompt.
+    let (d, heads) = (16usize, 2usize);
+    let mut rng = Rng::new(3);
+    let m = HybridLm::new(&mut rng, d, heads, &["SE", "MR", "MHA", "LI"]).unwrap();
+    let prompts: [&[u8]; 3] = [b"ACGTGGCC", b"TT", b"GATTACA"];
+    let mut base: Vec<LmState> = Vec::new();
+    for p in prompts {
+        let mut st = m.state();
+        m.prefill(&mut st, p);
+        base.push(st);
+    }
+    let run = |ctx: &ExecCtx| {
+        let mut states = base.clone();
+        let mut outs: Vec<Tensor> = Vec::new();
+        for tok in [b'A', b'C', b'G'] {
+            let mut refs: Vec<&mut LmState> = states.iter_mut().collect();
+            let toks = vec![tok; refs.len()];
+            outs.push(m.step_batch_ctx(&mut refs, &toks, Some(ctx)));
+        }
+        outs
+    };
+    let want = run(&ExecCtx::serial());
+    for ctx in ctx_sweep() {
+        let got = run(&ctx);
+        for (tick, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_bits_eq(
+                &g.data,
+                &w.data,
+                &format!("lm step_batch t{} tick {tick}", ctx.threads()),
+            );
+        }
+    }
+}
