@@ -1,0 +1,115 @@
+//! Overhead of the observability layer (DESIGN.md §17). Two regimes:
+//!
+//! * `obs/counter/off`, `obs/counter/on`, `obs/histogram/on` — the raw
+//!   instrument hot path (1000 operations per measured call). Off must be
+//!   one relaxed atomic load per operation; on adds one `fetch_add` (two
+//!   plus a `fetch_max` for histograms).
+//! * `obs/serve/off`, `obs/serve/on` — an end-to-end scheduler run with
+//!   recording disabled vs enabled, the number that keeps tick-phase
+//!   timing honest: enabling metrics may not meaningfully slow serving.
+//!
+//! This bench owns its process, so it may toggle the global recording
+//! flag freely (unlike the test binaries, which only ever enable it).
+//!
+//! Quick mode (`BENCH_QUICK=1`) is the CI smoke configuration;
+//! `SH2_BENCH_JSON=path` writes `sh2-bench-v1` records for the regression
+//! gate (seeded baseline: `bench/baseline/BENCH_obs.json`).
+
+use sh2::obs;
+use sh2::serve::{BatchScheduler, HybridLm, Sampler, ServeRequest, TickConfig};
+use sh2::util::bench::{black_box, fmt_secs, quick_requested, Bencher, BenchLog, Table};
+use sh2::util::rng::Rng;
+
+const OPS: usize = 1000;
+
+fn main() {
+    let quick = quick_requested();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut rng = Rng::new(0);
+    let model = HybridLm::new(&mut rng, 32, 2, &["SE", "LA"]).expect("layout");
+    let streams = 4usize;
+    let prompt_len = 16usize;
+    let max_new = if quick { 6 } else { 12 };
+    let cfg = TickConfig { prefill_chunk: 8, tick_budget: 16 };
+
+    let reg = obs::Registry::new();
+    let counter = reg.counter("bench.counter");
+    let hist = reg.histogram("bench.hist");
+
+    let serve_round = |seed: u64| {
+        let mut sched = BatchScheduler::with_config(
+            &model,
+            Sampler::Greedy,
+            streams,
+            usize::MAX,
+            seed,
+            cfg,
+        );
+        let mut gen = Rng::new(seed ^ 0x0B5);
+        for _ in 0..streams {
+            let prompt: Vec<u8> = (0..prompt_len).map(|_| b"ACGT"[gen.below(4)]).collect();
+            sched.submit(ServeRequest::new(prompt, max_new));
+        }
+        black_box(sched.run_to_completion().len())
+    };
+
+    let mut log = BenchLog::new();
+    let mut t = Table::new(
+        &format!(
+            "observability overhead ({OPS} ops per instrument call; serve: \
+             {streams}x({prompt_len} prompt + {max_new} new))"
+        ),
+        &["bench", "p50", "p90"],
+    );
+    let mut push = |log: &mut BenchLog, t: &mut Table, r: sh2::util::bench::BenchResult| {
+        t.row(vec![r.name.clone(), fmt_secs(r.secs.p50), fmt_secs(r.secs.p90)]);
+        log.push(&r);
+    };
+
+    // --- recording OFF ---
+    obs::set_recording(false);
+    push(
+        &mut log,
+        &mut t,
+        bencher.bench("obs/counter/off", || {
+            for i in 0..OPS {
+                counter.add(black_box(i as u64) & 1);
+            }
+        }),
+    );
+    push(&mut log, &mut t, bencher.bench("obs/serve/off", || serve_round(7)));
+    let count_off = counter.get();
+
+    // --- recording ON ---
+    obs::set_recording(true);
+    push(
+        &mut log,
+        &mut t,
+        bencher.bench("obs/counter/on", || {
+            for i in 0..OPS {
+                counter.add(black_box(i as u64) & 1);
+            }
+        }),
+    );
+    push(
+        &mut log,
+        &mut t,
+        bencher.bench("obs/histogram/on", || {
+            for i in 0..OPS {
+                hist.record(black_box((i * i) as u64));
+            }
+        }),
+    );
+    push(&mut log, &mut t, bencher.bench("obs/serve/on", || serve_round(7)));
+
+    t.print();
+    assert_eq!(count_off, 0, "disabled instruments must record nothing");
+    assert!(counter.get() > 0 && hist.count() > 0, "enabled instruments recorded");
+    println!(
+        "claim shape: obs/counter/off is the one-atomic-load floor; \
+         obs/serve/on should sit within noise of obs/serve/off."
+    );
+    if let Some(path) = log.write_env() {
+        println!("bench records ({}) -> {path}", log.len());
+    }
+}

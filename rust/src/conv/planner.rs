@@ -17,7 +17,8 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 use super::direct::causal_conv_direct_ctx;
 use super::fft_conv::fft_causal_conv_ctx;
@@ -167,11 +168,54 @@ struct PlannerInner {
     stats: PlannerStats,
 }
 
+/// Mirrors of [`PlannerStats`] (plus per-decision and calibration-cost
+/// counters) in the global metrics registry (`planner.*` — DESIGN.md §17).
+/// Counts accumulate across every planner instance in the process; the
+/// per-planner [`PlannerStats`] stays the exact per-instance source.
+struct PlannerObs {
+    hits: Arc<crate::obs::Counter>,
+    misses: Arc<crate::obs::Counter>,
+    calibrations: Arc<crate::obs::Counter>,
+    calibration_ns: Arc<crate::obs::Counter>,
+    /// Chosen-(algorithm, thread-count) counters, created lazily per pair
+    /// (`planner.plan.{algo}.t{threads}`) so steady-state recording stays
+    /// allocation-free.
+    by_plan: Mutex<BTreeMap<(&'static str, usize), Arc<crate::obs::Counter>>>,
+}
+
+impl PlannerObs {
+    fn new() -> PlannerObs {
+        let r = crate::obs::global();
+        PlannerObs {
+            hits: r.counter("planner.cache_hits"),
+            misses: r.counter("planner.cache_misses"),
+            calibrations: r.counter("planner.calibrations"),
+            calibration_ns: r.counter("planner.calibration_ns"),
+            by_plan: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Count one planned decision. Only called while recording is on.
+    fn count_plan(&self, algo: &'static str, threads: usize) {
+        let mut m = self.by_plan.lock().expect("planner obs lock");
+        match m.get(&(algo, threads)) {
+            Some(c) => c.inc(),
+            None => {
+                let c = crate::obs::global()
+                    .counter(&format!("planner.plan.{algo}.t{threads}"));
+                c.inc();
+                m.insert((algo, threads), c);
+            }
+        }
+    }
+}
+
 /// The autotuner. Cheap to query (one `Mutex` + `BTreeMap` lookup on the
 /// hot path), safe to share across rank threads, and persistable to JSON.
 pub struct ConvPlanner {
     inner: Mutex<PlannerInner>,
     force: Option<ConvAlgo>,
+    obs: PlannerObs,
 }
 
 impl Default for ConvPlanner {
@@ -190,6 +234,7 @@ impl ConvPlanner {
                 stats: PlannerStats::default(),
             }),
             force: None,
+            obs: PlannerObs::new(),
         }
     }
 
@@ -258,10 +303,16 @@ impl ConvPlanner {
         }
         let mut inner = self.inner.lock().expect("planner lock");
         if let Some(plan) = inner.cache.get(&(key, max_threads)) {
+            let plan = *plan;
             inner.stats.hits += 1;
-            return *plan;
+            self.obs.hits.inc();
+            if crate::obs::recording() {
+                self.obs.count_plan(plan.algo.name(), plan.threads);
+            }
+            return plan;
         }
         inner.stats.misses += 1;
+        self.obs.misses.inc();
         let mut best: Option<ConvPlan> = None;
         for algo in Self::candidates(&key) {
             let serial = Self::predict(&inner.model, &key, algo);
@@ -274,6 +325,9 @@ impl ConvPlanner {
         }
         let plan = best.expect("at least direct and fft are always candidates");
         inner.cache.insert((key, max_threads), plan);
+        if crate::obs::recording() {
+            self.obs.count_plan(plan.algo.name(), plan.threads);
+        }
         plan
     }
 
@@ -299,6 +353,7 @@ impl ConvPlanner {
         shape: &ConvShape,
         bencher: &Bencher,
     ) -> Vec<(ConvAlgo, usize, f64)> {
+        let cal_t0 = if crate::obs::recording() { Some(Instant::now()) } else { None };
         let key = shape.bucket();
         let budget = exec::global().threads();
         let mut rng = Rng::new(0x7u64 ^ (key.seq_len as u64) ^ ((key.filter_len as u64) << 20));
@@ -360,6 +415,10 @@ impl ConvPlanner {
             .expect("candidates are never empty");
         inner.cache.insert((key, budget), ConvPlan { algo, threads, secs, calibrated: true });
         inner.stats.calibrations += 1;
+        self.obs.calibrations.inc();
+        if let Some(t0) = cal_t0 {
+            self.obs.calibration_ns.add(t0.elapsed().as_nanos() as u64);
+        }
         measured
     }
 

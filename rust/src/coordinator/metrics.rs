@@ -1,9 +1,8 @@
 //! Training metrics: loss curve, throughput, and JSONL export.
 
-use std::io::Write;
 use std::time::Instant;
 
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonlWriter};
 use crate::util::stats::Ema;
 
 #[derive(Clone, Debug)]
@@ -63,20 +62,25 @@ impl MetricsLog {
         tail.iter().map(|m| m.tokens_per_sec).sum::<f64>() / tail.len() as f64
     }
 
-    /// Write one-JSON-object-per-line log.
+    /// One step as a JSONL record.
+    fn step_json(m: &StepMetric) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(m.step as f64)),
+            ("loss", Json::num(m.loss)),
+            ("loss_ema", Json::num(m.loss_ema)),
+            ("grad_norm", Json::num(m.grad_norm)),
+            ("tokens_per_sec", Json::num(m.tokens_per_sec)),
+        ])
+    }
+
+    /// Write one-JSON-object-per-line log through the shared
+    /// [`JsonlWriter`] (the same sink machinery the obs timeline uses).
     pub fn write_jsonl(&self, path: &std::path::Path) -> std::io::Result<()> {
-        let mut f = std::fs::File::create(path)?;
+        let mut w = JsonlWriter::create(path)?;
         for m in &self.steps {
-            let j = Json::obj(vec![
-                ("step", Json::num(m.step as f64)),
-                ("loss", Json::num(m.loss)),
-                ("loss_ema", Json::num(m.loss_ema)),
-                ("grad_norm", Json::num(m.grad_norm)),
-                ("tokens_per_sec", Json::num(m.tokens_per_sec)),
-            ]);
-            writeln!(f, "{j}")?;
+            w.write(&Self::step_json(m))?;
         }
-        Ok(())
+        w.flush()
     }
 }
 

@@ -39,6 +39,39 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::obs::{Counter, Histogram};
+
+/// Cached handles into the global metrics registry (`exec.*` — see
+/// DESIGN.md §17). Registered once; recording through them is lock-free
+/// and a no-op while [`crate::obs::recording`] is off.
+struct ExecObs {
+    /// Parallel regions actually fanned out to the pool.
+    regions: Arc<Counter>,
+    /// Tasks submitted across those regions.
+    tasks: Arc<Counter>,
+    /// Nested `run` calls that degraded to serial inline execution.
+    nested_serial: Arc<Counter>,
+    /// Time the submitting thread spent running its share of tasks.
+    main_busy_ns: Arc<Counter>,
+    /// Send-to-receive latency of pool jobs.
+    queue_wait_ns: Arc<Histogram>,
+}
+
+fn exec_obs() -> &'static ExecObs {
+    static OBS: OnceLock<ExecObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = crate::obs::global();
+        ExecObs {
+            regions: r.counter("exec.regions"),
+            tasks: r.counter("exec.tasks"),
+            nested_serial: r.counter("exec.nested_serial"),
+            main_busy_ns: r.counter("exec.main_busy_ns"),
+            queue_wait_ns: r.histogram("exec.queue_wait_ns"),
+        }
+    })
+}
 
 thread_local! {
     /// True while this thread is executing tasks of some parallel region;
@@ -63,17 +96,25 @@ struct Job {
     next: Arc<AtomicUsize>,
     tasks: usize,
     done: Sender<()>,
+    /// Submission timestamp, `Some` only when metric recording was on at
+    /// send time — the worker derives queue-wait and busy-time from it.
+    sent: Option<Instant>,
 }
 
 // SAFETY: `f` points at a `Sync` closure kept alive by the join discipline
 // above; the remaining fields are ordinary `Send` types.
 unsafe impl Send for Job {}
 
-fn worker_loop(rx: Receiver<Job>) {
+fn worker_loop(rx: Receiver<Job>, busy_ns: Arc<Counter>) {
     while let Ok(job) = rx.recv() {
         // SAFETY: the submitting `run` blocks until our `done` send (or our
         // death) — the closure behind `f` is still alive.
         let f = unsafe { &*job.f };
+        let t0 = job.sent.map(|sent| {
+            let now = Instant::now();
+            exec_obs().queue_wait_ns.record(now.duration_since(sent).as_nanos() as u64);
+            now
+        });
         IN_PARALLEL.with(|g| g.set(true));
         loop {
             let i = job.next.fetch_add(1, Ordering::Relaxed);
@@ -83,6 +124,9 @@ fn worker_loop(rx: Receiver<Job>) {
             f(i);
         }
         IN_PARALLEL.with(|g| g.set(false));
+        if let Some(t0) = t0 {
+            busy_ns.add(t0.elapsed().as_nanos() as u64);
+        }
         let _ = job.done.send(());
     }
 }
@@ -103,10 +147,13 @@ impl Pool {
         for w in 0..helpers {
             let (tx, rx) = channel::<Job>();
             senders.push(tx);
+            // Same-index workers of different pools share a counter; in
+            // practice one process has one (global) pool.
+            let busy_ns = crate::obs::global().counter(&format!("exec.worker{w}.busy_ns"));
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("sh2-exec-{w}"))
-                    .spawn(move || worker_loop(rx))
+                    .spawn(move || worker_loop(rx, busy_ns))
                     .expect("spawn exec worker"),
             );
         }
@@ -190,12 +237,23 @@ impl ExecCtx {
         let pool = match &self.pool {
             Some(p) if self.threads > 1 && tasks > 1 && !in_parallel() => p,
             _ => {
+                // A pooled context nested inside a parallel region goes
+                // serial by design — count those degradations; the plain
+                // serial context stays instrument-free.
+                if self.pool.is_some() && self.threads > 1 && tasks > 1 && in_parallel()
+                {
+                    exec_obs().nested_serial.inc();
+                }
                 for i in 0..tasks {
                     f(i);
                 }
                 return;
             }
         };
+        let obs = exec_obs();
+        obs.regions.inc();
+        obs.tasks.add(tasks as u64);
+        let sent = if crate::obs::recording() { Some(Instant::now()) } else { None };
         let next = Arc::new(AtomicUsize::new(0));
         let (done_tx, done_rx) = channel();
         // Never more helpers than tasks - 1: the submitting thread takes
@@ -207,6 +265,7 @@ impl ExecCtx {
                 next: Arc::clone(&next),
                 tasks,
                 done: done_tx.clone(),
+                sent,
             })
             .expect("exec worker hung up");
         }
@@ -214,6 +273,7 @@ impl ExecCtx {
         // The submitting thread joins the same index race. A panic here
         // must still wait for the helpers (they hold borrows into our
         // frame), so catch, join, then resume.
+        let t_main = sent.map(|_| Instant::now());
         let main_res = catch_unwind(AssertUnwindSafe(|| {
             IN_PARALLEL.with(|g| g.set(true));
             loop {
@@ -225,6 +285,9 @@ impl ExecCtx {
             }
         }));
         IN_PARALLEL.with(|g| g.set(false));
+        if let Some(t0) = t_main {
+            obs.main_busy_ns.add(t0.elapsed().as_nanos() as u64);
+        }
         // Join discipline: drain one ack per helper. A disconnect before
         // all acks means a helper died mid-task.
         let mut acks = 0;
@@ -358,6 +421,7 @@ fn resolve_threads(n: usize) -> usize {
 /// all hardware threads). Must run before the first [`global`] use; a later
 /// call logs a warning and keeps the established context.
 pub fn set_global_threads(n: usize) {
+    exec_obs(); // register exec.* instruments even if no region ever runs
     let ctx = ExecCtx::new(resolve_threads(n));
     if GLOBAL.set(ctx).is_err() {
         log::warn!("exec: global thread budget already fixed; ignoring");
@@ -369,6 +433,8 @@ pub fn set_global_threads(n: usize) {
 /// -> all hardware threads).
 pub fn global() -> &'static ExecCtx {
     GLOBAL.get_or_init(|| {
+        exec_obs(); // as in `set_global_threads`
+
         let n = match std::env::var("SH2_THREADS") {
             Ok(v) => match v.trim().parse::<usize>() {
                 Ok(n) => resolve_threads(n),

@@ -21,6 +21,7 @@ pub mod costmodel;
 pub mod cp;
 pub mod exec;
 pub mod fabric;
+pub mod obs;
 pub mod ops;
 pub mod runtime;
 pub mod serve;

@@ -92,6 +92,10 @@ const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|re
   common: --artifacts DIR (default: artifacts) --config NAME (default: tiny)
           --threads N (exec worker pool size; 0 = all cores; overrides
           SH2_THREADS; default 1 = serial, bit-identical reference path)
+          --metrics-out PATH (serve/replay: enable the obs registry, stream
+          a per-tick timeline JSONL to PATH, and print the final
+          sh2-metrics-v1 snapshot line; train: alias for --metrics;
+          SH2_METRICS=1 enables recording without a timeline file)
   train:  --steps N --width D --heads H --layout SE-MR-MHA-LI --seq-len L --batch B
           --lr F --seed S --log-every K --eval-every K --save PATH --metrics PATH
           --backend native|xla (default: native; xla needs --features pjrt and
@@ -242,6 +246,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let policy = parse_policy(args.get_or("policy", "lru"))?;
     model.warm_plans(&[prompt_len.max(1), cfg.prefill_chunk.min(prompt_len.max(1))]);
 
+    // --metrics-out turns on the process-wide obs registry and streams a
+    // per-tick timeline to PATH; the sh2-metrics-v1 snapshot is printed as
+    // the final stdout line and appended to the timeline file.
+    let timeline = match args.get("metrics-out") {
+        Some(path) => {
+            sh2::obs::set_recording(true);
+            Some(Arc::new(sh2::obs::TimelineSink::create(path)?))
+        }
+        None => None,
+    };
+
     let mut sched = BatchScheduler::with_policy(
         &model,
         sampler,
@@ -251,6 +266,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg,
         policy.build(),
     );
+    if let Some(tl) = &timeline {
+        sched.set_timeline(tl.clone());
+    }
     let mut gen = GenomeGenerator::new(seed ^ 0x5EED, GenomeConfig::default());
     for _ in 0..n_streams {
         sched.submit(ServeRequest::new(gen.generate(prompt_len), max_new));
@@ -295,6 +313,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let secs = t0.elapsed().as_secs_f64();
     let ttft: Vec<f64> = done.iter().filter_map(|f| f.ttft_secs).collect();
     let ttft_summary = if ttft.is_empty() { None } else { Some(Summary::of(&ttft)) };
+    // Tick-denominated latency percentiles: deterministic for a fixed
+    // workload + scheduler config, unlike the wall-clock TTFT above.
+    let summary_opt = |xs: &[f64]| if xs.is_empty() { None } else { Some(Summary::of(xs)) };
+    let ttft_ticks: Vec<f64> =
+        done.iter().filter_map(|f| f.ttft_ticks().map(|t| t as f64)).collect();
+    let tbt_ticks: Vec<f64> = done.iter().filter_map(|f| f.tbt_ticks()).collect();
+    let ttft_ticks_summary = summary_opt(&ttft_ticks);
+    let tbt_ticks_summary = summary_opt(&tbt_ticks);
 
     let mut t = Table::new(
         &format!(
@@ -355,9 +381,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("preemptions", Json::num(s.preemptions as f64)),
         ("ttft_p50_ms", Json::num(ttft_summary.as_ref().map_or(0.0, |t| t.p50 * 1e3))),
         ("ttft_p90_ms", Json::num(ttft_summary.as_ref().map_or(0.0, |t| t.p90 * 1e3))),
+        ("ttft_ticks_p50", Json::num(ttft_ticks_summary.as_ref().map_or(0.0, |t| t.p50))),
+        ("ttft_ticks_p90", Json::num(ttft_ticks_summary.as_ref().map_or(0.0, |t| t.p90))),
+        ("tbt_ticks_p50", Json::num(tbt_ticks_summary.as_ref().map_or(0.0, |t| t.p50))),
+        ("tbt_ticks_p90", Json::num(tbt_ticks_summary.as_ref().map_or(0.0, |t| t.p90))),
         ("elapsed_s", Json::num(secs)),
     ]);
     println!("{summary}");
+    if let Some(tl) = &timeline {
+        let snap = sh2::obs::global().snapshot();
+        tl.write(&snap)?;
+        tl.flush()?;
+        println!("{snap}");
+    }
     Ok(())
 }
 
@@ -466,6 +502,16 @@ fn cmd_replay(args: &Args) -> Result<()> {
     let longest = trace.requests.iter().map(|r| r.prompt.len()).max().unwrap_or(1);
     model.warm_plans(&[rcfg.tick.prefill_chunk.min(longest.max(1))]);
 
+    // One timeline file shared by every policy's replay (rows carry a
+    // "policy" field); the sh2-metrics-v1 snapshot aggregates across them.
+    let timeline = match args.get("metrics-out") {
+        Some(path) => {
+            sh2::obs::set_recording(true);
+            Some(Arc::new(sh2::obs::TimelineSink::create(path)?))
+        }
+        None => None,
+    };
+
     let mut t = Table::new(
         &format!(
             "replay {}: {} requests, {} cancels, max_active={}, layout {}",
@@ -479,7 +525,14 @@ fn cmd_replay(args: &Args) -> Result<()> {
     );
     let mut lines = Vec::new();
     for kind in policies {
-        let r = workload::replay(&model, &trace, sampler, kind, &rcfg);
+        let r = workload::replay_with_timeline(
+            &model,
+            &trace,
+            sampler,
+            kind,
+            &rcfg,
+            timeline.clone(),
+        );
         t.row(vec![
             r.policy.to_string(),
             format!("{}", r.total_ticks),
@@ -495,6 +548,12 @@ fn cmd_replay(args: &Args) -> Result<()> {
     // One machine-readable sh2-replay-v1 line per policy, for CI scrapers.
     for line in lines {
         println!("{line}");
+    }
+    if let Some(tl) = &timeline {
+        let snap = sh2::obs::global().snapshot();
+        tl.write(&snap)?;
+        tl.flush()?;
+        println!("{snap}");
     }
     Ok(())
 }
@@ -834,7 +893,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         save_lm(Path::new(save), &trainer.model, trainer.step as u64)?;
         log::info!("checkpoint saved to {save} (drive it with `sh2 generate --load {save}`)");
     }
-    if let Some(mpath) = args.get("metrics") {
+    // --metrics-out is the unified spelling shared with serve/replay;
+    // --metrics remains as the historical alias. Both go through the
+    // shared util::json::JsonlWriter sink.
+    if let Some(mpath) = args.get("metrics").or_else(|| args.get("metrics-out")) {
         metrics.write_jsonl(Path::new(mpath))?;
     }
     Ok(())
@@ -979,7 +1041,7 @@ fn cmd_train_xla(args: &Args) -> Result<()> {
         trainer.save_checkpoint(Path::new(save))?;
         log::info!("checkpoint saved to {save}");
     }
-    if let Some(mpath) = args.get("metrics") {
+    if let Some(mpath) = args.get("metrics").or_else(|| args.get("metrics-out")) {
         metrics.write_jsonl(Path::new(mpath))?;
     }
     Ok(())

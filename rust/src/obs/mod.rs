@@ -1,0 +1,467 @@
+//! Unified observability layer: process-wide metrics registry, span
+//! timers, and a per-tick timeline sink.
+//!
+//! Design (DESIGN.md §17):
+//! * **Recording is off by default** behind one process-global
+//!   [`AtomicBool`] (seeded from `SH2_METRICS=1`). Every record call
+//!   starts with a relaxed load of that flag, so the disabled path is a
+//!   single predictable branch — no locks, no allocation, and no
+//!   `Instant::now()` (span timers skip the clock read entirely when
+//!   recording is off).
+//! * **Instruments are lock-free on the hot path.** [`Counter`] and
+//!   [`Gauge`] are a single `AtomicU64`; [`Histogram`] is a fixed array
+//!   of 65 power-of-two buckets plus count/sum/max atomics. Recording
+//!   never allocates; the only lock in the module guards instrument
+//!   *registration* ([`Registry`] name → instrument maps), which callers
+//!   do once at setup and cache as `Arc` handles.
+//! * **Snapshots are versioned JSON.** [`Registry::snapshot`] emits one
+//!   `sh2-metrics-v1` object (counters, gauges, histogram summaries with
+//!   log-bucket-resolution p50/p90/p99). [`TimelineSink`] appends one
+//!   JSON object per scheduler tick to a JSONL file via the shared
+//!   [`JsonlWriter`].
+//!
+//! Metrics are observation-only: nothing in this module feeds back into
+//! scheduling, planning, or numerics, so every determinism contract
+//! (replay event hashes, decode byte-identity) holds with recording on
+//! or off at any `SH2_THREADS`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{Json, JsonlWriter};
+
+// ---------------------------------------------------------------------------
+// Global recording flag
+// ---------------------------------------------------------------------------
+
+static RECORDING: OnceLock<AtomicBool> = OnceLock::new();
+
+fn recording_flag() -> &'static AtomicBool {
+    RECORDING.get_or_init(|| {
+        let on = std::env::var("SH2_METRICS").map(|v| v == "1").unwrap_or(false);
+        AtomicBool::new(on)
+    })
+}
+
+/// Is metric recording enabled? One relaxed atomic load — this is the
+/// entire cost of every instrument when observability is off.
+#[inline]
+pub fn recording() -> bool {
+    recording_flag().load(Ordering::Relaxed)
+}
+
+/// Enable or disable recording process-wide. Tests must only ever
+/// *enable* the global flag (integration binaries run tests in parallel);
+/// exactness tests should use a private [`Registry`] instead.
+pub fn set_recording(on: bool) {
+    recording_flag().store(on, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Instruments
+// ---------------------------------------------------------------------------
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if recording() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins level (queue depth, arena bytes, ...).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        if recording() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of histogram buckets: bucket `i` covers `[2^(i-1), 2^i)` for
+/// `i ≥ 1` and bucket 0 holds zeros, so 65 buckets span all of `u64`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Log2-bucketed histogram of `u64` samples (typically nanoseconds).
+///
+/// Recording is three relaxed atomic RMWs plus a `fetch_max`; quantiles
+/// are resolved at snapshot time by walking the cumulative bucket counts
+/// and are exact to within one power of two (and clamped to the true
+/// observed max).
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    /// Wrapping sum of samples; meaningful while the true sum < 2^64.
+    sum: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+/// Bucket index for a sample: 0 for 0, else `64 - leading_zeros`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros()) as usize
+    }
+}
+
+/// Inclusive-exclusive `[lo, hi)` value range of bucket `i` (bucket 0 is
+/// `[0, 1)`; the last bucket's `hi` saturates at `u64::MAX`).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    assert!(i < HIST_BUCKETS, "bucket index out of range");
+    if i == 0 {
+        (0, 1)
+    } else {
+        let lo = 1u64 << (i - 1);
+        let hi = if i >= 64 { u64::MAX } else { 1u64 << i };
+        (lo, hi)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !recording() {
+            return;
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Start a drop-guard timer that records elapsed nanoseconds into
+    /// this histogram. The clock is only read when recording is on.
+    pub fn span(&self) -> Span<'_> {
+        Span { hist: self, start: if recording() { Some(Instant::now()) } else { None } }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (`0.0 ≤ q ≤ 1.0`): the upper bound of the
+    /// bucket holding the q-th sample, clamped to the observed max.
+    /// Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for i in 0..HIST_BUCKETS {
+            seen += self.buckets[i].load(Ordering::Relaxed);
+            if seen >= rank {
+                let (_, hi) = bucket_bounds(i);
+                return hi.saturating_sub(1).min(self.max());
+            }
+        }
+        self.max()
+    }
+}
+
+/// Drop-guard span timer; records elapsed ns into its histogram on drop.
+/// `start` is `None` when recording was off at construction, making an
+/// inactive span free beyond the flag check.
+pub struct Span<'a> {
+    hist: &'a Histogram,
+    start: Option<Instant>,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            self.hist.record(t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+/// Named instrument registry. Registration (name lookup) takes a mutex
+/// and may allocate; callers do it once at setup and keep the returned
+/// `Arc` handles, so the hot path never touches the registry itself.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the counter named `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.inner.lock().unwrap();
+        match g.counters.get(name) {
+            Some(c) => Arc::clone(c),
+            None => {
+                let c = Arc::new(Counter::new());
+                g.counters.insert(name.to_string(), Arc::clone(&c));
+                c
+            }
+        }
+    }
+
+    /// Get or create the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut g = self.inner.lock().unwrap();
+        match g.gauges.get(name) {
+            Some(x) => Arc::clone(x),
+            None => {
+                let x = Arc::new(Gauge::new());
+                g.gauges.insert(name.to_string(), Arc::clone(&x));
+                x
+            }
+        }
+    }
+
+    /// Get or create the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut g = self.inner.lock().unwrap();
+        match g.histograms.get(name) {
+            Some(h) => Arc::clone(h),
+            None => {
+                let h = Arc::new(Histogram::new());
+                g.histograms.insert(name.to_string(), Arc::clone(&h));
+                h
+            }
+        }
+    }
+
+    /// One versioned `sh2-metrics-v1` snapshot of every registered
+    /// instrument. Histograms are summarized (count/sum/max + bucket-
+    /// resolution p50/p90/p99); instrument maps are name-sorted.
+    pub fn snapshot(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let counters = Json::Obj(
+            g.counters
+                .iter()
+                .map(|(k, c)| (k.clone(), Json::num(c.get() as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            g.gauges
+                .iter()
+                .map(|(k, x)| (k.clone(), Json::num(x.get() as f64)))
+                .collect(),
+        );
+        let histograms = Json::Obj(
+            g.histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::num(h.count() as f64)),
+                            ("sum", Json::num(h.sum() as f64)),
+                            ("p50", Json::num(h.quantile(0.5) as f64)),
+                            ("p90", Json::num(h.quantile(0.9) as f64)),
+                            ("p99", Json::num(h.quantile(0.99) as f64)),
+                            ("max", Json::num(h.max() as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::str("sh2-metrics-v1")),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+}
+
+/// The process-wide registry every built-in subsystem registers into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+// ---------------------------------------------------------------------------
+// Timeline sink
+// ---------------------------------------------------------------------------
+
+/// Append-only JSONL sink for the per-tick timeline (`--metrics-out`
+/// writes one object per scheduler tick next to the final snapshot).
+pub struct TimelineSink {
+    inner: Mutex<JsonlWriter>,
+}
+
+impl TimelineSink {
+    pub fn create<P: AsRef<Path>>(path: P) -> std::io::Result<TimelineSink> {
+        Ok(TimelineSink { inner: Mutex::new(JsonlWriter::create(path)?) })
+    }
+
+    pub fn write(&self, record: &Json) -> std::io::Result<()> {
+        self.inner.lock().unwrap().write(record)
+    }
+
+    pub fn flush(&self) -> std::io::Result<()> {
+        self.inner.lock().unwrap().flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// RAII guard: recording on for the test body. Only ever enables —
+    /// parallel tests in this binary may also be recording.
+    struct Rec;
+    impl Rec {
+        fn on() -> Rec {
+            set_recording(true);
+            Rec
+        }
+    }
+    impl Drop for Rec {
+        fn drop(&mut self) {}
+    }
+
+    #[test]
+    fn counter_noop_when_disabled() {
+        // A private counter with recording possibly on globally: check
+        // only the enabled path (disabled-path exactness is covered by
+        // the dedicated integration test run).
+        let _r = Rec::on();
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_index(1u64 << 63), 64);
+        assert_eq!(bucket_index((1u64 << 63) - 1), 63);
+    }
+
+    #[test]
+    fn bucket_bounds_cover_index() {
+        for v in [0u64, 1, 2, 3, 7, 8, 1023, 1024, u64::MAX / 2, u64::MAX] {
+            let i = bucket_index(v);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(v >= lo, "v={v} below bucket {i} lo={lo}");
+            // hi is exclusive except for the saturated top bucket.
+            assert!(v < hi || (i == 64 && v <= hi), "v={v} above bucket {i} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_clamp_to_max() {
+        let _r = Rec::on();
+        let h = Histogram::new();
+        for v in [100u64, 200, 300, 400, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 2000);
+        assert_eq!(h.max(), 1000);
+        // p99 lands in the top occupied bucket; clamped to observed max.
+        assert_eq!(h.quantile(0.99), 1000);
+        assert!(h.quantile(0.5) >= 100);
+        assert!(h.quantile(0.5) <= 511);
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let _r = Rec::on();
+        let reg = Registry::new();
+        reg.counter("a.b").add(3);
+        reg.gauge("g").set(7);
+        reg.histogram("h").record(5);
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("schema").unwrap().as_str(), Some("sh2-metrics-v1"));
+        assert_eq!(snap.at(&["counters", "a.b"]).unwrap().as_usize(), Some(3));
+        assert_eq!(snap.at(&["gauges", "g"]).unwrap().as_usize(), Some(7));
+        assert_eq!(snap.at(&["histograms", "h", "count"]).unwrap().as_usize(), Some(1));
+        // Round-trips through the serializer/parser.
+        let back = Json::parse(&snap.to_string()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn registry_dedups_handles() {
+        let reg = Registry::new();
+        let a = reg.counter("same");
+        let b = reg.counter("same");
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -47,7 +47,59 @@ use super::model::{HybridLm, LmState};
 use super::policy::{AdmitDecision, Candidate, LruPolicy, SchedCtx, SchedPolicy, StreamView};
 use super::sampler::Sampler;
 use crate::exec::{self, SharedSlice};
+use crate::obs::{Counter, Gauge, Histogram, Registry, TimelineSink};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Handles into the metrics registry for the serve tick loop (`serve.*` —
+/// DESIGN.md §17): per-phase latency histograms, arena gauges, and mirrors
+/// of the [`ServeStats`] counters. Registered at construction against the
+/// global registry ([`BatchScheduler::attach_obs`] rebinds to a private
+/// one for isolated tests); recording through the cached handles is
+/// lock-free and a no-op while [`crate::obs::recording`] is off.
+struct SchedObs {
+    tick_ns: Arc<Histogram>,
+    admit_ns: Arc<Histogram>,
+    prefill_ns: Arc<Histogram>,
+    decode_ns: Arc<Histogram>,
+    apply_ns: Arc<Histogram>,
+    queue_depth: Arc<Gauge>,
+    active_streams: Arc<Gauge>,
+    arena_bytes: Arc<Gauge>,
+    committed_bytes: Arc<Gauge>,
+    ticks: Arc<Counter>,
+    admitted: Arc<Counter>,
+    decode_steps: Arc<Counter>,
+    prefill_tokens: Arc<Counter>,
+    restored_prefill_tokens: Arc<Counter>,
+    preemptions: Arc<Counter>,
+    cancelled: Arc<Counter>,
+    rejected: Arc<Counter>,
+}
+
+impl SchedObs {
+    fn new(reg: &Registry) -> SchedObs {
+        SchedObs {
+            tick_ns: reg.histogram("serve.tick_ns"),
+            admit_ns: reg.histogram("serve.phase.admit_ns"),
+            prefill_ns: reg.histogram("serve.phase.prefill_ns"),
+            decode_ns: reg.histogram("serve.phase.decode_ns"),
+            apply_ns: reg.histogram("serve.phase.apply_ns"),
+            queue_depth: reg.gauge("serve.queue_depth"),
+            active_streams: reg.gauge("serve.active_streams"),
+            arena_bytes: reg.gauge("serve.arena_bytes"),
+            committed_bytes: reg.gauge("serve.committed_bytes"),
+            ticks: reg.counter("serve.ticks"),
+            admitted: reg.counter("serve.admitted"),
+            decode_steps: reg.counter("serve.decode_steps"),
+            prefill_tokens: reg.counter("serve.prefill_tokens"),
+            restored_prefill_tokens: reg.counter("serve.restored_prefill_tokens"),
+            preemptions: reg.counter("serve.preemptions"),
+            cancelled: reg.counter("serve.cancelled"),
+            rejected: reg.counter("serve.rejected"),
+        }
+    }
+}
 
 /// A generation request: prompt bytes plus the number of tokens to
 /// generate, optionally carrying a priority tier and an SLO deadline for
@@ -373,6 +425,11 @@ pub struct BatchScheduler<'m> {
     /// thrashing through an admit→prefill→evict cycle every tick.
     admit_blocked: bool,
     pub stats: ServeStats,
+    /// Metric handles (global registry by default; see
+    /// [`BatchScheduler::attach_obs`]).
+    obs: SchedObs,
+    /// Optional per-tick JSONL timeline (`--metrics-out`).
+    timeline: Option<Arc<TimelineSink>>,
 }
 
 impl<'m> BatchScheduler<'m> {
@@ -438,7 +495,23 @@ impl<'m> BatchScheduler<'m> {
             finished: Vec::new(),
             admit_blocked: false,
             stats: ServeStats::default(),
+            obs: SchedObs::new(crate::obs::global()),
+            timeline: None,
         }
+    }
+
+    /// Rebind this scheduler's metric handles to `reg` instead of the
+    /// global registry — lets a test reconcile phase counters against an
+    /// isolated registry while other tests record in parallel.
+    pub fn attach_obs(&mut self, reg: &Registry) {
+        self.obs = SchedObs::new(reg);
+    }
+
+    /// Attach a per-tick timeline sink: every subsequent tick appends one
+    /// JSON object (tick number, queue/arena occupancy, per-tick work
+    /// deltas) to it. Write errors are logged once per tick, never fatal.
+    pub fn set_timeline(&mut self, sink: Arc<TimelineSink>) {
+        self.timeline = Some(sink);
     }
 
     pub fn config(&self) -> TickConfig {
@@ -608,6 +681,7 @@ impl<'m> BatchScheduler<'m> {
         self.active.push(s);
         self.states.push(self.model.state());
         self.stats.max_concurrent = self.stats.max_concurrent.max(self.active.len());
+        self.obs.admitted.inc();
         AdmitOutcome::Admitted { id, restored }
     }
 
@@ -649,8 +723,14 @@ impl<'m> BatchScheduler<'m> {
             FinishReason::Rejected => StreamEvent::Rejected { id: s.id },
         });
         match reason {
-            FinishReason::Cancelled => self.stats.cancelled += 1,
-            FinishReason::Rejected => self.stats.rejected += 1,
+            FinishReason::Cancelled => {
+                self.stats.cancelled += 1;
+                self.obs.cancelled.inc();
+            }
+            FinishReason::Rejected => {
+                self.stats.rejected += 1;
+                self.obs.rejected.inc();
+            }
             FinishReason::MaxNew => {}
         }
         let mut tokens = s.tokens;
@@ -727,8 +807,10 @@ impl<'m> BatchScheduler<'m> {
             for (&(i, take), (logits, done)) in sel.iter().zip(results) {
                 if self.active[i].restored {
                     self.stats.restored_prefill_tokens += take;
+                    self.obs.restored_prefill_tokens.add(take as u64);
                 } else {
                     self.stats.prefill_tokens += take;
+                    self.obs.prefill_tokens.add(take as u64);
                 }
                 let total = self.active[i].tokens.len();
                 let s = &mut self.active[i];
@@ -811,6 +893,7 @@ impl<'m> BatchScheduler<'m> {
         self.stats.decode_secs += t0.elapsed().as_secs_f64();
         self.stats.decode_steps += bsz;
         self.stats.decode_ticks += 1;
+        self.obs.decode_steps.add(bsz as u64);
     }
 
     /// Retire streams that generated their full `max_new`, keeping the
@@ -855,6 +938,7 @@ impl<'m> BatchScheduler<'m> {
         let mut s = self.active.remove(vi);
         self.states.remove(vi);
         self.stats.preemptions += 1;
+        self.obs.preemptions.inc();
         self.admit_blocked = true;
         events.push(StreamEvent::Preempted { id: s.id });
         s.restored = true;
@@ -872,6 +956,16 @@ impl<'m> BatchScheduler<'m> {
     /// least one chunk per tick even when the decode batch consumes the
     /// whole budget.
     pub fn tick(&mut self) -> Vec<StreamEvent> {
+        // Phase timing (admission / prefill / decode / apply): a cursor of
+        // `Instant`s that only exists while recording, so the disabled
+        // path costs one flag load and no clock reads. Observation-only —
+        // nothing below branches on it.
+        let rec = crate::obs::recording();
+        let t_tick = if rec { Some(Instant::now()) } else { None };
+        let mut cursor = t_tick;
+        let mut apply_ns: u64 = 0;
+        let steps_before = self.stats.decode_steps;
+        let prefill_before = self.stats.prefill_tokens + self.stats.restored_prefill_tokens;
         self.tick_no += 1;
         let mut events = Vec::new();
         self.sweep_cancelled(&mut events);
@@ -897,6 +991,11 @@ impl<'m> BatchScheduler<'m> {
                 _ => break,
             }
         }
+        if let Some(t0) = cursor {
+            let now = Instant::now();
+            self.obs.admit_ns.record(now.duration_since(t0).as_nanos() as u64);
+            cursor = Some(now);
+        }
         // Budget split: the decode batch reserves one token per stream
         // already in the decode phase; prefill gets the remainder — but a
         // mid-prefill stream always gets at least one chunk per tick,
@@ -911,11 +1010,66 @@ impl<'m> BatchScheduler<'m> {
             prefill_budget = 1;
         }
         self.prefill_phase(prefill_budget, &mut events);
+        if let Some(t0) = cursor {
+            let now = Instant::now();
+            self.obs.prefill_ns.record(now.duration_since(t0).as_nanos() as u64);
+            cursor = Some(now);
+        }
         self.retire_finished(&mut events);
+        if let Some(t0) = cursor {
+            let now = Instant::now();
+            apply_ns += now.duration_since(t0).as_nanos() as u64;
+            cursor = Some(now);
+        }
         self.decode_phase(&mut events);
+        if let Some(t0) = cursor {
+            let now = Instant::now();
+            self.obs.decode_ns.record(now.duration_since(t0).as_nanos() as u64);
+            cursor = Some(now);
+        }
         self.retire_finished(&mut events);
         while self.state_bytes() > self.budget_bytes && self.active.len() > 1 {
             self.preempt_victim(&mut events);
+        }
+        // The apply segment is both retire passes plus the eviction loop.
+        if let Some(t0) = cursor {
+            apply_ns += t0.elapsed().as_nanos() as u64;
+            self.obs.apply_ns.record(apply_ns);
+        }
+        if let Some(t0) = t_tick {
+            self.obs.tick_ns.record(t0.elapsed().as_nanos() as u64);
+        }
+        self.obs.ticks.inc();
+        if rec {
+            self.obs.queue_depth.set(self.queue.len() as u64);
+            self.obs.active_streams.set(self.active.len() as u64);
+            self.obs.arena_bytes.set(self.state_bytes() as u64);
+            self.obs.committed_bytes.set(self.committed_bytes() as u64);
+        }
+        if let Some(tl) = &self.timeline {
+            let row = Json::obj(vec![
+                ("tick", Json::num(self.tick_no as f64)),
+                ("policy", Json::str(self.policy.name())),
+                ("queued", Json::num(self.queue.len() as f64)),
+                ("active", Json::num(self.active.len() as f64)),
+                ("arena_bytes", Json::num(self.state_bytes() as f64)),
+                ("committed_bytes", Json::num(self.committed_bytes() as f64)),
+                (
+                    "decode_steps",
+                    Json::num((self.stats.decode_steps - steps_before) as f64),
+                ),
+                (
+                    "prefill_tokens",
+                    Json::num(
+                        (self.stats.prefill_tokens + self.stats.restored_prefill_tokens
+                            - prefill_before) as f64,
+                    ),
+                ),
+                ("events", Json::num(events.len() as f64)),
+            ]);
+            if let Err(e) = tl.write(&row) {
+                log::warn!("tick timeline write failed: {e}");
+            }
         }
         events
     }

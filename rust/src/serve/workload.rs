@@ -28,6 +28,7 @@
 //! bench live under the CI ratio gate without flaking.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use super::model::HybridLm;
 use super::policy::PolicyKind;
@@ -507,6 +508,21 @@ pub fn replay(
     policy: PolicyKind,
     cfg: &ReplayCfg,
 ) -> ReplayReport {
+    replay_with_timeline(model, trace, sampler, policy, cfg, None)
+}
+
+/// [`replay`] with an optional per-tick timeline sink attached to the
+/// internal scheduler (`sh2 replay --metrics-out`). The sink is
+/// observation-only: the report — including the event hash — is
+/// byte-identical with or without it.
+pub fn replay_with_timeline(
+    model: &HybridLm,
+    trace: &Trace,
+    sampler: Sampler,
+    policy: PolicyKind,
+    cfg: &ReplayCfg,
+    timeline: Option<Arc<crate::obs::TimelineSink>>,
+) -> ReplayReport {
     let mut sched = BatchScheduler::with_policy(
         model,
         sampler,
@@ -516,6 +532,9 @@ pub fn replay(
         cfg.tick,
         policy.build(),
     );
+    if let Some(tl) = timeline {
+        sched.set_timeline(tl);
+    }
     let mut requests: Vec<&TraceRequest> = trace.requests.iter().collect();
     requests.sort_by_key(|r| (r.at, r.id));
     let mut cancels: Vec<&TraceCancel> = trace.cancels.iter().collect();

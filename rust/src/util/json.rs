@@ -6,6 +6,9 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -106,6 +109,29 @@ impl Json {
 
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
+    }
+}
+
+/// Buffered JSONL (one compact JSON object per line) file writer — the
+/// single implementation shared by training metrics
+/// (`coordinator::metrics::MetricsLog`) and the obs timeline sink.
+pub struct JsonlWriter {
+    w: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    /// Create (truncate) `path` for line-record appends.
+    pub fn create<P: AsRef<Path>>(path: P) -> std::io::Result<JsonlWriter> {
+        Ok(JsonlWriter { w: BufWriter::new(File::create(path)?) })
+    }
+
+    /// Append one record as a single line.
+    pub fn write(&mut self, record: &Json) -> std::io::Result<()> {
+        writeln!(self.w, "{record}")
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
     }
 }
 

@@ -31,12 +31,17 @@ impl Log for StderrLogger {
     fn flush(&self) {}
 }
 
-/// Install the logger once; level from `SH2_LOG` (error|warn|info|debug|trace).
+/// Install the logger once; level from `SH2_LOG`
+/// (off|error|warn|info|debug|trace). `off` silences everything —
+/// including planner-calibration and scheduler debug chatter — without
+/// recompiling; an unset or unrecognized value keeps the `info` default.
 pub fn init() {
     INIT.call_once(|| {
         let level = match std::env::var("SH2_LOG").as_deref() {
+            Ok("off") | Ok("none") => LevelFilter::Off,
             Ok("error") => LevelFilter::Error,
             Ok("warn") => LevelFilter::Warn,
+            Ok("info") => LevelFilter::Info,
             Ok("debug") => LevelFilter::Debug,
             Ok("trace") => LevelFilter::Trace,
             _ => LevelFilter::Info,

@@ -1,0 +1,140 @@
+//! Observability contract (DESIGN.md §17): instruments are exact under
+//! real worker-pool concurrency, histogram buckets cover all of u64, the
+//! `sh2-metrics-v1` snapshot round-trips through the JSON parser, and the
+//! scheduler's metric mirrors reconcile with its `ServeStats` ground
+//! truth. Tests only ever *enable* the global recording flag (the binary
+//! runs tests in parallel) and isolate exactness checks behind private
+//! registries.
+
+use sh2::exec::ExecCtx;
+use sh2::obs::{self, Registry, HIST_BUCKETS};
+use sh2::serve::{
+    BatchScheduler, FinishReason, HybridLm, PolicyKind, Sampler, ServeRequest, TickConfig,
+};
+use sh2::util::json::Json;
+use sh2::util::rng::Rng;
+
+#[test]
+fn counters_are_exact_under_pool_concurrency() {
+    obs::set_recording(true);
+    let reg = Registry::new();
+    for threads in [1usize, 2, 4] {
+        let ctx = ExecCtx::new(threads);
+        let c = reg.counter(&format!("test.pool.t{threads}"));
+        let h = reg.histogram(&format!("test.pool_hist.t{threads}"));
+        // 9 tasks (not a multiple of any pool width) x 1000 increments:
+        // relaxed atomics must still produce an exact total.
+        ctx.run(9, &|i| {
+            for _ in 0..1000 {
+                c.inc();
+            }
+            h.record(i as u64);
+        });
+        assert_eq!(c.get(), 9000, "t{threads}: lost counter increments");
+        assert_eq!(h.count(), 9, "t{threads}: lost histogram samples");
+        // Samples 0..=8 all land at or below bucket_index(8) = 4.
+        assert!(h.max() == 8 && h.quantile(1.0) <= 15);
+    }
+}
+
+#[test]
+fn histogram_copes_with_extreme_samples() {
+    obs::set_recording(true);
+    let reg = Registry::new();
+    let h = reg.histogram("test.extremes");
+    h.record(0);
+    h.record(1);
+    h.record(u64::MAX);
+    assert_eq!(h.count(), 3);
+    assert_eq!(h.max(), u64::MAX);
+    // (sum deliberately unchecked: u64::MAX wraps the running total.)
+    // The 1st percentile of {0, 1, MAX} sits in the zero bucket.
+    assert_eq!(h.quantile(0.01), 0);
+    // The top sample lives in the last bucket, whose upper bound
+    // saturates: the reported quantile stays in [2^63, u64::MAX].
+    assert!(h.quantile(1.0) >= 1u64 << 63);
+    // Every bucket index derived from a sample must be addressable.
+    for v in [0u64, 1, 2, 3, 4, (1 << 63) - 1, 1 << 63, u64::MAX] {
+        assert!(obs::bucket_index(v) < HIST_BUCKETS);
+    }
+}
+
+#[test]
+fn snapshot_round_trips_through_the_parser() {
+    obs::set_recording(true);
+    let reg = Registry::new();
+    reg.counter("test.rt.counter").add(3);
+    reg.gauge("test.rt.gauge").set(7);
+    let h = reg.histogram("test.rt.hist");
+    for v in [100u64, 200, 300, 400, 500] {
+        h.record(v);
+    }
+    let line = reg.snapshot().to_string();
+    let j = Json::parse(&line).expect("snapshot line must parse");
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("sh2-metrics-v1"));
+    let counters = j.get("counters").expect("counters map");
+    assert_eq!(counters.get("test.rt.counter").and_then(Json::as_f64), Some(3.0));
+    let gauges = j.get("gauges").expect("gauges map");
+    assert_eq!(gauges.get("test.rt.gauge").and_then(Json::as_f64), Some(7.0));
+    let hist = j.get("histograms").and_then(|m| m.get("test.rt.hist")).expect("hist");
+    assert_eq!(hist.get("count").and_then(Json::as_f64), Some(5.0));
+    assert_eq!(hist.get("max").and_then(Json::as_f64), Some(500.0));
+    let p50 = hist.get("p50").and_then(Json::as_f64).unwrap();
+    assert!((100.0..=500.0).contains(&p50), "p50 {p50} outside sample range");
+}
+
+#[test]
+fn scheduler_counters_reconcile_with_serve_stats() {
+    obs::set_recording(true);
+    let reg = Registry::new();
+    // MHA + scan layout under a tight byte budget: mid-flight eviction is
+    // forced, so the preemption/restore counters see real traffic; one
+    // extra stream is cancelled before its first tick.
+    let mut rng = Rng::new(2);
+    let m = HybridLm::new(&mut rng, 16, 2, &["MHA", "LA"]).unwrap();
+    let mut s = BatchScheduler::with_policy(
+        &m,
+        Sampler::Greedy,
+        4,
+        4000,
+        3,
+        TickConfig::default(),
+        PolicyKind::Lru.build(),
+    );
+    s.attach_obs(&reg);
+    for p in [b"ACGTAC".to_vec(), b"CCGGTT".to_vec(), b"TACGTA".to_vec()] {
+        s.submit(ServeRequest::new(p, 8));
+    }
+    let h = s.submit(ServeRequest::new(b"GGCCGG".to_vec(), 8));
+    h.cancel();
+    let mut n_ticks = 0u64;
+    while !s.is_idle() {
+        s.tick();
+        n_ticks += 1;
+    }
+    let done = s.take_finished();
+    assert_eq!(done.len(), 4);
+    assert!(done.iter().any(|f| f.reason == FinishReason::Cancelled));
+    let stats = &s.stats;
+    assert!(stats.preemptions > 0, "budget never forced eviction");
+
+    let c = |name: &str| reg.counter(name).get();
+    assert_eq!(c("serve.ticks"), n_ticks);
+    assert_eq!(c("serve.decode_steps"), stats.decode_steps as u64);
+    assert_eq!(c("serve.prefill_tokens"), stats.prefill_tokens as u64);
+    assert_eq!(
+        c("serve.restored_prefill_tokens"),
+        stats.restored_prefill_tokens as u64
+    );
+    assert_eq!(c("serve.preemptions"), stats.preemptions as u64);
+    assert_eq!(c("serve.cancelled"), stats.cancelled as u64);
+    assert_eq!(c("serve.rejected"), stats.rejected as u64);
+    // Admissions = 3 first admissions + one restore per preemption (the
+    // cancelled stream is swept from the queue, never admitted).
+    assert_eq!(c("serve.admitted"), 3 + stats.preemptions as u64);
+    // Every tick records every phase histogram exactly once.
+    for phase in ["tick", "phase.admit", "phase.prefill", "phase.decode", "phase.apply"] {
+        let hist = reg.histogram(&format!("serve.{phase}_ns"));
+        assert_eq!(hist.count(), n_ticks, "serve.{phase}_ns count");
+    }
+}

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Validate the sh2-metrics-v1 output of `sh2 serve/replay --metrics-out`.
+
+Two inputs: the captured stdout of the run (the final line printed under
+--metrics-out is the snapshot) and the timeline JSONL file the flag wrote.
+Checks:
+
+  1. stdout contains exactly one parseable `sh2-metrics-v1` line;
+  2. the snapshot covers the three instrumented subsystems -- scheduler
+     tick phases, exec-pool utilization, conv-planner cache -- with
+     non-trivial scheduler traffic (ticks > 0, tick_ns count == ticks);
+  3. every timeline line parses, and at least one is a per-tick row.
+
+Usage:
+    python3 scripts/check_metrics.py STDOUT_FILE TIMELINE_JSONL
+"""
+
+import json
+import sys
+
+REQUIRED_COUNTERS = [
+    "serve.ticks",
+    "serve.decode_steps",
+    "serve.admitted",
+    "serve.prefill_tokens",
+    "exec.regions",
+    "exec.tasks",
+    "exec.nested_serial",
+    "planner.cache_hits",
+    "planner.cache_misses",
+]
+REQUIRED_GAUGES = [
+    "serve.queue_depth",
+    "serve.active_streams",
+    "serve.arena_bytes",
+    "serve.committed_bytes",
+]
+REQUIRED_HISTOGRAMS = [
+    "serve.tick_ns",
+    "serve.phase.admit_ns",
+    "serve.phase.prefill_ns",
+    "serve.phase.decode_ns",
+    "serve.phase.apply_ns",
+    "exec.queue_wait_ns",
+]
+
+
+def fail(msg):
+    print(f"check_metrics: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    if len(sys.argv) != 3:
+        fail(f"usage: {sys.argv[0]} STDOUT_FILE TIMELINE_JSONL")
+    stdout_path, timeline_path = sys.argv[1], sys.argv[2]
+
+    snapshots = []
+    with open(stdout_path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line.startswith("{"):
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if obj.get("schema") == "sh2-metrics-v1":
+                snapshots.append(obj)
+    if len(snapshots) != 1:
+        fail(f"expected exactly one sh2-metrics-v1 line in {stdout_path}, "
+             f"found {len(snapshots)}")
+    snap = snapshots[0]
+
+    counters = snap.get("counters", {})
+    gauges = snap.get("gauges", {})
+    histograms = snap.get("histograms", {})
+    for name in REQUIRED_COUNTERS:
+        if name not in counters:
+            fail(f"snapshot missing counter '{name}'")
+    for name in REQUIRED_GAUGES:
+        if name not in gauges:
+            fail(f"snapshot missing gauge '{name}'")
+    for name in REQUIRED_HISTOGRAMS:
+        if name not in histograms:
+            fail(f"snapshot missing histogram '{name}'")
+        h = histograms[name]
+        for key in ("count", "sum", "p50", "p90", "p99", "max"):
+            if key not in h:
+                fail(f"histogram '{name}' missing '{key}'")
+
+    ticks = counters["serve.ticks"]
+    if ticks <= 0:
+        fail("serve.ticks is zero: the scheduler never ran")
+    if histograms["serve.tick_ns"]["count"] != ticks:
+        fail(f"serve.tick_ns count {histograms['serve.tick_ns']['count']} "
+             f"!= serve.ticks {ticks}")
+    if counters["serve.decode_steps"] <= 0:
+        fail("serve.decode_steps is zero: no tokens were decoded")
+    if not any(k.startswith("planner.plan.") for k in counters):
+        fail("no planner.plan.<algo>.t<threads> counter was recorded")
+
+    tick_rows = 0
+    with open(timeline_path, encoding="utf-8") as f:
+        for n, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(f"{timeline_path}:{n}: unparseable timeline line: {e}")
+            if "tick" in obj:
+                tick_rows += 1
+    if tick_rows == 0:
+        fail(f"{timeline_path} holds no per-tick rows")
+
+    print(f"check_metrics: ok ({len(counters)} counters, {len(gauges)} gauges, "
+          f"{len(histograms)} histograms, {tick_rows} timeline ticks)")
+
+
+if __name__ == "__main__":
+    main()
