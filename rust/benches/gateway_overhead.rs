@@ -1,0 +1,153 @@
+//! Gateway overhead (DESIGN.md §18): time-to-first-token through the
+//! HTTP/SSE front door vs the same scheduler driven in-process. Reported:
+//!
+//! * `gateway/inprocess/ttft` — submit → first `Token` event with the
+//!   caller owning the tick loop (no network, the floor);
+//! * `gateway/loopback/ttft` — TCP connect + `POST /v1/generate` → first
+//!   `event: token` SSE frame over 127.0.0.1, against a live gateway.
+//!
+//! The claim shape: the loopback path adds connection + parse + channel
+//! hops but no extra model work, so the delta should be small and flat —
+//! it is the price of the network front door, not a second scheduler.
+//!
+//! Quick mode (`BENCH_QUICK=1`) is the CI smoke configuration;
+//! `SH2_BENCH_JSON=path` writes `sh2-bench-v1` records for the regression
+//! gate (seeded baseline: `bench/baseline/BENCH_gateway.json`).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use sh2::serve::{
+    BatchScheduler, Gateway, GatewayCfg, HybridLm, Sampler, ServeRequest, StreamEvent,
+    TickConfig,
+};
+use sh2::util::bench::{fmt_secs, quick_requested, BenchLog, BenchResult, Table};
+use sh2::util::rng::Rng;
+use sh2::util::stats::Summary;
+
+fn main() {
+    let quick = quick_requested();
+    let mut rng = Rng::new(0);
+    let d = 64; // paper: 4096 (H100); scaled for the CPU testbed
+    let model = HybridLm::new(&mut rng, d, 4, &["SE", "MHA"]).expect("layout");
+    let prompt: Vec<u8> = {
+        let mut gen = Rng::new(42);
+        (0..32).map(|_| b"ACGT"[gen.below(4)]).collect()
+    };
+    let max_new = 8;
+    let reps = if quick { 5 } else { 20 };
+
+    // Floor: the caller drives the tick loop directly.
+    let mut inprocess: Vec<f64> = Vec::new();
+    for rep in 0..reps {
+        let mut sched = BatchScheduler::with_config(
+            &model,
+            Sampler::Greedy,
+            4,
+            1 << 30,
+            rep as u64,
+            TickConfig::default(),
+        );
+        let t0 = Instant::now();
+        sched.submit(ServeRequest::new(prompt.clone(), max_new));
+        'stream: while !sched.is_idle() {
+            for event in sched.tick() {
+                if matches!(event, StreamEvent::Token { .. }) {
+                    inprocess.push(t0.elapsed().as_secs_f64());
+                    break 'stream;
+                }
+            }
+        }
+    }
+
+    // Network path: one live gateway, sequential loopback requests, each
+    // timed connect → first token frame.
+    let gateway = Gateway::bind(GatewayCfg {
+        addr: "127.0.0.1:0".to_string(),
+        conn_workers: 2,
+        ..GatewayCfg::default()
+    })
+    .expect("bind loopback");
+    let addr = gateway.local_addr().expect("local addr");
+    let stop = gateway.shutdown_handle();
+    let mut loopback: Vec<f64> = Vec::new();
+    let model_ref = &model;
+    std::thread::scope(|s| {
+        let engine = s.spawn(move || {
+            let mut sched = BatchScheduler::with_config(
+                model_ref,
+                Sampler::Greedy,
+                4,
+                1 << 30,
+                0,
+                TickConfig::default(),
+            );
+            gateway.serve(&mut sched, model_ref).expect("serve")
+        });
+        let prompt_str: String = prompt.iter().map(|&b| b as char).collect();
+        let body = format!(r#"{{"prompt":"{prompt_str}","max_new":{max_new}}}"#);
+        let request = format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let mut conn = TcpStream::connect(addr).expect("connect");
+            conn.write_all(request.as_bytes()).expect("send");
+            let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+            let mut line = String::new();
+            loop {
+                line.clear();
+                assert!(reader.read_line(&mut line).expect("read") > 0, "eof before token");
+                if line.starts_with("event: token") {
+                    loopback.push(t0.elapsed().as_secs_f64());
+                    break;
+                }
+            }
+            // Drain to EOF so the stream finishes before the next rep.
+            let mut rest = String::new();
+            reader.read_to_string(&mut rest).ok();
+        }
+        stop.store(true, Ordering::SeqCst);
+        engine.join().expect("engine thread")
+    });
+
+    let inp = Summary::of(&inprocess);
+    let lb = Summary::of(&loopback);
+    let mut t = Table::new(
+        &format!(
+            "gateway overhead, TTFT (d={d}, {}-token prompt, {max_new} new, {reps} reps)",
+            prompt.len()
+        ),
+        &["path", "ttft p50", "ttft p90"],
+    );
+    t.row(vec!["in-process".to_string(), fmt_secs(inp.p50), fmt_secs(inp.p90)]);
+    t.row(vec!["loopback".to_string(), fmt_secs(lb.p50), fmt_secs(lb.p90)]);
+    t.print();
+    println!(
+        "claim shape: loopback p50 - in-process p50 = {} of pure front-door \
+         overhead (connect + HTTP parse + channel hops; no extra model work).",
+        fmt_secs((lb.p50 - inp.p50).max(0.0))
+    );
+
+    let mut log = BenchLog::new();
+    log.push(&BenchResult {
+        name: "gateway/inprocess/ttft".to_string(),
+        secs: inp,
+        iters: reps,
+        batch: None,
+        threads: None,
+    });
+    log.push(&BenchResult {
+        name: "gateway/loopback/ttft".to_string(),
+        secs: lb,
+        iters: reps,
+        batch: None,
+        threads: None,
+    });
+    if let Some(path) = log.write_env() {
+        println!("bench records ({}) -> {path}", log.len());
+    }
+}

@@ -8,7 +8,8 @@
 //!   eval        validation perplexity of a checkpoint (pjrt)
 //!   recall      needle-in-a-haystack recall evaluation (Fig B.2, pjrt)
 //!   generate    stream tokens from a multi-hybrid via the decode-state API
-//!   serve       multi-stream batch-scheduled generation demo
+//!   serve       multi-stream batch-scheduled generation demo, or the
+//!               HTTP/SSE network gateway with --listen ADDR
 //!   replay      generate or load an sh2-trace-v1 workload and replay it
 //!               through the scheduler under one or all policies
 //!   tune        calibrate the conv autotuner and write the plan cache
@@ -121,6 +122,10 @@ const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|re
           step_batch call and spends the remaining token budget on prefill
           chunks; prints an sh2-serve-v1 JSON summary line with tokens/s,
           mean batch occupancy, TTFT p50/p90, prefill/restore token split)
+          --listen ADDR (HTTP/SSE gateway mode: POST /v1/generate streams
+          sh2-event-v1 frames, GET /health, GET /metrics[?format=prometheus];
+          port 0 picks an ephemeral one; SIGINT drains and exits)
+          --max-queue N (queue depth before 429) --conn-workers N
   replay: --trace PATH (sh2-trace-v1) or generate one with
           --gen poisson|bursty --requests N --seed S --mean-gap F --burst B
           --alpha 1|2 --prompt-lo L --prompt-hi H --max-new-lo L --max-new-hi H
@@ -223,6 +228,13 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use sh2::util::json::Json;
     use sh2::util::stats::Summary;
+    use std::io::Write as _;
+
+    // --listen switches serve from the self-generated demo workload to
+    // the network gateway: requests arrive over HTTP, not from --streams.
+    if args.get("listen").is_some() {
+        return cmd_serve_gateway(args);
+    }
 
     load_plan_cache(args);
     let seed = args.get_usize("seed", 0) as u64;
@@ -279,32 +291,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let events = sched.tick();
         n_ticks += 1;
         if show_events {
+            let mut out = std::io::stdout();
             for e in &events {
-                match e {
-                    StreamEvent::Admitted { id, restored } => println!(
+                let line = match e {
+                    StreamEvent::Admitted { id, restored } => format!(
                         "[tick {n_ticks}] #{id} admitted{}",
                         if *restored { " (restored)" } else { "" }
                     ),
                     StreamEvent::PrefillProgress { id, done, total } => {
-                        println!("[tick {n_ticks}] #{id} prefill {done}/{total}")
+                        format!("[tick {n_ticks}] #{id} prefill {done}/{total}")
                     }
-                    StreamEvent::Token { id, token, index } => println!(
+                    StreamEvent::Token { id, token, index } => format!(
                         "[tick {n_ticks}] #{id} token[{index}] = {:?}",
                         *token as char
                     ),
-                    StreamEvent::Finished { id, .. } => {
-                        println!("[tick {n_ticks}] #{id} finished")
+                    // Terminal lines carry the stable FinishReason code —
+                    // the same vocabulary as replay JSON and the gateway's
+                    // sh2-event-v1 wire events.
+                    StreamEvent::Finished { id, reason } => {
+                        format!("[tick {n_ticks}] #{id} finished ({})", reason.as_code())
                     }
                     StreamEvent::Preempted { id } => {
-                        println!("[tick {n_ticks}] #{id} preempted")
+                        format!("[tick {n_ticks}] #{id} preempted")
                     }
                     StreamEvent::Cancelled { id } => {
-                        println!("[tick {n_ticks}] #{id} cancelled")
+                        format!("[tick {n_ticks}] #{id} cancelled")
                     }
                     StreamEvent::Rejected { id } => {
-                        println!("[tick {n_ticks}] #{id} rejected")
+                        format!("[tick {n_ticks}] #{id} rejected")
                     }
-                }
+                };
+                // Flush per line: piped consumers must see tokens as they
+                // stream, not when the block buffer happens to fill.
+                writeln!(out, "{line}").ok();
+                out.flush().ok();
             }
         }
     }
@@ -394,6 +414,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
         tl.flush()?;
         println!("{snap}");
     }
+    Ok(())
+}
+
+/// `sh2 serve --listen ADDR`: the HTTP/SSE gateway (DESIGN.md §18).
+/// Blocks until SIGINT, then drains active streams and prints the
+/// `sh2-gateway-v1` summary plus the final `sh2-metrics-v1` snapshot.
+fn cmd_serve_gateway(args: &Args) -> Result<()> {
+    use sh2::serve::{Gateway, GatewayCfg};
+    use std::io::Write as _;
+
+    load_plan_cache(args);
+    let seed = args.get_usize("seed", 0) as u64;
+    let mut rng = Rng::new(seed);
+    let model = build_lm(args, &mut rng)?;
+    let max_active = args.get_usize("max-active", 4);
+    let budget = args.get_usize("budget-kb", 4096) * 1024;
+    let unlimited = |v: usize| if v == 0 { usize::MAX } else { v };
+    let cfg = TickConfig {
+        prefill_chunk: unlimited(args.get_usize("prefill-chunk", 0)),
+        tick_budget: unlimited(args.get_usize("tick-budget", 0)),
+    };
+    let sampler = sampler_from(args);
+    let policy = parse_policy(args.get_or("policy", "lru"))?;
+
+    let timeline = match args.get("metrics-out") {
+        Some(path) => {
+            sh2::obs::set_recording(true);
+            Some(Arc::new(sh2::obs::TimelineSink::create(path)?))
+        }
+        None => None,
+    };
+    let mut sched = BatchScheduler::with_policy(
+        &model,
+        sampler,
+        max_active,
+        budget,
+        seed,
+        cfg,
+        policy.build(),
+    );
+    if let Some(tl) = &timeline {
+        sched.set_timeline(tl.clone());
+    }
+
+    let gcfg = GatewayCfg {
+        addr: args.get_or("listen", "127.0.0.1:8080").to_string(),
+        conn_workers: args.get_usize("conn-workers", 4),
+        max_queue: args.get_usize("max-queue", 64),
+        ..GatewayCfg::default()
+    };
+    let gateway = Gateway::bind(gcfg)?;
+    gateway.install_sigint_handler();
+    let addr = gateway.local_addr()?;
+    // The exact line scripts/check_gateway.py parses to find the bound
+    // port (--listen host:0 picks an ephemeral one); flushed so a piped
+    // supervisor sees it before the first request lands.
+    println!(
+        "sh2 gateway listening on http://{addr} (policy {}, layout {}, \
+         max_active {max_active}, budget {} KB)",
+        policy.name(),
+        model.layout_string(),
+        budget / 1024
+    );
+    std::io::stdout().flush().ok();
+
+    let summary = gateway.serve(&mut sched, &model)?;
+    println!("{}", summary.to_json());
+    // Shutdown flushes metrics: the snapshot is the last line of the
+    // drain sequence whether or not a timeline file was requested.
+    let snap = sh2::obs::global().snapshot();
+    if let Some(tl) = &timeline {
+        tl.write(&snap)?;
+        tl.flush()?;
+    }
+    println!("{snap}");
     Ok(())
 }
 

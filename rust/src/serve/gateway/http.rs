@@ -1,0 +1,312 @@
+//! Minimal HTTP/1.1 support for the gateway (DESIGN.md §18): request
+//! parsing and response writing, std-only, one request per connection.
+//!
+//! Scope is deliberately narrow — exactly what the three gateway endpoints
+//! need: request line + headers + `Content-Length` bodies, `Expect:
+//! 100-continue`, and `Connection: close` responses (the SSE stream is
+//! close-delimited, so nothing here speaks keep-alive or chunked
+//! transfer). Parsing is generic over `BufRead`/`Write` so the unit tests
+//! drive it with in-memory cursors instead of sockets.
+
+use std::io::{BufRead, Read, Write};
+
+use crate::util::json::Json;
+
+/// One parsed request. Header names are lowercased at parse time; the
+/// query string is split off the target but left undecoded (the gateway
+/// only matches exact `key=value` pairs).
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path component of the target, without the query string.
+    pub path: String,
+    /// Raw query string (empty when the target had none).
+    pub query: String,
+    /// `(lowercased-name, value)` pairs in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value for `name` (case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Value of the first exact `key=value` pair in the query string.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            (k == key).then_some(v)
+        })
+    }
+}
+
+/// Why a request could not be parsed into a [`Request`].
+#[derive(Debug)]
+pub enum HttpError {
+    /// Socket failed or the client closed before a full request arrived;
+    /// there is nobody to send an error response to.
+    Io(std::io::Error),
+    /// Malformed request — respond 400.
+    Bad(&'static str),
+    /// Declared body exceeds the gateway cap — respond 413.
+    TooLarge,
+}
+
+/// Upper bound on header count, against header-spray abuse.
+const MAX_HEADERS: usize = 100;
+
+/// Parse one request from `reader`. `cont` is the write half of the same
+/// connection, used only to acknowledge `Expect: 100-continue` before the
+/// body is read (curl sends it for POSTs above ~1 KiB and stalls a second
+/// waiting otherwise).
+pub fn read_request<R: BufRead, W: Write>(
+    reader: &mut R,
+    cont: &mut W,
+    max_body: usize,
+) -> Result<Request, HttpError> {
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(HttpError::Io)?;
+    if line.is_empty() {
+        return Err(HttpError::Io(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "closed before request line",
+        )));
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or(HttpError::Bad("missing method"))?
+        .to_string();
+    let target = parts.next().ok_or(HttpError::Bad("missing target"))?;
+    let version = parts.next().ok_or(HttpError::Bad("missing version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Bad("unsupported HTTP version"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).map_err(HttpError::Io)?;
+        let h = h.trim_end_matches(['\r', '\n']);
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+        if headers.len() > MAX_HEADERS {
+            return Err(HttpError::Bad("too many headers"));
+        }
+    }
+
+    let req = Request { method, path, query, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::Bad("chunked bodies unsupported"));
+    }
+    let len = match req.header("content-length") {
+        Some(v) => v
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| HttpError::Bad("bad content-length"))?,
+        None => 0,
+    };
+    if len > max_body {
+        return Err(HttpError::TooLarge);
+    }
+    if req
+        .header("expect")
+        .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+    {
+        cont.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+            .map_err(HttpError::Io)?;
+        cont.flush().map_err(HttpError::Io)?;
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).map_err(HttpError::Io)?;
+    Ok(Request { body, ..req })
+}
+
+/// Reason phrase for the handful of statuses the gateway emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete `Connection: close` response with `Content-Length`.
+/// `extra` carries response-specific headers (e.g. `Retry-After: 1`) as
+/// preformatted `Name: value` lines without the CRLF.
+pub fn respond<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra: &[String],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        reason(status),
+        body.len()
+    );
+    for h in extra {
+        head.push_str(h);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// The JSON error body every non-2xx response carries:
+/// `{"error": code, "status": n}` — `code` is a stable machine-readable
+/// string (for backpressure it is the [`AdmitOutcome::as_code`] verdict).
+///
+/// [`AdmitOutcome::as_code`]: crate::serve::AdmitOutcome::as_code
+pub fn respond_error<W: Write>(
+    w: &mut W,
+    status: u16,
+    code: &str,
+    extra: &[String],
+) -> std::io::Result<()> {
+    let body = Json::obj(vec![
+        ("error", Json::str(code)),
+        ("status", Json::num(status as f64)),
+    ])
+    .to_string();
+    respond(w, status, "application/json", extra, body.as_bytes())
+}
+
+/// Open an SSE response: headers only — the body is the event stream,
+/// delimited by connection close (no `Content-Length`).
+pub fn sse_headers<W: Write>(w: &mut W, stream_id: usize) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\nX-SH2-Stream-Id: {stream_id}\r\n\r\n",
+    );
+    w.write_all(head.as_bytes())?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Request, HttpError> {
+        let mut r = Cursor::new(raw.as_bytes().to_vec());
+        let mut cont = Vec::new();
+        read_request(&mut r, &mut cont, 1 << 20)
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let req = parse("GET /metrics?format=prometheus HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert_eq!(req.query_param("format"), Some("prometheus"));
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body() {
+        let body = r#"{"prompt":"ACGT","max_new":4}"#;
+        let raw = format!(
+            "POST /v1/generate HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let req = parse(&raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.body, body.as_bytes());
+    }
+
+    #[test]
+    fn acknowledges_expect_continue() {
+        let raw =
+            "POST /v1/generate HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\nok";
+        let mut r = Cursor::new(raw.as_bytes().to_vec());
+        let mut cont = Vec::new();
+        let req = read_request(&mut r, &mut cont, 1 << 20).unwrap();
+        assert_eq!(req.body, b"ok");
+        assert!(String::from_utf8_lossy(&cont).starts_with("HTTP/1.1 100 Continue"));
+    }
+
+    #[test]
+    fn rejects_oversized_body() {
+        let raw = "POST /v1/generate HTTP/1.1\r\nContent-Length: 100\r\n\r\n";
+        let mut r = Cursor::new(raw.as_bytes().to_vec());
+        let mut cont = Vec::new();
+        assert!(matches!(
+            read_request(&mut r, &mut cont, 10),
+            Err(HttpError::TooLarge)
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(matches!(parse("GARBAGE\r\n\r\n"), Err(HttpError::Bad(_))));
+        assert!(matches!(
+            parse("GET / SPDY/3\r\n\r\n"),
+            Err(HttpError::Bad(_))
+        ));
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(HttpError::Bad(_))
+        ));
+        assert!(matches!(parse(""), Err(HttpError::Io(_))));
+    }
+
+    #[test]
+    fn response_shape() {
+        let mut out = Vec::new();
+        respond(&mut out, 200, "application/json", &[], b"{}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn error_body_carries_code_and_retry_after() {
+        let mut out = Vec::new();
+        respond_error(&mut out, 429, "over_state_budget", &["Retry-After: 1".to_string()])
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(body).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("over_state_budget"));
+        assert_eq!(j.get("status").unwrap().as_usize(), Some(429));
+    }
+
+    #[test]
+    fn sse_headers_close_delimited() {
+        let mut out = Vec::new();
+        sse_headers(&mut out, 7).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Content-Type: text/event-stream\r\n"));
+        assert!(text.contains("X-SH2-Stream-Id: 7\r\n"));
+        assert!(!text.contains("Content-Length"));
+    }
+}

@@ -1,0 +1,652 @@
+//! HTTP/SSE network gateway: the front door over the continuous-batching
+//! scheduler (DESIGN.md §18).
+//!
+//! std-only by design — `TcpListener` plus hand-rolled HTTP/1.1, matching
+//! the exec pool's "std threads + channels, no new deps" philosophy. Three
+//! endpoints:
+//!
+//! * `POST /v1/generate` — JSON request (`{"prompt": str, "max_new": n,
+//!   "priority"?: n, "deadline_ticks"?: n}`) answered with an SSE stream
+//!   of `sh2-event-v1` frames mapped 1:1 from [`StreamEvent`] (see
+//!   [`wire`]). Client disconnect mid-stream propagates to
+//!   [`RequestHandle::cancel`], freeing the stream's arena slot at the
+//!   next tick. Admission pressure maps to HTTP, never a hang: 429 with
+//!   `Retry-After` for byte-budget/queue pressure (the body carries the
+//!   [`AdmitOutcome::as_code`] verdict), 503 while draining.
+//! * `GET /health` — liveness plus the draining flag.
+//! * `GET /metrics` — the obs [`Registry::snapshot`] as JSON, or
+//!   Prometheus text with `?format=prometheus` (see [`prom`]).
+//!
+//! Threading: the engine loop runs on the caller's thread and exclusively
+//! owns the [`BatchScheduler`] — ticks, admission gating, and event
+//! fan-out all happen there, so the scheduler needs no interior locking.
+//! An accept thread polls the nonblocking listener and feeds accepted
+//! sockets to a fixed pool of connection workers over a shared channel;
+//! workers parse requests and talk to the engine through a thread-safe
+//! submission queue (`mpsc`), receiving their stream's events over a
+//! per-request channel.
+//!
+//! Graceful shutdown (SIGINT or the programmatic [`Gateway::shutdown_handle`]):
+//! stop accepting, reject new submissions with 503, drain active streams
+//! to completion (bounded by [`GatewayCfg::drain_grace`], after which
+//! stragglers are cancelled), then flush metrics and return a
+//! [`GatewaySummary`].
+//!
+//! [`Registry::snapshot`]: crate::obs::Registry::snapshot
+
+pub mod http;
+pub mod prom;
+pub mod wire;
+
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::obs;
+use crate::serve::model::HybridLm;
+use crate::serve::scheduler::{
+    AdmitOutcome, BatchScheduler, RequestHandle, ServeRequest, StreamEvent,
+};
+use crate::util::json::Json;
+
+use http::{HttpError, Request};
+
+/// Gateway knobs. The defaults suit tests and the CLI; production callers
+/// mostly tune `max_queue` (the 429 pressure point) and `drain_grace`.
+#[derive(Clone, Debug)]
+pub struct GatewayCfg {
+    /// Listen address (`"127.0.0.1:0"` picks an ephemeral port —
+    /// [`Gateway::local_addr`] reports the bound one).
+    pub addr: String,
+    /// Connection-worker threads (each handles one request at a time).
+    pub conn_workers: usize,
+    /// Scheduler queue depth beyond which new requests get 429
+    /// `queue_full` instead of waiting.
+    pub max_queue: usize,
+    /// Request body cap (413 beyond it).
+    pub max_body_bytes: usize,
+    /// Prompt byte cap (413 beyond it).
+    pub max_prompt_bytes: usize,
+    /// Per-request `max_new` cap (400 beyond it).
+    pub max_new_cap: usize,
+    /// How long a drain waits for active streams before cancelling them.
+    pub drain_grace: Duration,
+}
+
+impl Default for GatewayCfg {
+    fn default() -> GatewayCfg {
+        GatewayCfg {
+            addr: "127.0.0.1:0".to_string(),
+            conn_workers: 4,
+            max_queue: 64,
+            max_body_bytes: 1 << 20,
+            max_prompt_bytes: 1 << 16,
+            max_new_cap: 1 << 20,
+            drain_grace: Duration::from_secs(5),
+        }
+    }
+}
+
+/// What one gateway run did, returned by [`Gateway::serve`] after the
+/// drain completes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatewaySummary {
+    /// Scheduler ticks the engine loop ran.
+    pub ticks: usize,
+    /// Streams that reached a terminal state (any [`FinishReason`]).
+    ///
+    /// [`FinishReason`]: crate::serve::FinishReason
+    pub finished: usize,
+    /// HTTP requests parsed (all endpoints).
+    pub requests: u64,
+    /// Streams cancelled because their client disconnected mid-stream.
+    pub disconnect_cancels: u64,
+}
+
+impl GatewaySummary {
+    /// One `sh2-gateway-v1` JSON line for harnesses and CI scrapers.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("sh2-gateway-v1")),
+            ("ticks", Json::num(self.ticks as f64)),
+            ("finished", Json::num(self.finished as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("disconnect_cancels", Json::num(self.disconnect_cancels as f64)),
+        ])
+    }
+}
+
+/// Engine-side record of an accepted stream: where its events go and how
+/// to cancel it when the receiver vanishes.
+struct OpenStream {
+    tx: Sender<StreamEvent>,
+    handle: RequestHandle,
+}
+
+/// The engine's answer to one submission.
+enum SubmitReply {
+    Accepted { handle: RequestHandle },
+    Rejected { status: u16, code: &'static str },
+}
+
+/// One `/v1/generate` request in flight from a connection worker to the
+/// engine loop.
+struct Submission {
+    req: ServeRequest,
+    events: Sender<StreamEvent>,
+    reply: Sender<SubmitReply>,
+}
+
+/// State shared between the engine loop and the connection workers.
+struct Shared {
+    cfg: GatewayCfg,
+    draining: AtomicBool,
+    requests: Arc<obs::Counter>,
+    sse_bytes: Arc<obs::Counter>,
+    disconnect_cancels: Arc<obs::Counter>,
+}
+
+impl Shared {
+    /// Per-status response counter, registered on demand (response paths
+    /// are nowhere near hot enough for the registry lock to matter).
+    fn count_response(&self, status: u16) {
+        obs::global().counter(&format!("gateway.responses.{status}")).inc();
+    }
+}
+
+/// SIGINT handling without a signal crate: libc `signal(2)` is declared
+/// directly (std already links libc on unix) and the handler does the one
+/// async-signal-safe thing — store into a process-global atomic that the
+/// accept and engine loops poll.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SIGINT: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigint(_signum: i32) {
+        SIGINT.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        /// libc `signal(2)`. The handler parameter is a typed fn pointer
+        /// (no int casts); the returned previous handler is opaque here.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    /// POSIX SIGINT number.
+    const SIGINT_NUM: i32 = 2;
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT_NUM, on_sigint);
+        }
+    }
+
+    pub fn triggered() -> bool {
+        SIGINT.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn triggered() -> bool {
+        false
+    }
+}
+
+/// A bound, not-yet-serving gateway. Splitting [`Gateway::bind`] from
+/// [`Gateway::serve`] lets callers learn the ephemeral port (and spawn
+/// clients) before the blocking serve loop starts.
+pub struct Gateway {
+    listener: TcpListener,
+    cfg: GatewayCfg,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Gateway {
+    pub fn bind(cfg: GatewayCfg) -> std::io::Result<Gateway> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        Ok(Gateway { listener, cfg, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Programmatic shutdown trigger: setting the flag starts the drain
+    /// sequence exactly like SIGINT. Tests flip this from another thread.
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Route Ctrl-C into the drain sequence (unix; no-op elsewhere).
+    pub fn install_sigint_handler(&self) {
+        sig::install();
+    }
+
+    /// Run the gateway to completion: accept loop + connection workers +
+    /// the engine loop (on the calling thread, which exclusively owns
+    /// `sched`). Returns after a shutdown trigger once every active
+    /// stream has drained. `model` must be the scheduler's model — the
+    /// admission gate projects candidate state bytes through it.
+    pub fn serve(
+        self,
+        sched: &mut BatchScheduler<'_>,
+        model: &HybridLm,
+    ) -> std::io::Result<GatewaySummary> {
+        // /metrics is part of the HTTP contract, so a serving gateway
+        // always records; observation-only, so determinism is unaffected.
+        obs::set_recording(true);
+        sched.attach_obs(obs::global());
+        let reg = obs::global();
+        let connections = reg.counter("gateway.connections");
+        let open_streams = reg.gauge("gateway.open_streams");
+        let shared = Arc::new(Shared {
+            cfg: self.cfg.clone(),
+            draining: AtomicBool::new(false),
+            requests: reg.counter("gateway.requests"),
+            sse_bytes: reg.counter("gateway.sse_bytes"),
+            disconnect_cancels: reg.counter("gateway.disconnect_cancels"),
+        });
+
+        let (sub_tx, sub_rx) = mpsc::channel::<Submission>();
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        self.listener.set_nonblocking(true)?;
+
+        // Accept thread: poll the nonblocking listener so the shutdown
+        // flag is observed within one poll interval; dropping `conn_tx`
+        // on exit is what lets the workers drain out.
+        let accept = {
+            let listener = self.listener.try_clone()?;
+            let shutdown = Arc::clone(&self.shutdown);
+            let connections = Arc::clone(&connections);
+            std::thread::spawn(move || loop {
+                if shutdown.load(Ordering::SeqCst) || sig::triggered() {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        connections.inc();
+                        if conn_tx.send(stream).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            })
+        };
+
+        let workers: Vec<_> = (0..self.cfg.conn_workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&conn_rx);
+                let shared = Arc::clone(&shared);
+                let sub_tx = sub_tx.clone();
+                std::thread::spawn(move || loop {
+                    let stream = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match stream {
+                        Ok(s) => handle_conn(s, &shared, &sub_tx),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        // Only worker threads submit; once they exit, `sub_rx`
+        // disconnecting is the engine's all-clients-gone signal.
+        drop(sub_tx);
+
+        let mut open: HashMap<usize, OpenStream> = HashMap::new();
+        let mut summary = GatewaySummary::default();
+        let mut draining = false;
+        let mut drain_deadline: Option<Instant> = None;
+
+        loop {
+            if !draining && (self.shutdown.load(Ordering::SeqCst) || sig::triggered()) {
+                draining = true;
+                shared.draining.store(true, Ordering::SeqCst);
+                drain_deadline = Some(Instant::now() + self.cfg.drain_grace);
+            }
+
+            // Intake: drain every pending submission before the tick so a
+            // burst is gated in arrival order against one consistent view
+            // of the arena.
+            let mut disconnected = false;
+            loop {
+                match sub_rx.try_recv() {
+                    Ok(sub) => {
+                        gate_and_submit(sched, model, &self.cfg, draining, sub, &mut open)
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+
+            if sched.is_idle() {
+                // Anything still open with an empty scheduler is stale
+                // (its terminal event was already delivered); dropping the
+                // senders closes those client streams.
+                open.clear();
+                open_streams.set(0);
+                if draining || disconnected {
+                    break;
+                }
+                // Idle server: block briefly instead of spinning ticks
+                // (ticks advance the deadline clock, so an idle gateway
+                // must not burn them).
+                match sub_rx.recv_timeout(Duration::from_millis(25)) {
+                    Ok(sub) => {
+                        gate_and_submit(sched, model, &self.cfg, draining, sub, &mut open)
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+                continue;
+            }
+
+            let events = sched.tick();
+            summary.ticks += 1;
+            for ev in events {
+                let id = wire::event_id(&ev);
+                let terminal = wire::is_terminal(&ev);
+                let remove = match open.get(&id) {
+                    Some(os) => {
+                        if os.tx.send(ev).is_err() {
+                            // Receiver gone: the worker saw the client
+                            // disconnect and cancelled already; cancel
+                            // again (idempotent) in case it died first.
+                            os.handle.cancel();
+                            true
+                        } else {
+                            terminal
+                        }
+                    }
+                    None => false,
+                };
+                if remove {
+                    open.remove(&id);
+                }
+            }
+            summary.finished += sched.take_finished().len();
+            open_streams.set(open.len() as u64);
+
+            if draining && drain_deadline.is_some_and(|dl| Instant::now() >= dl) {
+                // Grace expired: cancel whatever is still streaming so the
+                // drain terminates (those clients get `cancelled` frames).
+                for os in open.values() {
+                    os.handle.cancel();
+                }
+            }
+        }
+
+        // Refuse stragglers (submissions sent while the loop was breaking)
+        // until every worker has exited and the channel disconnects.
+        loop {
+            match sub_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(sub) => {
+                    let _ = sub
+                        .reply
+                        .send(SubmitReply::Rejected { status: 503, code: "draining" });
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let _ = accept.join();
+        for w in workers {
+            let _ = w.join();
+        }
+
+        summary.requests = shared.requests.get();
+        summary.disconnect_cancels = shared.disconnect_cancels.get();
+        Ok(summary)
+    }
+}
+
+/// The serialized admission gate, run on the engine thread so it reads a
+/// consistent scheduler state. Overload maps to a reply, never a wait:
+/// draining → 503; queue at cap → 429 `queue_full`; a projected state
+/// footprint the arena cannot absorb → 429 `over_state_budget`. A request
+/// whose projection exceeds the *whole* budget is rejected even with an
+/// empty arena — queued, it could never be admitted and would pin the
+/// queue forever.
+fn gate_and_submit(
+    sched: &mut BatchScheduler<'_>,
+    model: &HybridLm,
+    cfg: &GatewayCfg,
+    draining: bool,
+    sub: Submission,
+    open: &mut HashMap<usize, OpenStream>,
+) {
+    if draining {
+        let _ = sub
+            .reply
+            .send(SubmitReply::Rejected { status: 503, code: "draining" });
+        return;
+    }
+    if sched.queued_streams() >= cfg.max_queue {
+        let _ = sub
+            .reply
+            .send(SubmitReply::Rejected { status: 429, code: "queue_full" });
+        return;
+    }
+    let projected = model.state_bytes_at(sub.req.prompt.len() + sub.req.max_new);
+    let busy = sched.active_streams() + sched.queued_streams() > 0;
+    let over = projected > sched.budget_bytes()
+        || (busy
+            && sched.committed_state_bytes().saturating_add(projected) > sched.budget_bytes());
+    if over {
+        let _ = sub.reply.send(SubmitReply::Rejected {
+            status: 429,
+            code: AdmitOutcome::OverStateBudget.as_code(),
+        });
+        return;
+    }
+    let handle = sched.submit(sub.req);
+    open.insert(handle.id(), OpenStream { tx: sub.events, handle: handle.clone() });
+    let _ = sub.reply.send(SubmitReply::Accepted { handle });
+}
+
+/// Serve one connection: parse the request, route it, respond. Runs on a
+/// connection-worker thread; all socket errors end the connection quietly
+/// (the peer is gone — nobody to report to).
+fn handle_conn(mut stream: TcpStream, shared: &Shared, sub_tx: &Sender<Submission>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(read_half);
+    let req = match http::read_request(&mut reader, &mut stream, shared.cfg.max_body_bytes) {
+        Ok(r) => r,
+        Err(HttpError::Io(_)) => return,
+        Err(HttpError::Bad(_)) => {
+            respond_err(&mut stream, shared, 400, "bad_request", &[]);
+            return;
+        }
+        Err(HttpError::TooLarge) => {
+            respond_err(&mut stream, shared, 413, "body_too_large", &[]);
+            return;
+        }
+    };
+    shared.requests.inc();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => handle_health(&mut stream, shared),
+        ("GET", "/metrics") => handle_metrics(&mut stream, shared, &req),
+        ("POST", "/v1/generate") => handle_generate(stream, shared, sub_tx, &req),
+        ("GET", _) | ("POST", _) => respond_err(&mut stream, shared, 404, "not_found", &[]),
+        _ => respond_err(&mut stream, shared, 405, "method_not_allowed", &[]),
+    }
+}
+
+fn respond_err(stream: &mut TcpStream, shared: &Shared, status: u16, code: &str, extra: &[String]) {
+    shared.count_response(status);
+    let _ = http::respond_error(stream, status, code, extra);
+}
+
+fn handle_health(stream: &mut TcpStream, shared: &Shared) {
+    let draining = shared.draining.load(Ordering::SeqCst);
+    let body = Json::obj(vec![
+        ("status", Json::str(if draining { "draining" } else { "ok" })),
+        ("draining", Json::bool(draining)),
+    ])
+    .to_string();
+    shared.count_response(200);
+    let _ = http::respond(stream, 200, "application/json", &[], body.as_bytes());
+}
+
+fn handle_metrics(stream: &mut TcpStream, shared: &Shared, req: &Request) {
+    let snap = obs::global().snapshot();
+    let prometheus = req.query_param("format").is_some_and(|f| f == "prometheus");
+    shared.count_response(200);
+    let _ = if prometheus {
+        let text = prom::render(&snap);
+        http::respond(stream, 200, "text/plain; version=0.0.4", &[], text.as_bytes())
+    } else {
+        http::respond(stream, 200, "application/json", &[], snap.to_string().as_bytes())
+    };
+}
+
+/// `POST /v1/generate`: validate, submit through the engine gate, then
+/// relay the stream's events as SSE frames until a terminal event. Any
+/// failed write means the client went away — cancel the stream so its
+/// arena slot frees at the scheduler's next tick.
+fn handle_generate(
+    mut stream: TcpStream,
+    shared: &Shared,
+    sub_tx: &Sender<Submission>,
+    req: &Request,
+) {
+    let retry_after = ["Retry-After: 1".to_string()];
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(s) => s,
+        Err(_) => {
+            respond_err(&mut stream, shared, 400, "body_not_utf8", &[]);
+            return;
+        }
+    };
+    let json = match Json::parse(body) {
+        Ok(j) => j,
+        Err(_) => {
+            respond_err(&mut stream, shared, 400, "bad_json", &[]);
+            return;
+        }
+    };
+    let prompt = match json.get("prompt").and_then(Json::as_str) {
+        Some(p) if !p.is_empty() => p.as_bytes().to_vec(),
+        _ => {
+            respond_err(&mut stream, shared, 400, "missing_prompt", &[]);
+            return;
+        }
+    };
+    if prompt.len() > shared.cfg.max_prompt_bytes {
+        respond_err(&mut stream, shared, 413, "prompt_too_long", &[]);
+        return;
+    }
+    let max_new = json.get("max_new").and_then(Json::as_usize).unwrap_or(32);
+    if max_new == 0 || max_new > shared.cfg.max_new_cap {
+        respond_err(&mut stream, shared, 400, "bad_max_new", &[]);
+        return;
+    }
+    let mut sreq = ServeRequest::new(prompt, max_new);
+    if let Some(p) = json.get("priority").and_then(Json::as_usize) {
+        sreq = sreq.with_priority(p.min(u8::MAX as usize) as u8);
+    }
+    if let Some(d) = json.get("deadline_ticks").and_then(Json::as_usize) {
+        sreq = sreq.with_deadline(d);
+    }
+    // Fast-path drain check; the engine gate re-checks authoritatively.
+    if shared.draining.load(Ordering::SeqCst) {
+        respond_err(&mut stream, shared, 503, "draining", &retry_after);
+        return;
+    }
+
+    let (ev_tx, ev_rx) = mpsc::channel();
+    let (rp_tx, rp_rx) = mpsc::channel();
+    if sub_tx
+        .send(Submission { req: sreq, events: ev_tx, reply: rp_tx })
+        .is_err()
+    {
+        respond_err(&mut stream, shared, 503, "draining", &retry_after);
+        return;
+    }
+    let handle = match rp_rx.recv_timeout(Duration::from_secs(10)) {
+        Ok(SubmitReply::Accepted { handle }) => handle,
+        Ok(SubmitReply::Rejected { status, code }) => {
+            respond_err(&mut stream, shared, status, code, &retry_after);
+            return;
+        }
+        Err(_) => {
+            respond_err(&mut stream, shared, 503, "engine_unavailable", &retry_after);
+            return;
+        }
+    };
+
+    shared.count_response(200);
+    if http::sse_headers(&mut stream, handle.id()).is_err() {
+        handle.cancel();
+        shared.disconnect_cancels.inc();
+        return;
+    }
+    relay_events(&mut stream, shared, &handle, &ev_rx);
+}
+
+/// The SSE relay loop. The keepalive comment written on event lulls
+/// doubles as the disconnect probe: a closed peer fails the write within
+/// two probes (first write after FIN elicits RST; the next errors), at
+/// which point the handle is cancelled and the scheduler frees the slot
+/// on its next tick.
+fn relay_events(
+    stream: &mut TcpStream,
+    shared: &Shared,
+    handle: &RequestHandle,
+    ev_rx: &Receiver<StreamEvent>,
+) {
+    loop {
+        match ev_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(ev) => {
+                let frame = wire::sse_frame(&ev);
+                if stream.write_all(frame.as_bytes()).is_err() {
+                    handle.cancel();
+                    shared.disconnect_cancels.inc();
+                    return;
+                }
+                shared.sse_bytes.add(frame.len() as u64);
+                if wire::is_terminal(&ev) {
+                    let _ = stream.flush();
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if stream.write_all(b": ping\n\n").is_err() {
+                    handle.cancel();
+                    shared.disconnect_cancels.inc();
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // Engine dropped the stream (shutdown past the drain
+                // grace); the close-delimited body just ends here.
+                let _ = stream.flush();
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Prometheus text exposition (version 0.0.4) rendered from an
+//! `sh2-metrics-v1` snapshot, so `/metrics?format=prometheus` can be
+//! scraped directly without a translation sidecar.
+//!
+//! Mapping: counters → `counter`, gauges → `gauge`, histograms →
+//! `summary` (the snapshot already resolved p50/p90/p99, which is exactly
+//! the quantile-summary shape; the observed max rides along as a separate
+//! `<name>_max` gauge since summaries have no max field). Dotted registry
+//! names are sanitized to `sh2_`-prefixed snake_case — `serve.tick_ns`
+//! becomes `sh2_serve_tick_ns`.
+
+use crate::util::json::Json;
+
+/// `sh2_` + the registry name with every non-`[a-zA-Z0-9]` byte mapped
+/// to `_` (Prometheus metric-name charset, minus the unused colon).
+pub fn metric_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 4);
+    out.push_str("sh2_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Integral values print without a fraction (Prometheus accepts both;
+/// integers keep the exposition byte-stable across platforms).
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render a full `sh2-metrics-v1` snapshot as Prometheus text.
+pub fn render(snapshot: &Json) -> String {
+    let mut out = String::new();
+    if let Some(counters) = snapshot.get("counters").and_then(Json::as_obj) {
+        for (name, v) in counters {
+            let m = metric_name(name);
+            let v = v.as_f64().unwrap_or(0.0);
+            out.push_str(&format!("# TYPE {m} counter\n{m} {}\n", fmt_value(v)));
+        }
+    }
+    if let Some(gauges) = snapshot.get("gauges").and_then(Json::as_obj) {
+        for (name, v) in gauges {
+            let m = metric_name(name);
+            let v = v.as_f64().unwrap_or(0.0);
+            out.push_str(&format!("# TYPE {m} gauge\n{m} {}\n", fmt_value(v)));
+        }
+    }
+    if let Some(hists) = snapshot.get("histograms").and_then(Json::as_obj) {
+        for (name, h) in hists {
+            let m = metric_name(name);
+            let field = |key: &str| h.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+            out.push_str(&format!("# TYPE {m} summary\n"));
+            for (q, key) in [("0.5", "p50"), ("0.9", "p90"), ("0.99", "p99")] {
+                out.push_str(&format!(
+                    "{m}{{quantile=\"{q}\"}} {}\n",
+                    fmt_value(field(key))
+                ));
+            }
+            out.push_str(&format!("{m}_sum {}\n", fmt_value(field("sum"))));
+            out.push_str(&format!("{m}_count {}\n", fmt_value(field("count"))));
+            out.push_str(&format!(
+                "# TYPE {m}_max gauge\n{m}_max {}\n",
+                fmt_value(field("max"))
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{set_recording, Registry};
+
+    #[test]
+    fn name_sanitization() {
+        assert_eq!(metric_name("serve.tick_ns"), "sh2_serve_tick_ns");
+        assert_eq!(metric_name("gateway.responses.429"), "sh2_gateway_responses_429");
+        assert_eq!(metric_name("planner.plan.fft.t2"), "sh2_planner_plan_fft_t2");
+    }
+
+    #[test]
+    fn renders_all_instrument_kinds() {
+        set_recording(true);
+        let reg = Registry::new();
+        reg.counter("gw.requests").add(3);
+        reg.gauge("gw.open").set(2);
+        let h = reg.histogram("gw.ttfb_ns");
+        h.record(100);
+        h.record(200);
+        let text = render(&reg.snapshot());
+        assert!(text.contains("# TYPE sh2_gw_requests counter\nsh2_gw_requests 3\n"));
+        assert!(text.contains("# TYPE sh2_gw_open gauge\nsh2_gw_open 2\n"));
+        assert!(text.contains("# TYPE sh2_gw_ttfb_ns summary\n"));
+        assert!(text.contains("sh2_gw_ttfb_ns{quantile=\"0.5\"}"));
+        assert!(text.contains("sh2_gw_ttfb_ns_sum 300\n"));
+        assert!(text.contains("sh2_gw_ttfb_ns_count 2\n"));
+        assert!(text.contains("sh2_gw_ttfb_ns_max 200\n"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.split_once(' ').expect("name value");
+            assert!(name.starts_with("sh2_"), "unprefixed metric {name}");
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line}");
+        }
+    }
+
+    #[test]
+    fn empty_snapshot_renders_empty() {
+        let reg = Registry::new();
+        assert!(render(&reg.snapshot()).is_empty());
+    }
+}

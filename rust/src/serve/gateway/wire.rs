@@ -1,0 +1,145 @@
+//! `sh2-event-v1`: the versioned JSON wire schema for [`StreamEvent`].
+//!
+//! Each scheduler event maps 1:1 onto one SSE frame:
+//!
+//! ```text
+//! event: token
+//! data: {"schema":"sh2-event-v1","event":"token","id":0,"index":3,"token":67}
+//! ```
+//!
+//! The `event:` field and the payload's `"event"` key are the same stable
+//! kind string; terminal kinds (`finished`/`cancelled`/`rejected`) carry
+//! the [`FinishReason::as_code`] vocabulary where applicable and end the
+//! stream (the gateway closes the connection after writing them). Token
+//! payloads carry the raw byte as a number, so a client concatenating
+//! `token` values reconstructs the generation byte-exactly — the property
+//! the loopback-vs-in-process identity test pins down.
+//!
+//! [`FinishReason::as_code`]: crate::serve::FinishReason::as_code
+
+use crate::serve::scheduler::StreamEvent;
+use crate::util::json::Json;
+
+/// Schema tag carried by every event payload.
+pub const EVENT_SCHEMA: &str = "sh2-event-v1";
+
+/// Stable kind string for the SSE `event:` field. A wire contract:
+/// existing kinds never change, new variants add new kinds.
+pub fn event_kind(ev: &StreamEvent) -> &'static str {
+    match ev {
+        StreamEvent::Admitted { .. } => "admitted",
+        StreamEvent::PrefillProgress { .. } => "prefill",
+        StreamEvent::Token { .. } => "token",
+        StreamEvent::Finished { .. } => "finished",
+        StreamEvent::Preempted { .. } => "preempted",
+        StreamEvent::Cancelled { .. } => "cancelled",
+        StreamEvent::Rejected { .. } => "rejected",
+    }
+}
+
+/// Stream id carried by any event variant.
+pub fn event_id(ev: &StreamEvent) -> usize {
+    match ev {
+        StreamEvent::Admitted { id, .. }
+        | StreamEvent::PrefillProgress { id, .. }
+        | StreamEvent::Token { id, .. }
+        | StreamEvent::Finished { id, .. }
+        | StreamEvent::Preempted { id }
+        | StreamEvent::Cancelled { id }
+        | StreamEvent::Rejected { id } => *id,
+    }
+}
+
+/// Terminal events end the stream: the connection closes after them.
+pub fn is_terminal(ev: &StreamEvent) -> bool {
+    matches!(
+        ev,
+        StreamEvent::Finished { .. } | StreamEvent::Cancelled { .. } | StreamEvent::Rejected { .. }
+    )
+}
+
+/// The `data:` payload for one event.
+pub fn event_json(ev: &StreamEvent) -> Json {
+    let mut fields = vec![
+        ("schema", Json::str(EVENT_SCHEMA)),
+        ("event", Json::str(event_kind(ev))),
+        ("id", Json::num(event_id(ev) as f64)),
+    ];
+    match ev {
+        StreamEvent::Admitted { restored, .. } => {
+            fields.push(("restored", Json::bool(*restored)));
+        }
+        StreamEvent::PrefillProgress { done, total, .. } => {
+            fields.push(("done", Json::num(*done as f64)));
+            fields.push(("total", Json::num(*total as f64)));
+        }
+        StreamEvent::Token { token, index, .. } => {
+            fields.push(("token", Json::num(*token as f64)));
+            fields.push(("index", Json::num(*index as f64)));
+        }
+        StreamEvent::Finished { reason, .. } => {
+            fields.push(("reason", Json::str(reason.as_code())));
+        }
+        StreamEvent::Preempted { .. }
+        | StreamEvent::Cancelled { .. }
+        | StreamEvent::Rejected { .. } => {}
+    }
+    Json::obj(fields)
+}
+
+/// One complete SSE frame (`event:` line, `data:` line, blank line).
+pub fn sse_frame(ev: &StreamEvent) -> String {
+    format!("event: {}\ndata: {}\n\n", event_kind(ev), event_json(ev))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::FinishReason;
+
+    #[test]
+    fn kinds_and_ids() {
+        let ev = StreamEvent::Token { id: 3, token: b'G', index: 5 };
+        assert_eq!(event_kind(&ev), "token");
+        assert_eq!(event_id(&ev), 3);
+        assert!(!is_terminal(&ev));
+        assert!(is_terminal(&StreamEvent::Finished {
+            id: 3,
+            reason: FinishReason::MaxNew
+        }));
+        assert!(is_terminal(&StreamEvent::Cancelled { id: 3 }));
+        assert!(is_terminal(&StreamEvent::Rejected { id: 3 }));
+        assert!(!is_terminal(&StreamEvent::Preempted { id: 3 }));
+    }
+
+    #[test]
+    fn token_payload_roundtrips_byte() {
+        for byte in [0u8, b'A', 0x7F, 0xFF] {
+            let ev = StreamEvent::Token { id: 1, token: byte, index: 0 };
+            let j = Json::parse(&event_json(&ev).to_string()).unwrap();
+            assert_eq!(j.get("schema").unwrap().as_str(), Some(EVENT_SCHEMA));
+            assert_eq!(j.get("event").unwrap().as_str(), Some("token"));
+            assert_eq!(j.get("token").unwrap().as_usize(), Some(byte as usize));
+        }
+    }
+
+    #[test]
+    fn finished_carries_reason_code() {
+        let ev = StreamEvent::Finished { id: 2, reason: FinishReason::MaxNew };
+        let j = event_json(&ev);
+        assert_eq!(j.get("reason").unwrap().as_str(), Some("max_new"));
+    }
+
+    #[test]
+    fn frame_shape() {
+        let ev = StreamEvent::Admitted { id: 0, restored: true };
+        let frame = sse_frame(&ev);
+        let mut lines = frame.lines();
+        assert_eq!(lines.next(), Some("event: admitted"));
+        let data = lines.next().unwrap();
+        assert!(data.starts_with("data: {"));
+        let j = Json::parse(data.strip_prefix("data: ").unwrap()).unwrap();
+        assert_eq!(j.get("restored").unwrap().as_bool(), Some(true));
+        assert!(frame.ends_with("\n\n"));
+    }
+}

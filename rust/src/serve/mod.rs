@@ -11,7 +11,10 @@
 //! batch-first (ONE `HybridLm::step_batch_refs` call per tick, every
 //! projection a [B, d] GEMM — DESIGN.md §13), preempted under a state-byte
 //! budget, and finished. [`BatchScheduler::run_to_completion`] is the
-//! batch-synchronous convenience over the same loop.
+//! batch-synchronous convenience over the same loop; `gateway` puts an
+//! HTTP/SSE network front door over the same lifecycle (`sh2 serve
+//! --listen`, DESIGN.md §18), streaming each [`StreamEvent`] as one
+//! `sh2-event-v1` frame.
 //!
 //! The prefill→decode state-handoff contract this module relies on is
 //! documented on [`crate::ops::SeqMixer::step`]: after a blocked prefill,
@@ -43,12 +46,14 @@
 //! assert_eq!(tokens.len(), 8);
 //! ```
 
+pub mod gateway;
 pub mod model;
 pub mod policy;
 pub mod sampler;
 pub mod scheduler;
 pub mod workload;
 
+pub use gateway::{Gateway, GatewayCfg, GatewaySummary};
 pub use model::{HybridLm, LmConfig, LmState};
 pub use policy::{
     AdmitDecision, Candidate, DeadlinePolicy, LruPolicy, PolicyKind, PriorityPolicy,

@@ -181,6 +181,20 @@ pub enum FinishReason {
     Rejected,
 }
 
+impl FinishReason {
+    /// Stable machine-readable code — the single source of truth shared by
+    /// the CLI event printer, replay JSON, and the gateway's `sh2-event-v1`
+    /// wire events. Unlike the `Debug` rendering, these strings are a wire
+    /// contract: existing codes never change, new variants add new codes.
+    pub fn as_code(&self) -> &'static str {
+        match self {
+            FinishReason::MaxNew => "max_new",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Rejected => "rejected",
+        }
+    }
+}
+
 /// Lifecycle events emitted by [`BatchScheduler::tick`], in the order they
 /// happened within the tick.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -230,6 +244,24 @@ pub enum AdmitOutcome {
     /// [`FinishReason::Rejected`]); admission may continue with the rest
     /// of the queue.
     Rejected { id: usize },
+}
+
+impl AdmitOutcome {
+    /// Stable machine-readable code for the admission verdict — shared by
+    /// the gateway's backpressure responses (a 429 body carries the code
+    /// of the pressure that caused it) and any JSON surface that reports
+    /// admission results. A wire contract like [`FinishReason::as_code`]:
+    /// existing codes never change.
+    pub fn as_code(&self) -> &'static str {
+        match self {
+            AdmitOutcome::Admitted { .. } => "admitted",
+            AdmitOutcome::QueueEmpty => "queue_empty",
+            AdmitOutcome::Blocked => "blocked",
+            AdmitOutcome::AtMaxActive => "at_max_active",
+            AdmitOutcome::OverStateBudget => "over_state_budget",
+            AdmitOutcome::Rejected { .. } => "rejected",
+        }
+    }
 }
 
 /// Per-tick work-budget knobs. The default (`usize::MAX` everywhere)
@@ -596,6 +628,13 @@ impl<'m> BatchScheduler<'m> {
     /// projected-at-history) — the quantity admission charges.
     pub fn committed_state_bytes(&self) -> usize {
         self.committed_bytes()
+    }
+
+    /// The configured arena byte budget admission charges against. The
+    /// gateway's pre-admission gate needs it to project whether a request
+    /// could ever fit before occupying a queue slot.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
     }
 
     /// Bytes the arena is committed to: per active stream, the larger of

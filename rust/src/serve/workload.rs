@@ -423,11 +423,29 @@ impl ReplayReport {
             ("finished", Json::num(self.finished as f64)),
             ("cancelled", Json::num(self.cancelled as f64)),
             ("rejected", Json::num(self.rejected as f64)),
+            ("reasons", self.reasons_json()),
             ("preemptions", Json::num(self.preemptions as f64)),
             ("max_concurrent", Json::num(self.max_concurrent as f64)),
             ("mean_occupancy", Json::num(self.mean_occupancy)),
             ("event_hash", Json::str(&format!("{:016x}", self.event_hash))),
         ])
+    }
+
+    /// Terminal-reason histogram keyed by the stable wire codes
+    /// ([`FinishReason::as_code`]) — the machine-readable twin of the
+    /// `finished`/`cancelled`/`rejected` counts, sharing one vocabulary
+    /// with the CLI event printer and the gateway's `sh2-event-v1` events.
+    fn reasons_json(&self) -> Json {
+        let mut reasons: BTreeMap<String, Json> = BTreeMap::new();
+        for f in &self.outcomes {
+            let slot = reasons
+                .entry(f.reason.as_code().to_string())
+                .or_insert(Json::Num(0.0));
+            if let Json::Num(n) = slot {
+                *n += 1.0;
+            }
+        }
+        Json::Obj(reasons)
     }
 }
 

@@ -110,6 +110,10 @@ impl Json {
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
+
+    pub fn bool(b: bool) -> Json {
+        Json::Bool(b)
+    }
 }
 
 /// Buffered JSONL (one compact JSON object per line) file writer — the

@@ -1,0 +1,458 @@
+//! Integration tests of the HTTP/SSE gateway over real loopback TCP
+//! (DESIGN.md §18): streamed bytes are identical to in-process serving,
+//! admission pressure surfaces as 429/503 (never a hang), mid-stream
+//! client disconnect frees the stream's arena state, and shutdown drains
+//! gracefully.
+//!
+//! Every test serializes on one mutex: the gateway records into the
+//! process-global obs registry, and the metrics assertions need the
+//! gauges to themselves.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use sh2::serve::{
+    BatchScheduler, Gateway, GatewayCfg, GatewaySummary, HybridLm, Sampler, ServeRequest,
+    TickConfig,
+};
+use sh2::util::json::Json;
+use sh2::util::rng::Rng;
+
+static GATEWAY_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GATEWAY_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn test_model(seed: u64) -> HybridLm {
+    let mut rng = Rng::new(seed);
+    HybridLm::new(&mut rng, 32, 2, &["SE", "MHA"]).unwrap()
+}
+
+fn gateway_cfg(max_queue: usize) -> GatewayCfg {
+    GatewayCfg {
+        addr: "127.0.0.1:0".to_string(),
+        conn_workers: 2,
+        max_queue,
+        ..GatewayCfg::default()
+    }
+}
+
+/// Run `body` with a live gateway: binds an ephemeral port, serves on a
+/// scoped thread, triggers the programmatic shutdown after `body`, and
+/// returns the drain summary.
+fn with_gateway<F>(
+    model: &HybridLm,
+    max_active: usize,
+    budget: usize,
+    seed: u64,
+    cfg: GatewayCfg,
+    body: F,
+) -> GatewaySummary
+where
+    F: FnOnce(SocketAddr),
+{
+    let gateway = Gateway::bind(cfg).unwrap();
+    let addr = gateway.local_addr().unwrap();
+    let stop = gateway.shutdown_handle();
+    std::thread::scope(|s| {
+        let handle = s.spawn(move || {
+            let mut sched = BatchScheduler::with_config(
+                model,
+                Sampler::from_options(4, 1.0),
+                max_active,
+                budget,
+                seed,
+                TickConfig::default(),
+            );
+            gateway.serve(&mut sched, model).unwrap()
+        });
+        body(addr);
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap()
+    })
+}
+
+/// One full request/response over loopback; the SSE body is close-
+/// delimited, so reading to EOF collects the whole stream.
+fn http_request(addr: SocketAddr, raw: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut out = String::new();
+    stream.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn get(addr: SocketAddr, path: &str) -> String {
+    http_request(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+}
+
+fn post_generate(addr: SocketAddr, body: &str) -> String {
+    http_request(
+        addr,
+        &format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn status_of(response: &str) -> u16 {
+    response
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status line")
+}
+
+fn body_of(response: &str) -> &str {
+    response.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+/// Parse every `data:` payload out of an SSE body, skipping keepalive
+/// comments, and assert each frame's `event:` line matches its payload.
+fn sse_events(body: &str) -> Vec<Json> {
+    let mut events = Vec::new();
+    let mut kind: Option<String> = None;
+    for line in body.lines() {
+        if let Some(k) = line.strip_prefix("event: ") {
+            kind = Some(k.to_string());
+        } else if let Some(data) = line.strip_prefix("data: ") {
+            let j = Json::parse(data).expect("well-formed event payload");
+            assert_eq!(j.get("schema").unwrap().as_str(), Some("sh2-event-v1"));
+            assert_eq!(
+                j.get("event").unwrap().as_str(),
+                kind.as_deref(),
+                "event: line disagrees with payload"
+            );
+            events.push(j);
+            kind = None;
+        } else {
+            assert!(
+                line.is_empty() || line.starts_with(':'),
+                "unexpected SSE line {line:?}"
+            );
+        }
+    }
+    events
+}
+
+fn token_bytes(events: &[Json]) -> Vec<u8> {
+    events
+        .iter()
+        .filter(|e| e.get("event").unwrap().as_str() == Some("token"))
+        .map(|e| e.get("token").unwrap().as_usize().unwrap() as u8)
+        .collect()
+}
+
+#[test]
+fn loopback_stream_matches_in_process_bytes() {
+    let _g = lock();
+    let model = test_model(11);
+    let prompt = "ACGTACGTACGTACGT";
+    let max_new = 24;
+    let seed = 7u64;
+
+    // Reference: the same model + scheduler seed, served in-process. The
+    // stream RNG is a function of (scheduler seed, stream id) only, so
+    // the network path must reproduce these bytes exactly.
+    let expected = {
+        let mut sched = BatchScheduler::with_config(
+            &model,
+            Sampler::from_options(4, 1.0),
+            4,
+            1 << 30,
+            seed,
+            TickConfig::default(),
+        );
+        sched.submit(ServeRequest::new(prompt.as_bytes().to_vec(), max_new));
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 1);
+        done[0].output.clone()
+    };
+
+    let summary = with_gateway(&model, 4, 1 << 30, seed, gateway_cfg(64), |addr| {
+        let response = post_generate(
+            addr,
+            &format!(r#"{{"prompt":"{prompt}","max_new":{max_new}}}"#),
+        );
+        assert_eq!(status_of(&response), 200);
+        assert!(response.contains("Content-Type: text/event-stream"));
+        assert!(response.contains("X-SH2-Stream-Id: 0"));
+        let events = sse_events(body_of(&response));
+        assert_eq!(
+            events[0].get("event").unwrap().as_str(),
+            Some("admitted"),
+            "stream must open with an admitted event"
+        );
+        let terminal: Vec<&Json> = events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.get("event").unwrap().as_str(),
+                    Some("finished" | "cancelled" | "rejected")
+                )
+            })
+            .collect();
+        assert_eq!(terminal.len(), 1, "exactly one terminal event");
+        assert_eq!(terminal[0].get("event").unwrap().as_str(), Some("finished"));
+        assert_eq!(terminal[0].get("reason").unwrap().as_str(), Some("max_new"));
+        assert_eq!(
+            token_bytes(&events),
+            expected,
+            "SSE token bytes must be identical to in-process serving"
+        );
+    });
+    assert_eq!(summary.finished, 1);
+    assert!(summary.requests >= 1);
+}
+
+#[test]
+fn over_budget_concurrent_request_gets_429_not_a_hang() {
+    let _g = lock();
+    let model = test_model(12);
+    let prompt = "ACGTACGT";
+    let max_new = 64;
+    // Budget fits exactly one stream's full projection: the first request
+    // is admitted, and any request arriving while it holds the arena
+    // deterministically exceeds committed + projected.
+    let budget = model.state_bytes_at(prompt.len() + max_new);
+
+    with_gateway(&model, 4, budget, 3, gateway_cfg(64), |addr| {
+        // Hold a live stream: read frames incrementally until admitted.
+        let mut a = TcpStream::connect(addr).unwrap();
+        let body = format!(r#"{{"prompt":"{prompt}","max_new":{max_new}}}"#);
+        a.write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut reader = BufReader::new(a.try_clone().unwrap());
+        let mut line = String::new();
+        loop {
+            line.clear();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "eof before admit");
+            if line.starts_with("event: admitted") {
+                break;
+            }
+        }
+
+        // Concurrent requests over the byte budget: immediate 429 with
+        // the stable backpressure code and a Retry-After hint.
+        for _ in 0..2 {
+            let response = post_generate(
+                addr,
+                &format!(r#"{{"prompt":"{prompt}","max_new":{max_new}}}"#),
+            );
+            assert_eq!(status_of(&response), 429);
+            assert!(response.contains("Retry-After: 1"));
+            let err = Json::parse(body_of(&response)).unwrap();
+            assert_eq!(err.get("error").unwrap().as_str(), Some("over_state_budget"));
+        }
+
+        // A's stream still completes after the rejections.
+        let mut rest = String::new();
+        reader.read_to_string(&mut rest).unwrap();
+        assert!(rest.contains("event: finished"));
+    });
+}
+
+#[test]
+fn queue_cap_maps_to_429_queue_full() {
+    let _g = lock();
+    let model = test_model(13);
+    // max_queue = 0: every generate request trips the queue gate —
+    // the degenerate case that proves the cap rejects instead of waiting.
+    with_gateway(&model, 4, 1 << 30, 5, gateway_cfg(0), |addr| {
+        let response = post_generate(addr, r#"{"prompt":"ACGT","max_new":4}"#);
+        assert_eq!(status_of(&response), 429);
+        let err = Json::parse(body_of(&response)).unwrap();
+        assert_eq!(err.get("error").unwrap().as_str(), Some("queue_full"));
+    });
+}
+
+#[test]
+fn disconnect_mid_stream_cancels_and_frees_state() {
+    let _g = lock();
+    let model = test_model(14);
+    with_gateway(&model, 4, 1 << 30, 9, gateway_cfg(64), |addr| {
+        // Start a long stream and read only its first frame.
+        let mut a = TcpStream::connect(addr).unwrap();
+        let body = r#"{"prompt":"ACGTACGTACGTACGT","max_new":100000}"#;
+        a.write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut reader = BufReader::new(a.try_clone().unwrap());
+        let mut line = String::new();
+        loop {
+            line.clear();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "eof before admit");
+            if line.starts_with("event: admitted") {
+                break;
+            }
+        }
+        // Client walks away mid-stream.
+        drop(reader);
+        drop(a);
+
+        // The failed SSE write cancels the handle; the next tick sweeps
+        // the stream and frees its arena slot. Observe both through
+        // /metrics (bounded poll — this converges in a few ticks).
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let response = get(addr, "/metrics");
+            assert_eq!(status_of(&response), 200);
+            let snap = Json::parse(body_of(&response)).unwrap();
+            let active = snap
+                .at(&["gauges", "serve.active_streams"])
+                .and_then(Json::as_usize)
+                .unwrap_or(usize::MAX);
+            let cancels = snap
+                .at(&["counters", "gateway.disconnect_cancels"])
+                .and_then(Json::as_usize)
+                .unwrap_or(0);
+            if active == 0 && cancels >= 1 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "disconnect did not free the stream: active={active} cancels={cancels}"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    });
+}
+
+#[test]
+fn health_metrics_and_errors() {
+    let _g = lock();
+    let model = test_model(15);
+    let summary = with_gateway(&model, 4, 1 << 30, 1, gateway_cfg(64), |addr| {
+        // One generation so scheduler counters are non-trivial.
+        let response = post_generate(addr, r#"{"prompt":"ACGTACGT","max_new":4}"#);
+        assert_eq!(status_of(&response), 200);
+
+        let health = get(addr, "/health");
+        assert_eq!(status_of(&health), 200);
+        let h = Json::parse(body_of(&health)).unwrap();
+        assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(h.get("draining").unwrap().as_bool(), Some(false));
+
+        // JSON snapshot: gateway + scheduler counters present.
+        let metrics = get(addr, "/metrics");
+        let snap = Json::parse(body_of(&metrics)).unwrap();
+        assert_eq!(snap.get("schema").unwrap().as_str(), Some("sh2-metrics-v1"));
+        for counter in ["gateway.requests", "gateway.sse_bytes", "serve.ticks"] {
+            assert!(
+                snap.at(&["counters", counter]).is_some(),
+                "missing counter {counter}"
+            );
+        }
+
+        // Prometheus rendering of the same snapshot.
+        let prom = get(addr, "/metrics?format=prometheus");
+        assert!(prom.contains("Content-Type: text/plain"));
+        let text = body_of(&prom);
+        assert!(text.contains("# TYPE sh2_gateway_requests counter"));
+        assert!(text.contains("# TYPE sh2_serve_tick_ns summary"));
+
+        // Error mapping.
+        assert_eq!(status_of(&get(addr, "/nope")), 404);
+        let bad = post_generate(addr, "{not json");
+        assert_eq!(status_of(&bad), 400);
+        let no_prompt = post_generate(addr, r#"{"max_new":4}"#);
+        assert_eq!(status_of(&no_prompt), 400);
+    });
+    assert!(summary.requests >= 6);
+    assert_eq!(summary.finished, 1);
+}
+
+#[test]
+fn shutdown_rejects_new_requests_while_draining() {
+    let _g = lock();
+    let model = test_model(16);
+    let gateway = Gateway::bind(gateway_cfg(64)).unwrap();
+    let addr = gateway.local_addr().unwrap();
+    let stop = gateway.shutdown_handle();
+    let model_ref = &model;
+    std::thread::scope(|s| {
+        let handle = s.spawn(move || {
+            let mut sched = BatchScheduler::with_config(
+                model_ref,
+                Sampler::Greedy,
+                4,
+                1 << 30,
+                2,
+                TickConfig::default(),
+            );
+            gateway.serve(&mut sched, model_ref).unwrap()
+        });
+        // A long stream keeps the engine busy so the drain window is
+        // observable from the client side.
+        let mut a = TcpStream::connect(addr).unwrap();
+        let body = r#"{"prompt":"ACGTACGTACGTACGT","max_new":100000}"#;
+        a.write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut reader = BufReader::new(a.try_clone().unwrap());
+        let mut line = String::new();
+        loop {
+            line.clear();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "eof before admit");
+            if line.starts_with("event: admitted") {
+                break;
+            }
+        }
+
+        // Connect B BEFORE the drain starts: the accept thread stops
+        // accepting once shutdown is set, so only an already-accepted
+        // connection can observe the 503. Its worker parks in the read
+        // until we send the request bytes.
+        let mut b = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(50)); // let accept hand B off
+        stop.store(true, Ordering::SeqCst);
+        // The engine marks draining within one tick of the flag; stream A
+        // keeps it ticking, so this settles fast.
+        std::thread::sleep(Duration::from_millis(200));
+
+        // New work during the drain maps to 503 (from the drain fast-path
+        // or the engine gate, whichever sees it first) — never a hang.
+        let req_b = r#"{"prompt":"ACGT","max_new":4}"#;
+        b.write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{req_b}",
+                req_b.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut response = String::new();
+        BufReader::new(&b).read_to_string(&mut response).unwrap();
+        assert_eq!(status_of(&response), 503);
+        let err = Json::parse(body_of(&response)).unwrap();
+        assert_eq!(err.get("error").unwrap().as_str(), Some("draining"));
+
+        // The held stream is cancelled at the drain grace (test config
+        // default 5s) or earlier by our disconnect; just drop it.
+        drop(reader);
+        drop(a);
+        let summary = handle.join().unwrap();
+        assert!(summary.requests >= 2);
+    });
+}

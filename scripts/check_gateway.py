@@ -1,0 +1,229 @@
+#!/usr/bin/env python3
+"""End-to-end smoke of the HTTP/SSE gateway (`sh2 serve --listen`).
+
+Starts the gateway on an ephemeral port, then asserts over real HTTP:
+
+  1. GET /health answers 200 with status "ok";
+  2. POST /v1/generate streams a well-formed SSE body: every line is an
+     `event:`/`data:` pair, a `:` keepalive comment, or blank; each payload
+     is sh2-event-v1 JSON agreeing with its `event:` line; the stream opens
+     with `admitted`, carries exactly `max_new` token frames, and ends with
+     exactly one terminal event (`finished`, reason `max_new`);
+  3. GET /metrics is an sh2-metrics-v1 snapshot covering the gateway,
+     scheduler, and exec-pool counters;
+  4. GET /metrics?format=prometheus is scrapeable text exposition;
+  5. SIGINT drains the engine: the process exits 0 after printing one
+     sh2-gateway-v1 summary line and one final sh2-metrics-v1 line.
+
+Usage:
+    python3 scripts/check_gateway.py [SH2_BINARY]
+
+SH2_BINARY defaults to target/release/sh2 (the ci.yml bench-smoke job
+builds it first).
+"""
+
+import http.client
+import json
+import os
+import re
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+MAX_NEW = 16
+REQUIRED_COUNTERS = [
+    "gateway.connections",
+    "gateway.requests",
+    "gateway.responses.200",
+    "gateway.sse_bytes",
+    "serve.ticks",
+    "serve.decode_steps",
+    "exec.regions",
+    "exec.tasks",
+]
+
+
+def fail(msg):
+    print(f"check_gateway: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def start_gateway(binary):
+    proc = subprocess.Popen(
+        [
+            binary, "serve",
+            "--listen", "127.0.0.1:0",
+            "--width", "32", "--heads", "2", "--layout", "SE-MHA",
+            "--threads", "2", "--seed", "7",
+        ],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        text=True,
+    )
+    lines = []
+
+    def pump():
+        for line in proc.stdout:
+            lines.append(line.rstrip("\n"))
+
+    threading.Thread(target=pump, daemon=True).start()
+
+    deadline = time.time() + 60
+    addr = None
+    while time.time() < deadline:
+        for line in lines:
+            m = re.search(r"listening on http://([0-9.]+):(\d+)", line)
+            if m:
+                addr = (m.group(1), int(m.group(2)))
+                break
+        if addr or proc.poll() is not None:
+            break
+        time.sleep(0.05)
+    if addr is None:
+        err = proc.stderr.read() if proc.poll() is not None else ""
+        fail(f"gateway never announced its address (stdout={lines!r}, stderr={err!r})")
+    return proc, lines, addr
+
+
+def request(addr, method, path, body=None):
+    conn = http.client.HTTPConnection(addr[0], addr[1], timeout=120)
+    headers = {"Content-Type": "application/json"} if body is not None else {}
+    conn.request(method, path, body=body, headers=headers)
+    resp = conn.getresponse()
+    data = resp.read().decode("utf-8")
+    ctype = resp.getheader("Content-Type") or ""
+    conn.close()
+    return resp.status, ctype, data
+
+
+def check_health(addr):
+    status, _, body = request(addr, "GET", "/health")
+    if status != 200:
+        fail(f"/health returned {status}")
+    obj = json.loads(body)
+    if obj.get("status") != "ok":
+        fail(f"/health status {obj!r}")
+
+
+def check_generate(addr):
+    status, ctype, body = request(
+        addr, "POST", "/v1/generate",
+        body=json.dumps({"prompt": "ACGTACGTACGTACGT", "max_new": MAX_NEW}),
+    )
+    if status != 200:
+        fail(f"/v1/generate returned {status}: {body!r}")
+    if not ctype.startswith("text/event-stream"):
+        fail(f"/v1/generate content-type {ctype!r}")
+
+    events, pending = [], None
+    for line in body.split("\n"):
+        if line.startswith("event: "):
+            if pending is not None:
+                fail(f"event line {line!r} before previous data line")
+            pending = line[len("event: "):]
+        elif line.startswith("data: "):
+            if pending is None:
+                fail(f"data line without event line: {line!r}")
+            obj = json.loads(line[len("data: "):])
+            if obj.get("schema") != "sh2-event-v1":
+                fail(f"bad event schema in {obj!r}")
+            if obj.get("event") != pending:
+                fail(f"event: line {pending!r} disagrees with payload {obj!r}")
+            events.append(obj)
+            pending = None
+        elif line == "" or line.startswith(":"):
+            continue
+        else:
+            fail(f"malformed SSE line {line!r}")
+    if pending is not None:
+        fail("stream ended with a dangling event: line")
+
+    if not events or events[0]["event"] != "admitted":
+        fail(f"stream must open with admitted, got {events[:1]!r}")
+    tokens = [e for e in events if e["event"] == "token"]
+    if len(tokens) != MAX_NEW:
+        fail(f"expected {MAX_NEW} token frames, got {len(tokens)}")
+    terminal = [e for e in events if e["event"] in ("finished", "cancelled", "rejected")]
+    if len(terminal) != 1 or events[-1] is not terminal[0]:
+        fail(f"expected exactly one trailing terminal event, got {terminal!r}")
+    if terminal[0]["event"] != "finished" or terminal[0].get("reason") != "max_new":
+        fail(f"bad terminal event {terminal[0]!r}")
+
+
+def check_metrics(addr):
+    status, _, body = request(addr, "GET", "/metrics")
+    if status != 200:
+        fail(f"/metrics returned {status}")
+    snap = json.loads(body)
+    if snap.get("schema") != "sh2-metrics-v1":
+        fail(f"/metrics schema {snap.get('schema')!r}")
+    counters = snap.get("counters", {})
+    for name in REQUIRED_COUNTERS:
+        if name not in counters:
+            fail(f"/metrics missing counter '{name}'")
+    if counters["serve.ticks"] <= 0:
+        fail("serve.ticks is zero: the engine never ticked")
+
+    status, ctype, text = request(addr, "GET", "/metrics?format=prometheus")
+    if status != 200:
+        fail(f"/metrics?format=prometheus returned {status}")
+    if not ctype.startswith("text/plain"):
+        fail(f"prometheus content-type {ctype!r}")
+    if "# TYPE sh2_gateway_requests counter" not in text:
+        fail("prometheus exposition missing sh2_gateway_requests")
+    for line in text.splitlines():
+        if line.startswith("#") or not line:
+            continue
+        name = line.split(" ", 1)[0]
+        if not name.startswith("sh2_"):
+            fail(f"unprefixed prometheus metric line {line!r}")
+
+
+def check_shutdown(proc, lines):
+    proc.send_signal(signal.SIGINT)
+    try:
+        rc = proc.wait(timeout=60)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        fail("gateway did not exit within 60s of SIGINT")
+    if rc != 0:
+        fail(f"gateway exited {rc} after SIGINT: {proc.stderr.read()!r}")
+    time.sleep(0.2)  # let the pump thread drain the tail
+    schemas = []
+    for line in lines:
+        line = line.strip()
+        if not line.startswith("{"):
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        schemas.append(obj.get("schema"))
+    if schemas.count("sh2-gateway-v1") != 1:
+        fail(f"expected one sh2-gateway-v1 summary line, got {schemas!r}")
+    if schemas.count("sh2-metrics-v1") != 1:
+        fail(f"expected one final sh2-metrics-v1 line, got {schemas!r}")
+
+
+def main():
+    binary = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        "target", "release", "sh2")
+    if not os.path.exists(binary):
+        fail(f"binary {binary} not found (build with cargo build --release)")
+    proc, lines, addr = start_gateway(binary)
+    try:
+        check_health(addr)
+        check_generate(addr)
+        check_metrics(addr)
+    except Exception:
+        proc.kill()
+        raise
+    check_shutdown(proc, lines)
+    print(f"check_gateway: ok (addr {addr[0]}:{addr[1]}, {MAX_NEW} tokens streamed, "
+          "metrics + prometheus + drain verified)")
+
+
+if __name__ == "__main__":
+    main()
