@@ -122,6 +122,11 @@ const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|re
           step_batch call and spends the remaining token budget on prefill
           chunks; prints an sh2-serve-v1 JSON summary line with tokens/s,
           mean batch occupancy, TTFT p50/p90, prefill/restore token split)
+          --state-dtype f32|f16|int8 (decode-state storage dtype; compute
+          stays f32; default f32, or SH2_STATE_DTYPE; hyena layers pin f32)
+          --prefix-cache-mb MB (radix prefix cache byte budget; 0 = off;
+          needs a finite --prefill-chunk — admissions fork cached prompt
+          prefixes and skip prefilling them)
           --listen ADDR (HTTP/SSE gateway mode: POST /v1/generate streams
           sh2-event-v1 frames, GET /health, GET /metrics[?format=prometheus];
           port 0 picks an ephemeral one; SIGINT drains and exits)
@@ -136,6 +141,7 @@ const USAGE: &str = "usage: sh2 <train|train-tasks|eval|recall|generate|serve|re
           --max-active A --budget-kb KB (0 = unlimited) --prefill-chunk C
           --tick-budget T --sched-seed S --width D --heads H --layout ...
           --top-k K --temp T --load CKPT --plan-cache PATH
+          --state-dtype f32|f16|int8 --prefix-cache-mb MB (as in serve)
           (tick-based deterministic replay: per-policy TTFT/TBT percentiles,
           goodput, preemptions, and an event-stream hash; one sh2-replay-v1
           JSON line per policy)
@@ -169,6 +175,21 @@ fn sampler_from(args: &Args) -> Sampler {
         args.get_usize("top-k", 0),
         args.get_f64("temp", 1.0) as f32,
     )
+}
+
+/// `--state-dtype` with the `SH2_STATE_DTYPE` env fallback (DESIGN.md §19).
+fn state_dtype_from(args: &Args) -> Result<sh2::serve::StateDtype> {
+    match args.get("state-dtype") {
+        Some(s) => sh2::serve::StateDtype::parse(s)
+            .ok_or_else(|| anyhow!("unknown --state-dtype '{s}' (f32|f16|int8)")),
+        None => Ok(sh2::serve::StateDtype::from_env()),
+    }
+}
+
+/// `--prefix-cache-mb` in bytes; `None` (0 or absent) leaves the cache off.
+fn prefix_cache_bytes_from(args: &Args) -> Option<usize> {
+    let mb = args.get_usize("prefix-cache-mb", 0);
+    (mb > 0).then_some(mb * 1024 * 1024)
 }
 
 /// Load the persisted conv plan cache (if present) into the process-wide
@@ -239,7 +260,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     load_plan_cache(args);
     let seed = args.get_usize("seed", 0) as u64;
     let mut rng = Rng::new(seed);
-    let model = build_lm(args, &mut rng)?;
+    let mut model = build_lm(args, &mut rng)?;
+    let state_dtype = state_dtype_from(args)?;
+    model.set_state_dtype(state_dtype);
     let n_streams = args.get_usize("streams", 8);
     let prompt_len = args.get_usize("prompt-len", 64);
     let max_new = args.get_usize("max-new", 32);
@@ -281,6 +304,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(tl) = &timeline {
         sched.set_timeline(tl.clone());
     }
+    if let Some(bytes) = prefix_cache_bytes_from(args) {
+        if cfg.prefill_chunk == usize::MAX {
+            bail!("--prefix-cache-mb needs a finite --prefill-chunk (the snapshot grid)");
+        }
+        sched.enable_prefix_cache(bytes);
+    }
     let mut gen = GenomeGenerator::new(seed ^ 0x5EED, GenomeConfig::default());
     for _ in 0..n_streams {
         sched.submit(ServeRequest::new(gen.generate(prompt_len), max_new));
@@ -294,10 +323,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let mut out = std::io::stdout();
             for e in &events {
                 let line = match e {
-                    StreamEvent::Admitted { id, restored } => format!(
-                        "[tick {n_ticks}] #{id} admitted{}",
-                        if *restored { " (restored)" } else { "" }
-                    ),
+                    StreamEvent::Admitted { id, restored, cached } => {
+                        let mut l = format!("[tick {n_ticks}] #{id} admitted");
+                        if *restored {
+                            l.push_str(" (restored)");
+                        }
+                        if *cached > 0 {
+                            l.push_str(&format!(" ({cached} tokens from prefix cache)"));
+                        }
+                        l
+                    }
                     StreamEvent::PrefillProgress { id, done, total } => {
                         format!("[tick {n_ticks}] #{id} prefill {done}/{total}")
                     }
@@ -366,8 +401,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "decoded {} tokens in {:.2}s ({:.1} tok/s overall, {:.1} tok/s in \
          batched decode) | mean batch occupancy {:.2} | prefilled {} tokens \
-         (+{} restored) | peak concurrency {} | preemptions {} | TTFT p50 {} \
-         p90 {}",
+         (+{} restored, {} from prefix cache) | peak concurrency {} | \
+         preemptions {} | TTFT p50 {} p90 {}",
         s.decode_steps,
         secs,
         s.decode_steps as f64 / secs.max(1e-9),
@@ -375,6 +410,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.mean_batch_occupancy(),
         s.prefill_tokens,
         s.restored_prefill_tokens,
+        s.cache_hit_tokens,
         s.max_concurrent,
         s.preemptions,
         ttft_summary
@@ -398,6 +434,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("mean_batch_occupancy", Json::num(s.mean_batch_occupancy())),
         ("prefill_tokens", Json::num(s.prefill_tokens as f64)),
         ("restored_prefill_tokens", Json::num(s.restored_prefill_tokens as f64)),
+        ("cache_hits", Json::num(s.cache_hits as f64)),
+        ("cache_hit_tokens", Json::num(s.cache_hit_tokens as f64)),
+        ("state_dtype", Json::str(state_dtype.name())),
         ("preemptions", Json::num(s.preemptions as f64)),
         ("ttft_p50_ms", Json::num(ttft_summary.as_ref().map_or(0.0, |t| t.p50 * 1e3))),
         ("ttft_p90_ms", Json::num(ttft_summary.as_ref().map_or(0.0, |t| t.p90 * 1e3))),
@@ -427,7 +466,8 @@ fn cmd_serve_gateway(args: &Args) -> Result<()> {
     load_plan_cache(args);
     let seed = args.get_usize("seed", 0) as u64;
     let mut rng = Rng::new(seed);
-    let model = build_lm(args, &mut rng)?;
+    let mut model = build_lm(args, &mut rng)?;
+    model.set_state_dtype(state_dtype_from(args)?);
     let max_active = args.get_usize("max-active", 4);
     let budget = args.get_usize("budget-kb", 4096) * 1024;
     let unlimited = |v: usize| if v == 0 { usize::MAX } else { v };
@@ -456,6 +496,12 @@ fn cmd_serve_gateway(args: &Args) -> Result<()> {
     );
     if let Some(tl) = &timeline {
         sched.set_timeline(tl.clone());
+    }
+    if let Some(bytes) = prefix_cache_bytes_from(args) {
+        if cfg.prefill_chunk == usize::MAX {
+            bail!("--prefix-cache-mb needs a finite --prefill-chunk (the snapshot grid)");
+        }
+        sched.enable_prefix_cache(bytes);
     }
 
     let gcfg = GatewayCfg {
@@ -582,7 +628,8 @@ fn cmd_replay(args: &Args) -> Result<()> {
         s => vec![parse_policy(s)?],
     };
     let mut rng = Rng::new(args.get_usize("seed", 0) as u64 ^ 0xC0FFEE);
-    let model = build_lm(args, &mut rng)?;
+    let mut model = build_lm(args, &mut rng)?;
+    model.set_state_dtype(state_dtype_from(args)?);
     let unlimited = |v: usize| if v == 0 { usize::MAX } else { v };
     let rcfg = ReplayCfg {
         max_active: args.get_usize("max-active", 4),
@@ -592,7 +639,11 @@ fn cmd_replay(args: &Args) -> Result<()> {
             tick_budget: unlimited(args.get_usize("tick-budget", 32)),
         },
         seed: args.get_usize("sched-seed", 7) as u64,
+        prefix_cache_bytes: prefix_cache_bytes_from(args),
     };
+    if rcfg.prefix_cache_bytes.is_some() && rcfg.tick.prefill_chunk == usize::MAX {
+        bail!("--prefix-cache-mb needs a finite --prefill-chunk (the snapshot grid)");
+    }
     let sampler = sampler_from(args);
     let longest = trace.requests.iter().map(|r| r.prompt.len()).max().unwrap_or(1);
     model.warm_plans(&[rcfg.tick.prefill_chunk.min(longest.max(1))]);

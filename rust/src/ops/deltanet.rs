@@ -4,27 +4,30 @@
 
 use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer, StateBatch};
 use crate::exec::{ExecCtx, SharedSlice};
+use crate::serve::statemem::{qbuf_bytes, QBuf, StateDtype};
 use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Fixed-size decode state: per head the delta-rule fast-weight matrix S
-/// (dh x dh, flattened head-major) — O(1) in sequence length.
+/// (dh x dh, flattened head-major) — O(1) in sequence length. Stored at
+/// the operator's [`StateDtype`], computed in f32 through [`QBuf::open`].
 #[derive(Clone, Debug)]
 pub struct DeltaNetState {
     pub pos: usize,
-    s: Vec<f32>,
+    s: QBuf,
 }
 
 impl DeltaNetState {
     pub fn bytes(&self) -> usize {
-        self.s.len() * std::mem::size_of::<f32>()
+        self.s.bytes()
     }
 }
 
 pub struct DeltaNetOp {
     pub d: usize,
     pub n_heads: usize,
+    dtype: StateDtype,
     wqkv: Tensor,
     wbeta: Tensor,
     wo: Tensor,
@@ -35,6 +38,7 @@ impl DeltaNetOp {
         DeltaNetOp {
             d,
             n_heads,
+            dtype: StateDtype::F32,
             wqkv: proj(rng, d, 3 * d),
             wbeta: proj(rng, d, n_heads),
             wo: proj(rng, d, d),
@@ -136,6 +140,10 @@ impl SeqMixer for DeltaNetOp {
         self.d
     }
 
+    fn set_state_dtype(&mut self, dtype: StateDtype) {
+        self.dtype = dtype;
+    }
+
     fn params(&self) -> Vec<(&'static str, &Tensor)> {
         vec![("wqkv", &self.wqkv), ("wbeta", &self.wbeta), ("wo", &self.wo)]
     }
@@ -152,14 +160,15 @@ impl SeqMixer for DeltaNetOp {
         let dh = self.d / self.n_heads;
         DecodeState::DeltaNet(DeltaNetState {
             pos: 0,
-            s: vec![0.0; self.n_heads * dh * dh],
+            s: QBuf::new(self.n_heads * dh * dh, self.dtype),
         })
     }
 
-    /// The fast-weight matrices are allocated in full up front.
+    /// The fast-weight matrices are allocated in full up front; the
+    /// shared `statemem` accounting keeps this equal to `bytes()`.
     fn state_bytes_at(&self, _pos: usize) -> usize {
         let dh = self.d / self.n_heads;
-        self.n_heads * dh * dh * std::mem::size_of::<f32>()
+        qbuf_bytes(self.n_heads * dh * dh, self.dtype)
     }
 
     fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
@@ -173,32 +182,35 @@ impl SeqMixer for DeltaNetOp {
         let mut y = vec![0.0f32; d];
         let mut kn = vec![0.0f32; dh];
         let mut pred = vec![0.0f32; dh];
-        for h in 0..self.n_heads {
-            let off = h * dh;
-            let b = 1.0 / (1.0 + (-beta_raw[h]).exp());
-            let kr = &qkv[d + off..d + off + dh];
-            let norm = (kr.iter().map(|x| x * x).sum::<f32>()).sqrt().max(1e-6);
-            for (o, &x) in kn.iter_mut().zip(kr) {
-                *o = x / norm;
-            }
-            let s = &mut st.s[h * dh * dh..(h + 1) * dh * dh];
-            for i in 0..dh {
-                let srow = &s[i * dh..(i + 1) * dh];
-                pred[i] = srow.iter().zip(&kn).map(|(a, b)| a * b).sum();
-            }
-            let vr = &qkv[2 * d + off..2 * d + off + dh];
-            for i in 0..dh {
-                let err = b * (vr[i] - pred[i]);
-                let srow = &mut s[i * dh..(i + 1) * dh];
-                for (sv, &kv_) in srow.iter_mut().zip(&kn) {
-                    *sv += err * kv_;
+        {
+            let mut s_all = st.s.open();
+            for h in 0..self.n_heads {
+                let off = h * dh;
+                let b = 1.0 / (1.0 + (-beta_raw[h]).exp());
+                let kr = &qkv[d + off..d + off + dh];
+                let norm = (kr.iter().map(|x| x * x).sum::<f32>()).sqrt().max(1e-6);
+                for (o, &x) in kn.iter_mut().zip(kr) {
+                    *o = x / norm;
                 }
-            }
-            let qr = &qkv[off..off + dh];
-            let yr = &mut y[off..off + dh];
-            for i in 0..dh {
-                let srow = &s[i * dh..(i + 1) * dh];
-                yr[i] = srow.iter().zip(qr).map(|(a, b)| a * b).sum();
+                let s = &mut s_all[h * dh * dh..(h + 1) * dh * dh];
+                for i in 0..dh {
+                    let srow = &s[i * dh..(i + 1) * dh];
+                    pred[i] = srow.iter().zip(&kn).map(|(a, b)| a * b).sum();
+                }
+                let vr = &qkv[2 * d + off..2 * d + off + dh];
+                for i in 0..dh {
+                    let err = b * (vr[i] - pred[i]);
+                    let srow = &mut s[i * dh..(i + 1) * dh];
+                    for (sv, &kv_) in srow.iter_mut().zip(&kn) {
+                        *sv += err * kv_;
+                    }
+                }
+                let qr = &qkv[off..off + dh];
+                let yr = &mut y[off..off + dh];
+                for i in 0..dh {
+                    let srow = &s[i * dh..(i + 1) * dh];
+                    yr[i] = srow.iter().zip(qr).map(|(a, b)| a * b).sum();
+                }
             }
         }
         st.pos += 1;
@@ -233,7 +245,7 @@ impl SeqMixer for DeltaNetOp {
             let DecodeState::DeltaNet(s) = &**st else {
                 panic!("DeltaNet step_batch: wrong decode state variant")
             };
-            sb.load(b, &s.s);
+            s.s.copy_to(sb.row_mut(b));
         }
         let mut ymid = Tensor::zeros(&[bsz, d]);
         {
@@ -282,7 +294,7 @@ impl SeqMixer for DeltaNetOp {
             let DecodeState::DeltaNet(s) = &mut **st else {
                 panic!("DeltaNet step_batch: wrong decode state variant")
             };
-            sb.store(b, &mut s.s);
+            s.s.copy_from(sb.row(b));
             s.pos += 1;
         }
         matmul_ctx(&ymid, &self.wo, ctx)
@@ -305,20 +317,23 @@ impl SeqMixer for DeltaNetOp {
             split_heads(&k, self.n_heads),
             split_heads(&v, self.n_heads),
         );
-        let heads: Vec<Tensor> = (0..self.n_heads)
-            .map(|h| {
-                let beta: Vec<f32> = (0..x.rows())
-                    .map(|t| 1.0 / (1.0 + (-beta_raw.at2(t, h)).exp()))
-                    .collect();
-                deltanet_head_with_state(
-                    &qh[h],
-                    &kh[h],
-                    &vh[h],
-                    &beta,
-                    &mut st.s[h * dh * dh..(h + 1) * dh * dh],
-                )
-            })
-            .collect();
+        let heads: Vec<Tensor> = {
+            let mut s_all = st.s.open();
+            (0..self.n_heads)
+                .map(|h| {
+                    let beta: Vec<f32> = (0..x.rows())
+                        .map(|t| 1.0 / (1.0 + (-beta_raw.at2(t, h)).exp()))
+                        .collect();
+                    deltanet_head_with_state(
+                        &qh[h],
+                        &kh[h],
+                        &vh[h],
+                        &beta,
+                        &mut s_all[h * dh * dh..(h + 1) * dh * dh],
+                    )
+                })
+                .collect()
+        };
         st.pos += x.rows();
         matmul(&merge_heads(&heads), &self.wo)
     }

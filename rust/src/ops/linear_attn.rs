@@ -3,6 +3,7 @@
 
 use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer, StateBatch};
 use crate::exec::{ExecCtx, SharedSlice};
+use crate::serve::statemem::{qbuf_bytes, QBuf, StateDtype};
 use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -10,30 +11,39 @@ use crate::util::rng::Rng;
 pub struct LinearAttnOp {
     pub d: usize,
     pub n_heads: usize,
+    dtype: StateDtype,
     wqkv: Tensor,
     wo: Tensor,
 }
 
 /// Fixed-size decode state: per head the running outer-product accumulator
 /// S (dh x dh, flattened) and key-sum z (dh) — O(1) in sequence length.
+/// Stored at the operator's [`StateDtype`] (f32 default; f16 halves the
+/// footprint), computed in f32 through [`QBuf::open`] guards.
 #[derive(Clone, Debug)]
 pub struct LinearAttnState {
     pub pos: usize,
     /// [n_heads * dh * dh], head-major.
-    s: Vec<f32>,
+    s: QBuf,
     /// [n_heads * dh], head-major.
-    z: Vec<f32>,
+    z: QBuf,
 }
 
 impl LinearAttnState {
     pub fn bytes(&self) -> usize {
-        (self.s.len() + self.z.len()) * std::mem::size_of::<f32>()
+        self.s.bytes() + self.z.bytes()
     }
 }
 
 impl LinearAttnOp {
     pub fn new(rng: &mut Rng, d: usize, n_heads: usize) -> LinearAttnOp {
-        LinearAttnOp { d, n_heads, wqkv: proj(rng, d, 3 * d), wo: proj(rng, d, d) }
+        LinearAttnOp {
+            d,
+            n_heads,
+            dtype: StateDtype::F32,
+            wqkv: proj(rng, d, 3 * d),
+            wo: proj(rng, d, d),
+        }
     }
 }
 
@@ -136,6 +146,10 @@ impl SeqMixer for LinearAttnOp {
         self.d
     }
 
+    fn set_state_dtype(&mut self, dtype: StateDtype) {
+        self.dtype = dtype;
+    }
+
     fn params(&self) -> Vec<(&'static str, &Tensor)> {
         vec![("wqkv", &self.wqkv), ("wo", &self.wo)]
     }
@@ -148,15 +162,17 @@ impl SeqMixer for LinearAttnOp {
         let dh = self.d / self.n_heads;
         DecodeState::LinearAttn(LinearAttnState {
             pos: 0,
-            s: vec![0.0; self.n_heads * dh * dh],
-            z: vec![0.0; self.n_heads * dh],
+            s: QBuf::new(self.n_heads * dh * dh, self.dtype),
+            z: QBuf::new(self.n_heads * dh, self.dtype),
         })
     }
 
-    /// (S, z) are allocated in full up front and never grow.
+    /// (S, z) are allocated in full up front and never grow; the shared
+    /// `statemem` accounting keeps this equal to `bytes()` at any dtype.
     fn state_bytes_at(&self, _pos: usize) -> usize {
         let dh = self.d / self.n_heads;
-        (self.n_heads * dh * dh + self.n_heads * dh) * std::mem::size_of::<f32>()
+        qbuf_bytes(self.n_heads * dh * dh, self.dtype)
+            + qbuf_bytes(self.n_heads * dh, self.dtype)
     }
 
     fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
@@ -169,37 +185,43 @@ impl SeqMixer for LinearAttnOp {
         let mut y = vec![0.0f32; d];
         let mut fk = vec![0.0f32; dh];
         let mut fq = vec![0.0f32; dh];
-        for h in 0..self.n_heads {
-            let off = h * dh;
-            for i in 0..dh {
-                fq[i] = elu1(qkv[off + i]);
-                fk[i] = elu1(qkv[d + off + i]);
-            }
-            let vrow = &qkv[2 * d + off..2 * d + off + dh];
-            let s = &mut st.s[h * dh * dh..(h + 1) * dh * dh];
-            let z = &mut st.z[off..off + dh];
-            for i in 0..dh {
-                let fki = fk[i];
-                z[i] += fki;
-                let srow = &mut s[i * dh..(i + 1) * dh];
-                for (sv, &vv) in srow.iter_mut().zip(vrow) {
-                    *sv += fki * vv;
+        {
+            // f32 compute through the dtype guards; dropping them at
+            // block end requantizes (no-op copies at f32).
+            let mut s_all = st.s.open();
+            let mut z_all = st.z.open();
+            for h in 0..self.n_heads {
+                let off = h * dh;
+                for i in 0..dh {
+                    fq[i] = elu1(qkv[off + i]);
+                    fk[i] = elu1(qkv[d + off + i]);
                 }
-            }
-            let mut denom = 1e-6f32;
-            for i in 0..dh {
-                denom += fq[i] * z[i];
-            }
-            let orow = &mut y[off..off + dh];
-            for i in 0..dh {
-                let fqi = fq[i];
-                let srow = &s[i * dh..(i + 1) * dh];
-                for (o, &sv) in orow.iter_mut().zip(srow) {
-                    *o += fqi * sv;
+                let vrow = &qkv[2 * d + off..2 * d + off + dh];
+                let s = &mut s_all[h * dh * dh..(h + 1) * dh * dh];
+                let z = &mut z_all[off..off + dh];
+                for i in 0..dh {
+                    let fki = fk[i];
+                    z[i] += fki;
+                    let srow = &mut s[i * dh..(i + 1) * dh];
+                    for (sv, &vv) in srow.iter_mut().zip(vrow) {
+                        *sv += fki * vv;
+                    }
                 }
-            }
-            for o in orow.iter_mut() {
-                *o /= denom;
+                let mut denom = 1e-6f32;
+                for i in 0..dh {
+                    denom += fq[i] * z[i];
+                }
+                let orow = &mut y[off..off + dh];
+                for i in 0..dh {
+                    let fqi = fq[i];
+                    let srow = &s[i * dh..(i + 1) * dh];
+                    for (o, &sv) in orow.iter_mut().zip(srow) {
+                        *o += fqi * sv;
+                    }
+                }
+                for o in orow.iter_mut() {
+                    *o /= denom;
+                }
             }
         }
         st.pos += 1;
@@ -236,8 +258,8 @@ impl SeqMixer for LinearAttnOp {
             let DecodeState::LinearAttn(s) = &**st else {
                 panic!("LinearAttn step_batch: wrong decode state variant")
             };
-            sb.load(b, &s.s);
-            zb.load(b, &s.z);
+            s.s.copy_to(sb.row_mut(b));
+            s.z.copy_to(zb.row_mut(b));
         }
         let mut ymid = Tensor::zeros(&[bsz, d]);
         {
@@ -292,8 +314,8 @@ impl SeqMixer for LinearAttnOp {
             let DecodeState::LinearAttn(s) = &mut **st else {
                 panic!("LinearAttn step_batch: wrong decode state variant")
             };
-            sb.store(b, &mut s.s);
-            zb.store(b, &mut s.z);
+            s.s.copy_from(sb.row(b));
+            s.z.copy_from(zb.row(b));
             s.pos += 1;
         }
         matmul_ctx(&ymid, &self.wo, ctx)
@@ -315,17 +337,21 @@ impl SeqMixer for LinearAttnOp {
             split_heads(&k, self.n_heads),
             split_heads(&v, self.n_heads),
         );
-        let heads: Vec<Tensor> = (0..self.n_heads)
-            .map(|h| {
-                linear_attention_head_with_state(
-                    &qh[h],
-                    &kh[h],
-                    &vh[h],
-                    &mut st.s[h * dh * dh..(h + 1) * dh * dh],
-                    &mut st.z[h * dh..(h + 1) * dh],
-                )
-            })
-            .collect();
+        let heads: Vec<Tensor> = {
+            let mut s_all = st.s.open();
+            let mut z_all = st.z.open();
+            (0..self.n_heads)
+                .map(|h| {
+                    linear_attention_head_with_state(
+                        &qh[h],
+                        &kh[h],
+                        &vh[h],
+                        &mut s_all[h * dh * dh..(h + 1) * dh * dh],
+                        &mut z_all[h * dh..(h + 1) * dh],
+                    )
+                })
+                .collect()
+        };
         st.pos += x.rows();
         matmul(&merge_heads(&heads), &self.wo)
     }

@@ -1,39 +1,107 @@
 //! Multi-head causal softmax attention (SDPA-style, row-blocked so no
 //! [l, l] score matrix is ever materialized — the FlashAttention dataflow).
+//!
+//! The KV cache is *paged* (DESIGN.md §19): key/value rows live in
+//! fixed [`PAGE_TOKENS`]-token [`KvPage`]s held through `Arc` handles,
+//! so per-stream KV needs no contiguity, freed pages recycle through the
+//! process-wide page pool, and prefix-cache forks share full pages
+//! copy-on-write (cloning a state bumps refcounts; `Arc::make_mut` on
+//! append clones only the partial tail page). Under a quantized
+//! [`StateDtype`] the pages hold f16/int8 rows and the state keeps an
+//! f32 dequantized shadow (rebuilt row-by-row *from the quantized
+//! bytes* at append time, so attention sees exactly what the pages
+//! store and forked streams stay byte-identical); the default f32 path
+//! reads page rows in place — zero copies, bit-identical to the old
+//! contiguous cache.
 
 use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer};
 use crate::exec::{ExecCtx, SharedSlice};
+use crate::serve::statemem::{alloc_page, kv_bytes_at, PageRef, StateDtype, PAGE_TOKENS};
 use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 pub struct MhaOp {
     pub d: usize,
     pub n_heads: usize,
+    dtype: StateDtype,
     wqkv: Tensor,
     wo: Tensor,
 }
 
-/// KV-cache decode state: post-projection key/value rows, [pos, d]
-/// row-major with heads side by side — the only per-operator state that
-/// grows with sequence length.
+/// Paged KV-cache decode state: post-projection key/value rows of width
+/// `d` (heads side by side), [`PAGE_TOKENS`] rows per page — the only
+/// per-operator state that grows with sequence length. `Clone` is the
+/// fork operation: pages are `Arc`-shared copy-on-write.
 #[derive(Clone, Debug)]
 pub struct MhaState {
     pub pos: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    d: usize,
+    dtype: StateDtype,
+    pages: Vec<PageRef>,
+    /// f32 shadow of the quantized cache (empty at f32 dtype, where page
+    /// rows are read in place). Scratch, not storage: excluded from
+    /// [`MhaState::bytes`], same as `LmState`'s step scratch.
+    deq_k: Vec<f32>,
+    deq_v: Vec<f32>,
 }
 
 impl MhaState {
+    /// Storage bytes: whole pages, through the shared `statemem`
+    /// accounting (equals `kv_bytes_at(pos, d, dtype)` by construction).
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+        self.pages.iter().map(|p| p.bytes()).sum()
+    }
+
+    /// Key row for absolute position `s` as f32.
+    fn k_row(&self, s: usize) -> &[f32] {
+        match self.dtype {
+            StateDtype::F32 => self.pages[s / PAGE_TOKENS].k_f32_row(s % PAGE_TOKENS),
+            _ => &self.deq_k[s * self.d..(s + 1) * self.d],
+        }
+    }
+
+    /// Value row for absolute position `s` as f32.
+    fn v_row(&self, s: usize) -> &[f32] {
+        match self.dtype {
+            StateDtype::F32 => self.pages[s / PAGE_TOKENS].v_f32_row(s % PAGE_TOKENS),
+            _ => &self.deq_v[s * self.d..(s + 1) * self.d],
+        }
+    }
+
+    /// Append one (k, v) row pair, allocating a page at page boundaries
+    /// and COW-breaking a shared tail page. Quantized dtypes re-read the
+    /// just-written row into the f32 shadow so compute always sees the
+    /// stored (rounded) values.
+    fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        let d = self.d;
+        if self.pos % PAGE_TOKENS == 0 {
+            self.pages.push(Arc::new(alloc_page(d, self.dtype)));
+        }
+        let page = Arc::make_mut(self.pages.last_mut().expect("page just ensured"));
+        let r = self.pos % PAGE_TOKENS;
+        page.push_row(k_row, v_row);
+        self.pos += 1;
+        if self.dtype != StateDtype::F32 {
+            self.deq_k.resize(self.pos * d, 0.0);
+            self.deq_v.resize(self.pos * d, 0.0);
+            page.read_k_row(r, &mut self.deq_k[(self.pos - 1) * d..]);
+            page.read_v_row(r, &mut self.deq_v[(self.pos - 1) * d..]);
+        }
     }
 }
 
 impl MhaOp {
     pub fn new(rng: &mut Rng, d: usize, n_heads: usize) -> MhaOp {
         assert_eq!(d % n_heads, 0);
-        MhaOp { d, n_heads, wqkv: proj(rng, d, 3 * d), wo: proj(rng, d, d) }
+        MhaOp {
+            d,
+            n_heads,
+            dtype: StateDtype::F32,
+            wqkv: proj(rng, d, 3 * d),
+            wo: proj(rng, d, d),
+        }
     }
 
     /// Causal attention of one fresh query row against the cache, with the
@@ -49,7 +117,7 @@ impl MhaOp {
             let qh = &q[off..off + dh];
             let mut maxs = f32::NEG_INFINITY;
             for (s, sc) in scores.iter_mut().enumerate() {
-                let krow = &st.k[s * d + off..s * d + off + dh];
+                let krow = &st.k_row(s)[off..off + dh];
                 let mut dot = 0.0f32;
                 for (a, b) in qh.iter().zip(krow) {
                     dot += a * b;
@@ -64,7 +132,7 @@ impl MhaOp {
             }
             let orow = &mut y[off..off + dh];
             for (s, &w) in scores.iter().enumerate() {
-                let vrow = &st.v[s * d + off..s * d + off + dh];
+                let vrow = &st.v_row(s)[off..off + dh];
                 let wn = w / denom;
                 for (o, val) in orow.iter_mut().zip(vrow) {
                     *o += wn * val;
@@ -147,6 +215,10 @@ impl SeqMixer for MhaOp {
         self.d
     }
 
+    fn set_state_dtype(&mut self, dtype: StateDtype) {
+        self.dtype = dtype;
+    }
+
     fn params(&self) -> Vec<(&'static str, &Tensor)> {
         vec![("wqkv", &self.wqkv), ("wo", &self.wo)]
     }
@@ -156,13 +228,21 @@ impl SeqMixer for MhaOp {
     }
 
     fn state(&self) -> DecodeState {
-        DecodeState::Mha(MhaState { pos: 0, k: Vec::new(), v: Vec::new() })
+        DecodeState::Mha(MhaState {
+            pos: 0,
+            d: self.d,
+            dtype: self.dtype,
+            pages: Vec::new(),
+            deq_k: Vec::new(),
+            deq_v: Vec::new(),
+        })
     }
 
-    /// KV cache: one post-projection key row and value row per absorbed
-    /// token, so the footprint grows linearly with position.
+    /// KV cache in whole pages: one (k, v) row per absorbed token,
+    /// rounded up to the page the last token lands in — the same figure
+    /// [`MhaState::bytes`] realizes, via the same `statemem` helper.
     fn state_bytes_at(&self, pos: usize) -> usize {
-        2 * pos * self.d * std::mem::size_of::<f32>()
+        kv_bytes_at(pos, self.d, self.dtype)
     }
 
     fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
@@ -171,9 +251,7 @@ impl SeqMixer for MhaOp {
         };
         let d = self.d;
         let qkv = vecmat(x_t, &self.wqkv);
-        st.k.extend_from_slice(&qkv[d..2 * d]);
-        st.v.extend_from_slice(&qkv[2 * d..3 * d]);
-        st.pos += 1;
+        st.push(&qkv[d..2 * d], &qkv[2 * d..3 * d]);
         let y = self.attend_cached(st, &qkv[..d]);
         vecmat(&y, &self.wo)
     }
@@ -183,7 +261,9 @@ impl SeqMixer for MhaOp {
     /// append-only — see DESIGN.md §13), so each stream appends its new
     /// K/V row and attends against its own history. Rows are bit-identical
     /// to serial [`SeqMixer::step`]; cache append + attention run one
-    /// [`crate::exec`] task per stream (each owning its own cache).
+    /// [`crate::exec`] task per stream (each owning its own page table —
+    /// only the page pool's free-list mutex is shared, and it is touched
+    /// at most once per page boundary).
     fn step_batch_ctx(
         &self,
         states: &mut [&mut DecodeState],
@@ -212,9 +292,7 @@ impl SeqMixer for MhaOp {
                     panic!("MHA step_batch: wrong decode state variant")
                 };
                 let qkv_r = qkv.row(b);
-                s.k.extend_from_slice(&qkv_r[d..2 * d]);
-                s.v.extend_from_slice(&qkv_r[2 * d..3 * d]);
-                s.pos += 1;
+                s.push(&qkv_r[d..2 * d], &qkv_r[2 * d..3 * d]);
                 let y = self.attend_cached(s, &qkv_r[..d]);
                 y_r.copy_from_slice(&y);
             });
@@ -223,9 +301,11 @@ impl SeqMixer for MhaOp {
     }
 
     /// Blocked prefill: from an empty state this runs the same GEMM +
-    /// streaming-softmax path as `forward` while recording the KV cache;
-    /// with prior context it falls back to stepping (the cache is the
-    /// history, so each new row must attend to it).
+    /// streaming-softmax path as `forward` while recording the KV cache
+    /// (outputs come from the f32 projection tensors — identical numerics
+    /// to `forward` — while the pages store at the state dtype); with
+    /// prior context it falls back to stepping (the cache is the history,
+    /// so each new row must attend to it).
     fn prefill(&self, state: &mut DecodeState, x: &Tensor) -> Tensor {
         {
             let DecodeState::Mha(st) = &mut *state else {
@@ -238,10 +318,8 @@ impl SeqMixer for MhaOp {
                 let k = qkv.slice_cols(self.d, 2 * self.d);
                 let v = qkv.slice_cols(2 * self.d, 3 * self.d);
                 for t in 0..l {
-                    st.k.extend_from_slice(k.row(t));
-                    st.v.extend_from_slice(v.row(t));
+                    st.push(k.row(t), v.row(t));
                 }
-                st.pos = l;
                 let (qh, kh, vh) = (
                     split_heads(&q, self.n_heads),
                     split_heads(&k, self.n_heads),
@@ -303,5 +381,77 @@ mod tests {
         let v = Tensor::from_vec(&[l, dh], (0..l * dh).map(|i| i as f32).collect());
         let y = causal_attention_head(&q, &k, &v);
         assert!(y.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn forked_state_decodes_identically_to_original() {
+        // Fork = Clone: shared pages, COW on append. The fork and the
+        // original must produce bit-identical outputs from the same
+        // inputs, and diverging the fork must not disturb the original.
+        let mut rng = Rng::new(7);
+        let d = 16;
+        let op = MhaOp::new(&mut rng, d, 2);
+        let x = Tensor::randn(&mut rng, &[PAGE_TOKENS + 3, d], 1.0);
+        let mut base = op.state();
+        op.prefill(&mut base, &x); // full page + partial tail page
+        let snap = base.clone();
+        let probe = Tensor::randn(&mut rng, &[1, d], 1.0);
+        let y_base = op.step(&mut base, probe.row(0));
+        let mut fork = snap.clone();
+        let y_fork = op.step(&mut fork, probe.row(0));
+        assert_eq!(y_base, y_fork, "fork must decode bit-identically");
+        // COW: base and fork both appended past the snapshot; the
+        // snapshot itself is still intact and forkable again.
+        let mut fork2 = snap.clone();
+        let y2 = op.step(&mut fork2, probe.row(0));
+        assert_eq!(y_base, y2, "snapshot must be undisturbed by forks");
+    }
+
+    #[test]
+    fn paged_bytes_match_projection_at_every_position() {
+        let mut rng = Rng::new(8);
+        let d = 16;
+        for dtype in [StateDtype::F32, StateDtype::F16, StateDtype::Int8] {
+            let mut op = MhaOp::new(&mut rng, d, 2);
+            op.set_state_dtype(dtype);
+            let mut st = op.state();
+            let x = Tensor::randn(&mut rng, &[2 * PAGE_TOKENS + 3, d], 1.0);
+            for t in 0..x.rows() {
+                op.step(&mut st, x.row(t));
+                assert_eq!(
+                    st.bytes(),
+                    op.state_bytes_at(t + 1),
+                    "dtype {dtype:?} pos {}",
+                    t + 1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_decode_tracks_f32_within_row_scale() {
+        // f16 KV: attention output should track the f32 path within the
+        // f16 round-off of the cached rows (loose bound — the softmax
+        // renormalizes, so errors do not amplify).
+        let mut rng = Rng::new(9);
+        let d = 16;
+        let op_f32 = MhaOp::new(&mut rng, d, 2);
+        let mut op_f16 = MhaOp {
+            d,
+            n_heads: 2,
+            dtype: StateDtype::F16,
+            wqkv: op_f32.wqkv.clone(),
+            wo: op_f32.wo.clone(),
+        };
+        op_f16.set_state_dtype(StateDtype::F16);
+        let x = Tensor::randn(&mut rng, &[12, d], 1.0);
+        let (mut a, mut b) = (op_f32.state(), op_f16.state());
+        let mut last = (Vec::new(), Vec::new());
+        for t in 0..x.rows() {
+            last = (op_f32.step(&mut a, x.row(t)), op_f16.step(&mut b, x.row(t)));
+        }
+        for (p, q) in last.0.iter().zip(last.1.iter()) {
+            assert!((p - q).abs() < 5e-2, "{p} vs {q}");
+        }
     }
 }

@@ -3,28 +3,31 @@
 
 use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer, StateBatch};
 use crate::exec::{ExecCtx, SharedSlice};
+use crate::serve::statemem::{qbuf_bytes, QBuf, StateDtype};
 use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Fixed-size decode state: per head the matrix memory C (dh x dh) and the
-/// normalizer n (dh), flattened head-major — O(1) in sequence length.
+/// normalizer n (dh), flattened head-major — O(1) in sequence length. Both
+/// buffers live in a [`QBuf`] so cached streams can hold them quantized.
 #[derive(Clone, Debug)]
 pub struct MlstmState {
     pub pos: usize,
-    c: Vec<f32>,
-    n: Vec<f32>,
+    c: QBuf,
+    n: QBuf,
 }
 
 impl MlstmState {
     pub fn bytes(&self) -> usize {
-        (self.c.len() + self.n.len()) * std::mem::size_of::<f32>()
+        self.c.bytes() + self.n.bytes()
     }
 }
 
 pub struct MlstmOp {
     pub d: usize,
     pub n_heads: usize,
+    dtype: StateDtype,
     wqkv: Tensor,
     wif: Tensor, // input/forget gate pre-activations, [d, 2*n_heads]
     wo: Tensor,
@@ -35,6 +38,7 @@ impl MlstmOp {
         MlstmOp {
             d,
             n_heads,
+            dtype: StateDtype::F32,
             wqkv: proj(rng, d, 3 * d),
             wif: proj(rng, d, 2 * n_heads),
             wo: proj(rng, d, d),
@@ -148,19 +152,23 @@ impl SeqMixer for MlstmOp {
         ]
     }
 
+    fn set_state_dtype(&mut self, dtype: StateDtype) {
+        self.dtype = dtype;
+    }
+
     fn state(&self) -> DecodeState {
         let dh = self.d / self.n_heads;
         DecodeState::Mlstm(MlstmState {
             pos: 0,
-            c: vec![0.0; self.n_heads * dh * dh],
-            n: vec![0.0; self.n_heads * dh],
+            c: QBuf::new(self.n_heads * dh * dh, self.dtype),
+            n: QBuf::new(self.n_heads * dh, self.dtype),
         })
     }
 
     /// (C, n) are allocated in full up front and never grow.
     fn state_bytes_at(&self, _pos: usize) -> usize {
         let dh = self.d / self.n_heads;
-        (self.n_heads * dh * dh + self.n_heads * dh) * std::mem::size_of::<f32>()
+        qbuf_bytes(self.n_heads * dh * dh, self.dtype) + qbuf_bytes(self.n_heads * dh, self.dtype)
     }
 
     fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
@@ -173,35 +181,39 @@ impl SeqMixer for MlstmOp {
         let gates = vecmat(x_t, &self.wif);
         let sig = |x: f32| 1.0 / (1.0 + (-x).exp());
         let mut y = vec![0.0f32; d];
-        for h in 0..self.n_heads {
-            let off = h * dh;
-            let (i_t, f_t) = (sig(gates[2 * h]), sig(gates[2 * h + 1]));
-            let kr = &qkv[d + off..d + off + dh];
-            let vr = &qkv[2 * d + off..2 * d + off + dh];
-            let c = &mut st.c[h * dh * dh..(h + 1) * dh * dh];
-            let n = &mut st.n[off..off + dh];
-            for a in 0..dh {
-                let iv = i_t * vr[a];
-                let crow = &mut c[a * dh..(a + 1) * dh];
-                for (cv, &kv_) in crow.iter_mut().zip(kr) {
-                    *cv = f_t * *cv + iv * kv_;
+        {
+            let mut c_all = st.c.open();
+            let mut n_all = st.n.open();
+            for h in 0..self.n_heads {
+                let off = h * dh;
+                let (i_t, f_t) = (sig(gates[2 * h]), sig(gates[2 * h + 1]));
+                let kr = &qkv[d + off..d + off + dh];
+                let vr = &qkv[2 * d + off..2 * d + off + dh];
+                let c = &mut c_all[h * dh * dh..(h + 1) * dh * dh];
+                let n = &mut n_all[off..off + dh];
+                for a in 0..dh {
+                    let iv = i_t * vr[a];
+                    let crow = &mut c[a * dh..(a + 1) * dh];
+                    for (cv, &kv_) in crow.iter_mut().zip(kr) {
+                        *cv = f_t * *cv + iv * kv_;
+                    }
                 }
-            }
-            for (nv, &kv_) in n.iter_mut().zip(kr) {
-                *nv = f_t * *nv + i_t * kv_;
-            }
-            let qr = &qkv[off..off + dh];
-            let denom = n
-                .iter()
-                .zip(qr)
-                .map(|(a, b)| a * b)
-                .sum::<f32>()
-                .abs()
-                .max(1.0);
-            let yr = &mut y[off..off + dh];
-            for a in 0..dh {
-                let crow = &c[a * dh..(a + 1) * dh];
-                yr[a] = crow.iter().zip(qr).map(|(x, z)| x * z).sum::<f32>() / denom;
+                for (nv, &kv_) in n.iter_mut().zip(kr) {
+                    *nv = f_t * *nv + i_t * kv_;
+                }
+                let qr = &qkv[off..off + dh];
+                let denom = n
+                    .iter()
+                    .zip(qr)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+                    .abs()
+                    .max(1.0);
+                let yr = &mut y[off..off + dh];
+                for a in 0..dh {
+                    let crow = &c[a * dh..(a + 1) * dh];
+                    yr[a] = crow.iter().zip(qr).map(|(x, z)| x * z).sum::<f32>() / denom;
+                }
             }
         }
         st.pos += 1;
@@ -238,8 +250,8 @@ impl SeqMixer for MlstmOp {
             let DecodeState::Mlstm(s) = &**st else {
                 panic!("mLSTM step_batch: wrong decode state variant")
             };
-            cb.load(b, &s.c);
-            nb.load(b, &s.n);
+            s.c.copy_to(cb.row_mut(b));
+            s.n.copy_to(nb.row_mut(b));
         }
         let mut ymid = Tensor::zeros(&[bsz, d]);
         {
@@ -291,8 +303,8 @@ impl SeqMixer for MlstmOp {
             let DecodeState::Mlstm(s) = &mut **st else {
                 panic!("mLSTM step_batch: wrong decode state variant")
             };
-            cb.store(b, &mut s.c);
-            nb.store(b, &mut s.n);
+            s.c.copy_from(cb.row(b));
+            s.n.copy_from(nb.row(b));
             s.pos += 1;
         }
         matmul_ctx(&ymid, &self.wo, ctx)
@@ -316,22 +328,27 @@ impl SeqMixer for MlstmOp {
             split_heads(&k, self.n_heads),
             split_heads(&v, self.n_heads),
         );
-        let heads: Vec<Tensor> = (0..self.n_heads)
-            .map(|h| {
-                let ig: Vec<f32> = (0..x.rows()).map(|t| sig(gates.at2(t, 2 * h))).collect();
-                let fg: Vec<f32> =
-                    (0..x.rows()).map(|t| sig(gates.at2(t, 2 * h + 1))).collect();
-                mlstm_head_with_state(
-                    &qh[h],
-                    &kh[h],
-                    &vh[h],
-                    &ig,
-                    &fg,
-                    &mut st.c[h * dh * dh..(h + 1) * dh * dh],
-                    &mut st.n[h * dh..(h + 1) * dh],
-                )
-            })
-            .collect();
+        let heads: Vec<Tensor> = {
+            let mut c_all = st.c.open();
+            let mut n_all = st.n.open();
+            (0..self.n_heads)
+                .map(|h| {
+                    let ig: Vec<f32> =
+                        (0..x.rows()).map(|t| sig(gates.at2(t, 2 * h))).collect();
+                    let fg: Vec<f32> =
+                        (0..x.rows()).map(|t| sig(gates.at2(t, 2 * h + 1))).collect();
+                    mlstm_head_with_state(
+                        &qh[h],
+                        &kh[h],
+                        &vh[h],
+                        &ig,
+                        &fg,
+                        &mut c_all[h * dh * dh..(h + 1) * dh * dh],
+                        &mut n_all[h * dh..(h + 1) * dh],
+                    )
+                })
+                .collect()
+        };
         st.pos += x.rows();
         matmul(&merge_heads(&heads), &self.wo)
     }

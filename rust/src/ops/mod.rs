@@ -107,6 +107,18 @@ pub trait SeqMixer: Send + Sync {
         self.state().bytes()
     }
 
+    /// Select the storage dtype for decode state this operator hands out
+    /// from [`SeqMixer::state`] *after* this call (existing states keep
+    /// their dtype). Compute stays f32 regardless; see
+    /// [`crate::serve::statemem::StateDtype`]. The default is a no-op —
+    /// operators whose state is f32-only (the hyena family: FIR tails and
+    /// modal IIR state are re-read every step, where storage rounding
+    /// would compound) simply ignore the request and keep reporting f32
+    /// footprints from [`SeqMixer::state_bytes_at`].
+    fn set_state_dtype(&mut self, dtype: crate::serve::statemem::StateDtype) {
+        let _ = dtype;
+    }
+
     /// Named learnable parameters of this operator in a stable, documented
     /// order. The names are the contract shared by the training subsystem
     /// (`train::model` builds its tape forward from them), the checkpoint

@@ -4,6 +4,7 @@
 
 use super::{merge_heads, proj, split_heads, DecodeState, SeqMixer, StateBatch};
 use crate::exec::{ExecCtx, SharedSlice};
+use crate::serve::statemem::{qbuf_bytes, QBuf, StateDtype};
 use crate::tensor::matmul::{matmul, matmul_ctx, vecmat};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -11,22 +12,24 @@ use crate::util::rng::Rng;
 pub const STATE_DIM: usize = 16;
 
 /// Fixed-size decode state: per head the [n, dh] recurrent matrix h,
-/// flattened head-major — O(1) in sequence length.
+/// flattened head-major — O(1) in sequence length. Stored at the
+/// operator's [`StateDtype`], computed in f32 through [`QBuf::open`].
 #[derive(Clone, Debug)]
 pub struct SsdState {
     pub pos: usize,
-    h: Vec<f32>,
+    h: QBuf,
 }
 
 impl SsdState {
     pub fn bytes(&self) -> usize {
-        self.h.len() * std::mem::size_of::<f32>()
+        self.h.bytes()
     }
 }
 
 pub struct SsdOp {
     pub d: usize,
     pub n_heads: usize,
+    dtype: StateDtype,
     /// x -> (value, B, C, dt) projections.
     wx: Tensor,
     wb: Tensor,
@@ -40,6 +43,7 @@ impl SsdOp {
         SsdOp {
             d,
             n_heads,
+            dtype: StateDtype::F32,
             wx: proj(rng, d, d),
             wb: proj(rng, d, n_heads * STATE_DIM),
             wc: proj(rng, d, n_heads * STATE_DIM),
@@ -138,6 +142,10 @@ impl SeqMixer for SsdOp {
         self.d
     }
 
+    fn set_state_dtype(&mut self, dtype: StateDtype) {
+        self.dtype = dtype;
+    }
+
     fn params(&self) -> Vec<(&'static str, &Tensor)> {
         vec![
             ("wx", &self.wx),
@@ -162,14 +170,15 @@ impl SeqMixer for SsdOp {
         let dh = self.d / self.n_heads;
         DecodeState::Ssd(SsdState {
             pos: 0,
-            h: vec![0.0; self.n_heads * STATE_DIM * dh],
+            h: QBuf::new(self.n_heads * STATE_DIM * dh, self.dtype),
         })
     }
 
-    /// The recurrent matrices h are allocated in full up front.
+    /// The recurrent matrices h are allocated in full up front; the
+    /// shared `statemem` accounting keeps this equal to `bytes()`.
     fn state_bytes_at(&self, _pos: usize) -> usize {
         let dh = self.d / self.n_heads;
-        self.n_heads * STATE_DIM * dh * std::mem::size_of::<f32>()
+        qbuf_bytes(self.n_heads * STATE_DIM * dh, self.dtype)
     }
 
     fn step(&self, state: &mut DecodeState, x_t: &[f32]) -> Vec<f32> {
@@ -184,25 +193,28 @@ impl SeqMixer for SsdOp {
         let c = vecmat(x_t, &self.wc);
         let dt = vecmat(x_t, &self.wdt);
         let mut y = vec![0.0f32; d];
-        for hd in 0..self.n_heads {
-            let a = (-softplus(dt[hd])).exp();
-            let xr = &xv[hd * dh..(hd + 1) * dh];
-            let br = &b[hd * n..(hd + 1) * n];
-            let cr = &c[hd * n..(hd + 1) * n];
-            let hst = &mut st.h[hd * n * dh..(hd + 1) * n * dh];
-            for i in 0..n {
-                let bi = br[i];
-                let hrow = &mut hst[i * dh..(i + 1) * dh];
-                for (hv, &xvv) in hrow.iter_mut().zip(xr) {
-                    *hv = a * *hv + bi * xvv;
+        {
+            let mut h_all = st.h.open();
+            for hd in 0..self.n_heads {
+                let a = (-softplus(dt[hd])).exp();
+                let xr = &xv[hd * dh..(hd + 1) * dh];
+                let br = &b[hd * n..(hd + 1) * n];
+                let cr = &c[hd * n..(hd + 1) * n];
+                let hst = &mut h_all[hd * n * dh..(hd + 1) * n * dh];
+                for i in 0..n {
+                    let bi = br[i];
+                    let hrow = &mut hst[i * dh..(i + 1) * dh];
+                    for (hv, &xvv) in hrow.iter_mut().zip(xr) {
+                        *hv = a * *hv + bi * xvv;
+                    }
                 }
-            }
-            let yr = &mut y[hd * dh..(hd + 1) * dh];
-            for i in 0..n {
-                let ci = cr[i];
-                let hrow = &hst[i * dh..(i + 1) * dh];
-                for (yv, &hv) in yr.iter_mut().zip(hrow) {
-                    *yv += ci * hv;
+                let yr = &mut y[hd * dh..(hd + 1) * dh];
+                for i in 0..n {
+                    let ci = cr[i];
+                    let hrow = &hst[i * dh..(i + 1) * dh];
+                    for (yv, &hv) in yr.iter_mut().zip(hrow) {
+                        *yv += ci * hv;
+                    }
                 }
             }
         }
@@ -241,7 +253,7 @@ impl SeqMixer for SsdOp {
             let DecodeState::Ssd(s) = &**st else {
                 panic!("SSD step_batch: wrong decode state variant")
             };
-            hb.load(b, &s.h);
+            s.h.copy_to(hb.row_mut(b));
         }
         let mut ymid = Tensor::zeros(&[bsz, d]);
         {
@@ -284,7 +296,7 @@ impl SeqMixer for SsdOp {
             let DecodeState::Ssd(s) = &mut **st else {
                 panic!("SSD step_batch: wrong decode state variant")
             };
-            hb.store(b, &mut s.h);
+            s.h.copy_from(hb.row(b));
             s.pos += 1;
         }
         matmul_ctx(&ymid, &self.wo, ctx)
@@ -305,18 +317,21 @@ impl SeqMixer for SsdOp {
         let xh = split_heads(&xv, self.n_heads);
         let bh = split_heads(&b, self.n_heads);
         let ch = split_heads(&c, self.n_heads);
-        let heads: Vec<Tensor> = (0..self.n_heads)
-            .map(|hd| {
-                let dts: Vec<f32> = (0..x.rows()).map(|t| dt.at2(t, hd)).collect();
-                ssd_head_scan_with_state(
-                    &xh[hd],
-                    &bh[hd],
-                    &ch[hd],
-                    &dts,
-                    &mut st.h[hd * n * dh..(hd + 1) * n * dh],
-                )
-            })
-            .collect();
+        let heads: Vec<Tensor> = {
+            let mut h_all = st.h.open();
+            (0..self.n_heads)
+                .map(|hd| {
+                    let dts: Vec<f32> = (0..x.rows()).map(|t| dt.at2(t, hd)).collect();
+                    ssd_head_scan_with_state(
+                        &xh[hd],
+                        &bh[hd],
+                        &ch[hd],
+                        &dts,
+                        &mut h_all[hd * n * dh..(hd + 1) * n * dh],
+                    )
+                })
+                .collect()
+        };
         st.pos += x.rows();
         matmul(&merge_heads(&heads), &self.wo)
     }

@@ -105,6 +105,11 @@ pub struct GatewaySummary {
     pub requests: u64,
     /// Streams cancelled because their client disconnected mid-stream.
     pub disconnect_cancels: u64,
+    /// Admissions that forked a prefix-cache snapshot (DESIGN.md §19);
+    /// 0 unless the gateway ran with `--prefix-cache-mb`.
+    pub cache_hits: usize,
+    /// History tokens those hits restored without prefilling.
+    pub cache_hit_tokens: usize,
 }
 
 impl GatewaySummary {
@@ -116,6 +121,8 @@ impl GatewaySummary {
             ("finished", Json::num(self.finished as f64)),
             ("requests", Json::num(self.requests as f64)),
             ("disconnect_cancels", Json::num(self.disconnect_cancels as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_hit_tokens", Json::num(self.cache_hit_tokens as f64)),
         ])
     }
 }
@@ -414,6 +421,8 @@ impl Gateway {
 
         summary.requests = shared.requests.get();
         summary.disconnect_cancels = shared.disconnect_cancels.get();
+        summary.cache_hits = sched.stats.cache_hits;
+        summary.cache_hit_tokens = sched.stats.cache_hit_tokens;
         Ok(summary)
     }
 }

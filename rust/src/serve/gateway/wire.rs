@@ -15,6 +15,11 @@
 //! `token` values reconstructs the generation byte-exactly — the property
 //! the loopback-vs-in-process identity test pins down.
 //!
+//! Schema evolution is additive within a version: the `admitted` frame
+//! gained the numeric `"cached"` field (prefix-cache tokens restored at
+//! admission, 0 on a miss — DESIGN.md §19) without a version bump, since
+//! existing fields and kinds are unchanged.
+//!
 //! [`FinishReason::as_code`]: crate::serve::FinishReason::as_code
 
 use crate::serve::scheduler::StreamEvent;
@@ -66,8 +71,9 @@ pub fn event_json(ev: &StreamEvent) -> Json {
         ("id", Json::num(event_id(ev) as f64)),
     ];
     match ev {
-        StreamEvent::Admitted { restored, .. } => {
+        StreamEvent::Admitted { restored, cached, .. } => {
             fields.push(("restored", Json::bool(*restored)));
+            fields.push(("cached", Json::num(*cached as f64)));
         }
         StreamEvent::PrefillProgress { done, total, .. } => {
             fields.push(("done", Json::num(*done as f64)));
@@ -132,7 +138,7 @@ mod tests {
 
     #[test]
     fn frame_shape() {
-        let ev = StreamEvent::Admitted { id: 0, restored: true };
+        let ev = StreamEvent::Admitted { id: 0, restored: true, cached: 48 };
         let frame = sse_frame(&ev);
         let mut lines = frame.lines();
         assert_eq!(lines.next(), Some("event: admitted"));
@@ -140,6 +146,7 @@ mod tests {
         assert!(data.starts_with("data: {"));
         let j = Json::parse(data.strip_prefix("data: ").unwrap()).unwrap();
         assert_eq!(j.get("restored").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("cached").unwrap().as_usize(), Some(48));
         assert!(frame.ends_with("\n\n"));
     }
 }

@@ -51,6 +51,7 @@ pub mod model;
 pub mod policy;
 pub mod sampler;
 pub mod scheduler;
+pub mod statemem;
 pub mod workload;
 
 pub use gateway::{Gateway, GatewayCfg, GatewaySummary};
@@ -64,6 +65,7 @@ pub use scheduler::{
     AdmitOutcome, BatchScheduler, FinishReason, FinishedStream, RequestHandle,
     ServeRequest, ServeStats, StreamEvent, TickConfig,
 };
+pub use statemem::{PrefixCache, StateArena, StateDtype, PAGE_TOKENS};
 pub use workload::{
     Arrival, CancelStormCfg, LenDist, ReplayCfg, ReplayReport, SharedPrefixCfg, SloCfg,
     Trace, TraceCancel, TraceRequest, WorkloadCfg,

@@ -303,6 +303,16 @@ impl HybridLm {
         planner.len()
     }
 
+    /// Select the storage dtype for decode state created by [`HybridLm::state`]
+    /// from now on (DESIGN.md §19). Existing states keep their dtype; compute
+    /// stays f32 either way. Hyena-family layers ignore the hint — their FIR
+    /// tails are re-read every step, so storage rounding would compound.
+    pub fn set_state_dtype(&mut self, dtype: crate::serve::statemem::StateDtype) {
+        for b in &mut self.layers {
+            b.mixer.set_state_dtype(dtype);
+        }
+    }
+
     /// Fresh per-stream state at position 0.
     pub fn state(&self) -> LmState {
         let hidden = if self.cfg.blocks { self.cfg.mlp_mult * self.d } else { 0 };

@@ -35,8 +35,12 @@
 //! kernel rounding — can shift relative to the old scheduler.
 //!
 //! Internally the active set is split SoA-style: stream metadata
-//! (`Stream`) and decode states (`Vec<LmState>`) live in parallel
-//! vectors so each tick hands the model references into one arena.
+//! (`Stream`) and decode states live in parallel vectors so each tick
+//! hands the model references into one arena. The states side is owned by
+//! the state-memory engine ([`StateArena`], DESIGN.md §19), which also
+//! runs the optional radix prefix cache: admissions fork the deepest
+//! cached snapshot of their prompt prefix instead of prefilling it, and
+//! prefill chunk boundaries feed snapshots back into the cache.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -46,6 +50,7 @@ use std::time::Instant;
 use super::model::{HybridLm, LmState};
 use super::policy::{AdmitDecision, Candidate, LruPolicy, SchedCtx, SchedPolicy, StreamView};
 use super::sampler::Sampler;
+use super::statemem::StateArena;
 use crate::exec::{self, SharedSlice};
 use crate::obs::{Counter, Gauge, Histogram, Registry, TimelineSink};
 use crate::util::json::Json;
@@ -201,8 +206,10 @@ impl FinishReason {
 pub enum StreamEvent {
     /// Entered the active arena (fresh admission, or `restored` after a
     /// preemption — a restore replays its token history through chunked
-    /// prefill before decoding resumes).
-    Admitted { id: usize, restored: bool },
+    /// prefill before decoding resumes). `cached` counts history tokens
+    /// restored from the prefix cache, which prefill skips (0 on a cache
+    /// miss or with the cache off).
+    Admitted { id: usize, restored: bool, cached: usize },
     /// A prefill chunk was absorbed; `done`/`total` count history tokens
     /// (for a restore, `total` includes previously generated tokens).
     PrefillProgress { id: usize, done: usize, total: usize },
@@ -225,8 +232,9 @@ pub enum StreamEvent {
 /// queue head stayed queued instead of inferring it from a bool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdmitOutcome {
-    /// Queue head moved into the arena (prefill phase).
-    Admitted { id: usize, restored: bool },
+    /// Queue head moved into the arena (prefill phase); `cached` counts
+    /// history tokens forked from the prefix cache instead of prefilled.
+    Admitted { id: usize, restored: bool, cached: usize },
     /// Nothing waiting.
     QueueEmpty,
     /// A preemption this epoch blocks non-forced admission until a stream
@@ -406,6 +414,13 @@ pub struct ServeStats {
     pub cancelled: usize,
     /// Streams shed by the policy at admission (never ran).
     pub rejected: usize,
+    /// Admissions that forked a prefix-cache snapshot instead of starting
+    /// from a fresh state.
+    pub cache_hits: usize,
+    /// History tokens restored from the prefix cache across those hits —
+    /// tokens prefill never had to run (counted toward neither
+    /// `prefill_tokens` nor `restored_prefill_tokens`).
+    pub cache_hit_tokens: usize,
     /// Batched decode ticks — one `step_batch` call each.
     pub decode_ticks: usize,
     /// Wall-clock seconds spent in batched decode (stepping + sampling).
@@ -447,10 +462,11 @@ pub struct BatchScheduler<'m> {
     /// Tick counter (1-based during a tick; 0 before the first).
     tick_no: usize,
     queue: VecDeque<Stream>,
-    /// Active-stream metadata; `states[i]` is the decode state of
-    /// `active[i]` (parallel vectors — see the module docs).
+    /// Active-stream metadata; `arena[i]` is the decode state of
+    /// `active[i]` (parallel vectors — see the module docs). The arena
+    /// also owns the optional prefix cache and the `statemem.*` metrics.
     active: Vec<Stream>,
-    states: Vec<LmState>,
+    arena: StateArena,
     finished: Vec<FinishedStream>,
     /// Set on preemption, cleared on retirement: blocks non-forced
     /// admission so an evicted stream waits for capacity instead of
@@ -523,7 +539,7 @@ impl<'m> BatchScheduler<'m> {
             tick_no: 0,
             queue: VecDeque::new(),
             active: Vec::new(),
-            states: Vec::new(),
+            arena: StateArena::new(crate::obs::global()),
             finished: Vec::new(),
             admit_blocked: false,
             stats: ServeStats::default(),
@@ -537,6 +553,27 @@ impl<'m> BatchScheduler<'m> {
     /// isolated registry while other tests record in parallel.
     pub fn attach_obs(&mut self, reg: &Registry) {
         self.obs = SchedObs::new(reg);
+        self.arena.attach_obs(reg);
+    }
+
+    /// Turn on the radix prefix cache (DESIGN.md §19), bounded to
+    /// `max_bytes` of snapshot payload: admissions fork the deepest cached
+    /// snapshot of their history prefix and skip prefilling it, and
+    /// prefill chunk boundaries of first-admission streams feed snapshots
+    /// back. Requires a finite `prefill_chunk` — the chunk grid is what
+    /// makes warm and cold prefills take identical chunk boundaries, so
+    /// forked streams decode byte-identically to cold ones.
+    pub fn enable_prefix_cache(&mut self, max_bytes: usize) {
+        assert!(
+            self.cfg.prefill_chunk != usize::MAX,
+            "prefix cache needs a finite prefill_chunk (the snapshot grid)"
+        );
+        self.arena.enable_cache(self.cfg.prefill_chunk, max_bytes);
+    }
+
+    /// True once [`BatchScheduler::enable_prefix_cache`] has run.
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.arena.cache_enabled()
     }
 
     /// Attach a per-tick timeline sink: every subsequent tick appends one
@@ -614,7 +651,7 @@ impl<'m> BatchScheduler<'m> {
     }
 
     fn state_bytes(&self) -> usize {
-        self.states.iter().map(|s| s.bytes()).sum()
+        self.arena.iter().map(|s| s.bytes()).sum()
     }
 
     /// Realized heap bytes of all active decode states — the quantity the
@@ -646,7 +683,7 @@ impl<'m> BatchScheduler<'m> {
     fn committed_bytes(&self) -> usize {
         self.active
             .iter()
-            .zip(&self.states)
+            .zip(self.arena.iter())
             .map(|(s, st)| st.bytes().max(self.model.state_bytes_at(s.tokens.len())))
             .sum()
     }
@@ -717,11 +754,21 @@ impl<'m> BatchScheduler<'m> {
         let mut s = self.queue.remove(qi).expect("policy index in bounds");
         s.phase = Phase::Prefill;
         let (id, restored) = (s.id, s.restored);
+        // Fork the deepest cached prefix snapshot when one matches the
+        // stream's history: the returned state's `pos` cursor starts past
+        // the cached tokens, so prefill only runs the delta. Restores go
+        // through the same path — their replay history shares the prompt's
+        // chunk grid, so a snapshot taken cold applies to them too.
+        let (st, cached) = self.arena.acquire(self.model, &s.tokens);
+        if cached > 0 {
+            self.stats.cache_hits += 1;
+            self.stats.cache_hit_tokens += cached;
+        }
         self.active.push(s);
-        self.states.push(self.model.state());
+        self.arena.push(st);
         self.stats.max_concurrent = self.stats.max_concurrent.max(self.active.len());
         self.obs.admitted.inc();
-        AdmitOutcome::Admitted { id, restored }
+        AdmitOutcome::Admitted { id, restored, cached }
     }
 
     /// Remove cancelled streams wherever they are (queue or arena),
@@ -740,7 +787,7 @@ impl<'m> BatchScheduler<'m> {
         while i < self.active.len() {
             if self.active[i].cancelled.load(Ordering::Relaxed) {
                 let s = self.active.remove(i);
-                self.states.remove(i);
+                self.arena.remove(i);
                 self.admit_blocked = false; // capacity freed
                 self.finish_stream(s, FinishReason::Cancelled, events);
             } else {
@@ -817,7 +864,7 @@ impl<'m> BatchScheduler<'m> {
                     continue;
                 }
                 let take =
-                    self.cfg.prefill_chunk.min(self.active[i].tokens.len() - self.states[i].pos);
+                    self.cfg.prefill_chunk.min(self.active[i].tokens.len() - self.arena[i].pos);
                 budget = budget.saturating_sub(take);
                 sel.push((i, take));
             }
@@ -831,7 +878,7 @@ impl<'m> BatchScheduler<'m> {
                 let active = &self.active;
                 let chunk = self.cfg.prefill_chunk;
                 let sel = &sel;
-                let sts = SharedSlice::new(self.states.as_mut_slice());
+                let sts = SharedSlice::new(self.arena.as_mut_slice());
                 let res = SharedSlice::new(results.as_mut_slice());
                 exec::global().run(sel.len(), &|j| {
                     let (i, _) = sel[j];
@@ -852,6 +899,15 @@ impl<'m> BatchScheduler<'m> {
                     self.obs.prefill_tokens.add(take as u64);
                 }
                 let total = self.active[i].tokens.len();
+                if !self.active[i].restored {
+                    // Feed the prefix cache on the chunk grid. This runs
+                    // before the handoff token below is pushed, so the
+                    // snapshotted `tokens[..done]` is prompt bytes only.
+                    // Restores are excluded: their history contains
+                    // generated tokens that no other request's prompt walk
+                    // should be keyed by.
+                    self.arena.maybe_snapshot(&self.active[i].tokens, done, i);
+                }
                 let s = &mut self.active[i];
                 events.push(StreamEvent::PrefillProgress { id: s.id, done, total });
                 if done == total {
@@ -904,7 +960,7 @@ impl<'m> BatchScheduler<'m> {
             .collect();
         let logits = {
             let mut sel: Vec<&mut LmState> = self
-                .states
+                .arena
                 .iter_mut()
                 .zip(&in_decode)
                 .filter(|(_, &d)| d)
@@ -944,7 +1000,7 @@ impl<'m> BatchScheduler<'m> {
                 && self.active[i].generated >= self.active[i].max_new;
             if done {
                 let s = self.active.remove(i);
-                self.states.remove(i);
+                self.arena.remove(i);
                 self.admit_blocked = false;
                 self.finish_stream(s, FinishReason::MaxNew, events);
             } else {
@@ -975,7 +1031,7 @@ impl<'m> BatchScheduler<'m> {
         };
         assert!(vi < self.active.len(), "policy victim index out of bounds");
         let mut s = self.active.remove(vi);
-        self.states.remove(vi);
+        self.arena.remove(vi);
         self.stats.preemptions += 1;
         self.obs.preemptions.inc();
         self.admit_blocked = true;
@@ -1013,8 +1069,8 @@ impl<'m> BatchScheduler<'m> {
         // them to the next candidate instead of stalling the tick.
         while self.active.is_empty() && !self.queue.is_empty() {
             match self.admit_one(true, &mut events) {
-                AdmitOutcome::Admitted { id, restored } => {
-                    events.push(StreamEvent::Admitted { id, restored });
+                AdmitOutcome::Admitted { id, restored, cached } => {
+                    events.push(StreamEvent::Admitted { id, restored, cached });
                     break;
                 }
                 AdmitOutcome::Rejected { .. } => continue,
@@ -1023,8 +1079,8 @@ impl<'m> BatchScheduler<'m> {
         }
         loop {
             match self.admit_one(false, &mut events) {
-                AdmitOutcome::Admitted { id, restored } => {
-                    events.push(StreamEvent::Admitted { id, restored });
+                AdmitOutcome::Admitted { id, restored, cached } => {
+                    events.push(StreamEvent::Admitted { id, restored, cached });
                 }
                 AdmitOutcome::Rejected { .. } => continue,
                 _ => break,
@@ -1084,6 +1140,7 @@ impl<'m> BatchScheduler<'m> {
             self.obs.active_streams.set(self.active.len() as u64);
             self.obs.arena_bytes.set(self.state_bytes() as u64);
             self.obs.committed_bytes.set(self.committed_bytes() as u64);
+            self.arena.update_gauges();
         }
         if let Some(tl) = &self.timeline {
             let row = Json::obj(vec![
@@ -1417,7 +1474,10 @@ mod tests {
         while !s.is_idle() {
             events.extend(s.tick());
         }
-        assert_eq!(events[0], StreamEvent::Admitted { id: h.id(), restored: false });
+        assert_eq!(
+            events[0],
+            StreamEvent::Admitted { id: h.id(), restored: false, cached: 0 }
+        );
         let progress: Vec<(usize, usize)> = events
             .iter()
             .filter_map(|e| match e {
@@ -1557,7 +1617,7 @@ mod tests {
         s.submit(ServeRequest::new(b"TTGA".to_vec(), 2));
         assert_eq!(
             s.admit_one(false, &mut ev),
-            AdmitOutcome::Admitted { id: 0, restored: false }
+            AdmitOutcome::Admitted { id: 0, restored: false, cached: 0 }
         );
         assert_eq!(s.admit_one(false, &mut ev), AdmitOutcome::AtMaxActive);
         // Preemption blocks non-forced admission even after capacity frees.

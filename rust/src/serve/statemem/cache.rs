@@ -1,0 +1,277 @@
+//! Radix-style prefix cache over prompt bytes.
+//!
+//! Snapshots of [`LmState`](crate::serve::LmState) are taken at prefill
+//! chunk boundaries and filed in a trie whose edges are whole chunks of
+//! prompt bytes. A later request walks the trie over its own prompt; the
+//! deepest node holding a snapshot yields a forked starting state, and
+//! only the remaining suffix is prefilled. Forking is cheap by
+//! construction: scan-family states and hyena FIR tails are O(d) copies,
+//! and MHA KV pages are `Arc`-shared copy-on-write (`LmState::clone`
+//! bumps page refcounts instead of copying rows).
+//!
+//! Eviction is least-recently-used over snapshot *payloads*: when the
+//! byte budget is exceeded the stalest snapshot is dropped but its trie
+//! node persists (a node is ~one chunk of key bytes plus a map entry, and
+//! keeping it preserves deeper descendants). Child edges are keyed by an
+//! FNV-1a hash of the chunk bytes with the stored bytes verified on every
+//! walk, so a hash collision degrades to a cache miss, never a wrong
+//! state.
+
+use crate::serve::LmState;
+use std::collections::HashMap;
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+struct Snap {
+    state: LmState,
+    pos: usize,
+    last_used: u64,
+    bytes: usize,
+}
+
+struct Node {
+    /// The chunk of prompt bytes on the edge INTO this node (empty for
+    /// the root). Stored to verify hash-keyed child lookups.
+    seg: Vec<u8>,
+    /// Child index keyed by `fnv1a64(seg)` of the child's edge.
+    children: HashMap<u64, usize>,
+    snap: Option<Snap>,
+}
+
+/// Prefix-hash trie of decode-state snapshots. See the module docs.
+pub struct PrefixCache {
+    chunk: usize,
+    max_bytes: usize,
+    nodes: Vec<Node>,
+    bytes: usize,
+    clock: u64,
+}
+
+impl PrefixCache {
+    /// `chunk` must equal the scheduler's `prefill_chunk` so snapshot
+    /// positions land on the same grid cold prefill uses.
+    pub fn new(chunk: usize, max_bytes: usize) -> Self {
+        assert!(chunk > 0, "prefix cache needs a finite chunk size");
+        PrefixCache {
+            chunk,
+            max_bytes,
+            nodes: vec![Node {
+                seg: Vec::new(),
+                children: HashMap::new(),
+                snap: None,
+            }],
+            bytes: 0,
+            clock: 0,
+        }
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Total bytes held by cached snapshots (the `statemem.cache_bytes`
+    /// gauge).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Number of snapshots currently cached.
+    pub fn snapshots(&self) -> usize {
+        self.nodes.iter().filter(|n| n.snap.is_some()).count()
+    }
+
+    /// Find the deepest cached snapshot along `prompt` and fork it.
+    /// Returns `(state, pos)` with `pos` a chunk multiple and strictly
+    /// less than `prompt.len()` — at least one token is always left to
+    /// prefill so the handoff logits exist.
+    pub fn lookup(&mut self, prompt: &[u8]) -> Option<(LmState, usize)> {
+        let mut node = 0usize;
+        let mut pos = 0usize;
+        let mut best: Option<(usize, usize)> = None; // (node, pos)
+        if self.nodes[0].snap.is_some() {
+            best = Some((0, 0));
+        }
+        // `pos + chunk < len` (not <=): a full-prompt hit would leave
+        // nothing to prefill and no handoff logits to sample from.
+        while pos + self.chunk < prompt.len() {
+            let seg = &prompt[pos..pos + self.chunk];
+            let Some(&child) = self.nodes[node].children.get(&fnv1a64(seg)) else {
+                break;
+            };
+            if self.nodes[child].seg != seg {
+                break; // hash collision: treat as a miss
+            }
+            node = child;
+            pos += self.chunk;
+            if self.nodes[node].snap.is_some() {
+                best = Some((node, pos));
+            }
+        }
+        let (node, pos) = best?;
+        if pos == 0 {
+            return None; // a root snapshot would be an empty fork
+        }
+        self.clock += 1;
+        let snap = self.nodes[node].snap.as_mut().expect("best node has a snapshot");
+        snap.last_used = self.clock;
+        Some((snap.state.clone(), pos))
+    }
+
+    /// File a snapshot of `state` (which has consumed exactly `prefix`)
+    /// under the trie path spelled by `prefix`. `prefix.len()` must be a
+    /// positive multiple of `chunk`. First snapshot at a path wins;
+    /// re-inserting at an occupied node is a no-op (the states are
+    /// deterministic duplicates anyway).
+    pub fn insert(&mut self, prefix: &[u8], state: &LmState) {
+        debug_assert!(!prefix.is_empty() && prefix.len() % self.chunk == 0);
+        debug_assert_eq!(state.pos, prefix.len());
+        let mut node = 0usize;
+        let mut pos = 0usize;
+        while pos < prefix.len() {
+            let seg = &prefix[pos..pos + self.chunk];
+            let key = fnv1a64(seg);
+            match self.nodes[node].children.get(&key) {
+                Some(&child) => {
+                    if self.nodes[child].seg != seg {
+                        return; // collision with an existing edge: abandon
+                    }
+                    node = child;
+                }
+                None => {
+                    let child = self.nodes.len();
+                    self.nodes.push(Node {
+                        seg: seg.to_vec(),
+                        children: HashMap::new(),
+                        snap: None,
+                    });
+                    self.nodes[node].children.insert(key, child);
+                    node = child;
+                }
+            }
+            pos += self.chunk;
+        }
+        if self.nodes[node].snap.is_some() {
+            return;
+        }
+        let bytes = state.bytes();
+        self.clock += 1;
+        self.nodes[node].snap = Some(Snap {
+            state: state.clone(),
+            pos: prefix.len(),
+            last_used: self.clock,
+            bytes,
+        });
+        self.bytes += bytes;
+        self.evict_over_budget();
+    }
+
+    /// Drop least-recently-used snapshot payloads until under budget.
+    /// Trie nodes persist (bounded by distinct chunk segments seen).
+    fn evict_over_budget(&mut self) {
+        while self.bytes > self.max_bytes {
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, n)| n.snap.as_ref().map(|s| (s.last_used, i)))
+                .min()
+                .map(|(_, i)| i);
+            let Some(i) = victim else { break };
+            let snap = self.nodes[i].snap.take().expect("victim has a snapshot");
+            self.bytes -= snap.bytes;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::HybridLm;
+    use crate::util::rng::Rng;
+
+    fn tiny_model() -> HybridLm {
+        let mut rng = Rng::new(11);
+        HybridLm::new(&mut rng, 16, 2, &["SE", "MHA"]).unwrap()
+    }
+
+    fn state_at(model: &HybridLm, prompt: &[u8]) -> LmState {
+        let mut st = model.state();
+        model.prefill(&mut st, prompt);
+        st
+    }
+
+    #[test]
+    fn lookup_finds_deepest_snapshot_and_caps_below_full_prompt() {
+        let model = tiny_model();
+        let mut cache = PrefixCache::new(4, usize::MAX);
+        let p8 = b"ACGTACGT";
+        cache.insert(&p8[..4], &state_at(&model, &p8[..4]));
+        cache.insert(p8, &state_at(&model, p8));
+
+        // Longer prompt sharing 8 bytes: deepest hit is pos 8.
+        let (st, pos) = cache.lookup(b"ACGTACGTTTTT").expect("hit");
+        assert_eq!(pos, 8);
+        assert_eq!(st.pos, 8);
+
+        // Exactly the cached prompt: the 8-snapshot would leave nothing
+        // to prefill, so the walk stops at pos 4.
+        let (_, pos) = cache.lookup(p8).expect("hit at shallower node");
+        assert_eq!(pos, 4);
+
+        // Diverging prompt: miss past the shared chunk.
+        let (_, pos) = cache.lookup(b"ACGTTTTTTTTT").expect("hit");
+        assert_eq!(pos, 4);
+        assert!(cache.lookup(b"TTTTTTTT").is_none());
+    }
+
+    #[test]
+    fn forked_state_is_a_clone_not_an_alias() {
+        let model = tiny_model();
+        let mut cache = PrefixCache::new(4, usize::MAX);
+        let p = b"ACGTACGT";
+        cache.insert(&p[..4], &state_at(&model, &p[..4]));
+        let (mut st, pos) = cache.lookup(p).expect("hit");
+        assert_eq!(pos, 4);
+        // Stepping the fork must not disturb the cached copy.
+        model.step(&mut st, b'T');
+        let (st2, _) = cache.lookup(p).expect("hit again");
+        assert_eq!(st2.pos, 4);
+    }
+
+    #[test]
+    fn eviction_is_lru_over_snapshots() {
+        let model = tiny_model();
+        let one = state_at(&model, b"AAAA");
+        let per = one.bytes();
+        let mut cache = PrefixCache::new(4, 2 * per);
+        cache.insert(b"AAAA", &one);
+        cache.insert(b"CCCC", &state_at(&model, b"CCCC"));
+        assert_eq!(cache.snapshots(), 2);
+        // Touch AAAA so CCCC is the LRU victim.
+        assert!(cache.lookup(b"AAAAAAAA").is_some());
+        cache.insert(b"GGGG", &state_at(&model, b"GGGG"));
+        assert_eq!(cache.snapshots(), 2);
+        assert!(cache.lookup(b"AAAAAAAA").is_some());
+        assert!(cache.lookup(b"CCCCCCCC").is_none(), "LRU snapshot evicted");
+        assert!(cache.bytes() <= 2 * per);
+    }
+
+    #[test]
+    fn reinsert_at_occupied_node_is_a_noop() {
+        let model = tiny_model();
+        let mut cache = PrefixCache::new(4, usize::MAX);
+        let st = state_at(&model, b"ACGT");
+        cache.insert(b"ACGT", &st);
+        let bytes = cache.bytes();
+        cache.insert(b"ACGT", &st);
+        assert_eq!(cache.bytes(), bytes);
+        assert_eq!(cache.snapshots(), 1);
+    }
+}

@@ -1,0 +1,260 @@
+//! State-memory engine (DESIGN.md §19): the serve engine's decode-state
+//! substrate. Owns every byte of per-stream state that the scheduler
+//! used to hold as a bare `Vec<LmState>`, in three layers:
+//!
+//! - **Paged MHA KV** ([`pages`]): growing KV caches live in fixed
+//!   [`PAGE_TOKENS`]-token pages with a pooled free-list, shared
+//!   copy-on-write between forks via `Arc` refcounts.
+//! - **Prefix cache** ([`cache`]): [`LmState`] snapshots at prefill
+//!   chunk boundaries, keyed by a prefix-hash trie over prompt bytes,
+//!   so a request sharing a cached prefix forks the snapshot and only
+//!   prefills its suffix.
+//! - **Quantized storage** ([`qbuf`]): optional f16 (and int8 KV)
+//!   state storage with f32 compute, selected per model via
+//!   [`StateDtype`] / `--state-dtype`.
+//!
+//! The accounting helpers here ([`qbuf_bytes`], [`kv_page_bytes`],
+//! [`kv_bytes_at`]) are the single source of truth both
+//! `LmState::bytes()` (realized) and `HybridLm::state_bytes_at`
+//! (projected) route through, so the two footprint paths cannot drift.
+
+pub mod cache;
+pub mod pages;
+pub mod qbuf;
+
+pub use cache::PrefixCache;
+pub use pages::{alloc_page, pool_free_pages, KvPage, PageRef, PAGE_TOKENS};
+pub use qbuf::{f16_to_f32, f32_to_f16, QBuf, QBufGuard};
+
+use crate::obs::{Counter, Gauge, Registry};
+use crate::serve::model::{HybridLm, LmState};
+use std::sync::Arc;
+
+/// Storage dtype for cached decode state. Compute is always f32; this
+/// selects how state is *held* between steps. `Int8` applies per-row
+/// int8 to MHA KV pages and falls back to f16 for the dense scan-family
+/// states (a single per-matrix scale would couple rounding error across
+/// the whole state).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum StateDtype {
+    #[default]
+    F32,
+    F16,
+    Int8,
+}
+
+impl StateDtype {
+    /// Parse a `--state-dtype` flag value.
+    pub fn parse(s: &str) -> Option<StateDtype> {
+        match s {
+            "f32" => Some(StateDtype::F32),
+            "f16" => Some(StateDtype::F16),
+            "int8" => Some(StateDtype::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StateDtype::F32 => "f32",
+            StateDtype::F16 => "f16",
+            StateDtype::Int8 => "int8",
+        }
+    }
+
+    /// Dtype from `SH2_STATE_DTYPE` (default f32). Used by the tier-1
+    /// f16 rerun lane; unknown values fall back to f32.
+    pub fn from_env() -> StateDtype {
+        std::env::var("SH2_STATE_DTYPE")
+            .ok()
+            .and_then(|v| StateDtype::parse(&v))
+            .unwrap_or(StateDtype::F32)
+    }
+}
+
+/// Bytes to store `len` f32 state elements at `dtype`. Scan-family
+/// states store f16 under `Int8` (see [`StateDtype`]), hence 2 bytes.
+pub fn qbuf_bytes(len: usize, dtype: StateDtype) -> usize {
+    len * match dtype {
+        StateDtype::F32 => 4,
+        StateDtype::F16 | StateDtype::Int8 => 2,
+    }
+}
+
+/// Bytes one full KV page (K + V, [`PAGE_TOKENS`] rows of width `d`)
+/// occupies at `dtype`. Int8 rows carry one f32 scale each.
+pub fn kv_page_bytes(d: usize, dtype: StateDtype) -> usize {
+    match dtype {
+        StateDtype::F32 => 2 * PAGE_TOKENS * d * 4,
+        StateDtype::F16 => 2 * PAGE_TOKENS * d * 2,
+        StateDtype::Int8 => 2 * (PAGE_TOKENS * d + PAGE_TOKENS * 4),
+    }
+}
+
+/// Paged KV footprint after absorbing `pos` tokens: whole pages,
+/// including the partial last one (a partial page owns its full
+/// allocation). Shared by `MhaState::bytes` and `state_bytes_at`.
+pub fn kv_bytes_at(pos: usize, d: usize, dtype: StateDtype) -> usize {
+    pos.div_ceil(PAGE_TOKENS) * kv_page_bytes(d, dtype)
+}
+
+/// Metrics handles for the state-memory engine (`statemem.*`).
+/// Registered at construction so every instrument appears in snapshots
+/// (at zero) even before the first cache lookup.
+struct ArenaObs {
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    bytes_saved: Arc<Counter>,
+    pages_free: Arc<Gauge>,
+    cache_bytes: Arc<Gauge>,
+}
+
+impl ArenaObs {
+    fn new(reg: &Registry) -> ArenaObs {
+        ArenaObs {
+            hits: reg.counter("statemem.hits"),
+            misses: reg.counter("statemem.misses"),
+            bytes_saved: reg.counter("statemem.bytes_saved"),
+            pages_free: reg.gauge("statemem.pages_free"),
+            cache_bytes: reg.gauge("statemem.cache_bytes"),
+        }
+    }
+}
+
+/// The scheduler's state arena: owns the per-active-stream `LmState`
+/// vector (index-parallel with the scheduler's stream metadata — it
+/// derefs to `Vec<LmState>` so positional access reads naturally) plus
+/// the optional prefix cache and the `statemem.*` metrics.
+pub struct StateArena {
+    states: Vec<LmState>,
+    cache: Option<PrefixCache>,
+    obs: ArenaObs,
+}
+
+impl StateArena {
+    pub fn new(reg: &Registry) -> StateArena {
+        StateArena {
+            states: Vec::new(),
+            cache: None,
+            obs: ArenaObs::new(reg),
+        }
+    }
+
+    /// Rebind metrics to a different registry (test isolation).
+    pub fn attach_obs(&mut self, reg: &Registry) {
+        self.obs = ArenaObs::new(reg);
+    }
+
+    /// Turn on the prefix cache. `chunk` must equal the scheduler's
+    /// `prefill_chunk` so snapshots land on the cold-prefill chunk grid.
+    pub fn enable_cache(&mut self, chunk: usize, max_bytes: usize) {
+        self.cache = Some(PrefixCache::new(chunk, max_bytes));
+    }
+
+    pub fn cache_enabled(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// State for a newly admitted stream: fork the deepest cached
+    /// prefix snapshot when one matches, else a fresh state. Returns
+    /// `(state, cached_tokens)` — the stream's prefill cursor starts at
+    /// `cached_tokens` (a chunk multiple, < `tokens.len()`).
+    pub fn acquire(&mut self, model: &HybridLm, tokens: &[u8]) -> (LmState, usize) {
+        if let Some(cache) = self.cache.as_mut() {
+            if let Some((state, pos)) = cache.lookup(tokens) {
+                self.obs.hits.inc();
+                self.obs.bytes_saved.add(state.bytes() as u64);
+                return (state, pos);
+            }
+            self.obs.misses.inc();
+        }
+        (model.state(), 0)
+    }
+
+    /// Snapshot the state at index `idx` if `done` (its prefill cursor,
+    /// in tokens of `tokens`) sits on a chunk boundary. No-op with the
+    /// cache off. `tokens[..done]` must be prompt bytes only.
+    pub fn maybe_snapshot(&mut self, tokens: &[u8], done: usize, idx: usize) {
+        let Some(cache) = self.cache.as_mut() else { return };
+        if done == 0 || done % cache.chunk() != 0 || done > tokens.len() {
+            return;
+        }
+        cache.insert(&tokens[..done], &self.states[idx]);
+        self.obs.cache_bytes.set(cache.bytes() as u64);
+    }
+
+    /// Refresh the `statemem.*` gauges (called once per recorded tick).
+    pub fn update_gauges(&self) {
+        self.obs.pages_free.set(pool_free_pages() as u64);
+        if let Some(cache) = &self.cache {
+            self.obs.cache_bytes.set(cache.bytes() as u64);
+        }
+    }
+}
+
+impl std::ops::Deref for StateArena {
+    type Target = Vec<LmState>;
+    fn deref(&self) -> &Vec<LmState> {
+        &self.states
+    }
+}
+
+impl std::ops::DerefMut for StateArena {
+    fn deref_mut(&mut self) -> &mut Vec<LmState> {
+        &mut self.states
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dtype_parse_and_names_round_trip() {
+        for dt in [StateDtype::F32, StateDtype::F16, StateDtype::Int8] {
+            assert_eq!(StateDtype::parse(dt.name()), Some(dt));
+        }
+        assert_eq!(StateDtype::parse("f64"), None);
+        assert_eq!(StateDtype::default(), StateDtype::F32);
+    }
+
+    #[test]
+    fn accounting_helpers_match_layouts() {
+        assert_eq!(qbuf_bytes(10, StateDtype::F32), 40);
+        assert_eq!(qbuf_bytes(10, StateDtype::F16), 20);
+        assert_eq!(qbuf_bytes(10, StateDtype::Int8), 20); // f16 fallback
+        // One f32 page at d=16: 2 * 8 * 16 * 4 = 1024 (the scheduler's
+        // admission tests depend on this exact figure).
+        assert_eq!(kv_page_bytes(16, StateDtype::F32), 1024);
+        assert_eq!(kv_page_bytes(16, StateDtype::F16), 512);
+        assert_eq!(kv_page_bytes(16, StateDtype::Int8), 2 * (8 * 16 + 32));
+        assert_eq!(kv_bytes_at(0, 16, StateDtype::F32), 0);
+        assert_eq!(kv_bytes_at(1, 16, StateDtype::F32), 1024);
+        assert_eq!(kv_bytes_at(8, 16, StateDtype::F32), 1024);
+        assert_eq!(kv_bytes_at(9, 16, StateDtype::F32), 2048);
+    }
+
+    #[test]
+    fn arena_acquire_hits_after_snapshot() {
+        let mut rng = Rng::new(3);
+        let model = HybridLm::new(&mut rng, 16, 2, &["SE", "MHA"]).unwrap();
+        let reg = Registry::new();
+        let mut arena = StateArena::new(&reg);
+        arena.enable_cache(4, usize::MAX);
+        assert!(arena.cache_enabled());
+
+        let prompt = b"ACGTACGTACGT";
+        let (mut st, cached) = arena.acquire(&model, prompt);
+        assert_eq!(cached, 0, "cold cache misses");
+        model.prefill(&mut st, &prompt[..8]);
+        arena.push(st);
+        arena.maybe_snapshot(prompt, 8, 0);
+
+        let (st2, cached2) = arena.acquire(&model, prompt);
+        assert_eq!(cached2, 8, "same prompt forks the snapshot");
+        assert_eq!(st2.pos, 8);
+        let text = reg.snapshot().to_string();
+        assert!(text.contains("statemem.hits"), "metrics registered: {text}");
+    }
+}

@@ -1,0 +1,354 @@
+//! Paged MHA KV storage with a process-wide free-list.
+//!
+//! MHA decode state grows with position; storing it as one contiguous
+//! `Vec` per stream means every admission projects a worst-case
+//! contiguous block and every eviction returns bytes the allocator may
+//! not reuse at the same size class. Instead KV is split into fixed
+//! [`PAGE_TOKENS`]-token pages: a stream holds `Arc<KvPage>` handles in
+//! order, freed pages return their raw buffers to a global [`PagePool`]
+//! keyed by `(d, dtype)`, and the prefix cache shares full pages
+//! between forked streams copy-on-write (the `Arc` refcount IS the COW
+//! refcount — `Arc::make_mut` clones a shared page on first write).
+//!
+//! Page size choice (DESIGN.md §19): 8 tokens keeps worst-case
+//! overcommit (one partial page) under 1 KiB at the widths this engine
+//! targets, while keeping the page table short enough that the per-step
+//! `pos / PAGE_TOKENS` indexing is noise.
+
+use super::{kv_page_bytes, StateDtype};
+use crate::serve::statemem::qbuf::{f16_to_f32, f32_to_f16};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Tokens per KV page.
+pub const PAGE_TOKENS: usize = 8;
+
+/// Backing storage for one page's K (or V) rows at a given dtype.
+///
+/// `I8` quantizes each row with its own scale (`max_abs / 127`), so a
+/// page of `PAGE_TOKENS` rows carries `PAGE_TOKENS` f32 scales.
+#[derive(Clone, Debug)]
+pub enum KvBuf {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    I8 { q: Vec<i8>, scale: Vec<f32> },
+}
+
+impl Default for KvBuf {
+    fn default() -> Self {
+        KvBuf::F32(Vec::new())
+    }
+}
+
+impl KvBuf {
+    /// Allocate full-page capacity for rows of width `d`.
+    fn new(d: usize, dtype: StateDtype) -> Self {
+        match dtype {
+            StateDtype::F32 => KvBuf::F32(vec![0.0; PAGE_TOKENS * d]),
+            StateDtype::F16 => KvBuf::F16(vec![0; PAGE_TOKENS * d]),
+            StateDtype::Int8 => KvBuf::I8 {
+                q: vec![0; PAGE_TOKENS * d],
+                scale: vec![0.0; PAGE_TOKENS],
+            },
+        }
+    }
+
+    fn matches(&self, d: usize, dtype: StateDtype) -> bool {
+        match (self, dtype) {
+            (KvBuf::F32(v), StateDtype::F32) => v.len() == PAGE_TOKENS * d,
+            (KvBuf::F16(v), StateDtype::F16) => v.len() == PAGE_TOKENS * d,
+            (KvBuf::I8 { q, scale }, StateDtype::Int8) => {
+                q.len() == PAGE_TOKENS * d && scale.len() == PAGE_TOKENS
+            }
+            _ => false,
+        }
+    }
+
+    /// Quantize `src` (length `d`) into row `r`.
+    fn write_row(&mut self, r: usize, d: usize, src: &[f32]) {
+        debug_assert_eq!(src.len(), d);
+        match self {
+            KvBuf::F32(v) => v[r * d..(r + 1) * d].copy_from_slice(src),
+            KvBuf::F16(v) => {
+                for (h, &x) in v[r * d..(r + 1) * d].iter_mut().zip(src.iter()) {
+                    *h = f32_to_f16(x);
+                }
+            }
+            KvBuf::I8 { q, scale } => {
+                let max_abs = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let s = if max_abs > 0.0 { max_abs / 127.0 } else { 0.0 };
+                scale[r] = s;
+                let inv = if s > 0.0 { 1.0 / s } else { 0.0 };
+                for (qe, &x) in q[r * d..(r + 1) * d].iter_mut().zip(src.iter()) {
+                    *qe = (x * inv).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+    }
+
+    /// Dequantize row `r` into `dst` (length `d`).
+    fn read_row(&self, r: usize, d: usize, dst: &mut [f32]) {
+        debug_assert_eq!(dst.len(), d);
+        match self {
+            KvBuf::F32(v) => dst.copy_from_slice(&v[r * d..(r + 1) * d]),
+            KvBuf::F16(v) => {
+                for (x, &h) in dst.iter_mut().zip(v[r * d..(r + 1) * d].iter()) {
+                    *x = f16_to_f32(h);
+                }
+            }
+            KvBuf::I8 { q, scale } => {
+                let s = scale[r];
+                for (x, &qe) in dst.iter_mut().zip(q[r * d..(r + 1) * d].iter()) {
+                    *x = f32::from(qe) * s;
+                }
+            }
+        }
+    }
+}
+
+/// One fixed-capacity KV page: up to [`PAGE_TOKENS`] (k, v) row pairs
+/// of width `d`. Dropping a page returns its buffers to the pool.
+#[derive(Debug)]
+pub struct KvPage {
+    d: usize,
+    dtype: StateDtype,
+    len: usize,
+    k: KvBuf,
+    v: KvBuf,
+}
+
+impl Clone for KvPage {
+    // COW break: `Arc::make_mut` on a shared page lands here. Allocate
+    // through the pool (so the clone reuses recycled buffers) and copy
+    // the raw storage — quantized rows copy bit-for-bit, never through
+    // a dequantize/requantize cycle.
+    fn clone(&self) -> Self {
+        let mut p = alloc_page(self.d, self.dtype);
+        p.len = self.len;
+        p.k = self.k.clone();
+        p.v = self.v.clone();
+        p
+    }
+}
+
+impl Drop for KvPage {
+    fn drop(&mut self) {
+        if self.d == 0 {
+            return; // already scavenged (or a placeholder)
+        }
+        let d = self.d;
+        self.d = 0;
+        let k = std::mem::take(&mut self.k);
+        let v = std::mem::take(&mut self.v);
+        pool().recycle(d, self.dtype, k, v);
+    }
+}
+
+impl KvPage {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == PAGE_TOKENS
+    }
+
+    pub fn dtype(&self) -> StateDtype {
+        self.dtype
+    }
+
+    /// Storage footprint (full page — a partial page still owns its
+    /// whole allocation; routes through the shared accounting helper).
+    pub fn bytes(&self) -> usize {
+        kv_page_bytes(self.d, self.dtype)
+    }
+
+    /// Append one (k, v) row pair. Panics if the page is full.
+    pub fn push_row(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert!(self.len < PAGE_TOKENS, "push into a full KV page");
+        let r = self.len;
+        self.k.write_row(r, self.d, k_row);
+        self.v.write_row(r, self.d, v_row);
+        self.len += 1;
+    }
+
+    /// Direct f32 view of K row `r` — only valid for f32 pages; the
+    /// quantized dtypes go through [`KvPage::read_k_row`].
+    pub fn k_f32_row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.len);
+        match &self.k {
+            KvBuf::F32(v) => &v[r * self.d..(r + 1) * self.d],
+            _ => panic!("k_f32_row on a quantized page"),
+        }
+    }
+
+    /// Direct f32 view of V row `r` (f32 pages only).
+    pub fn v_f32_row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.len);
+        match &self.v {
+            KvBuf::F32(v) => &v[r * self.d..(r + 1) * self.d],
+            _ => panic!("v_f32_row on a quantized page"),
+        }
+    }
+
+    /// Dequantize K row `r` into `dst`.
+    pub fn read_k_row(&self, r: usize, dst: &mut [f32]) {
+        debug_assert!(r < self.len);
+        self.k.read_row(r, self.d, dst);
+    }
+
+    /// Dequantize V row `r` into `dst`.
+    pub fn read_v_row(&self, r: usize, dst: &mut [f32]) {
+        debug_assert!(r < self.len);
+        self.v.read_row(r, self.d, dst);
+    }
+}
+
+/// Process-wide free-list of recycled page buffers, keyed by
+/// `(d, dtype)`. Bounded per key so a burst of wide-model pages cannot
+/// pin memory forever.
+struct PagePool {
+    free: Mutex<HashMap<(usize, StateDtype), Vec<(KvBuf, KvBuf)>>>,
+}
+
+const MAX_FREE_PER_KEY: usize = 1024;
+
+impl PagePool {
+    fn recycle(&self, d: usize, dtype: StateDtype, k: KvBuf, v: KvBuf) {
+        let mut free = self.free.lock().unwrap();
+        let list = free.entry((d, dtype)).or_default();
+        if list.len() < MAX_FREE_PER_KEY {
+            list.push((k, v));
+        }
+    }
+}
+
+fn pool() -> &'static PagePool {
+    static POOL: OnceLock<PagePool> = OnceLock::new();
+    POOL.get_or_init(|| PagePool {
+        free: Mutex::new(HashMap::new()),
+    })
+}
+
+/// Allocate an empty page of width `d` at `dtype`, reusing a recycled
+/// buffer pair when one is available. `len` starts at 0 so stale data
+/// in a recycled buffer is never readable; int8 scales are overwritten
+/// per `push_row`.
+pub fn alloc_page(d: usize, dtype: StateDtype) -> KvPage {
+    assert!(d > 0, "KV page width must be positive");
+    let reused = pool().free.lock().unwrap().get_mut(&(d, dtype)).and_then(Vec::pop);
+    match reused {
+        Some((k, v)) if k.matches(d, dtype) && v.matches(d, dtype) => KvPage {
+            d,
+            dtype,
+            len: 0,
+            k,
+            v,
+        },
+        _ => KvPage {
+            d,
+            dtype,
+            len: 0,
+            k: KvBuf::new(d, dtype),
+            v: KvBuf::new(d, dtype),
+        },
+    }
+}
+
+/// Total recycled pages currently sitting in the free-list (the
+/// `statemem.pages_free` gauge).
+pub fn pool_free_pages() -> usize {
+    pool().free.lock().unwrap().values().map(Vec::len).sum()
+}
+
+/// Shareable page handle: the prefix cache and forked streams hold the
+/// same `Arc`; `Arc::make_mut` gives copy-on-write semantics.
+pub type PageRef = Arc<KvPage>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_push_and_read_round_trip_f32() {
+        let mut p = alloc_page(4, StateDtype::F32);
+        assert!(p.is_empty());
+        p.push_row(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        p.push_row(&[-1.0, 0.0, 0.5, 9.0], &[0.0; 4]);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.k_f32_row(0), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.v_f32_row(1), &[0.0; 4]);
+        let mut out = [0.0f32; 4];
+        p.read_k_row(1, &mut out);
+        assert_eq!(out, [-1.0, 0.0, 0.5, 9.0]);
+        assert_eq!(p.bytes(), 2 * PAGE_TOKENS * 4 * 4);
+    }
+
+    #[test]
+    fn page_pool_recycles_buffers() {
+        // Use a width no other test touches so concurrent tests cannot
+        // perturb this key's free count.
+        let key = (61, StateDtype::F16);
+        let count = || pool().free.lock().unwrap().get(&key).map_or(0, Vec::len);
+        let before = count();
+        {
+            let _p = alloc_page(key.0, key.1);
+        }
+        let after_drop = count();
+        assert_eq!(after_drop, before + 1, "dropping a page must grow the free list");
+        {
+            let _p = alloc_page(key.0, key.1);
+            assert_eq!(count(), after_drop - 1, "alloc must pop the free list");
+        }
+        assert_eq!(count(), after_drop);
+    }
+
+    #[test]
+    fn int8_rows_quantize_within_bound() {
+        let mut p = alloc_page(3, StateDtype::Int8);
+        let k = [1.0f32, -0.49, 0.26];
+        p.push_row(&k, &[0.0; 3]);
+        let mut out = [0.0f32; 3];
+        p.read_k_row(0, &mut out);
+        // Per-row scale = 1.0/127; error <= scale/2 per element.
+        for (a, b) in k.iter().zip(out.iter()) {
+            assert!((a - b).abs() <= 0.5 / 127.0 + 1e-7, "{a} vs {b}");
+        }
+        // All-zero rows stay exactly zero (scale 0).
+        let mut z = [9.0f32; 3];
+        let mut p2 = alloc_page(3, StateDtype::Int8);
+        p2.push_row(&[0.0; 3], &[0.0; 3]);
+        p2.read_k_row(0, &mut z);
+        assert_eq!(z, [0.0; 3]);
+    }
+
+    #[test]
+    fn cow_clone_copies_rows_bit_for_bit() {
+        let mut a = Arc::new(alloc_page(2, StateDtype::F16));
+        Arc::make_mut(&mut a).push_row(&[0.1, 0.2], &[0.3, 0.4]);
+        let b = Arc::clone(&a); // shared
+        assert_eq!(Arc::strong_count(&a), 2);
+        // First write after sharing clones the page; the fork keeps the
+        // original rows untouched.
+        Arc::make_mut(&mut a).push_row(&[1.0, 1.0], &[1.0, 1.0]);
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 1);
+        let (mut ra, mut rb) = ([0.0f32; 2], [0.0f32; 2]);
+        a.read_k_row(0, &mut ra);
+        b.read_k_row(0, &mut rb);
+        assert_eq!(ra, rb, "shared prefix row must match bit-for-bit");
+    }
+
+    #[test]
+    #[should_panic(expected = "full KV page")]
+    fn push_past_capacity_panics() {
+        let mut p = alloc_page(1, StateDtype::F32);
+        for _ in 0..=PAGE_TOKENS {
+            p.push_row(&[0.0], &[0.0]);
+        }
+    }
+}

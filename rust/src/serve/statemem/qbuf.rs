@@ -1,0 +1,299 @@
+//! Quantized state buffers: f32 compute, optional f16 storage.
+//!
+//! Scan-family operators (LA/SSD/DN/MLSTM) keep fixed-size recurrent
+//! states. Under `--state-dtype f16` those states are *stored* as IEEE
+//! binary16 and *computed* in f32: [`QBuf::open`] dequantizes into an
+//! f32 scratch, the caller mutates it through `Deref`/`DerefMut`, and
+//! the guard's `Drop` requantizes back. Under the default f32 dtype the
+//! guard hands out the backing vec directly — zero copies, so the f32
+//! path stays bit-identical to the pre-quantization code.
+//!
+//! The f16 conversions are hand-rolled (no `half` dependency) with
+//! round-to-nearest-even, the same rounding every IEEE-754 conversion
+//! instruction uses, so the stored values match what hardware f16 would
+//! hold. Error bound: one round-trip through binary16 perturbs a normal
+//! value by at most 2^-11 relative (documented in DESIGN.md §19).
+
+use super::{qbuf_bytes, StateDtype};
+
+/// Convert an `f32` to IEEE binary16 bits with round-to-nearest-even.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp8 = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp8 == 255 {
+        // Inf / NaN propagate; keep NaN payloads quiet.
+        return if mant != 0 { sign | 0x7e00 } else { sign | 0x7c00 };
+    }
+    let exp = exp8 - 127 + 15;
+    if exp >= 0x1f {
+        // Overflow to infinity.
+        return sign | 0x7c00;
+    }
+    if exp <= 0 {
+        // Subnormal (or underflow to zero).
+        let shift = 14 - exp; // how far the 24-bit significand shifts right
+        if shift > 24 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000;
+        let half = (m >> shift) as u16;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && (half & 1) == 1);
+        return sign | (half + u16::from(round_up));
+    }
+    // Normal range: 10 mantissa bits, round the 13 dropped bits.
+    let half = ((exp as u16) << 10) | ((mant >> 13) as u16);
+    let rem = mant & 0x1fff;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1);
+    // A carry out of the mantissa correctly increments the exponent
+    // (and 0x7bff + 1 = 0x7c00 = infinity, as required).
+    sign | (half + u16::from(round_up))
+}
+
+/// Convert IEEE binary16 bits to `f32` (exact — f32 superset of f16).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign32 = u32::from(h & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let mant = u32::from(h & 0x3ff);
+    if exp == 0 {
+        if mant == 0 {
+            return f32::from_bits(sign32);
+        }
+        // Subnormal: value = mant * 2^-24, exact in f32.
+        let v = (mant as f32) * (-24f32).exp2();
+        return if sign32 != 0 { -v } else { v };
+    }
+    if exp == 0x1f {
+        return if mant != 0 {
+            f32::NAN
+        } else {
+            f32::from_bits(sign32 | 0x7f80_0000)
+        };
+    }
+    f32::from_bits(sign32 | ((u32::from(exp) + 112) << 23) | (mant << 13))
+}
+
+/// A fixed-length state buffer stored at a chosen dtype.
+///
+/// `Int8` maps to f16 storage here: per-element int8 makes sense for KV
+/// rows (which carry a per-row scale, see `pages.rs`) but not for the
+/// dense recurrent matrices, where a single scale would couple rounding
+/// error across the whole state.
+#[derive(Clone, Debug)]
+pub enum QBuf {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+impl QBuf {
+    /// Allocate a zeroed buffer of `len` elements at `dtype`.
+    pub fn new(len: usize, dtype: StateDtype) -> Self {
+        match dtype {
+            StateDtype::F32 => QBuf::F32(vec![0.0; len]),
+            StateDtype::F16 | StateDtype::Int8 => QBuf::F16(vec![0; len]),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            QBuf::F32(v) => v.len(),
+            QBuf::F16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> StateDtype {
+        match self {
+            QBuf::F32(_) => StateDtype::F32,
+            QBuf::F16(_) => StateDtype::F16,
+        }
+    }
+
+    /// Storage footprint in bytes (routes through the shared accounting
+    /// helper so `bytes()` and `state_bytes_at` cannot drift apart).
+    pub fn bytes(&self) -> usize {
+        qbuf_bytes(self.len(), self.dtype())
+    }
+
+    /// Dequantize into `dst` (must be `len()` long). F32 is a memcpy.
+    pub fn copy_to(&self, dst: &mut [f32]) {
+        match self {
+            QBuf::F32(v) => dst.copy_from_slice(v),
+            QBuf::F16(v) => {
+                for (d, &h) in dst.iter_mut().zip(v.iter()) {
+                    *d = f16_to_f32(h);
+                }
+            }
+        }
+    }
+
+    /// Requantize from `src` (must be `len()` long). F32 is a memcpy.
+    pub fn copy_from(&mut self, src: &[f32]) {
+        match self {
+            QBuf::F32(v) => v.copy_from_slice(src),
+            QBuf::F16(v) => {
+                for (h, &x) in v.iter_mut().zip(src.iter()) {
+                    *h = f32_to_f16(x);
+                }
+            }
+        }
+    }
+
+    /// Open the buffer for f32 compute. The guard derefs to `[f32]`;
+    /// dropping it writes any f16 scratch back. The f32 arm hands out
+    /// the backing vec itself, so the default path is copy-free and
+    /// bit-identical to direct `Vec<f32>` state.
+    pub fn open(&mut self) -> QBufGuard<'_> {
+        let scratch = match self {
+            QBuf::F32(_) => Vec::new(),
+            QBuf::F16(v) => v.iter().map(|&h| f16_to_f32(h)).collect(),
+        };
+        QBufGuard { buf: self, scratch }
+    }
+}
+
+/// RAII view of a [`QBuf`] as `[f32]`; see [`QBuf::open`].
+pub struct QBufGuard<'a> {
+    buf: &'a mut QBuf,
+    scratch: Vec<f32>,
+}
+
+impl std::ops::Deref for QBufGuard<'_> {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        match self.buf {
+            QBuf::F32(v) => v,
+            QBuf::F16(_) => &self.scratch,
+        }
+    }
+}
+
+impl std::ops::DerefMut for QBufGuard<'_> {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        match self.buf {
+            QBuf::F32(v) => v,
+            QBuf::F16(_) => &mut self.scratch,
+        }
+    }
+}
+
+impl Drop for QBufGuard<'_> {
+    fn drop(&mut self) {
+        if let QBuf::F16(v) = self.buf {
+            for (h, &x) in v.iter_mut().zip(self.scratch.iter()) {
+                *h = f32_to_f16(x);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trip_is_exact_for_representables() {
+        // Every finite f16 value survives f16 -> f32 -> f16 unchanged.
+        for bits in 0..=0xffffu16 {
+            let exp = (bits >> 10) & 0x1f;
+            let mant = bits & 0x3ff;
+            if exp == 0x1f && mant != 0 {
+                continue; // NaN payloads are canonicalized
+            }
+            let x = f16_to_f32(bits);
+            assert_eq!(f32_to_f16(x), bits, "bits {bits:#06x} -> {x}");
+        }
+    }
+
+    #[test]
+    fn f16_conversion_special_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(-2.0), 0xc000);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff); // f16 max
+        assert_eq!(f32_to_f16(65520.0), 0x7c00); // rounds to inf
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16(f32::NAN) & 0x7c00, 0x7c00);
+        assert_ne!(f32_to_f16(f32::NAN) & 0x3ff, 0);
+        // Smallest f16 subnormal and underflow-to-zero.
+        assert_eq!(f32_to_f16((-24f32).exp2()), 0x0001);
+        assert_eq!(f32_to_f16((-26f32).exp2()), 0x0000);
+        assert!(f16_to_f32(0x7e00).is_nan());
+        assert_eq!(f16_to_f32(0xfc00), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1.0 + 2^-10): ties go to the even mantissa, i.e. 1.0.
+        assert_eq!(f32_to_f16(1.0 + (-11f32).exp2()), 0x3c00);
+        // The next halfway point (1.0 + 3*2^-11) rounds UP to even.
+        assert_eq!(f32_to_f16(1.0 + 3.0 * (-11f32).exp2()), 0x3c02);
+        // Just above halfway rounds up.
+        assert_eq!(f32_to_f16(1.0 + (-11f32).exp2() * 1.001), 0x3c01);
+    }
+
+    #[test]
+    fn f16_relative_error_bound() {
+        // |round(x) - x| <= 2^-11 * |x| for normal-range values.
+        let mut v = 0.37f32;
+        for _ in 0..200 {
+            v = (v * 1.37).fract() * 100.0 + 0.01;
+            let r = f16_to_f32(f32_to_f16(v));
+            assert!(
+                (r - v).abs() <= v.abs() * (-11f32).exp2() + f32::EPSILON,
+                "v={v} r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn qbuf_f32_guard_is_the_backing_vec() {
+        let mut q = QBuf::new(4, StateDtype::F32);
+        {
+            let mut g = q.open();
+            g[2] = 3.25;
+        }
+        let mut out = [0.0f32; 4];
+        q.copy_to(&mut out);
+        assert_eq!(out, [0.0, 0.0, 3.25, 0.0]);
+        assert_eq!(q.bytes(), 16);
+    }
+
+    #[test]
+    fn qbuf_f16_guard_requantizes_on_drop() {
+        let mut q = QBuf::new(3, StateDtype::F16);
+        {
+            let mut g = q.open();
+            g[0] = 1.0;
+            g[1] = 0.1; // not exactly representable in f16
+            g[2] = -2.0;
+        }
+        let mut out = [0.0f32; 3];
+        q.copy_to(&mut out);
+        assert_eq!(out[0], 1.0);
+        assert_eq!(out[2], -2.0);
+        assert!((out[1] - 0.1).abs() <= 0.1 * (-11f32).exp2());
+        assert_eq!(q.bytes(), 6);
+        // Int8 dtype maps to f16 storage for dense states.
+        assert_eq!(QBuf::new(3, StateDtype::Int8).bytes(), 6);
+    }
+
+    #[test]
+    fn qbuf_copy_from_then_to_round_trips_f16_values() {
+        let src = [0.5f32, -1.5, 2.0, 0.0];
+        let mut q = QBuf::new(4, StateDtype::F16);
+        q.copy_from(&src);
+        let mut out = [9.0f32; 4];
+        q.copy_to(&mut out);
+        assert_eq!(out, src); // all exactly representable
+    }
+}

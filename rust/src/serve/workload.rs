@@ -357,6 +357,10 @@ pub struct ReplayCfg {
     /// Scheduler sampling seed (per-stream RNGs fork from it), independent
     /// of the trace's generator seed.
     pub seed: u64,
+    /// Turn on the radix prefix cache with this snapshot-payload byte
+    /// budget ([`BatchScheduler::enable_prefix_cache`], DESIGN.md §19).
+    /// `None` (the default) replays without the cache.
+    pub prefix_cache_bytes: Option<usize>,
 }
 
 impl Default for ReplayCfg {
@@ -366,6 +370,7 @@ impl Default for ReplayCfg {
             budget_bytes: usize::MAX,
             tick: TickConfig { prefill_chunk: 16, tick_budget: 32 },
             seed: 0,
+            prefix_cache_bytes: None,
         }
     }
 }
@@ -390,6 +395,14 @@ pub struct ReplayReport {
     pub cancelled: usize,
     pub rejected: usize,
     pub preemptions: usize,
+    /// Prompt tokens pushed through first-admission prefill — the work the
+    /// prefix cache exists to avoid, so warm replays report strictly fewer
+    /// than cold ones on shared-prefix traces.
+    pub prefill_tokens: usize,
+    /// Admissions that forked a prefix-cache snapshot (0 with the cache off).
+    pub cache_hits: usize,
+    /// History tokens restored from the cache across those hits.
+    pub cache_hit_tokens: usize,
     pub max_concurrent: usize,
     pub mean_occupancy: f64,
     /// FNV-1a fingerprint of the full event stream (with tick boundaries):
@@ -425,6 +438,9 @@ impl ReplayReport {
             ("rejected", Json::num(self.rejected as f64)),
             ("reasons", self.reasons_json()),
             ("preemptions", Json::num(self.preemptions as f64)),
+            ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_hit_tokens", Json::num(self.cache_hit_tokens as f64)),
             ("max_concurrent", Json::num(self.max_concurrent as f64)),
             ("mean_occupancy", Json::num(self.mean_occupancy)),
             ("event_hash", Json::str(&format!("{:016x}", self.event_hash))),
@@ -471,10 +487,11 @@ impl Fnv {
 
 fn hash_event(h: &mut Fnv, e: &StreamEvent) {
     match e {
-        StreamEvent::Admitted { id, restored } => {
+        StreamEvent::Admitted { id, restored, cached } => {
             h.byte(1);
             h.word(*id as u64);
             h.byte(*restored as u8);
+            h.word(*cached as u64);
         }
         StreamEvent::PrefillProgress { id, done, total } => {
             h.byte(2);
@@ -553,6 +570,9 @@ pub fn replay_with_timeline(
     if let Some(tl) = timeline {
         sched.set_timeline(tl);
     }
+    if let Some(bytes) = cfg.prefix_cache_bytes {
+        sched.enable_prefix_cache(bytes);
+    }
     let mut requests: Vec<&TraceRequest> = trace.requests.iter().collect();
     requests.sort_by_key(|r| (r.at, r.id));
     let mut cancels: Vec<&TraceCancel> = trace.cancels.iter().collect();
@@ -620,6 +640,9 @@ pub fn replay_with_timeline(
         cancelled: stats.cancelled,
         rejected: stats.rejected,
         preemptions: stats.preemptions,
+        prefill_tokens: stats.prefill_tokens,
+        cache_hits: stats.cache_hits,
+        cache_hit_tokens: stats.cache_hit_tokens,
         max_concurrent: stats.max_concurrent,
         mean_occupancy: stats.mean_batch_occupancy(),
         event_hash: fnv.0,
@@ -789,6 +812,7 @@ mod tests {
             // the storm lands at tick 1.
             tick: TickConfig { prefill_chunk: 4, tick_budget: 4 },
             seed: 9,
+            prefix_cache_bytes: None,
         };
         let r = replay(&m, &t, Sampler::Greedy, PolicyKind::Lru, &rcfg);
         assert_eq!(r.cancelled, 6);
@@ -799,6 +823,47 @@ mod tests {
         assert!(!r.mean_occupancy.is_nan());
         let line = r.to_json().to_string();
         assert!(!line.contains("NaN") && !line.contains("nan"), "{line}");
+    }
+
+    #[test]
+    fn prefix_cache_cuts_prefill_and_preserves_outputs() {
+        // Warm replay of a shared-prefix trace: strictly fewer prompt
+        // tokens go through prefill, hits are counted, and — because a
+        // forked snapshot is bit-identical to the cold state at the same
+        // chunk boundary — every generation is byte-identical to the cold
+        // replay's.
+        let cfg = WorkloadCfg {
+            name: "shared-prefix-test".to_string(),
+            seed: 31,
+            requests: 12,
+            arrival: Arrival::Poisson { mean_gap: 2.0 },
+            prompt_len: LenDist::Fixed(40),
+            max_new: LenDist::Fixed(4),
+            shared_prefix: Some(SharedPrefixCfg { groups: 2, prefix_len: 32, frac: 0.9 }),
+            cancel_storm: None,
+            slo: None,
+        };
+        let t = generate(&cfg);
+        let m = tiny_model(5);
+        let cold_cfg = ReplayCfg::default();
+        let warm_cfg =
+            ReplayCfg { prefix_cache_bytes: Some(usize::MAX), ..ReplayCfg::default() };
+        let cold = replay(&m, &t, Sampler::Greedy, PolicyKind::Lru, &cold_cfg);
+        let warm = replay(&m, &t, Sampler::Greedy, PolicyKind::Lru, &warm_cfg);
+        assert_eq!(cold.cache_hits, 0);
+        assert!(warm.cache_hits > 0, "no prefix-cache hits on a shared-prefix trace");
+        assert!(
+            warm.prefill_tokens < cold.prefill_tokens,
+            "warm prefill {} not under cold {}",
+            warm.prefill_tokens,
+            cold.prefill_tokens
+        );
+        assert!(warm.cache_hit_tokens > 0);
+        assert_eq!(warm.outcomes.len(), cold.outcomes.len());
+        for (w, c) in warm.outcomes.iter().zip(&cold.outcomes) {
+            assert_eq!(w.id, c.id);
+            assert_eq!(w.output, c.output, "request {} diverged under the cache", w.id);
+        }
     }
 
     #[test]

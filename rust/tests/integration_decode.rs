@@ -431,7 +431,7 @@ fn validate_events(
         }
         let fail = |msg: String| Err(format!("tick {cur_tick}: {msg} ({ev:?})"));
         match ev {
-            StreamEvent::Admitted { id, restored } => {
+            StreamEvent::Admitted { id, restored, .. } => {
                 let life = lives.entry(*id).or_default();
                 if life.terminal.is_some() || life.active {
                     return fail(format!("#{id} admitted while active/terminal"));

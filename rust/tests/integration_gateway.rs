@@ -188,6 +188,11 @@ fn loopback_stream_matches_in_process_bytes() {
             Some("admitted"),
             "stream must open with an admitted event"
         );
+        // Schema contract (DESIGN.md §19): the admitted frame always
+        // carries a bool `restored` and a numeric `cached` field — a
+        // cold stream on a cache-less scheduler reports false / 0.
+        assert_eq!(events[0].get("restored").unwrap().as_bool(), Some(false));
+        assert_eq!(events[0].get("cached").unwrap().as_usize(), Some(0));
         let terminal: Vec<&Json> = events
             .iter()
             .filter(|e| {
@@ -208,6 +213,13 @@ fn loopback_stream_matches_in_process_bytes() {
     });
     assert_eq!(summary.finished, 1);
     assert!(summary.requests >= 1);
+    // No prefix cache was enabled, so the drain summary reports zero
+    // hits — and its JSON form carries the fields regardless.
+    assert_eq!(summary.cache_hits, 0);
+    assert_eq!(summary.cache_hit_tokens, 0);
+    let sj = summary.to_json();
+    assert!(sj.get("cache_hits").is_some());
+    assert!(sj.get("cache_hit_tokens").is_some());
 }
 
 #[test]

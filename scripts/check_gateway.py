@@ -42,6 +42,11 @@ REQUIRED_COUNTERS = [
     "serve.decode_steps",
     "exec.regions",
     "exec.tasks",
+    # State-memory engine counters (DESIGN.md §19) -- zero without
+    # --prefix-cache-mb, but always registered.
+    "statemem.hits",
+    "statemem.misses",
+    "statemem.bytes_saved",
 ]
 
 
@@ -142,6 +147,11 @@ def check_generate(addr):
 
     if not events or events[0]["event"] != "admitted":
         fail(f"stream must open with admitted, got {events[:1]!r}")
+    # sh2-event-v1 schema contract (DESIGN.md §19): every admitted frame
+    # carries `restored` and `cached`; a cold stream on a cache-less
+    # gateway reports false / 0.
+    if events[0].get("restored") is not False or events[0].get("cached") != 0:
+        fail(f"admitted frame missing cold cache fields: {events[0]!r}")
     tokens = [e for e in events if e["event"] == "token"]
     if len(tokens) != MAX_NEW:
         fail(f"expected {MAX_NEW} token frames, got {len(tokens)}")

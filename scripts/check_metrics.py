@@ -28,12 +28,19 @@ REQUIRED_COUNTERS = [
     "exec.nested_serial",
     "planner.cache_hits",
     "planner.cache_misses",
+    # State-memory engine (DESIGN.md §19): registered at scheduler
+    # construction, so they must be present (if zero) in every snapshot.
+    "statemem.hits",
+    "statemem.misses",
+    "statemem.bytes_saved",
 ]
 REQUIRED_GAUGES = [
     "serve.queue_depth",
     "serve.active_streams",
     "serve.arena_bytes",
     "serve.committed_bytes",
+    "statemem.pages_free",
+    "statemem.cache_bytes",
 ]
 REQUIRED_HISTOGRAMS = [
     "serve.tick_ns",

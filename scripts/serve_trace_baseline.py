@@ -96,21 +96,35 @@ def geometric_gap(rng, mean_gap):
     return gap
 
 
-def generate(name, seed, requests, arrival, slo):
-    """serve::workload::generate for the bench's trace shape: Pareto(2, 8,
-    96) prompts, Pareto(1, 4, 32) outputs, shared prefixes (content only --
-    never consulted by tick metrics), no cancel storm, SLO annotations.
+DNA = "ACGT"
 
-    Only the arr/len/slo forked streams feed the schedule; tok/cxl draws
-    shape prompt bytes and storms, which this mirror never needs. The forks
-    still happen in order so the stream seeds match the Rust generator.
+
+def dna(rng, n):
+    return "".join(DNA[rng.below(4)] for _ in range(n))
+
+
+def generate(name, seed, requests, arrival, slo, sp=None):
+    """serve::workload::generate for the bench's trace shapes: Pareto(2, 8,
+    96) prompts, Pareto(1, 4, 32) outputs, shared prefixes, no cancel
+    storm, SLO annotations.
+
+    The arr/len/slo forked streams feed the schedule for every trace; the
+    tok fork's prompt *bytes* additionally matter for the warm
+    shared-prefix replay (the prefix cache is keyed by them), so `sp =
+    (groups, prefix_len, frac)` mirrors the byte draws exactly --
+    prefixes first, then per request the reuse coin, group pick, and
+    tail fill, in the generator's order.
     """
     root = Rng(seed)
     arr = root.fork(1)
     ln = root.fork(2)
-    root.fork(3)  # tok: prompt content only
+    tok = root.fork(3)
     slo_rng = root.fork(4)
     root.fork(5)  # cxl: no storm configured
+    prefixes = []
+    if sp is not None:
+        groups, prefix_len, _frac = sp
+        prefixes = [dna(tok, prefix_len) for _ in range(groups)]
     tiers, deadline_frac, slack = slo
     at = 0
     in_burst = 0
@@ -125,29 +139,51 @@ def generate(name, seed, requests, arrival, slo):
             in_burst = (in_burst + 1) % max(arrival[1], 1)
         prompt_len = max(pareto(ln, 2.0, 8, 96), 1)
         max_new = pareto(ln, 1.0, 4, 32)
+        if sp is not None and prefixes and tok.chance(sp[2]):
+            pre = prefixes[tok.below(len(prefixes))]
+            prompt = pre[:prompt_len]
+            fill = prompt_len - len(prompt)
+            if fill > 0:
+                prompt += dna(tok, fill)
+        else:
+            prompt = dna(tok, prompt_len)
         priority = slo_rng.below(tiers) if tiers > 1 else 0
         if slo_rng.chance(deadline_frac):
             ideal = -(-prompt_len // 16) + max(max_new, 1)
             deadline = math.ceil(ideal * slack)
         else:
             deadline = None
-        reqs.append(dict(id=rid, at=at, prompt_len=prompt_len, max_new=max_new,
-                         priority=priority, deadline=deadline))
+        reqs.append(dict(id=rid, at=at, prompt_len=prompt_len, prompt=prompt,
+                         max_new=max_new, priority=priority, deadline=deadline))
     return name, reqs
 
 
 INF = float("inf")
 
 
-def replay_sim(reqs, policy, max_active=4, chunk=16, tick_budget=32):
+def replay_sim(reqs, policy, max_active=4, chunk=16, tick_budget=32,
+               prefix_cache=False):
     """BatchScheduler tick loop under unlimited byte budget: admission per
     policy (with terminal rejection), chunked prefill with the decode
     reservation and anti-starvation floor, handoff-token-then-decode in the
     same tick, retirement. No preemption can occur (budget = usize::MAX),
-    so realized state bytes never enter the schedule."""
+    so realized state bytes never enter the schedule.
+
+    With `prefix_cache` the StateArena's radix cache is mirrored by a flat
+    set of snapshotted prompt prefixes: under an unbounded cache budget no
+    eviction happens, so the snapshot set equals the trie node set along
+    every prefill path and the lookup walk reduces to string-prefix
+    membership. Admission walks `while pos + chunk < len` (checked before
+    each descent -- a full-prompt hit is deliberately unreachable), starts
+    prefill at the deepest hit, and prefill inserts `prompt[:done]` at
+    every chunk-aligned boundary. Admission runs before prefill within a
+    tick, so same-tick snapshots are invisible to same-tick admissions --
+    exactly the scheduler's phase order."""
     per_tick = tick_budget + chunk - 1  # projected_completion_tick's optimism
     queue, active, outcomes = [], [], []
     tick_no = 0
+    snaps = set()
+    cstats = {"prefill": 0, "hits": 0, "hit_tokens": 0}
 
     def select_queued():
         best = 0
@@ -184,6 +220,14 @@ def replay_sim(reqs, policy, max_active=4, chunk=16, tick_budget=32):
             outcomes.append(dict(s, reason="rejected", finish_tick=tick_no))
             return "rejected"
         queue.pop(qi)
+        if prefix_cache:
+            pos, p = 0, s["prompt"]
+            while pos + chunk < len(p) and p[:pos + chunk] in snaps:
+                pos += chunk
+            if pos > 0:
+                cstats["hits"] += 1
+                cstats["hit_tokens"] += pos
+                s["pos"] = pos
         active.append(s)
         return "admitted"
 
@@ -222,8 +266,11 @@ def replay_sim(reqs, policy, max_active=4, chunk=16, tick_budget=32):
                     continue
                 done = min(s["pos"] + chunk, s["hist"])
                 budget = max(budget - (done - s["pos"]), 0)
+                cstats["prefill"] += done - s["pos"]
                 s["pos"] = done
                 progressed = True
+                if prefix_cache and done % chunk == 0:
+                    snaps.add(s["prompt"][:done])
                 if done == s["hist"]:
                     s["phase"] = "decode"
                     if s["generated"] < s["max_new"]:  # handoff token
@@ -250,7 +297,8 @@ def replay_sim(reqs, policy, max_active=4, chunk=16, tick_budget=32):
         now = tick_no
         while next_req < len(ordered) and ordered[next_req]["at"] <= now:
             r = ordered[next_req]
-            queue.append(dict(id=r["id"], hist=r["prompt_len"], generated=0,
+            queue.append(dict(id=r["id"], hist=r["prompt_len"],
+                              prompt=r["prompt"], generated=0,
                               max_new=r["max_new"], priority=r["priority"],
                               deadline=(now + r["deadline"]
                                         if r["deadline"] is not None else None),
@@ -269,7 +317,9 @@ def replay_sim(reqs, policy, max_active=4, chunk=16, tick_budget=32):
     finished = sum(1 for o in outcomes if o["reason"] == "finished")
     rejected = sum(1 for o in outcomes if o["reason"] == "rejected")
     return dict(total_ticks=tick_no, ttft=ttft, delivered=delivered,
-                finished=finished, rejected=rejected)
+                finished=finished, rejected=rejected,
+                prefill=cstats["prefill"], hits=cstats["hits"],
+                hit_tokens=cstats["hit_tokens"])
 
 
 def percentile(sorted_xs, p):
@@ -313,9 +363,10 @@ def main():
     args = ap.parse_args()
 
     slo = (3, 0.6, 1.5)
+    sp_default = (4, 24, 0.5)  # trace_cfg's shared_prefix (schedule-inert)
     traces = [
-        generate("poisson", 11, 48, ("poisson", 1.0), slo),
-        generate("bursty", 13, 48, ("bursty", 8, 3.0), slo),
+        generate("poisson", 11, 48, ("poisson", 1.0), slo, sp_default),
+        generate("bursty", 13, 48, ("bursty", 8, 3.0), slo, sp_default),
     ]
     records = []
     for name, reqs in traces:
@@ -335,6 +386,31 @@ def main():
                   f"ttft_p50={records[-2]['p50_ns'] // args.headroom:4d} "
                   f"ttft_p90={records[-2]['p90_ns'] // args.headroom:4d} "
                   f"mticks/tok={tpt:6.0f} fin/rej={r['finished']}/{r['rejected']}")
+
+    # Shared-prefix cold/warm pair, LRU only, mirroring the bench's second
+    # section: same trace replayed with the prefix cache off then on. The
+    # asserts here are the same strictness conditions the Rust bench
+    # enforces, so a baseline that seeds successfully implies the bench's
+    # own claims hold for this trace.
+    name, reqs = generate("shared_prefix", 17, 48, ("poisson", 2.0), slo,
+                          (2, 64, 0.9))
+    cold = replay_sim(reqs, "lru")
+    warm = replay_sim(reqs, "lru", prefix_cache=True)
+    assert cold["hits"] == 0, "cold replay must not touch the cache"
+    assert warm["hits"] > 0, "warm replay saw no prefix-cache hits"
+    assert warm["prefill"] < cold["prefill"], \
+        f"warm prefill ({warm['prefill']}) not under cold ({cold['prefill']})"
+    assert cold["finished"] == len(reqs) and warm["finished"] == len(reqs)
+    for label, r in (("cold", cold), ("warm", warm)):
+        records.append(record(f"serve_trace/{name}/{label}/ttft",
+                              r["ttft"], args.headroom))
+        records.append(record(f"serve_trace/{name}/{label}/prefill",
+                              [float(r["prefill"])], args.headroom))
+        print(f"{name:8s} lru({label}) ticks={r['total_ticks']:4d} "
+              f"ttft_p50={records[-2]['p50_ns'] // args.headroom:4d} "
+              f"ttft_p90={records[-2]['p90_ns'] // args.headroom:4d} "
+              f"prefill={r['prefill']:5d} hits={r['hits']:2d} "
+              f"hit_tokens={r['hit_tokens']}")
 
     doc = {
         "schema": "sh2-bench-v1",
